@@ -1,0 +1,159 @@
+//! PJRT serving: load the AOT artifacts (`make artifacts`) and serve them
+//! through the coordinator — the full three-layer path with Python absent
+//! at request time.
+//!
+//! The `xla` crate's PJRT client is not `Send` (it wraps an `Rc` device
+//! handle), so a dedicated **device-owner thread** owns the engine and all
+//! compiled executables; coordinator workers forward work to it over a
+//! channel. This mirrors production single-device serving layouts.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example pjrt_serving
+//! ```
+
+use stamp::config::ServeSpec;
+use stamp::coordinator::{Executor, Server};
+use stamp::runtime::{ArtifactRegistry, Engine};
+use stamp::tensor::Tensor;
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Work item sent to the device-owner thread.
+struct DeviceJob {
+    variant: String,
+    input: Tensor,
+    reply: mpsc::Sender<Result<Tensor, String>>,
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::var("STAMP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let reg = match ArtifactRegistry::load(&dir) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("no artifacts ({e}); run `make artifacts` first");
+            return Ok(());
+        }
+    };
+    let entries: Vec<_> = reg.entries().to_vec();
+    let variants: Vec<String> = entries.iter().map(|e| e.name.clone()).collect();
+    let input_shapes: HashMap<String, Vec<Vec<usize>>> =
+        entries.iter().map(|e| (e.name.clone(), e.input_shapes())).collect();
+
+    // ---- device-owner thread: engine + executables live here ----
+    let (job_tx, job_rx) = mpsc::channel::<DeviceJob>();
+    let paths: Vec<(String, std::path::PathBuf, Vec<Vec<usize>>)> = entries
+        .iter()
+        .map(|e| (e.name.clone(), reg.path_for(e), e.input_shapes()))
+        .collect();
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<String, String>>();
+    let device_thread = std::thread::Builder::new()
+        .name("pjrt-device-owner".into())
+        .spawn(move || {
+            let engine = match Engine::cpu() {
+                Ok(e) => e,
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e.to_string()));
+                    return;
+                }
+            };
+            let mut exes = HashMap::new();
+            for (name, path, _) in &paths {
+                let t0 = Instant::now();
+                match engine.load(path) {
+                    Ok(exe) => {
+                        let _ = ready_tx
+                            .send(Ok(format!("  {:<16} compiled in {:.0?}", name, t0.elapsed())));
+                        exes.insert(name.clone(), exe);
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{name}: {e}")));
+                        return;
+                    }
+                }
+            }
+            let _ = ready_tx.send(Ok("__ready__".into()));
+            let shape_of: HashMap<String, Vec<Vec<usize>>> =
+                paths.iter().map(|(n, _, s)| (n.clone(), s.clone())).collect();
+            while let Ok(job) = job_rx.recv() {
+                let result = (|| {
+                    let exe = exes
+                        .get(&job.variant)
+                        .ok_or_else(|| format!("no executable {}", job.variant))?;
+                    let sig = &shape_of[&job.variant];
+                    let mut args: Vec<Tensor> = vec![job.input.clone()];
+                    // Extra (weight) inputs beyond the request tensor are
+                    // deterministic small-random fills for the demo.
+                    for extra in sig.iter().skip(1) {
+                        args.push(Tensor::randn(extra, 7).scale(0.05));
+                    }
+                    let mut res = engine.run(exe, &args).map_err(|e| e.to_string())?;
+                    Ok(res.remove(0))
+                })();
+                let _ = job.reply.send(result);
+            }
+        })
+        .expect("spawn device thread");
+
+    println!("compiling {} artifacts on the device-owner thread…", variants.len());
+    loop {
+        match ready_rx.recv().map_err(|e| anyhow::anyhow!("device thread died: {e}"))? {
+            Ok(msg) if msg == "__ready__" => break,
+            Ok(msg) => println!("{msg}"),
+            Err(e) => anyhow::bail!("artifact load failed: {e}"),
+        }
+    }
+
+    // ---- coordinator: executor forwards to the device thread ----
+    let job_tx = Arc::new(Mutex::new(job_tx));
+    let executor: Arc<dyn Executor> = Arc::new(move |variant: &str, inputs: &[&Tensor]| {
+        let mut replies = Vec::with_capacity(inputs.len());
+        {
+            let tx = job_tx.lock().unwrap();
+            for t in inputs {
+                let (rtx, rrx) = mpsc::channel();
+                tx.send(DeviceJob { variant: variant.to_string(), input: (*t).clone(), reply: rtx })
+                    .map_err(|e| format!("device thread gone: {e}"))?;
+                replies.push(rrx);
+            }
+        }
+        replies
+            .into_iter()
+            .map(|rrx| rrx.recv().map_err(|e| format!("device reply lost: {e}"))?)
+            .collect()
+    });
+
+    let name_refs: Vec<&str> = variants.iter().map(|s| s.as_str()).collect();
+    let spec = ServeSpec { workers: 2, max_batch: 4, max_wait_us: 1_000, queue_depth: 64 };
+    let server = Server::start(&spec, &name_refs, executor);
+    let handle = server.handle();
+
+    let n = 24usize;
+    println!("\nserving {n} requests round-robin over {variants:?}…");
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let v = &variants[i % variants.len()];
+            let shape = &input_shapes[v][0];
+            handle.submit(v, Tensor::randn(shape, i as u64).scale(0.3)).1
+        })
+        .collect();
+    let mut ok = 0;
+    for rx in &rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(300)).expect("response");
+        match resp.output {
+            Ok(t) => {
+                assert!(t.all_finite());
+                ok += 1;
+            }
+            Err(e) => eprintln!("request failed: {e}"),
+        }
+    }
+    let wall = t0.elapsed();
+    println!("{ok}/{n} ok in {wall:.2?} ({:.1} req/s)", n as f64 / wall.as_secs_f64());
+    println!("\nmetrics:\n{}", handle.metrics.snapshot());
+    server.shutdown();
+    drop(device_thread);
+    Ok(())
+}

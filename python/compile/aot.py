@@ -1,0 +1,104 @@
+"""AOT lowering: jax functions → HLO *text* artifacts + manifest.toml.
+
+HLO text (NOT `.serialize()`): jax ≥ 0.5 emits HloModuleProtos with 64-bit
+instruction ids that the runtime's xla_extension 0.5.1 rejects; the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Run via `make artifacts` (no-op when inputs are unchanged). Python never
+runs at request time — the Rust binary is self-contained afterwards.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default ELIDES big
+    # literals as `constant({...})`, which the runtime's HLO-text parser
+    # silently reads back as zeros — the baked model weights would vanish.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def shape_sig(shapes) -> str:
+    return ";".join("x".join(str(d) for d in s) for s in shapes)
+
+
+# Artifact catalogue. Sizes are kept modest so the CPU PJRT compile in the
+# Rust tests stays fast; shapes are the "scaled testbed" defaults used
+# throughout (s=256, d=128, 8 hp tokens = effective 4.125 bits).
+S, D, DFF, NLAYERS, HP = 256, 128, 256, 2, 8
+
+
+def build_artifacts():
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key, D, DFF, NLAYERS)
+
+    def qdq_fn(x):
+        return (model.stamp_qdq(x, levels=3, hp_tokens=HP, hp_bits=8, lp_bits=4),)
+
+    def stamp_linear_fn(x, w):
+        from .kernels import stamp_linear as sl
+
+        return (sl.stamp_linear(x, w, None, levels=3, hp_tokens=HP, hp_bits=8, lp_bits=4),)
+
+    def model_fp_fn(x):
+        return (model.model_fwd(params, x, quantize=False),)
+
+    def model_stamp_fn(x):
+        return (
+            model.model_fwd(
+                params, x, quantize=True, levels=3, hp_tokens=HP, hp_bits=8, lp_bits=4
+            ),
+        )
+
+    f32 = jnp.float32
+    return {
+        "stamp_qdq": (qdq_fn, [jax.ShapeDtypeStruct((S, D), f32)]),
+        "stamp_linear": (
+            stamp_linear_fn,
+            [jax.ShapeDtypeStruct((S, D), f32), jax.ShapeDtypeStruct((D, D), f32)],
+        ),
+        "model_fp": (model_fp_fn, [jax.ShapeDtypeStruct((S, D), f32)]),
+        "model_stamp": (model_stamp_fn, [jax.ShapeDtypeStruct((S, D), f32)]),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_lines = []
+    for name, (fn, specs) in build_artifacts().items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        # Output shapes from the lowered signature.
+        out_shapes = [tuple(s.shape) for s in jax.eval_shape(fn, *specs)]
+        in_sig = shape_sig([tuple(s.shape) for s in specs])
+        out_sig = shape_sig(out_shapes)
+        manifest_lines.append(
+            f"[artifact.{name}]\nfile = \"{fname}\"\ninputs = \"{in_sig}\"\noutputs = \"{out_sig}\"\n"
+        )
+        print(f"wrote {fname} ({len(text)} chars) inputs={in_sig} outputs={out_sig}")
+
+    with open(os.path.join(args.out_dir, "manifest.toml"), "w") as f:
+        f.write("\n".join(manifest_lines))
+    print(f"wrote manifest.toml with {len(manifest_lines)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""L1 Pallas kernel: per-token min-max fake-quant with 2-level mixed
+precision (paper Eq. 1 + §3.3).
+
+The grid tiles the *sequence* dimension (each token's min/max reduction
+needs its whole feature row resident), S_TILE tokens per block. The
+hp/lp bit decision is made from the global token index via the block
+program id, so mixed precision costs zero extra memory traffic.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Token-tile height: 128 tokens × d ≤ 1024 × 4 B = 512 KiB VMEM worst case.
+S_TILE = 128
+
+
+def _qdq_kernel(x_ref, o_ref, *, s_tile, hp_tokens, hp_bits, lp_bits):
+    i = pl.program_id(0)
+    x = x_ref[...]
+    mn = x.min(axis=1, keepdims=True)
+    mx = x.max(axis=1, keepdims=True)
+    token_idx = i * s_tile + jnp.arange(x.shape[0])[:, None]
+    qmax = jnp.where(
+        token_idx < hp_tokens,
+        jnp.float32(2.0**hp_bits - 1.0),
+        jnp.float32(2.0**lp_bits - 1.0),
+    ).astype(x.dtype)
+    scale = jnp.maximum(mx - mn, 1e-12) / qmax
+    zero = jnp.round(-mn / scale)
+    q = jnp.clip(jnp.round(x / scale + zero), 0.0, qmax)
+    o_ref[...] = (q - zero) * scale
+
+
+def qdq(x, hp_tokens, hp_bits, lp_bits):
+    """Quantize-dequantize with per-token min-max scales (Pallas)."""
+    s, d = x.shape
+    s_tile = min(S_TILE, s)
+    assert s % s_tile == 0, f"seq {s} not divisible by tile {s_tile}"
+    return pl.pallas_call(
+        functools.partial(
+            _qdq_kernel,
+            s_tile=s_tile,
+            hp_tokens=hp_tokens,
+            hp_bits=hp_bits,
+            lp_bits=lp_bits,
+        ),
+        out_shape=jax.ShapeDtypeStruct((s, d), x.dtype),
+        grid=(s // s_tile,),
+        in_specs=[pl.BlockSpec((s_tile, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((s_tile, d), lambda i: (i, 0)),
+        interpret=True,
+    )(x)

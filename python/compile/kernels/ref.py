@@ -1,0 +1,102 @@
+"""Pure-jnp reference oracles for every L1 Pallas kernel.
+
+These are the CORE correctness signal: pytest (and hypothesis sweeps)
+compare each Pallas kernel's interpret-mode output against these, and the
+Rust side's unit tests implement the same math independently, so the three
+implementations (jnp / Pallas / Rust) triangulate each other.
+"""
+
+import jax.numpy as jnp
+
+INV_SQRT2 = 0.7071067811865476
+
+
+def haar_dwt_ref(x, levels):
+    """Multi-level orthonormal Haar DWT along axis 0.
+
+    Output layout: [approx_L | detail_L | ... | detail_1] — identical to
+    rust/src/transforms/haar.rs.
+    """
+    s = x.shape[0]
+    assert s % (1 << levels) == 0, f"{s} not divisible by 2^{levels}"
+    buf = x
+    n = s
+    for _ in range(levels):
+        head = buf[:n]
+        even = head[0::2]
+        odd = head[1::2]
+        approx = (even + odd) * INV_SQRT2
+        detail = (even - odd) * INV_SQRT2
+        buf = jnp.concatenate([approx, detail, buf[n:]], axis=0)
+        n //= 2
+    return buf
+
+
+def haar_idwt_ref(y, levels):
+    """Inverse of :func:`haar_dwt_ref`."""
+    s = y.shape[0]
+    buf = y
+    n = s >> (levels - 1)
+    for _ in range(levels):
+        half = n // 2
+        approx = buf[:half]
+        detail = buf[half:n]
+        even = (approx + detail) * INV_SQRT2
+        odd = (approx - detail) * INV_SQRT2
+        inter = jnp.stack([even, odd], axis=1).reshape((n,) + y.shape[1:])
+        buf = jnp.concatenate([inter, buf[n:]], axis=0)
+        n *= 2
+    return buf
+
+
+def qdq_ref(x, hp_tokens, hp_bits, lp_bits):
+    """Per-token asymmetric min-max fake-quant with 2-level mixed precision.
+
+    Token i uses hp_bits when i < hp_tokens else lp_bits (paper Eq. 1 +
+    the §3.3 two-level scheme). Matches rust/src/quant/qdq.rs.
+    """
+    s = x.shape[0]
+    mn = x.min(axis=1, keepdims=True)
+    mx = x.max(axis=1, keepdims=True)
+    bits = jnp.where(jnp.arange(s)[:, None] < hp_tokens, hp_bits, lp_bits)
+    qmax = 2.0 ** bits.astype(x.dtype) - 1.0
+    scale = jnp.maximum(mx - mn, 1e-12) / qmax
+    zero = jnp.round(-mn / scale)
+    q = jnp.clip(jnp.round(x / scale + zero), 0.0, qmax)
+    return (q - zero) * scale
+
+
+def stamp_linear_ref(x, w, bias, levels, hp_tokens, hp_bits, lp_bits):
+    """Figure-2a pseudocode: Y = L^-1( Q_mixed(L X) W ) + 1 b^T."""
+    lx = haar_dwt_ref(x, levels)
+    q = qdq_ref(lx, hp_tokens, hp_bits, lp_bits)
+    y = q @ w
+    out = haar_idwt_ref(y, levels)
+    if bias is not None:
+        out = out + bias[None, :]
+    return out
+
+
+def dct_matrix(s, dtype=jnp.float32):
+    """Orthonormal DCT-II matrix (rows = basis vectors)."""
+    import numpy as np
+
+    n = np.arange(s, dtype=np.float64)
+    k = np.arange(s, dtype=np.float64)[:, None]
+    m = np.cos(np.pi / s * (n[None, :] + 0.5) * k)
+    norm = np.where(k == 0, np.sqrt(1.0 / s), np.sqrt(2.0 / s))
+    return jnp.asarray(norm * m, dtype=dtype)
+
+
+def wht_matrix(s, dtype=jnp.float32):
+    """Sequency-ordered orthonormal Walsh-Hadamard matrix."""
+    assert s & (s - 1) == 0, "power of two required"
+    import numpy as np
+
+    h = np.ones((1, 1))
+    while h.shape[0] < s:
+        h = np.block([[h, h], [h, -h]])
+    # Sequency order = sort rows by sign-change count.
+    changes = (np.diff(np.sign(h), axis=1) != 0).sum(axis=1)
+    order = np.argsort(changes, kind="stable")
+    return jnp.asarray(h[order] / np.sqrt(s), dtype=dtype)

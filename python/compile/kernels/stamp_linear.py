@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: the fused STaMP linear layer (Figure 2a).
+
+One kernel computes `Q_mixed(L X) @ W` — the sequence transform, the
+mixed-precision QDQ, and the MXU matmul — so the transformed activation
+never round-trips to HBM in fp. `L^-1` is applied by a second (cheap, O(sd))
+DWT-inverse kernel after the matmul, exactly the Eq. 7 placement.
+
+TPU mapping: grid over output-column tiles (N_TILE = 128, MXU-aligned);
+each grid step keeps the full (s × d) activation panel in VMEM (s·d ≤
+256 × 512 ⇒ ≤ 512 KiB), re-uses the transformed+quantized panel across
+output tiles via the index_map returning the same block, and streams one
+(d × N_TILE) weight panel per step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import haar
+
+INV_SQRT2 = 0.7071067811865476
+N_TILE = 128
+
+
+def _fused_kernel(x_ref, w_ref, o_ref, *, levels, hp_tokens, hp_bits, lp_bits):
+    x = x_ref[...]
+    # --- L X: all DWT levels on the resident panel ---
+    n = x.shape[0]
+    buf = x
+    for _ in range(levels):
+        head = buf[:n]
+        even = head[0::2]
+        odd = head[1::2]
+        buf = jnp.concatenate(
+            [(even + odd) * INV_SQRT2, (even - odd) * INV_SQRT2, buf[n:]], axis=0
+        )
+        n //= 2
+    # --- Q_mixed ---
+    mn = buf.min(axis=1, keepdims=True)
+    mx = buf.max(axis=1, keepdims=True)
+    token_idx = jnp.arange(buf.shape[0])[:, None]
+    qmax = jnp.where(
+        token_idx < hp_tokens,
+        jnp.float32(2.0**hp_bits - 1.0),
+        jnp.float32(2.0**lp_bits - 1.0),
+    ).astype(buf.dtype)
+    scale = jnp.maximum(mx - mn, 1e-12) / qmax
+    zero = jnp.round(-mn / scale)
+    q = jnp.clip(jnp.round(buf / scale + zero), 0.0, qmax)
+    deq = (q - zero) * scale
+    # --- MXU matmul with the resident weight tile ---
+    o_ref[...] = jnp.dot(deq, w_ref[...], preferred_element_type=jnp.float32)
+
+
+def stamp_linear(x, w, bias, *, levels=3, hp_tokens=64, hp_bits=8, lp_bits=4):
+    """Fused STaMP-quantized linear: `L^-1(Q(LX) W) + b`."""
+    s, d = x.shape
+    d2, n = w.shape
+    assert d == d2, f"shape mismatch {x.shape} @ {w.shape}"
+    n_tile = min(N_TILE, n)
+    assert n % n_tile == 0
+    y = pl.pallas_call(
+        functools.partial(
+            _fused_kernel,
+            levels=levels,
+            hp_tokens=hp_tokens,
+            hp_bits=hp_bits,
+            lp_bits=lp_bits,
+        ),
+        out_shape=jax.ShapeDtypeStruct((s, n), x.dtype),
+        grid=(n // n_tile,),
+        in_specs=[
+            pl.BlockSpec((s, d), lambda j: (0, 0)),  # activation panel reused
+            pl.BlockSpec((d, n_tile), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((s, n_tile), lambda j: (0, j)),
+        interpret=True,
+    )(x, w)
+    out = haar.haar_idwt(y, levels)
+    if bias is not None:
+        out = out + bias[None, :]
+    return out

@@ -1,0 +1,98 @@
+"""L2: the JAX model — a transformer block stack whose linear layers run
+through the fused L1 STaMP kernel. `aot.py` lowers the functions here to
+HLO text once; the Rust runtime executes them forever after.
+
+The model mirrors rust/src/model/gpt.rs's Block (RMSNorm → MHA → RMSNorm →
+gated MLP) over a pre-embedded activation matrix `x: f32[s, d]`, so the
+same artifact serves both the LLM- and LVM-shaped serving paths.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import quant as qk
+from .kernels import stamp_linear as sl
+
+
+def init_params(key, d_model, d_ff, n_layers):
+    """Deterministic parameter pytree for the AOT model."""
+    params = []
+    for i in range(n_layers):
+        k = jax.random.fold_in(key, i)
+        ks = jax.random.split(k, 8)
+        scale = 1.0 / jnp.sqrt(d_model)
+        params.append(
+            {
+                "g1": jnp.ones((d_model,), jnp.float32),
+                "wq": jax.random.normal(ks[0], (d_model, d_model), jnp.float32) * scale,
+                "wk": jax.random.normal(ks[1], (d_model, d_model), jnp.float32) * scale,
+                "wv": jax.random.normal(ks[2], (d_model, d_model), jnp.float32) * scale,
+                "wo": jax.random.normal(ks[3], (d_model, d_model), jnp.float32) * scale,
+                "g2": jnp.ones((d_model,), jnp.float32),
+                "wu": jax.random.normal(ks[4], (d_model, d_ff), jnp.float32) * scale,
+                "wg": jax.random.normal(ks[5], (d_model, d_ff), jnp.float32) * scale,
+                "wd": jax.random.normal(ks[6], (d_ff, d_model), jnp.float32)
+                * (1.0 / jnp.sqrt(d_ff)),
+            }
+        )
+    return params
+
+
+def rmsnorm(x, gamma, eps=1e-5):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gamma
+
+
+def attention(q, k, v, n_heads, causal=True):
+    s, d = q.shape
+    dh = d // n_heads
+    q = q.reshape(s, n_heads, dh).transpose(1, 0, 2)
+    k = k.reshape(s, n_heads, dh).transpose(1, 0, 2)
+    v = v.reshape(s, n_heads, dh).transpose(1, 0, 2)
+    scores = jnp.einsum("hid,hjd->hij", q, k) / jnp.sqrt(dh).astype(q.dtype)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hij,hjd->hid", probs, v)
+    return out.transpose(1, 0, 2).reshape(s, d)
+
+
+def _linear(x, w, quantize, **stamp_kw):
+    """Linear layer: fused STaMP kernel when quantizing, plain dot in FP."""
+    if quantize:
+        return sl.stamp_linear(x, w, None, **stamp_kw)
+    return x @ w
+
+
+def block_fwd(p, x, n_heads, quantize, **stamp_kw):
+    h = rmsnorm(x, p["g1"])
+    q = _linear(h, p["wq"], quantize, **stamp_kw)
+    k = _linear(h, p["wk"], quantize, **stamp_kw)
+    v = _linear(h, p["wv"], quantize, **stamp_kw)
+    a = _linear(attention(q, k, v, n_heads), p["wo"], quantize, **stamp_kw)
+    x = x + a
+    h = rmsnorm(x, p["g2"])
+    u = _linear(h, p["wu"], quantize, **stamp_kw)
+    g = _linear(h, p["wg"], quantize, **stamp_kw)
+    m = _linear(jax.nn.silu(g) * u, p["wd"], quantize, **stamp_kw)
+    return x + m
+
+
+def model_fwd(params, x, n_heads=4, quantize=True, **stamp_kw):
+    """Full block-stack forward over a pre-embedded activation matrix."""
+    for p in params:
+        x = block_fwd(p, x, n_heads, quantize, **stamp_kw)
+    return x
+
+
+def stamp_qdq(x, levels=3, hp_tokens=64, hp_bits=8, lp_bits=4):
+    """Standalone STaMP QDQ: L^-1(Q_mixed(L x)) — the activation-only path
+    used by the eval/serving artifacts."""
+    from .kernels import haar
+
+    lx = haar.haar_dwt(x, levels)
+    q = qk.qdq(lx, hp_tokens, hp_bits, lp_bits)
+    return haar.haar_idwt(q, levels)

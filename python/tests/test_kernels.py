@@ -1,0 +1,169 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle, with
+hypothesis sweeping shapes/levels/bit-widths. This is the core build-time
+quality gate (`make test`)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import haar, quant, ref, stamp_linear
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+# ---------- Haar DWT ----------
+
+
+@pytest.mark.parametrize("s,levels", [(8, 1), (64, 3), (256, 3), (128, 7)])
+def test_dwt_matches_ref(s, levels):
+    x = rand(1, (s, 16))
+    got = haar.haar_dwt(x, levels)
+    want = ref.haar_dwt_ref(x, levels)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("s,levels", [(16, 2), (256, 3)])
+def test_idwt_roundtrip(s, levels):
+    x = rand(2, (s, 8))
+    y = haar.haar_dwt(x, levels)
+    back = haar.haar_idwt(y, levels)
+    np.testing.assert_allclose(back, x, rtol=1e-5, atol=1e-5)
+
+
+def test_dwt_energy_preserved():
+    x = rand(3, (128, 32), scale=3.0)
+    y = haar.haar_dwt(x, 3)
+    assert jnp.allclose(jnp.sum(x * x), jnp.sum(y * y), rtol=1e-5)
+
+
+def test_dwt_constant_concentrates():
+    x = jnp.ones((64, 4))
+    y = haar.haar_dwt(x, 6)
+    energy = jnp.sum(y * y, axis=1)
+    assert energy[0] / jnp.sum(energy) > 0.999
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    log_s=st.integers(3, 8),
+    levels=st.integers(1, 3),
+    d=st.sampled_from([4, 16, 128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dwt_hypothesis_sweep(log_s, levels, d, seed):
+    s = 1 << log_s
+    x = rand(seed, (s, d))
+    np.testing.assert_allclose(
+        haar.haar_dwt(x, levels), ref.haar_dwt_ref(x, levels), rtol=1e-5, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        haar.haar_idwt(haar.haar_dwt(x, levels), levels), x, rtol=1e-4, atol=1e-4
+    )
+
+
+# ---------- QDQ ----------
+
+
+@pytest.mark.parametrize("hp_tokens,hp_bits,lp_bits", [(0, 8, 4), (8, 8, 4), (64, 8, 2), (128, 16, 16)])
+def test_qdq_matches_ref(hp_tokens, hp_bits, lp_bits):
+    x = rand(4, (128, 64), scale=2.0)
+    got = quant.qdq(x, hp_tokens, hp_bits, lp_bits)
+    want = ref.qdq_ref(x, hp_tokens, hp_bits, lp_bits)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_qdq_high_bits_near_lossless():
+    x = rand(5, (64, 32))
+    q = quant.qdq(x, 0, 16, 16)
+    np.testing.assert_allclose(q, x, atol=2e-4)
+
+
+def test_qdq_hp_rows_more_accurate():
+    x = rand(6, (128, 64))
+    q = quant.qdq(x, 64, 8, 2)
+    err = jnp.sum((q - x) ** 2, axis=1)
+    assert jnp.sum(err[:64]) * 10 < jnp.sum(err[64:])
+
+
+def test_qdq_rounding_bounded_by_scale():
+    x = rand(7, (32, 16))
+    q = quant.qdq(x, 0, 4, 4)
+    rng = x.max(axis=1, keepdims=True) - x.min(axis=1, keepdims=True)
+    step = rng / 15.0
+    assert jnp.all(jnp.abs(q - x) <= 0.51 * step + 1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    s=st.sampled_from([128, 256]),
+    d=st.sampled_from([8, 64, 256]),
+    hp=st.integers(0, 128),
+    lp_bits=st.integers(2, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qdq_hypothesis_sweep(s, d, hp, lp_bits, seed):
+    x = rand(seed, (s, d), scale=5.0)
+    np.testing.assert_allclose(
+        quant.qdq(x, hp, 8, lp_bits), ref.qdq_ref(x, hp, 8, lp_bits), rtol=1e-5, atol=1e-5
+    )
+
+
+# ---------- fused stamp_linear ----------
+
+
+@pytest.mark.parametrize("s,d,n", [(64, 32, 32), (256, 128, 128), (128, 64, 256)])
+def test_stamp_linear_matches_ref(s, d, n):
+    x = rand(8, (s, d))
+    w = rand(9, (d, n), scale=0.1)
+    got = stamp_linear.stamp_linear(x, w, None, levels=3, hp_tokens=8, hp_bits=8, lp_bits=4)
+    want = ref.stamp_linear_ref(x, w, None, 3, 8, 8, 4)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_stamp_linear_bias():
+    x = rand(10, (64, 32))
+    w = rand(11, (32, 32), scale=0.1)
+    b = jnp.arange(32, dtype=jnp.float32) * 0.1
+    got = stamp_linear.stamp_linear(x, w, b, levels=2, hp_tokens=8, hp_bits=8, lp_bits=4)
+    want = ref.stamp_linear_ref(x, w, b, 2, 8, 8, 4)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_stamp_linear_high_bits_equals_fp():
+    x = rand(12, (64, 32))
+    w = rand(13, (32, 64), scale=0.1)
+    got = stamp_linear.stamp_linear(x, w, None, levels=3, hp_tokens=0, hp_bits=16, lp_bits=16)
+    np.testing.assert_allclose(got, x @ w, rtol=1e-3, atol=1e-3)
+
+
+def test_stamp_improves_quant_error_on_smooth_inputs():
+    # The headline effect at the kernel level: smooth (locally correlated)
+    # inputs quantize better through the DWT at equal low bits.
+    t = jnp.linspace(0, 8, 256)[:, None]
+    x = jnp.sin(t + jnp.arange(32)[None, :] * 0.3).astype(jnp.float32)
+    w = rand(14, (32, 32), scale=0.1)
+    fp = x @ w
+    plain = ref.qdq_ref(x, 0, 4, 4) @ w
+    stamp = stamp_linear.stamp_linear(x, w, None, levels=3, hp_tokens=16, hp_bits=8, lp_bits=4)
+    err_plain = float(jnp.sum((plain - fp) ** 2))
+    err_stamp = float(jnp.sum((stamp - fp) ** 2))
+    assert err_stamp < err_plain, (err_stamp, err_plain)
+
+
+# ---------- transform matrices (L2 support) ----------
+
+
+def test_dct_matrix_orthonormal():
+    m = ref.dct_matrix(32)
+    np.testing.assert_allclose(m @ m.T, jnp.eye(32), atol=1e-5)
+
+
+def test_wht_matrix_orthonormal_and_sequency():
+    m = np.asarray(ref.wht_matrix(16))
+    np.testing.assert_allclose(m @ m.T, np.eye(16), atol=1e-6)
+    changes = (np.diff(np.sign(m), axis=1) != 0).sum(axis=1)
+    assert list(changes) == list(range(16))

@@ -1,0 +1,9 @@
+//! **Figure 4b** regeneration: hp-token count vs SQNR sweep.
+use stamp::eval::tables::{fig4b_sweep, TableOpts};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let opts = if std::env::args().any(|a| a == "--full") { TableOpts::full() } else { TableOpts::fast() };
+    println!("{}", fig4b_sweep(&opts).render());
+    println!("regenerated in {:.1?}", t0.elapsed());
+}

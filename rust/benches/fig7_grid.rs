@@ -1,0 +1,11 @@
+//! **Figure 7** regeneration: feature x sequence transform grid.
+use stamp::eval::tables::{fig7_grid, TableOpts};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let opts = if std::env::args().any(|a| a == "--full") { TableOpts::full() } else { TableOpts::fast() };
+    let (lvm, llm) = fig7_grid(&opts);
+    println!("{}", lvm.render());
+    println!("{}", llm.render());
+    println!("regenerated in {:.1?}", t0.elapsed());
+}

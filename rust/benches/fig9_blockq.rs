@@ -1,0 +1,9 @@
+//! **Figure 9** regeneration: per-token vs per-block vs STaMP tradeoff.
+use stamp::eval::tables::{fig9_blockq, TableOpts};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let opts = if std::env::args().any(|a| a == "--full") { TableOpts::full() } else { TableOpts::fast() };
+    println!("{}", fig9_blockq(&opts).render());
+    println!("regenerated in {:.1?}", t0.elapsed());
+}

@@ -1,0 +1,78 @@
+//! §Perf micro-benchmarks: the L3 hot paths in isolation — QDQ throughput,
+//! sequence transforms, matmul, the coordinator's router/batcher, and the
+//! end-to-end serving loop. Baseline/after numbers recorded in
+//! EXPERIMENTS.md §Perf.
+
+use stamp::bench::Harness;
+use stamp::coordinator::{DynamicBatcher, Request};
+use stamp::quant::{BitAllocation, Granularity, QuantScheme};
+use stamp::tensor::{matmul, Tensor};
+use stamp::transforms::{
+    DctTransform, HaarDwt, HadamardFeature, SequenceTransform, WhtTransform,
+};
+use stamp::transforms::FeatureTransform;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let mut h = Harness::new();
+    let s = 2048usize;
+    let d = 512usize;
+    let x = Tensor::randn(&[s, d], 1);
+    let bytes = (s * d * 4) as f64;
+
+    Harness::header("quantization (2048x512 f32)");
+    let scheme4 = QuantScheme::uniform(4, Granularity::PerToken);
+    let st = h.bench("qdq per-token u4", || scheme4.apply(&x));
+    println!("    -> {:.2} GB/s", st.throughput(bytes) / 1e9);
+    let mixed = QuantScheme {
+        granularity: Granularity::PerToken,
+        bits: BitAllocation::two_level(64, 8, 4),
+    };
+    let st = h.bench("qdq mixed {8x64,4}", || mixed.apply(&x));
+    println!("    -> {:.2} GB/s", st.throughput(bytes) / 1e9);
+    let blk = QuantScheme::uniform(4, Granularity::PerBlock { block: 64 });
+    let st = h.bench("qdq per-block-64 u4", || blk.apply(&x));
+    println!("    -> {:.2} GB/s", st.throughput(bytes) / 1e9);
+
+    Harness::header("sequence transforms (2048x512)");
+    let dwt = HaarDwt::new(s, 3);
+    let st = h.bench("haar dwt fwd (3 lvl)", || dwt.forward(&x));
+    println!("    -> {:.2} GB/s", st.throughput(bytes) / 1e9);
+    h.bench("haar dwt inv (3 lvl)", || dwt.inverse(&x));
+    let wht = WhtTransform::new(s);
+    let st = h.bench("wht fwd", || wht.forward(&x));
+    println!("    -> {:.2} GB/s", st.throughput(bytes) / 1e9);
+    let dct = DctTransform::new(512);
+    let xs = Tensor::randn(&[512, d], 2);
+    h.bench("dct fwd (512x512 matrix)", || dct.forward(&xs));
+
+    Harness::header("feature transform + matmul");
+    let had = HadamardFeature::new(d, 3);
+    let st = h.bench("hadamard feature (2048x512)", || had.apply(&x));
+    println!("    -> {:.2} GB/s", st.throughput(bytes) / 1e9);
+    let a = Tensor::randn(&[256, 512], 4);
+    let w = Tensor::randn(&[512, 512], 5);
+    let st = h.bench("matmul 256x512x512", || matmul(&a, &w));
+    let flops = 2.0 * 256.0 * 512.0 * 512.0;
+    println!("    -> {:.2} GFLOP/s", st.throughput(flops) / 1e9);
+
+    Harness::header("coordinator hot path");
+    let st = h.bench("batcher push+flush (batch 8)", || {
+        let now = Instant::now();
+        let mut b = DynamicBatcher::new("v", 8, Duration::from_millis(1));
+        let mut out = None;
+        for i in 0..8u64 {
+            let (tx, _rx) = std::sync::mpsc::channel();
+            let req = Request {
+                id: i,
+                variant: "v".into(),
+                input: Tensor::zeros(&[1, 1]),
+                submitted: now,
+                respond: tx,
+            };
+            out = b.push(req, now);
+        }
+        out
+    });
+    println!("    -> {:.0} ns per request overhead", st.median_ns / 8.0);
+}

@@ -1,0 +1,10 @@
+//! **Table 1** regeneration (LVM W4A4 block-64, ± STaMP) with wall-clock.
+use stamp::eval::tables::{table1_lvm, TableOpts};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let opts = if std::env::args().any(|a| a == "--full") { TableOpts::full() } else { TableOpts::fast() };
+    let table = table1_lvm(&opts);
+    println!("{}", table.render());
+    println!("regenerated in {:.1?}", t0.elapsed());
+}

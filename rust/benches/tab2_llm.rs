@@ -1,0 +1,10 @@
+//! **Table 2** regeneration (LLM W4A4KV4 PPL, ± STaMP) with wall-clock.
+use stamp::eval::tables::{table2_llm, TableOpts};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let opts = if std::env::args().any(|a| a == "--full") { TableOpts::full() } else { TableOpts::fast() };
+    let table = table2_llm(&opts);
+    println!("{}", table.render());
+    println!("regenerated in {:.1?}", t0.elapsed());
+}

@@ -1,0 +1,93 @@
+//! **Table 3** — transform overhead for one DiT denoising step:
+//! FLOPs (analytic) and measured latency overhead [%] for
+//! {feature Hadamard, sequence Hadamard(WHT), sequence DWT, both}.
+//!
+//! The paper's claim to reproduce: seq-Hadamard is much more expensive
+//! than DWT (memory-layout cost), while DWT ≈ feature-Hadamard ≈ small.
+
+use stamp::bench::Harness;
+use stamp::model::{Dit, DitConfig, FpHook, LinearHook};
+use stamp::tensor::{matmul, Tensor};
+use stamp::transforms::{
+    FeatureTransform, HaarDwt2d, HadamardFeature, SequenceTransform, WhtTransform,
+};
+
+/// Hook that applies transforms (and their inverses) around every linear,
+/// WITHOUT quantization — isolating pure transform overhead, as Table 3 does.
+struct TransformHook {
+    feature: bool,
+    seq: Option<Box<dyn SequenceTransform>>,
+    feats: std::cell::RefCell<std::collections::HashMap<usize, HadamardFeature>>,
+}
+
+impl TransformHook {
+    fn new(feature: bool, seq: Option<Box<dyn SequenceTransform>>) -> Self {
+        TransformHook { feature, seq, feats: Default::default() }
+    }
+}
+
+impl LinearHook for TransformHook {
+    fn linear(&self, _site: &str, x: &Tensor, w: &Tensor, bias: Option<&[f32]>) -> Tensor {
+        let mut a = x.clone();
+        if self.feature {
+            let mut feats = self.feats.borrow_mut();
+            let f = feats.entry(x.cols()).or_insert_with(|| HadamardFeature::new(x.cols(), 1));
+            a = f.invert(&f.apply(&a));
+        }
+        if let Some(seq) = &self.seq {
+            if seq.seq_len() == a.rows() {
+                a = seq.inverse(&seq.forward(&a));
+            }
+        }
+        let mut y = matmul(&a, w);
+        if let Some(b) = bias {
+            y = y.add_row_broadcast(b);
+        }
+        y
+    }
+}
+
+fn main() {
+    let dit = Dit::new(DitConfig { steps: 1, ..DitConfig::pixart() }, 0xD17);
+    let (h, w) = (dit.cfg.grid_h, dit.cfg.grid_w);
+    let s = dit.cfg.seq_len();
+    let d = dit.cfg.d_model;
+    let z = Tensor::randn(&[s, dit.latent_dim], 1);
+
+    let mut harness = Harness::new();
+    Harness::header("Table 3: transform overhead on one DiT denoise step");
+
+    let base = harness.bench("baseline (no transform)", || {
+        dit.denoise_step(&FpHook, &z, "bench prompt", 0)
+    });
+
+    let configs: Vec<(&str, bool, Option<Box<dyn SequenceTransform>>)> = vec![
+        ("feature Hadamard", true, None),
+        ("sequence Hadamard (WHT)", false, Some(Box::new(WhtTransform::new(s)))),
+        ("sequence DWT (2-D, 3 lvl)", false, Some(Box::new(HaarDwt2d::new(h, w, 3)))),
+        ("feature Had + seq DWT", true, Some(Box::new(HaarDwt2d::new(h, w, 3)))),
+    ];
+
+    // Analytic FLOPs for one denoise step (linears only, the dominant term).
+    let sites_per_layer = 8u64; // q,k,v,o + to_q,to_out + up,down
+    let layer_flops = sites_per_layer * 2 * (s as u64) * (d as u64) * (d as u64);
+    let step_flops = layer_flops * dit.cfg.n_layers as u64;
+
+    println!("\n{:<28} {:>12} {:>14}", "transform", "FLOPs [%]", "latency [%]");
+    for (name, feat, seq) in configs {
+        // FLOP overhead: 2 applications (fwd+inv) per linear site.
+        let per_site: u64 = {
+            let f = if feat { 2 * HadamardFeature::new(d, 1).flops(s) } else { 0 };
+            let q = seq.as_ref().map(|t| 2 * t.flops(d)).unwrap_or(0);
+            f + q
+        };
+        let total_sites = sites_per_layer * dit.cfg.n_layers as u64;
+        let flop_pct = 100.0 * (per_site * total_sites) as f64 / step_flops as f64;
+
+        let hook = TransformHook::new(feat, seq);
+        let stats = harness.bench(name, || dit.denoise_step(&hook, &z, "bench prompt", 0));
+        let lat_pct = 100.0 * (stats.median_ns - base.median_ns) / base.median_ns;
+        println!("{name:<28} {flop_pct:>11.2}% {lat_pct:>13.1}%");
+    }
+    println!("\nshape check (paper Table 3): seq-Hadamard ≫ DWT ≈ feature-Hadamard.");
+}

@@ -1,0 +1,10 @@
+//! **Tables 4 & 5** regeneration: per-site ablation + companion metrics.
+use stamp::eval::tables::{table4_sites, table5_metrics, TableOpts};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let opts = if std::env::args().any(|a| a == "--full") { TableOpts::full() } else { TableOpts::fast() };
+    println!("{}", table4_sites(&opts).render());
+    println!("{}", table5_metrics(&opts).render());
+    println!("regenerated in {:.1?}", t0.elapsed());
+}

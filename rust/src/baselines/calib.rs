@@ -1,0 +1,111 @@
+//! Calibration: a hook that records, per activation site, the statistics
+//! each baseline's transform construction needs — per-channel activation
+//! absmax (SmoothQuant/ViDiT-Q), raw activation samples (FlatQuant / KLT /
+//! QuaRot dimension discovery), per-in-channel weight absmax (SmoothQuant's
+//! difficulty-shifting denominator), and the weight itself (SVDQuant).
+
+use crate::model::LinearHook;
+use crate::tensor::{matmul, Tensor};
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+/// Per-site calibration statistics.
+#[derive(Clone, Default)]
+pub struct SiteStats {
+    /// Input feature width.
+    pub dim: usize,
+    /// Running per-channel |x| max.
+    pub act_absmax: Vec<f32>,
+    /// Per-in-channel |w| max (max over the output dimension).
+    pub w_absmax: Vec<f32>,
+    /// Up to `max_samples` full activation matrices.
+    pub samples: Vec<Tensor>,
+    /// The layer weight `[in, out]` (recorded once).
+    pub weight: Option<Tensor>,
+}
+
+/// Recording hook; computes the FP result so calibration runs don't skew
+/// downstream activations.
+pub struct CalibHook {
+    stats: RefCell<HashMap<String, SiteStats>>,
+    max_samples: usize,
+}
+
+impl CalibHook {
+    pub fn new(max_samples: usize) -> Self {
+        CalibHook { stats: RefCell::new(HashMap::new()), max_samples }
+    }
+
+    pub fn take(self) -> HashMap<String, SiteStats> {
+        self.stats.into_inner()
+    }
+}
+
+impl LinearHook for CalibHook {
+    fn linear(&self, site: &str, x: &Tensor, w: &Tensor, bias: Option<&[f32]>) -> Tensor {
+        {
+            let mut all = self.stats.borrow_mut();
+            let st = all.entry(site.to_string()).or_default();
+            if st.dim == 0 {
+                st.dim = x.cols();
+                st.act_absmax = vec![0.0; x.cols()];
+                // Per-in-channel weight absmax = max over each row of [in,out].
+                st.w_absmax = (0..w.rows())
+                    .map(|i| w.row(i).iter().fold(0.0f32, |m, &v| m.max(v.abs())))
+                    .collect();
+                st.weight = Some(w.clone());
+            }
+            for i in 0..x.rows() {
+                for (j, &v) in x.row(i).iter().enumerate() {
+                    st.act_absmax[j] = st.act_absmax[j].max(v.abs());
+                }
+            }
+            if st.samples.len() < self.max_samples {
+                st.samples.push(x.clone());
+            }
+        }
+        let mut y = matmul(x, w);
+        if let Some(b) = bias {
+            y = y.add_row_broadcast(b);
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Gpt, GptConfig};
+
+    #[test]
+    fn records_all_gpt_sites() {
+        let gpt = Gpt::new(GptConfig::tiny(), 1);
+        let hook = CalibHook::new(2);
+        let tokens: Vec<u32> = (0..32).map(|i| (i % 60) as u32).collect();
+        let _ = gpt.logits_hooked(&hook, &tokens);
+        let _ = gpt.logits_hooked(&hook, &tokens);
+        let stats = hook.take();
+        // 2 layers × {attn1, attn1.to_out, ffn.up_proj, ffn.down_proj}.
+        assert!(stats.len() >= 8, "sites: {:?}", stats.keys().collect::<Vec<_>>());
+        let st = &stats["layer0.attn1.to_q"];
+        assert_eq!(st.dim, 64);
+        assert_eq!(st.act_absmax.len(), 64);
+        assert_eq!(st.w_absmax.len(), 64);
+        assert_eq!(st.samples.len(), 2, "respects max_samples");
+        assert!(st.weight.is_some());
+        assert!(st.act_absmax.iter().all(|&m| m >= 0.0));
+        assert!(st.act_absmax.iter().any(|&m| m > 0.0));
+    }
+
+    #[test]
+    fn absmax_is_running_max() {
+        let hook = CalibHook::new(0);
+        let w = Tensor::eye(2);
+        let x1 = Tensor::from_vec(&[1, 2], vec![1.0, -2.0]);
+        let x2 = Tensor::from_vec(&[1, 2], vec![-3.0, 0.5]);
+        let _ = hook.linear("s", &x1, &w, None);
+        let _ = hook.linear("s", &x2, &w, None);
+        let stats = hook.take();
+        assert_eq!(stats["s"].act_absmax, vec![3.0, 2.0]);
+    }
+}

@@ -1,0 +1,348 @@
+//! [`QuantHook`] — executes a [`QuantStack`] inside any model forward.
+//!
+//! Per linear layer (site):
+//! 1. feature transform: `a = X R` (site's calibrated `R`, else identity);
+//! 2. optional range shrink (QuaRot's 10% clip);
+//! 3. STaMP: `a_q = L⁻¹ Q_mixed(L a)` — or plain mixed/uniform QDQ;
+//! 4. weight: `w_q = Q_w(R⁻¹ W)` (cached per site; SVDQuant subtracts the
+//!    low-rank branch first);
+//! 5. `y = a_q · w_q (+ X·U·V for SVDQuant) + β`.
+//!
+//! Because QDQ is simulated in fp, applying `R⁻¹`/`L⁻¹` on the activation
+//! side is bit-identical to fusing them into the weight — the overhead of
+//! the *real* kernel placement is measured separately in the Table-3 bench.
+
+use super::{identity_for, quantize_weight, QuantStack};
+use crate::model::LinearHook;
+use crate::quant::{BitAllocation, QuantScheme, Quantizer};
+use crate::stamp::Stamp;
+use crate::tensor::{matmul, Tensor};
+use crate::transforms::FeatureTransform;
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+pub struct QuantHook<'a> {
+    stack: &'a QuantStack,
+    /// Quantized (fused) weights, keyed by site.
+    w_cache: RefCell<HashMap<String, Tensor>>,
+    /// STaMP instances keyed by sequence length.
+    stamp_cache: RefCell<HashMap<usize, Stamp>>,
+}
+
+impl<'a> QuantHook<'a> {
+    pub fn new(stack: &'a QuantStack) -> Self {
+        QuantHook {
+            stack,
+            w_cache: RefCell::new(HashMap::new()),
+            stamp_cache: RefCell::new(HashMap::new()),
+        }
+    }
+
+    fn site_enabled(&self, site: &str) -> bool {
+        if self.stack.skip_sites.iter().any(|s| site.contains(s.as_str())) {
+            return false;
+        }
+        match &self.stack.only_site {
+            Some(f) => site.contains(f.as_str()),
+            None => true,
+        }
+    }
+
+    /// Activation QDQ under the stack's act config (+ optional STaMP).
+    fn quantize_activation(&self, a: &Tensor) -> Tensor {
+        let act = match &self.stack.act {
+            Some(a) => a,
+            None => return a.clone(),
+        };
+        let mut x = a.clone();
+        if act.range_shrink < 1.0 {
+            // Clip each token's range symmetrically around its midpoint.
+            let keep = act.range_shrink;
+            for i in 0..x.rows() {
+                let row = x.row_mut(i);
+                let mx = row.iter().cloned().fold(f32::MIN, f32::max);
+                let mn = row.iter().cloned().fold(f32::MAX, f32::min);
+                let mid = 0.5 * (mx + mn);
+                let half = 0.5 * (mx - mn) * keep;
+                for v in row.iter_mut() {
+                    *v = v.clamp(mid - half, mid + half);
+                }
+            }
+        }
+        let s = x.rows();
+        match &self.stack.stamp {
+            Some(cfg) => {
+                let mut cache = self.stamp_cache.borrow_mut();
+                let stamp = cache.entry(s).or_insert_with(|| {
+                    let mut c = cfg.clone();
+                    c.hp_bits = act.hp_bits;
+                    c.lp_bits = act.bits;
+                    c.hp_tokens = act.hp_tokens;
+                    c.granularity = act.granularity;
+                    // 2-D grids don't apply to arbitrary (e.g. d_ff-wide
+                    // context) lengths; fall back to 1-D DWT when the grid
+                    // doesn't match this sequence length.
+                    if let crate::stamp::SeqTransformKind::HaarDwt2d { h, w } = c.transform {
+                        let s_eff = if c.skip_first_token { s - 1 } else { s };
+                        if h * w != s_eff {
+                            c.transform = crate::stamp::SeqTransformKind::HaarDwt;
+                        }
+                    }
+                    Stamp::new(c, s)
+                });
+                stamp.quantize_dequantize(&x)
+            }
+            None => {
+                // Baseline: uniform bits with the first hp_tokens kept high
+                // (the paper applies this to baselines too, §B.2).
+                let scheme = QuantScheme {
+                    granularity: act.granularity,
+                    bits: BitAllocation::two_level(act.hp_tokens.min(s), act.hp_bits, act.bits),
+                };
+                Quantizer::new(scheme, s).apply(&x)
+            }
+        }
+    }
+
+    /// Quantized fused weight for a site (cached). Sites are unique per
+    /// weight matrix (model contract); the shape check guards against a
+    /// site accidentally being reused across different weights.
+    fn weight_for(&self, site: &str, w: &Tensor) -> Tensor {
+        if let Some(cached) = self.w_cache.borrow().get(site) {
+            assert_eq!(cached.shape(), w.shape(), "site {site} reused for a different weight");
+            return cached.clone();
+        }
+        let mut wt = w.clone();
+        // SVDQuant: remove the low-rank branch before quantizing.
+        if let Some((u, v)) = self.stack.lowrank.get(site) {
+            wt = wt.sub(&matmul(u, v));
+        }
+        // Fuse R⁻¹.
+        if let Some(r) = self.stack.feature.get(site) {
+            wt = r.fuse_into_weight(&wt);
+        }
+        if let Some(cfg) = &self.stack.weight {
+            wt = quantize_weight(&wt, cfg);
+        }
+        self.w_cache.borrow_mut().insert(site.to_string(), wt.clone());
+        wt
+    }
+}
+
+impl LinearHook for QuantHook<'_> {
+    fn linear(&self, site: &str, x: &Tensor, w: &Tensor, bias: Option<&[f32]>) -> Tensor {
+        if !self.site_enabled(site) {
+            return crate::model::FpHook.linear(site, x, w, bias);
+        }
+        // Feature transform on the activation side.
+        let a = match self.stack.feature.get(site) {
+            Some(r) => r.apply(x),
+            None => identity_for(x.cols()).apply(x),
+        };
+        let a_q = self.quantize_activation(&a);
+        let w_q = self.weight_for(site, w);
+        let mut y = matmul(&a_q, &w_q);
+        // SVDQuant low-rank branch stays in fp on the *original* input.
+        if let Some((u, v)) = self.stack.lowrank.get(site) {
+            y = y.add(&matmul(&matmul(x, u), v));
+        }
+        if let Some(b) = bias {
+            y = y.add_row_broadcast(b);
+        }
+        y
+    }
+
+    fn kv(&self, site: &str, t: &Tensor) -> Tensor {
+        if !self.site_enabled(site) {
+            return t.clone();
+        }
+        let kv = match &self.stack.kv {
+            Some(k) => k,
+            None => return t.clone(),
+        };
+        let s = t.rows();
+        let scheme = QuantScheme {
+            granularity: crate::quant::Granularity::PerToken,
+            bits: BitAllocation::two_level(kv.hp_tokens.min(s), kv.hp_bits, kv.bits),
+        };
+        Quantizer::new(scheme, s).apply(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{ActQuantCfg, BaselineKind, CalibHook, KvQuantCfg, WeightQuantCfg};
+    use crate::model::{FpHook, Gpt, GptConfig};
+    use crate::stats::sqnr;
+
+    fn tokens(n: usize) -> Vec<u32> {
+        (0..n).map(|i| ((i * 13 + 5) % 70) as u32).collect()
+    }
+
+    fn calibrated_stats(gpt: &Gpt) -> HashMap<String, super::super::SiteStats> {
+        let hook = CalibHook::new(4);
+        for seed in 0..3usize {
+            let t: Vec<u32> = (0..64).map(|i| ((i * 7 + seed) % 70) as u32).collect();
+            let _ = gpt.logits_hooked(&hook, &t);
+        }
+        hook.take()
+    }
+
+    #[test]
+    fn fp_stack_is_exact() {
+        let gpt = Gpt::new(GptConfig::tiny(), 1);
+        let stack = QuantStack::fp();
+        let hook = QuantHook::new(&stack);
+        let t = tokens(32);
+        let a = gpt.logits_hooked(&hook, &t);
+        let b = gpt.logits_hooked(&FpHook, &t);
+        assert!(a.max_abs_diff(&b) < 1e-5);
+    }
+
+    #[test]
+    fn rtn_w4a4_degrades_then_stamp_recovers() {
+        let gpt = Gpt::new(GptConfig::tiny(), 2);
+        let t = tokens(128);
+        let fp = gpt.logits_hooked(&FpHook, &t);
+
+        let stats = calibrated_stats(&gpt);
+        let mk = |stamp: bool| {
+            let mut s = QuantStack::build(
+                BaselineKind::Rtn,
+                &stats,
+                Some(ActQuantCfg::w4a4_per_token()),
+                Some(WeightQuantCfg::w4_per_channel()),
+                Some(KvQuantCfg::kv4()),
+                7,
+            );
+            if stamp {
+                s = s.with_stamp(QuantStack::llm_stamp(crate::stamp::SeqTransformKind::HaarDwt));
+            }
+            s
+        };
+        let s_plain = mk(false);
+        let s_stamp = mk(true);
+        let q_plain = gpt.logits_hooked(&QuantHook::new(&s_plain), &t);
+        let q_stamp = gpt.logits_hooked(&QuantHook::new(&s_stamp), &t);
+        let sq_plain = sqnr(&fp, &q_plain);
+        let sq_stamp = sqnr(&fp, &q_stamp);
+        assert!(sq_plain < 40.0, "4-bit must visibly degrade ({sq_plain} dB)");
+        assert!(
+            sq_stamp > sq_plain,
+            "STaMP must improve logit fidelity: {sq_stamp} vs {sq_plain}"
+        );
+    }
+
+    #[test]
+    fn quarot_beats_rtn() {
+        let mut gpt = Gpt::new(GptConfig::tiny(), 3);
+        // Give the residual stream outlier channels (the regime QuaRot is
+        // built for): a few large RMSNorm gains create per-channel
+        // activation outliers at every linear input.
+        for b in &mut gpt.blocks {
+            for &j in &[3usize, 17, 41] {
+                b.norm1.gamma[j] = 12.0;
+                b.norm2.gamma[j] = 12.0;
+            }
+        }
+        let t = tokens(128);
+        let fp = gpt.logits_hooked(&FpHook, &t);
+        let stats = calibrated_stats(&gpt);
+        let act = Some(ActQuantCfg::w4a4_per_token());
+        let wq = Some(WeightQuantCfg::w4_per_channel());
+        let rtn = QuantStack::build(BaselineKind::Rtn, &stats, act.clone(), wq, None, 7);
+        let mut quarot = QuantStack::build(BaselineKind::QuaRot, &stats, act, wq, None, 7);
+        // QuaRot's 10% range shrink.
+        if let Some(a) = &mut quarot.act {
+            a.range_shrink = 0.9;
+        }
+        let s_rtn = sqnr(&fp, &gpt.logits_hooked(&QuantHook::new(&rtn), &t));
+        let s_qr = sqnr(&fp, &gpt.logits_hooked(&QuantHook::new(&quarot), &t));
+        assert!(s_qr > s_rtn, "QuaRot {s_qr} !> RTN {s_rtn}");
+    }
+
+    #[test]
+    fn weight_cache_reused() {
+        let gpt = Gpt::new(GptConfig::tiny(), 4);
+        let stats = calibrated_stats(&gpt);
+        let stack = QuantStack::build(
+            BaselineKind::Rtn,
+            &stats,
+            None,
+            Some(WeightQuantCfg::w4_per_channel()),
+            None,
+            7,
+        );
+        let hook = QuantHook::new(&stack);
+        let t = tokens(32);
+        let _ = gpt.logits_hooked(&hook, &t);
+        let n1 = hook.w_cache.borrow().len();
+        let _ = gpt.logits_hooked(&hook, &t);
+        let n2 = hook.w_cache.borrow().len();
+        assert_eq!(n1, n2, "second pass must hit the cache");
+        assert!(n1 >= 8);
+    }
+
+    #[test]
+    fn svdquant_low_rank_helps_outlier_weights() {
+        // Craft a model whose weights have strong rank-1 outliers, then
+        // check SVDQuant beats RTN at W4.
+        let mut gpt = Gpt::new(GptConfig::tiny(), 5);
+        gpt.visit_weights_mut(&mut |_site, w| {
+            let a = Tensor::randn(&[w.rows(), 1], 11);
+            let b = Tensor::randn(&[1, w.cols()], 12);
+            *w = w.add(&matmul(&a, &b).scale(1.5));
+        });
+        let t = tokens(64);
+        let fp = gpt.logits_hooked(&FpHook, &t);
+        let stats = calibrated_stats(&gpt);
+        let wq = Some(WeightQuantCfg { bits: 3, block: None });
+        let rtn = QuantStack::build(BaselineKind::Rtn, &stats, None, wq, None, 7);
+        let svd = QuantStack::build(BaselineKind::SvdQuant, &stats, None, wq, None, 7);
+        let s_rtn = sqnr(&fp, &gpt.logits_hooked(&QuantHook::new(&rtn), &t));
+        let s_svd = sqnr(&fp, &gpt.logits_hooked(&QuantHook::new(&svd), &t));
+        assert!(s_svd > s_rtn, "SVDQuant {s_svd} !> RTN {s_rtn}");
+    }
+
+    #[test]
+    fn only_site_filter() {
+        let gpt = Gpt::new(GptConfig::tiny(), 6);
+        let t = tokens(64);
+        let fp = gpt.logits_hooked(&FpHook, &t);
+        let stats = calibrated_stats(&gpt);
+        // Quantizing only ffn.up_proj at 2 bits must hurt less than
+        // quantizing everything at 2 bits.
+        let mk = |only: Option<&str>| {
+            let mut s = QuantStack::build(
+                BaselineKind::Rtn,
+                &stats,
+                Some(ActQuantCfg { bits: 2, ..ActQuantCfg::w4a4_per_token() }),
+                None,
+                None,
+                7,
+            );
+            if let Some(o) = only {
+                s = s.only(o);
+            }
+            s
+        };
+        let s_one = sqnr(&fp, &gpt.logits_hooked(&QuantHook::new(&mk(Some("ffn.up_proj"))), &t));
+        let s_all = sqnr(&fp, &gpt.logits_hooked(&QuantHook::new(&mk(None)), &t));
+        assert!(s_one > s_all, "one-site {s_one} !> all {s_all}");
+    }
+
+    #[test]
+    fn kv_quant_applied() {
+        let gpt = Gpt::new(GptConfig::tiny(), 7);
+        let t = tokens(64);
+        let fp = gpt.logits_hooked(&FpHook, &t);
+        let stack = QuantStack {
+            kv: Some(KvQuantCfg { bits: 2, hp_tokens: 0, hp_bits: 8 }),
+            ..QuantStack::fp()
+        };
+        let q = gpt.logits_hooked(&QuantHook::new(&stack), &t);
+        // KV2 alone must measurably perturb the logits.
+        assert!(q.max_abs_diff(&fp) > 1e-3);
+    }
+}

@@ -1,0 +1,292 @@
+//! Baseline quantization stacks and their composition with STaMP.
+//!
+//! A [`QuantStack`] bundles everything the paper's tables vary:
+//! per-site **feature transforms** (SmoothQuant scaling / QuaRot Hadamard /
+//! FlatQuant affine / ViDiT-Q SDCB scaling), an optional **SVDQuant**
+//! low-rank weight branch, **weight quantization** (RTN), **activation
+//! quantization** (bits, granularity, mixed-precision tokens), **KV-cache
+//! quantization**, and the optional **STaMP sequence transform**. The
+//! [`QuantHook`] turns a stack into a [`crate::model::LinearHook`] so any
+//! model forward can run under it unchanged.
+//!
+//! Equivalences used (exact for the QDQ simulation):
+//! `Q(XR)·Q_w(R⁻¹W) ≡ [Q(XR)]·[Q_w(R⁻¹W)]` — we quantize the activation in
+//! the transformed domain and multiply by the cached quantized fused
+//! weight, which is bit-identical to an engine that fuses `R⁻¹` into `W`
+//! offline (Ashkboos et al. 2024). The sequence inverse `L⁻¹` is applied
+//! after the matmul, exactly as in Figure 2a.
+
+mod calib;
+mod hook;
+mod lowrank;
+mod weights;
+
+pub use calib::{CalibHook, SiteStats};
+pub use hook::QuantHook;
+pub use lowrank::low_rank_factor;
+pub use weights::{quantize_weight, WeightQuantCfg};
+
+use crate::quant::Granularity;
+use crate::stamp::{SeqTransformKind, StampConfig};
+use crate::transforms::{
+    AffineFeature, FeatureTransform, HadamardFeature, IdentityFeature, ScalingFeature,
+};
+use std::collections::HashMap;
+
+/// Which published method a stack reproduces.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BaselineKind {
+    /// Round-to-nearest: no transforms at all.
+    Rtn,
+    /// SmoothQuant channel scaling (α = 0.5).
+    SmoothQuant,
+    /// QuaRot randomized Hadamard rotations (+10% range shrink).
+    QuaRot,
+    /// FlatQuant-lite calibrated affine transform.
+    FlatQuant,
+    /// ViDiT-Q static-dynamic channel balancing (α = 0.01).
+    ViDitQ,
+    /// SVDQuant: fp low-rank branch absorbs outliers, residual quantized.
+    SvdQuant,
+}
+
+impl BaselineKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            BaselineKind::Rtn => "RTN",
+            BaselineKind::SmoothQuant => "SmoothQuant",
+            BaselineKind::QuaRot => "QuaRot",
+            BaselineKind::FlatQuant => "FlatQuant",
+            BaselineKind::ViDitQ => "ViDiT-Q",
+            BaselineKind::SvdQuant => "SVDQuant",
+        }
+    }
+
+    /// Whether this baseline needs calibration activations.
+    pub fn needs_calibration(&self) -> bool {
+        !matches!(self, BaselineKind::Rtn)
+    }
+}
+
+/// Activation quantization settings.
+#[derive(Clone, Debug)]
+pub struct ActQuantCfg {
+    /// Low-precision bits (the "A4" in W4A4).
+    pub bits: u32,
+    /// High-precision token count (64 in the paper — applied to *all*
+    /// methods incl. baselines, §B.2) and bit width.
+    pub hp_tokens: usize,
+    pub hp_bits: u32,
+    pub granularity: Granularity,
+    /// Min-max range multiplier (<1 introduces deliberate clipping;
+    /// QuaRot uses 0.9 per its paper).
+    pub range_shrink: f32,
+}
+
+impl ActQuantCfg {
+    pub fn w4a4_per_token() -> Self {
+        ActQuantCfg {
+            bits: 4,
+            hp_tokens: 64,
+            hp_bits: 8,
+            granularity: Granularity::PerToken,
+            range_shrink: 1.0,
+        }
+    }
+
+    pub fn per_block(bits: u32, block: usize) -> Self {
+        ActQuantCfg {
+            bits,
+            hp_tokens: 64,
+            hp_bits: 8,
+            granularity: Granularity::PerBlock { block },
+            range_shrink: 1.0,
+        }
+    }
+}
+
+/// KV-cache quantization settings (paper: KV4 with 64 8-bit tokens).
+#[derive(Clone, Debug)]
+pub struct KvQuantCfg {
+    pub bits: u32,
+    pub hp_tokens: usize,
+    pub hp_bits: u32,
+}
+
+impl KvQuantCfg {
+    pub fn kv4() -> Self {
+        KvQuantCfg { bits: 4, hp_tokens: 64, hp_bits: 8 }
+    }
+}
+
+/// A fully-specified quantization configuration for one table row.
+pub struct QuantStack {
+    pub kind: BaselineKind,
+    /// Per-site feature transforms; sites not present use identity.
+    pub feature: HashMap<String, Box<dyn FeatureTransform>>,
+    /// Per-site low-rank branches `(U, V)` for SVDQuant (weight ≈ U·V).
+    pub lowrank: HashMap<String, (crate::tensor::Tensor, crate::tensor::Tensor)>,
+    pub act: Option<ActQuantCfg>,
+    pub weight: Option<WeightQuantCfg>,
+    pub kv: Option<KvQuantCfg>,
+    /// STaMP sequence transform; `None` disables it (baseline column).
+    pub stamp: Option<StampConfig>,
+    /// Sites never quantized (e.g. cross-attention K/V per §5.1). Checked
+    /// by substring.
+    pub skip_sites: Vec<String>,
+    /// If set, ONLY sites containing this substring are quantized
+    /// (Table-4 per-site ablation).
+    pub only_site: Option<String>,
+}
+
+impl QuantStack {
+    /// An FP stack (no quantization at all) — the `FP` table rows.
+    pub fn fp() -> Self {
+        QuantStack {
+            kind: BaselineKind::Rtn,
+            feature: HashMap::new(),
+            lowrank: HashMap::new(),
+            act: None,
+            weight: None,
+            kv: None,
+            stamp: None,
+            skip_sites: Vec::new(),
+            only_site: None,
+        }
+    }
+
+    /// Build a baseline stack from calibration statistics.
+    ///
+    /// `stats` may be empty only for RTN.
+    pub fn build(
+        kind: BaselineKind,
+        stats: &HashMap<String, SiteStats>,
+        act: Option<ActQuantCfg>,
+        weight: Option<WeightQuantCfg>,
+        kv: Option<KvQuantCfg>,
+        seed: u64,
+    ) -> Self {
+        let mut feature: HashMap<String, Box<dyn FeatureTransform>> = HashMap::new();
+        let mut lowrank = HashMap::new();
+        match kind {
+            BaselineKind::Rtn => {}
+            BaselineKind::QuaRot => {
+                // One Hadamard per site dimension; same seed ⇒ same rotation
+                // for equal dims (mirrors QuaRot's shared rotations).
+                for (site, st) in stats {
+                    feature.insert(
+                        site.clone(),
+                        Box::new(HadamardFeature::new(st.dim, seed)) as Box<dyn FeatureTransform>,
+                    );
+                }
+            }
+            BaselineKind::SmoothQuant | BaselineKind::ViDitQ => {
+                let alpha = if kind == BaselineKind::SmoothQuant { 0.5 } else { 0.01 };
+                for (site, st) in stats {
+                    feature.insert(
+                        site.clone(),
+                        Box::new(ScalingFeature::calibrate(&st.act_absmax, &st.w_absmax, alpha)),
+                    );
+                }
+            }
+            BaselineKind::FlatQuant => {
+                for (site, st) in stats {
+                    if !st.samples.is_empty() {
+                        feature.insert(
+                            site.clone(),
+                            Box::new(AffineFeature::calibrate(&st.samples, seed)),
+                        );
+                    }
+                }
+            }
+            BaselineKind::SvdQuant => {
+                for (site, st) in stats {
+                    if let Some(w) = &st.weight {
+                        let rank = (w.cols().min(w.rows()) / 8).clamp(2, 16);
+                        lowrank.insert(site.clone(), low_rank_factor(w, rank, 12));
+                    }
+                }
+            }
+        }
+        QuantStack {
+            kind,
+            feature,
+            lowrank,
+            act,
+            weight,
+            kv,
+            stamp: None,
+            skip_sites: Vec::new(),
+            only_site: None,
+        }
+    }
+
+    /// Enable STaMP on this stack (the ✓ columns of Tables 1–2).
+    pub fn with_stamp(mut self, cfg: StampConfig) -> Self {
+        self.stamp = Some(cfg);
+        self
+    }
+
+    /// LVM convention (§5.1): leave cross-attention K/V unquantized.
+    pub fn with_lvm_skips(mut self) -> Self {
+        self.skip_sites.push("attn2.k".into());
+        self.skip_sites.push("attn2.v".into());
+        self
+    }
+
+    /// Restrict quantization to one site (Table-4 ablation).
+    pub fn only(mut self, site: &str) -> Self {
+        self.only_site = Some(site.to_string());
+        self
+    }
+
+    /// Row label like `QuaRot + STaMP(dwt)`.
+    pub fn label(&self) -> String {
+        match &self.stamp {
+            Some(s) => format!("{} + STaMP({})", self.kind.label(), s.transform.label()),
+            None => self.kind.label().to_string(),
+        }
+    }
+
+    /// Default STaMP config for LLM eval (1-D DWT, skip sink token).
+    pub fn llm_stamp(kind: SeqTransformKind) -> StampConfig {
+        StampConfig { transform: kind, skip_first_token: true, ..Default::default() }
+    }
+
+    /// Default STaMP config for LVM eval (2-D DWT over the latent grid).
+    pub fn lvm_stamp(h: usize, w: usize) -> StampConfig {
+        StampConfig { transform: SeqTransformKind::HaarDwt2d { h, w }, ..Default::default() }
+    }
+}
+
+/// Identity transform helper used by the hook for un-calibrated sites.
+pub(crate) fn identity_for(dim: usize) -> IdentityFeature {
+    IdentityFeature::new(dim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels() {
+        let s = QuantStack::build(BaselineKind::QuaRot, &HashMap::new(), None, None, None, 1);
+        assert_eq!(s.label(), "QuaRot");
+        let s = s.with_stamp(StampConfig::default());
+        assert_eq!(s.label(), "QuaRot + STaMP(dwt)");
+    }
+
+    #[test]
+    fn fp_stack_is_empty() {
+        let s = QuantStack::fp();
+        assert!(s.act.is_none() && s.weight.is_none() && s.kv.is_none() && s.stamp.is_none());
+    }
+
+    #[test]
+    fn calibration_flags() {
+        assert!(!BaselineKind::Rtn.needs_calibration());
+        assert!(BaselineKind::QuaRot.needs_calibration());
+        assert!(BaselineKind::SmoothQuant.needs_calibration());
+        assert!(BaselineKind::SvdQuant.needs_calibration());
+    }
+}

@@ -1,0 +1,96 @@
+//! Weight quantization (RTN — the paper's Table-2 choice, since weight
+//! quantization is "completely perpendicular to sequence transforms").
+//!
+//! Weights are stored `[in, out]`; per-output-channel quantization groups
+//! each *column*, per-block groups `block` consecutive in-entries within a
+//! column (the SVDQuant W4 block-64 setting of Table 1).
+
+use crate::quant::QuantParams;
+use crate::tensor::Tensor;
+
+#[derive(Clone, Copy, Debug)]
+pub struct WeightQuantCfg {
+    pub bits: u32,
+    /// Group size along the input dimension; `None` = whole column
+    /// (per-output-channel, the Table-2 LLM setting).
+    pub block: Option<usize>,
+}
+
+impl WeightQuantCfg {
+    pub fn w4_per_channel() -> Self {
+        WeightQuantCfg { bits: 4, block: None }
+    }
+
+    pub fn w4_block64() -> Self {
+        WeightQuantCfg { bits: 4, block: Some(64) }
+    }
+}
+
+/// Round-to-nearest QDQ of a weight matrix under `cfg`.
+pub fn quantize_weight(w: &Tensor, cfg: &WeightQuantCfg) -> Tensor {
+    let (din, dout) = (w.rows(), w.cols());
+    let block = cfg.block.unwrap_or(din).min(din);
+    let mut out = w.clone();
+    // Column-major grouping on a row-major matrix: gather, qdq, scatter.
+    let mut col = vec![0.0f32; din];
+    for j in 0..dout {
+        for i in 0..din {
+            col[i] = w.at(i, j);
+        }
+        for blk in col.chunks_mut(block) {
+            let p = QuantParams::min_max(blk, cfg.bits);
+            p.qdq_slice(blk);
+        }
+        for i in 0..din {
+            out.set(i, j, col[i]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn high_bits_near_identity() {
+        let w = Tensor::randn(&[32, 16], 1);
+        let q = quantize_weight(&w, &WeightQuantCfg { bits: 16, block: None });
+        assert!(q.max_abs_diff(&w) < 1e-3);
+    }
+
+    #[test]
+    fn per_channel_isolation() {
+        // An outlier in column 0 must not affect column 1's error.
+        let mut w = Tensor::randn(&[64, 2], 2);
+        for i in 0..64 {
+            w.set(i, 0, w.at(i, 0) * 100.0);
+        }
+        let q = quantize_weight(&w, &WeightQuantCfg::w4_per_channel());
+        let col_err = |j: usize| -> f64 {
+            (0..64).map(|i| ((w.at(i, j) - q.at(i, j)) as f64).powi(2)).sum()
+        };
+        // Column 1's error must be that of a normal 4-bit column, i.e. tiny
+        // relative to column 0's (which has 100× the scale).
+        assert!(col_err(1) * 100.0 < col_err(0));
+    }
+
+    #[test]
+    fn block_grouping_beats_per_channel_with_inlier_outlier_mix() {
+        let mut w = Tensor::randn(&[128, 4], 3);
+        for j in 0..4 {
+            w.set(0, j, 50.0); // one outlier entry per column
+        }
+        let pc = quantize_weight(&w, &WeightQuantCfg { bits: 4, block: None });
+        let pb = quantize_weight(&w, &WeightQuantCfg { bits: 4, block: Some(16) });
+        assert!(pb.sub(&w).sq_norm() < pc.sub(&w).sq_norm());
+    }
+
+    #[test]
+    fn fewer_bits_more_error() {
+        let w = Tensor::randn(&[64, 8], 4);
+        let e4 = quantize_weight(&w, &WeightQuantCfg { bits: 4, block: None }).sub(&w).sq_norm();
+        let e8 = quantize_weight(&w, &WeightQuantCfg { bits: 8, block: None }).sub(&w).sq_norm();
+        assert!(e8 < e4);
+    }
+}

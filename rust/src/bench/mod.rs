@@ -1,0 +1,176 @@
+//! Micro-benchmark harness (offline stand-in for criterion; DESIGN.md §3).
+//!
+//! Deterministic wall-clock measurement with warmup, fixed-duration
+//! sampling, and robust statistics (median / p95). `cargo bench` targets
+//! are declared with `harness = false` and drive this directly.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected statistics (nanoseconds per iteration).
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+
+    /// Throughput in items/second given items processed per iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns / 1e9)
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>12}  ({} iters)",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p95_ns),
+            self.iters
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Harness configuration.
+pub struct Harness {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub max_iters: usize,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Harness {
+    fn default() -> Self {
+        Harness {
+            warmup: Duration::from_millis(150),
+            measure: Duration::from_millis(600),
+            max_iters: 1_000_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Harness {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick harness for CI-ish runs.
+    pub fn quick() -> Self {
+        Harness {
+            warmup: Duration::from_millis(30),
+            measure: Duration::from_millis(150),
+            max_iters: 100_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`, which must return something observable (prevents the
+    /// optimizer from deleting the body via `std::hint::black_box`).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> BenchStats {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Measure individual iterations.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure && samples_ns.len() < self.max_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        assert!(!samples_ns.is_empty());
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len();
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: samples_ns.iter().sum::<f64>() / n as f64,
+            median_ns: samples_ns[n / 2],
+            p95_ns: samples_ns[((n as f64 * 0.95) as usize).min(n - 1)],
+            min_ns: samples_ns[0],
+        };
+        println!("{}", stats.line());
+        self.results.push(stats.clone());
+        stats
+    }
+
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+
+    /// Print a header for the stats lines.
+    pub fn header(title: &str) {
+        println!("\n=== {title} ===");
+        println!("{:<44} {:>12} {:>12} {:>12}", "benchmark", "median", "mean", "p95");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut h = Harness {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(30),
+            max_iters: 10_000,
+            results: Vec::new(),
+        };
+        let stats = h.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(stats.iters > 10);
+        assert!(stats.mean_ns > 0.0);
+        assert!(stats.median_ns <= stats.p95_ns);
+        assert!(stats.min_ns <= stats.median_ns);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let s = BenchStats {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1e6, // 1 ms
+            median_ns: 1e6,
+            p95_ns: 1e6,
+            min_ns: 1e6,
+        };
+        assert!((s.throughput(1000.0) - 1e6).abs() < 1.0); // 1k items / ms = 1M/s
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

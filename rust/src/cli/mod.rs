@@ -1,0 +1,111 @@
+//! Hand-rolled CLI (offline stand-in for clap; DESIGN.md §3).
+//!
+//! ```text
+//! stamp eval  <table1|table2|table4|table5|fig4b|fig7|fig9> [--fast] [--csv DIR]
+//! stamp report <fig2|fig3|fig4a> [--csv DIR]
+//! stamp serve [--config FILE] [--requests N]
+//! stamp train <tiny|small|medium|wide> [--steps N]
+//! stamp info
+//! ```
+
+use crate::report::Table;
+use std::path::PathBuf;
+
+/// Parsed command line.
+#[derive(Debug)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let command = argv.first().cloned().unwrap_or_else(|| "help".into());
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                // `--flag value` or bare `--flag`.
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(name.to_string(), "true".into());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { command, positional, flags }
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn csv_dir(&self) -> Option<PathBuf> {
+        self.flag("csv").map(PathBuf::from)
+    }
+}
+
+pub const HELP: &str = "\
+stamp — STaMP: Sequence Transformation and Mixed Precision (reproduction)
+
+USAGE:
+  stamp eval <table1|table2|table4|table5|fig4b|fig7|fig9> [--fast] [--csv DIR]
+  stamp report <fig2|fig3|fig4a> [--csv DIR]
+  stamp serve [--config FILE] [--requests N]
+  stamp train <tiny|small|medium|wide> [--steps N]
+  stamp info
+
+Tables/figures map 1:1 to the paper's evaluation section; see DESIGN.md
+for the experiment index and EXPERIMENTS.md for recorded runs.
+";
+
+/// Print a table and optionally emit CSV.
+pub fn emit(table: &Table, csv_dir: Option<&std::path::Path>) {
+    match table.emit(csv_dir) {
+        Ok(text) => println!("{text}"),
+        Err(e) => eprintln!("warning: CSV emission failed: {e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_and_positional() {
+        let a = Args::parse(&argv("eval table2 --fast --csv out"));
+        assert_eq!(a.command, "eval");
+        assert_eq!(a.positional, vec!["table2"]);
+        assert!(a.has_flag("fast"));
+        assert_eq!(a.flag("csv"), Some("out"));
+    }
+
+    #[test]
+    fn bare_flags() {
+        let a = Args::parse(&argv("serve --config cfg.toml --verbose"));
+        assert_eq!(a.flag("config"), Some("cfg.toml"));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn empty_is_help() {
+        let a = Args::parse(&[]);
+        assert_eq!(a.command, "help");
+    }
+}

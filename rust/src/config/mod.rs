@@ -1,0 +1,48 @@
+//! Configuration system: a minimal TOML-subset parser (offline stand-in
+//! for serde+toml; DESIGN.md §3) plus the typed run configuration the CLI
+//! and coordinator consume.
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with string
+//! ("…"), integer, float, boolean, and flat arrays of those. Comments with
+//! `#`. This covers every config this repo ships.
+
+mod parser;
+mod run;
+
+pub use parser::{ParseError, TomlValue, Toml};
+pub use run::{ModelSpec, QuantSpec, RunConfig, ServeSpec};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn end_to_end_config_parse() {
+        let text = r#"
+# demo config
+[model]
+kind = "gpt"
+variant = "small"
+seq_len = 256
+
+[quant]
+baseline = "quarot"
+stamp = true
+act_bits = 4
+hp_tokens = 64
+
+[serve]
+workers = 2
+max_batch = 8
+"#;
+        let cfg = RunConfig::from_toml_str(text).unwrap();
+        assert_eq!(cfg.model.kind, "gpt");
+        assert_eq!(cfg.model.variant, "small");
+        assert_eq!(cfg.model.seq_len, 256);
+        assert_eq!(cfg.quant.baseline, "quarot");
+        assert!(cfg.quant.stamp);
+        assert_eq!(cfg.quant.act_bits, 4);
+        assert_eq!(cfg.serve.workers, 2);
+        assert_eq!(cfg.serve.max_batch, 8);
+    }
+}

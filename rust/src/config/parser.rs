@@ -1,0 +1,252 @@
+//! The TOML-subset parser. Hand-rolled recursive-descent over lines;
+//! good error messages with line numbers.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with location.
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error on line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// A parsed document: `section -> key -> value`. Keys outside any section
+/// live under the empty-string section.
+#[derive(Debug, Default)]
+pub struct Toml {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl Toml {
+    pub fn parse(text: &str) -> Result<Toml, ParseError> {
+        let mut doc = Toml::default();
+        let mut current = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line_no = ln + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| ParseError {
+                    line: line_no,
+                    message: "unterminated section header".into(),
+                })?;
+                current = name.trim().to_string();
+                doc.sections.entry(current.clone()).or_default();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| ParseError {
+                line: line_no,
+                message: format!("expected `key = value`, got `{line}`"),
+            })?;
+            let key = line[..eq].trim().to_string();
+            if key.is_empty() {
+                return Err(ParseError { line: line_no, message: "empty key".into() });
+            }
+            let value = parse_value(line[eq + 1..].trim(), line_no)?;
+            doc.sections.entry(current.clone()).or_default().insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    /// Typed getters with defaults.
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+
+    pub fn int_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(|v| v.as_int()).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_float()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, line: usize) -> Result<TomlValue, ParseError> {
+    if s.is_empty() {
+        return Err(ParseError { line, message: "missing value".into() });
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let inner = body.strip_suffix('"').ok_or_else(|| ParseError {
+            line,
+            message: "unterminated string".into(),
+        })?;
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let inner = body.strip_suffix(']').ok_or_else(|| ParseError {
+            line,
+            message: "unterminated array".into(),
+        })?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                items.push(parse_value(part.trim(), line)?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(ParseError { line, message: format!("cannot parse value `{s}`") })
+}
+
+/// Split an array body on commas, respecting quoted strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0usize;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        let doc = Toml::parse("a = 1\nb = 2.5\nc = \"hi\"\nd = true\n").unwrap();
+        assert_eq!(doc.get("", "a"), Some(&TomlValue::Int(1)));
+        assert_eq!(doc.get("", "b"), Some(&TomlValue::Float(2.5)));
+        assert_eq!(doc.get("", "c"), Some(&TomlValue::Str("hi".into())));
+        assert_eq!(doc.get("", "d"), Some(&TomlValue::Bool(true)));
+    }
+
+    #[test]
+    fn sections_and_comments() {
+        let doc = Toml::parse("# top\n[x]\nk = 3 # trailing\n[y]\nk = 4\n").unwrap();
+        assert_eq!(doc.int_or("x", "k", 0), 3);
+        assert_eq!(doc.int_or("y", "k", 0), 4);
+        assert_eq!(doc.int_or("z", "k", 9), 9);
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = Toml::parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(doc.str_or("", "s", ""), "a#b");
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = Toml::parse("xs = [1, 2, 3]\nys = [\"a\", \"b,c\"]\n").unwrap();
+        match doc.get("", "xs").unwrap() {
+            TomlValue::Array(v) => assert_eq!(v.len(), 3),
+            _ => panic!(),
+        }
+        match doc.get("", "ys").unwrap() {
+            TomlValue::Array(v) => {
+                assert_eq!(v[1], TomlValue::Str("b,c".into()));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Toml::parse("ok = 1\nbroken\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = Toml::parse("x = \"unterminated\n").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+
+    #[test]
+    fn int_float_coercion() {
+        let doc = Toml::parse("x = 3\n").unwrap();
+        assert_eq!(doc.float_or("", "x", 0.0), 3.0);
+    }
+}

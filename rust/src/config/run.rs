@@ -1,0 +1,198 @@
+//! Typed run configuration assembled from a parsed TOML document, with
+//! defaults matching the paper's main experimental setting (W4A4KV4,
+//! 64 high-precision tokens, DWT STaMP).
+
+use super::parser::Toml;
+use crate::baselines::{ActQuantCfg, BaselineKind, KvQuantCfg, WeightQuantCfg};
+use crate::quant::Granularity;
+
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    /// "gpt" or "dit".
+    pub kind: String,
+    /// gpt: tiny|small|medium|wide; dit: pixart|sana.
+    pub variant: String,
+    pub seq_len: usize,
+    /// Training steps for GPT build (0 = untrained).
+    pub train_steps: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct QuantSpec {
+    /// rtn|smoothquant|quarot|flatquant|viditq|svdquant|fp.
+    pub baseline: String,
+    pub stamp: bool,
+    /// dwt|dct|wht|identity (sequence transform when stamp=true).
+    pub transform: String,
+    pub act_bits: u32,
+    pub weight_bits: u32,
+    pub kv_bits: u32,
+    pub hp_tokens: usize,
+    pub hp_bits: u32,
+    /// 0 = per-token; >0 = per-block with this block size.
+    pub act_block: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ServeSpec {
+    pub workers: usize,
+    pub max_batch: usize,
+    /// Max microseconds a batch may wait for more requests.
+    pub max_wait_us: u64,
+    pub queue_depth: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub model: ModelSpec,
+    pub quant: QuantSpec,
+    pub serve: ServeSpec,
+    /// Where AOT artifacts live.
+    pub artifacts_dir: String,
+}
+
+impl RunConfig {
+    pub fn defaults() -> Self {
+        RunConfig {
+            model: ModelSpec {
+                kind: "gpt".into(),
+                variant: "small".into(),
+                seq_len: 256,
+                train_steps: 200,
+            },
+            quant: QuantSpec {
+                baseline: "quarot".into(),
+                stamp: true,
+                transform: "dwt".into(),
+                act_bits: 4,
+                weight_bits: 4,
+                kv_bits: 4,
+                hp_tokens: 64,
+                hp_bits: 8,
+                act_block: 0,
+            },
+            serve: ServeSpec { workers: 2, max_batch: 8, max_wait_us: 2000, queue_depth: 256 },
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+
+    pub fn from_toml_str(text: &str) -> anyhow::Result<Self> {
+        let doc = Toml::parse(text).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        let d = Self::defaults();
+        Ok(RunConfig {
+            model: ModelSpec {
+                kind: doc.str_or("model", "kind", &d.model.kind),
+                variant: doc.str_or("model", "variant", &d.model.variant),
+                seq_len: doc.int_or("model", "seq_len", d.model.seq_len as i64) as usize,
+                train_steps: doc.int_or("model", "train_steps", d.model.train_steps as i64)
+                    as usize,
+            },
+            quant: QuantSpec {
+                baseline: doc.str_or("quant", "baseline", &d.quant.baseline),
+                stamp: doc.bool_or("quant", "stamp", d.quant.stamp),
+                transform: doc.str_or("quant", "transform", &d.quant.transform),
+                act_bits: doc.int_or("quant", "act_bits", d.quant.act_bits as i64) as u32,
+                weight_bits: doc.int_or("quant", "weight_bits", d.quant.weight_bits as i64) as u32,
+                kv_bits: doc.int_or("quant", "kv_bits", d.quant.kv_bits as i64) as u32,
+                hp_tokens: doc.int_or("quant", "hp_tokens", d.quant.hp_tokens as i64) as usize,
+                hp_bits: doc.int_or("quant", "hp_bits", d.quant.hp_bits as i64) as u32,
+                act_block: doc.int_or("quant", "act_block", d.quant.act_block as i64) as usize,
+            },
+            serve: ServeSpec {
+                workers: doc.int_or("serve", "workers", d.serve.workers as i64) as usize,
+                max_batch: doc.int_or("serve", "max_batch", d.serve.max_batch as i64) as usize,
+                max_wait_us: doc.int_or("serve", "max_wait_us", d.serve.max_wait_us as i64) as u64,
+                queue_depth: doc.int_or("serve", "queue_depth", d.serve.queue_depth as i64)
+                    as usize,
+            },
+            artifacts_dir: doc.str_or("", "artifacts_dir", &d.artifacts_dir),
+        })
+    }
+
+    pub fn from_file(path: &str) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading config {path}: {e}"))?;
+        Self::from_toml_str(&text)
+    }
+}
+
+impl QuantSpec {
+    pub fn baseline_kind(&self) -> anyhow::Result<Option<BaselineKind>> {
+        Ok(Some(match self.baseline.as_str() {
+            "fp" => return Ok(None),
+            "rtn" => BaselineKind::Rtn,
+            "smoothquant" => BaselineKind::SmoothQuant,
+            "quarot" => BaselineKind::QuaRot,
+            "flatquant" => BaselineKind::FlatQuant,
+            "viditq" => BaselineKind::ViDitQ,
+            "svdquant" => BaselineKind::SvdQuant,
+            other => anyhow::bail!("unknown baseline `{other}`"),
+        }))
+    }
+
+    pub fn seq_transform(&self) -> anyhow::Result<crate::stamp::SeqTransformKind> {
+        Ok(match self.transform.as_str() {
+            "dwt" => crate::stamp::SeqTransformKind::HaarDwt,
+            "dct" => crate::stamp::SeqTransformKind::Dct,
+            "wht" => crate::stamp::SeqTransformKind::Wht,
+            "identity" => crate::stamp::SeqTransformKind::Identity,
+            other => anyhow::bail!("unknown sequence transform `{other}`"),
+        })
+    }
+
+    pub fn act_cfg(&self) -> ActQuantCfg {
+        ActQuantCfg {
+            bits: self.act_bits,
+            hp_tokens: self.hp_tokens,
+            hp_bits: self.hp_bits,
+            granularity: if self.act_block == 0 {
+                Granularity::PerToken
+            } else {
+                Granularity::PerBlock { block: self.act_block }
+            },
+            range_shrink: if self.baseline == "quarot" { 0.9 } else { 1.0 },
+        }
+    }
+
+    pub fn weight_cfg(&self) -> WeightQuantCfg {
+        WeightQuantCfg { bits: self.weight_bits, block: None }
+    }
+
+    pub fn kv_cfg(&self) -> KvQuantCfg {
+        KvQuantCfg { bits: self.kv_bits, hp_tokens: self.hp_tokens, hp_bits: self.hp_bits }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_setting() {
+        let d = RunConfig::defaults();
+        assert_eq!(d.quant.act_bits, 4);
+        assert_eq!(d.quant.hp_tokens, 64);
+        assert_eq!(d.quant.hp_bits, 8);
+        assert!(d.quant.stamp);
+    }
+
+    #[test]
+    fn baseline_mapping() {
+        let mut q = RunConfig::defaults().quant;
+        q.baseline = "fp".into();
+        assert!(q.baseline_kind().unwrap().is_none());
+        q.baseline = "svdquant".into();
+        assert_eq!(q.baseline_kind().unwrap(), Some(BaselineKind::SvdQuant));
+        q.baseline = "bogus".into();
+        assert!(q.baseline_kind().is_err());
+    }
+
+    #[test]
+    fn quarot_gets_range_shrink() {
+        let mut q = RunConfig::defaults().quant;
+        q.baseline = "quarot".into();
+        assert!((q.act_cfg().range_shrink - 0.9).abs() < 1e-6);
+        q.baseline = "rtn".into();
+        assert!((q.act_cfg().range_shrink - 1.0).abs() < 1e-6);
+    }
+}

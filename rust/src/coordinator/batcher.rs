@@ -1,0 +1,186 @@
+//! Dynamic batching: group compatible requests (same variant, same input
+//! shape) up to `max_batch`, flushing early once the oldest request has
+//! waited `max_wait`. Pure logic — no threads — so invariants are directly
+//! property-testable.
+
+use super::Request;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// A formed batch, ready for a worker.
+pub struct Batch {
+    pub variant: String,
+    pub requests: Vec<Request>,
+    pub formed_at: Instant,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+/// Batcher for ONE variant.
+pub struct DynamicBatcher {
+    variant: String,
+    max_batch: usize,
+    max_wait: Duration,
+    pending: VecDeque<Request>,
+}
+
+impl DynamicBatcher {
+    pub fn new(variant: &str, max_batch: usize, max_wait: Duration) -> Self {
+        assert!(max_batch >= 1);
+        DynamicBatcher { variant: variant.to_string(), max_batch, max_wait, pending: VecDeque::new() }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Add a request; returns a full batch if `max_batch` was reached.
+    pub fn push(&mut self, req: Request, now: Instant) -> Option<Batch> {
+        debug_assert_eq!(req.variant, self.variant);
+        self.pending.push_back(req);
+        if self.pending.len() >= self.max_batch {
+            return self.flush(now);
+        }
+        None
+    }
+
+    /// Time-based flush: emit the partial batch if the oldest entry has
+    /// waited past `max_wait`.
+    pub fn poll(&mut self, now: Instant) -> Option<Batch> {
+        let oldest = self.pending.front()?;
+        if now.duration_since(oldest.submitted) >= self.max_wait {
+            self.flush(now)
+        } else {
+            None
+        }
+    }
+
+    /// Unconditional flush (shutdown path).
+    pub fn flush(&mut self, now: Instant) -> Option<Batch> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        let take = self.pending.len().min(self.max_batch);
+        let requests: Vec<Request> = self.pending.drain(..take).collect();
+        Some(Batch { variant: self.variant.clone(), requests, formed_at: now })
+    }
+
+    /// Deadline for the next time-based flush (router sleep hint).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.pending.front().map(|r| r.submitted + self.max_wait)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use std::sync::mpsc;
+
+    fn req(id: u64, variant: &str, at: Instant) -> Request {
+        let (tx, _rx) = mpsc::channel();
+        Request { id, variant: variant.into(), input: Tensor::zeros(&[1, 1]), submitted: at, respond: tx }
+    }
+
+    #[test]
+    fn flushes_at_max_batch() {
+        let now = Instant::now();
+        let mut b = DynamicBatcher::new("v", 3, Duration::from_millis(100));
+        assert!(b.push(req(1, "v", now), now).is_none());
+        assert!(b.push(req(2, "v", now), now).is_none());
+        let batch = b.push(req(3, "v", now), now).expect("full batch");
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.pending(), 0);
+        // FIFO order preserved.
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn time_based_flush() {
+        let t0 = Instant::now();
+        let mut b = DynamicBatcher::new("v", 8, Duration::from_millis(10));
+        b.push(req(1, "v", t0), t0);
+        assert!(b.poll(t0).is_none(), "too early");
+        let later = t0 + Duration::from_millis(11);
+        let batch = b.poll(later).expect("deadline passed");
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn deadline_hint() {
+        let t0 = Instant::now();
+        let mut b = DynamicBatcher::new("v", 8, Duration::from_millis(10));
+        assert!(b.next_deadline().is_none());
+        b.push(req(1, "v", t0), t0);
+        assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(10)));
+    }
+
+    #[test]
+    fn property_batch_invariants() {
+        // Invariants under random push/poll interleavings:
+        //   (1) every batch ≤ max_batch;
+        //   (2) FIFO within a variant (ids strictly increasing);
+        //   (3) nothing lost: Σ batch sizes + pending == pushed.
+        crate::testkit::check(
+            "batcher-invariants",
+            50,
+            0xBA7C4,
+            |g| {
+                let max_batch = g.usize_in(1, 8);
+                let ops: Vec<u8> = (0..g.usize_in(1, 60)).map(|_| (g.usize_in(0, 3)) as u8).collect();
+                (max_batch, ops)
+            },
+            |(max_batch, ops)| {
+                let t0 = Instant::now();
+                let mut b = DynamicBatcher::new("v", *max_batch, Duration::from_millis(5));
+                let mut next_id = 0u64;
+                let mut emitted = 0usize;
+                let mut last_emitted_id: Option<u64> = None;
+                let mut clock = t0;
+                for op in ops {
+                    clock += Duration::from_millis(2);
+                    let out = match op {
+                        0 | 1 => {
+                            next_id += 1;
+                            b.push(req(next_id, "v", clock), clock)
+                        }
+                        2 => b.poll(clock),
+                        _ => b.flush(clock),
+                    };
+                    if let Some(batch) = out {
+                        if batch.len() > *max_batch {
+                            return Err(format!("batch {} > max {}", batch.len(), max_batch));
+                        }
+                        for r in &batch.requests {
+                            if let Some(prev) = last_emitted_id {
+                                if r.id <= prev {
+                                    return Err(format!("FIFO violated: {} after {}", r.id, prev));
+                                }
+                            }
+                            last_emitted_id = Some(r.id);
+                        }
+                        emitted += batch.len();
+                    }
+                }
+                if emitted + b.pending() != next_id as usize {
+                    return Err(format!(
+                        "lost requests: emitted {} + pending {} != pushed {}",
+                        emitted,
+                        b.pending(),
+                        next_id
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}

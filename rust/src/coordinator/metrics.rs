@@ -1,0 +1,139 @@
+//! Serving metrics: lock-free per-variant counters (requests, batches,
+//! latency sums, queue depth) suitable for reading from any thread.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+#[derive(Default)]
+pub struct VariantMetrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub errors: AtomicU64,
+    pub queued_us_total: AtomicU64,
+    pub service_us_total: AtomicU64,
+    pub batch_size_total: AtomicU64,
+    pub queue_depth: AtomicU64,
+}
+
+impl VariantMetrics {
+    pub fn record_batch(&self, batch_size: usize, queued_us: u64, service_us: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.requests.fetch_add(batch_size as u64, Ordering::Relaxed);
+        self.batch_size_total.fetch_add(batch_size as u64, Ordering::Relaxed);
+        self.queued_us_total.fetch_add(queued_us * batch_size as u64, Ordering::Relaxed);
+        self.service_us_total.fetch_add(service_us * batch_size as u64, Ordering::Relaxed);
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batch_size_total.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    pub fn mean_queued_us(&self) -> f64 {
+        let r = self.requests.load(Ordering::Relaxed);
+        if r == 0 {
+            return 0.0;
+        }
+        self.queued_us_total.load(Ordering::Relaxed) as f64 / r as f64
+    }
+
+    pub fn mean_service_us(&self) -> f64 {
+        let r = self.requests.load(Ordering::Relaxed);
+        if r == 0 {
+            return 0.0;
+        }
+        self.service_us_total.load(Ordering::Relaxed) as f64 / r as f64
+    }
+}
+
+/// Registry of per-variant metrics.
+#[derive(Default)]
+pub struct Metrics {
+    inner: RwLock<HashMap<String, std::sync::Arc<VariantMetrics>>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn variant(&self, name: &str) -> std::sync::Arc<VariantMetrics> {
+        if let Some(m) = self.inner.read().unwrap().get(name) {
+            return m.clone();
+        }
+        let mut w = self.inner.write().unwrap();
+        w.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Text snapshot for the CLI / logs.
+    pub fn snapshot(&self) -> String {
+        let r = self.inner.read().unwrap();
+        let mut names: Vec<&String> = r.keys().collect();
+        names.sort();
+        let mut out = String::new();
+        for n in names {
+            let m = &r[n];
+            out.push_str(&format!(
+                "{n}: reqs={} batches={} errs={} mean_batch={:.2} queue={:.0}µs service={:.0}µs depth={}\n",
+                m.requests.load(Ordering::Relaxed),
+                m.batches.load(Ordering::Relaxed),
+                m.errors.load(Ordering::Relaxed),
+                m.mean_batch_size(),
+                m.mean_queued_us(),
+                m.mean_service_us(),
+                m.queue_depth.load(Ordering::Relaxed),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_read() {
+        let m = Metrics::new();
+        let v = m.variant("rtn");
+        v.record_batch(4, 100, 500);
+        v.record_batch(2, 50, 200);
+        assert_eq!(v.requests.load(Ordering::Relaxed), 6);
+        assert_eq!(v.batches.load(Ordering::Relaxed), 2);
+        assert!((v.mean_batch_size() - 3.0).abs() < 1e-9);
+        // queued: (100·4 + 50·2)/6 = 83.3
+        assert!((v.mean_queued_us() - 500.0 / 6.0).abs() < 1e-6);
+        assert!(m.snapshot().contains("rtn"));
+    }
+
+    #[test]
+    fn same_arc_for_same_name() {
+        let m = Metrics::new();
+        let a = m.variant("x");
+        let b = m.variant("x");
+        a.requests.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(b.requests.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn concurrent_updates() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let mc = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    mc.variant("shared").record_batch(1, 1, 1);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.variant("shared").requests.load(Ordering::Relaxed), 4000);
+    }
+}

@@ -1,0 +1,68 @@
+//! L3 coordinator: the serving layer that turns quantized model variants
+//! into a request-driven service (vLLM-router-shaped, scaled to this
+//! testbed; DESIGN.md §6).
+//!
+//! Data flow:
+//! ```text
+//! client → submit() → [router thread] → per-variant DynamicBatcher
+//!                                          │ (max_batch / max_wait)
+//!                                          ▼
+//!                               worker pool (N std threads)
+//!                                          │ Executor::execute(batch)
+//!                                          ▼
+//!                               per-request response channels
+//! ```
+//!
+//! The [`Executor`] trait abstracts what a worker runs: the PJRT engine
+//! (AOT artifacts), the Rust-native quantized model, or a mock (tests).
+
+mod batcher;
+mod metrics;
+mod router;
+mod server;
+mod worker;
+
+pub use batcher::{Batch, DynamicBatcher};
+pub use metrics::{Metrics, VariantMetrics};
+pub use router::Router;
+pub use server::{Server, ServerHandle};
+pub use worker::{Executor, WorkerPool};
+
+use crate::tensor::Tensor;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// A unit of work: one activation matrix to push through one variant.
+pub struct Request {
+    pub id: u64,
+    pub variant: String,
+    pub input: Tensor,
+    pub submitted: Instant,
+    pub respond: mpsc::Sender<Response>,
+}
+
+/// The result delivered back to the submitter.
+#[derive(Debug)]
+pub struct Response {
+    pub id: u64,
+    pub variant: String,
+    pub output: Result<Tensor, String>,
+    /// Time spent queued before the batch was formed.
+    pub queued_us: u64,
+    /// Batch execution time.
+    pub service_us: u64,
+    /// How many requests shared the batch.
+    pub batch_size: usize,
+}
+
+impl std::fmt::Debug for Request {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Request(id={}, variant={}, input={:?})", self.id, self.variant, self.input.shape())
+    }
+}
+
+impl std::fmt::Debug for Batch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Batch(variant={}, n={})", self.variant, self.requests.len())
+    }
+}

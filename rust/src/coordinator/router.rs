@@ -1,0 +1,166 @@
+//! Router: owns one [`DynamicBatcher`] per registered variant and decides
+//! which worker pool a formed batch goes to. Unknown variants are rejected
+//! at submit time (routing totality over the registered set).
+
+use super::{Batch, DynamicBatcher, Request};
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+pub struct Router {
+    batchers: HashMap<String, DynamicBatcher>,
+    max_batch: usize,
+    max_wait: Duration,
+}
+
+impl Router {
+    pub fn new(variants: &[&str], max_batch: usize, max_wait: Duration) -> Self {
+        let batchers = variants
+            .iter()
+            .map(|v| (v.to_string(), DynamicBatcher::new(v, max_batch, max_wait)))
+            .collect();
+        Router { batchers, max_batch, max_wait }
+    }
+
+    pub fn variants(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.batchers.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    /// Register a variant at runtime (e.g. a newly calibrated stack).
+    pub fn register(&mut self, variant: &str) {
+        self.batchers
+            .entry(variant.to_string())
+            .or_insert_with(|| DynamicBatcher::new(variant, self.max_batch, self.max_wait));
+    }
+
+    /// Route a request into its variant's batcher. Returns `Err(req)` for
+    /// unknown variants; `Ok(Some(batch))` when the push filled a batch.
+    pub fn route(&mut self, req: Request, now: Instant) -> Result<Option<Batch>, Request> {
+        match self.batchers.get_mut(&req.variant) {
+            Some(b) => Ok(b.push(req, now)),
+            None => Err(req),
+        }
+    }
+
+    /// Collect every batch whose deadline has passed.
+    pub fn poll_deadlines(&mut self, now: Instant) -> Vec<Batch> {
+        let mut out = Vec::new();
+        for b in self.batchers.values_mut() {
+            while let Some(batch) = b.poll(now) {
+                out.push(batch);
+            }
+        }
+        out
+    }
+
+    /// Earliest pending deadline across variants (sleep hint).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.batchers.values().filter_map(|b| b.next_deadline()).min()
+    }
+
+    /// Flush everything (shutdown).
+    pub fn flush_all(&mut self, now: Instant) -> Vec<Batch> {
+        let mut out = Vec::new();
+        for b in self.batchers.values_mut() {
+            while let Some(batch) = b.flush(now) {
+                out.push(batch);
+            }
+        }
+        out
+    }
+
+    pub fn total_pending(&self) -> usize {
+        self.batchers.values().map(|b| b.pending()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use std::sync::mpsc;
+
+    fn req(id: u64, variant: &str) -> Request {
+        let (tx, _rx) = mpsc::channel();
+        Request {
+            id,
+            variant: variant.into(),
+            input: Tensor::zeros(&[1, 1]),
+            submitted: Instant::now(),
+            respond: tx,
+        }
+    }
+
+    #[test]
+    fn routes_by_variant() {
+        let now = Instant::now();
+        let mut r = Router::new(&["a", "b"], 2, Duration::from_millis(10));
+        assert!(r.route(req(1, "a"), now).unwrap().is_none());
+        assert!(r.route(req(2, "b"), now).unwrap().is_none());
+        // Filling `a` must not emit `b`'s pending request.
+        let batch = r.route(req(3, "a"), now).unwrap().expect("a full");
+        assert_eq!(batch.variant, "a");
+        assert_eq!(batch.len(), 2);
+        assert_eq!(r.total_pending(), 1);
+    }
+
+    #[test]
+    fn unknown_variant_rejected() {
+        let now = Instant::now();
+        let mut r = Router::new(&["a"], 2, Duration::from_millis(10));
+        let rejected = r.route(req(1, "nope"), now).unwrap_err();
+        assert_eq!(rejected.variant, "nope");
+        r.register("nope");
+        assert!(r.route(req(2, "nope"), now).is_ok());
+    }
+
+    #[test]
+    fn poll_deadlines_across_variants() {
+        let t0 = Instant::now();
+        let mut r = Router::new(&["a", "b"], 8, Duration::from_millis(5));
+        r.route(req(1, "a"), t0).unwrap();
+        r.route(req(2, "b"), t0).unwrap();
+        let later = t0 + Duration::from_millis(6);
+        let batches = r.poll_deadlines(later);
+        assert_eq!(batches.len(), 2);
+        assert_eq!(r.total_pending(), 0);
+    }
+
+    #[test]
+    fn property_no_cross_variant_mixing() {
+        crate::testkit::check(
+            "router-no-mixing",
+            40,
+            0x40073,
+            |g| {
+                let n = g.usize_in(1, 40);
+                (0..n).map(|_| g.usize_in(0, 2)).collect::<Vec<usize>>()
+            },
+            |variant_ids| {
+                let now = Instant::now();
+                let names = ["a", "b", "c"];
+                let mut r = Router::new(&names, 3, Duration::from_millis(50));
+                let mut batches = Vec::new();
+                for (i, &v) in variant_ids.iter().enumerate() {
+                    if let Some(b) = r.route(req(i as u64, names[v]), now).unwrap() {
+                        batches.push(b);
+                    }
+                }
+                batches.extend(r.flush_all(now));
+                let emitted: usize = batches.iter().map(|b| b.len()).sum();
+                if emitted != variant_ids.len() {
+                    return Err(format!("lost: {} != {}", emitted, variant_ids.len()));
+                }
+                for b in &batches {
+                    for rq in &b.requests {
+                        if rq.variant != b.variant {
+                            return Err(format!("mixed batch: {} in {}", rq.variant, b.variant));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

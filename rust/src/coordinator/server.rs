@@ -1,0 +1,210 @@
+//! Server: glues ingest → router → worker pool behind one thread, giving
+//! clients a simple blocking/async-ish `submit` + response channel API.
+
+use super::{Executor, Metrics, Request, Response, Router, WorkerPool};
+use crate::config::ServeSpec;
+use crate::tensor::Tensor;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+enum Ingest {
+    Req(Request),
+    Shutdown,
+}
+
+/// Handle returned to clients for submitting work.
+pub struct ServerHandle {
+    tx: Sender<Ingest>,
+    next_id: AtomicU64,
+    pub metrics: Arc<Metrics>,
+}
+
+impl ServerHandle {
+    /// Submit one input; returns (request id, response receiver).
+    pub fn submit(&self, variant: &str, input: Tensor) -> (u64, Receiver<Response>) {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (rtx, rrx) = channel();
+        let req = Request {
+            id,
+            variant: variant.to_string(),
+            input,
+            submitted: Instant::now(),
+            respond: rtx,
+        };
+        self.tx.send(Ingest::Req(req)).expect("server stopped");
+        (id, rrx)
+    }
+
+    /// Submit and block for the response.
+    pub fn call(&self, variant: &str, input: Tensor, timeout: Duration) -> Result<Response, String> {
+        let (_, rx) = self.submit(variant, input);
+        rx.recv_timeout(timeout).map_err(|e| format!("response timeout: {e}"))
+    }
+}
+
+/// The running server.
+pub struct Server {
+    handle: Arc<ServerHandle>,
+    router_thread: std::thread::JoinHandle<()>,
+    pool: Option<WorkerPool>,
+    shutdown_tx: Sender<Ingest>,
+}
+
+impl Server {
+    pub fn start(spec: &ServeSpec, variants: &[&str], executor: Arc<dyn Executor>) -> Server {
+        let metrics = Arc::new(Metrics::new());
+        let pool = WorkerPool::new(spec.workers, spec.queue_depth, executor, metrics.clone());
+        let (tx, rx) = channel::<Ingest>();
+        let handle =
+            Arc::new(ServerHandle { tx: tx.clone(), next_id: AtomicU64::new(1), metrics });
+
+        let mut router =
+            Router::new(variants, spec.max_batch, Duration::from_micros(spec.max_wait_us));
+        let pool_tx = pool.clone_sender();
+        let router_thread = std::thread::Builder::new()
+            .name("stamp-router".into())
+            .spawn(move || {
+                router_loop(rx, &mut router, move |batch| {
+                    let _ = pool_tx.send(batch);
+                })
+            })
+            .expect("spawn router");
+
+        Server { handle, router_thread, pool: Some(pool), shutdown_tx: tx }
+    }
+
+    pub fn handle(&self) -> Arc<ServerHandle> {
+        self.handle.clone()
+    }
+
+    /// Graceful shutdown: flush batchers, drain workers.
+    pub fn shutdown(mut self) {
+        let _ = self.shutdown_tx.send(Ingest::Shutdown);
+        self.router_thread.join().expect("router panicked");
+        if let Some(pool) = self.pool.take() {
+            pool.shutdown();
+        }
+    }
+}
+
+fn router_loop(
+    rx: Receiver<Ingest>,
+    router: &mut Router,
+    dispatch: impl Fn(super::Batch),
+) {
+    loop {
+        // Sleep until the next flush deadline or a new request.
+        let timeout = router
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(Ingest::Req(req)) => {
+                let now = Instant::now();
+                match router.route(req, now) {
+                    Ok(Some(batch)) => dispatch(batch),
+                    Ok(None) => {}
+                    Err(rejected) => {
+                        let _ = rejected.respond.send(Response {
+                            id: rejected.id,
+                            variant: rejected.variant.clone(),
+                            output: Err(format!("unknown variant `{}`", rejected.variant)),
+                            queued_us: 0,
+                            service_us: 0,
+                            batch_size: 0,
+                        });
+                    }
+                }
+            }
+            Ok(Ingest::Shutdown) => {
+                for batch in router.flush_all(Instant::now()) {
+                    dispatch(batch);
+                }
+                return;
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                for batch in router.poll_deadlines(Instant::now()) {
+                    dispatch(batch);
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                for batch in router.flush_all(Instant::now()) {
+                    dispatch(batch);
+                }
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ServeSpec {
+        ServeSpec { workers: 2, max_batch: 4, max_wait_us: 1_000, queue_depth: 64 }
+    }
+
+    fn doubling_executor() -> Arc<dyn Executor> {
+        Arc::new(|_v: &str, inputs: &[&Tensor]| {
+            Ok(inputs.iter().map(|t| t.scale(2.0)).collect::<Vec<_>>())
+        })
+    }
+
+    #[test]
+    fn end_to_end_single_call() {
+        let server = Server::start(&spec(), &["fp"], doubling_executor());
+        let h = server.handle();
+        let resp = h.call("fp", Tensor::full(&[2, 2], 3.0), Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.output.unwrap().at(0, 0), 6.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn batches_form_under_load() {
+        let server = Server::start(&spec(), &["fp"], doubling_executor());
+        let h = server.handle();
+        let rxs: Vec<_> = (0..16).map(|i| h.submit("fp", Tensor::full(&[1, 1], i as f32)).1).collect();
+        for rx in &rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap().output.unwrap();
+        }
+        let vm = h.metrics.variant("fp");
+        let batches = vm.batches.load(Ordering::Relaxed);
+        assert!(batches < 16, "batching must coalesce: {batches} batches for 16 reqs");
+        server.shutdown();
+    }
+
+    #[test]
+    fn unknown_variant_gets_error_response() {
+        let server = Server::start(&spec(), &["fp"], doubling_executor());
+        let h = server.handle();
+        let resp = h.call("mystery", Tensor::zeros(&[1, 1]), Duration::from_secs(5)).unwrap();
+        assert!(resp.output.unwrap_err().contains("unknown variant"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn time_flush_delivers_partial_batches() {
+        // One lone request must still complete (deadline flush).
+        let server = Server::start(&spec(), &["fp"], doubling_executor());
+        let h = server.handle();
+        let t0 = Instant::now();
+        let resp = h.call("fp", Tensor::full(&[1, 1], 1.0), Duration::from_secs(5)).unwrap();
+        assert!(resp.output.is_ok());
+        assert!(t0.elapsed() < Duration::from_secs(1));
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_flushes_pending() {
+        let server = Server::start(&spec(), &["fp"], doubling_executor());
+        let h = server.handle();
+        let (_, rx) = h.submit("fp", Tensor::full(&[1, 1], 9.0));
+        server.shutdown();
+        // The response must have been produced during shutdown drain.
+        let resp = rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(resp.output.unwrap().at(0, 0), 18.0);
+    }
+}

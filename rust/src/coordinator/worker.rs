@@ -1,0 +1,253 @@
+//! Worker pool: N std threads draining a bounded batch queue and running
+//! an [`Executor`]. Bounded queues give natural backpressure: the router
+//! blocks (or sheds) when workers fall behind.
+
+use super::{Batch, Metrics, Response};
+use crate::tensor::Tensor;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// What a worker runs on a batch of inputs (all same variant + shape).
+pub trait Executor: Send + Sync + 'static {
+    /// Process each input; one output per input. An `Err` fails the whole
+    /// batch (each request receives the error).
+    fn execute(&self, variant: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>, String>;
+}
+
+/// Blanket impl so closures can be executors in tests/examples.
+impl<F> Executor for F
+where
+    F: Fn(&str, &[&Tensor]) -> Result<Vec<Tensor>, String> + Send + Sync + 'static,
+{
+    fn execute(&self, variant: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>, String> {
+        self(variant, inputs)
+    }
+}
+
+pub struct WorkerPool {
+    tx: SyncSender<Batch>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn new(
+        workers: usize,
+        queue_depth: usize,
+        executor: Arc<dyn Executor>,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        assert!(workers >= 1);
+        let (tx, rx) = sync_channel::<Batch>(queue_depth);
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::new();
+        for wid in 0..workers {
+            let rx = rx.clone();
+            let executor = executor.clone();
+            let metrics = metrics.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("stamp-worker-{wid}"))
+                    .spawn(move || worker_loop(rx, executor, metrics))
+                    .expect("spawn worker"),
+            );
+        }
+        WorkerPool { tx, handles }
+    }
+
+    /// Submit a batch; blocks when the queue is full (backpressure).
+    pub fn submit(&self, batch: Batch) {
+        self.tx.send(batch).expect("worker pool shut down");
+    }
+
+    /// Clone the ingest sender (used by the server's router thread, which
+    /// outlives this borrow).
+    pub fn clone_sender(&self) -> SyncSender<Batch> {
+        self.tx.clone()
+    }
+
+    /// Non-blocking submit; returns the batch back on a full queue so the
+    /// caller can shed or retry.
+    pub fn try_submit(&self, batch: Batch) -> Result<(), Batch> {
+        match self.tx.try_send(batch) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(b)) => Err(b),
+            Err(TrySendError::Disconnected(_)) => panic!("worker pool shut down"),
+        }
+    }
+
+    /// Drop the sender and join the workers (drains remaining batches).
+    pub fn shutdown(self) {
+        drop(self.tx);
+        for h in self.handles {
+            h.join().expect("worker panicked");
+        }
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Batch>>>, executor: Arc<dyn Executor>, metrics: Arc<Metrics>) {
+    loop {
+        // Hold the lock only while receiving so workers pull concurrently.
+        let batch = match rx.lock().unwrap().recv() {
+            Ok(b) => b,
+            Err(_) => return, // all senders dropped
+        };
+        let vm = metrics.variant(&batch.variant);
+        vm.queue_depth.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
+        let inputs: Vec<&Tensor> = batch.requests.iter().map(|r| &r.input).collect();
+        let result = executor.execute(&batch.variant, &inputs);
+        let service_us = t0.elapsed().as_micros() as u64;
+        let batch_size = batch.requests.len();
+        let queued_us = batch
+            .requests
+            .iter()
+            .map(|r| batch.formed_at.duration_since(r.submitted).as_micros() as u64)
+            .sum::<u64>()
+            / batch_size.max(1) as u64;
+        vm.record_batch(batch_size, queued_us, service_us);
+
+        match result {
+            Ok(outputs) => {
+                assert_eq!(outputs.len(), batch_size, "executor output arity");
+                for (req, out) in batch.requests.into_iter().zip(outputs) {
+                    let _ = req.respond.send(Response {
+                        id: req.id,
+                        variant: batch.variant.clone(),
+                        output: Ok(out),
+                        queued_us,
+                        service_us,
+                        batch_size,
+                    });
+                }
+            }
+            Err(msg) => {
+                vm.errors.fetch_add(batch_size as u64, Ordering::Relaxed);
+                for req in batch.requests {
+                    let _ = req.respond.send(Response {
+                        id: req.id,
+                        variant: batch.variant.clone(),
+                        output: Err(msg.clone()),
+                        queued_us,
+                        service_us,
+                        batch_size,
+                    });
+                }
+            }
+        }
+        vm.queue_depth.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Request;
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    fn mk_batch(variant: &str, n: usize) -> (Batch, Vec<mpsc::Receiver<Response>>) {
+        let now = Instant::now();
+        let mut reqs = Vec::new();
+        let mut rxs = Vec::new();
+        for i in 0..n {
+            let (tx, rx) = mpsc::channel();
+            reqs.push(Request {
+                id: i as u64,
+                variant: variant.into(),
+                input: Tensor::full(&[2, 2], i as f32),
+                submitted: now,
+                respond: tx,
+            });
+            rxs.push(rx);
+        }
+        (Batch { variant: variant.into(), requests: reqs, formed_at: now }, rxs)
+    }
+
+    #[test]
+    fn executes_and_responds() {
+        let metrics = Arc::new(Metrics::new());
+        let exec: Arc<dyn Executor> = Arc::new(|_v: &str, inputs: &[&Tensor]| {
+            Ok(inputs.iter().map(|t| t.scale(2.0)).collect::<Vec<_>>())
+        });
+        let pool = WorkerPool::new(2, 8, exec, metrics.clone());
+        let (batch, rxs) = mk_batch("v", 4);
+        pool.submit(batch);
+        for (i, rx) in rxs.iter().enumerate() {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.id, i as u64);
+            assert_eq!(resp.batch_size, 4);
+            let out = resp.output.unwrap();
+            assert_eq!(out.at(0, 0), 2.0 * i as f32);
+        }
+        pool.shutdown();
+        assert_eq!(metrics.variant("v").requests.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn errors_propagate_to_every_request() {
+        let metrics = Arc::new(Metrics::new());
+        let exec: Arc<dyn Executor> =
+            Arc::new(|_v: &str, _i: &[&Tensor]| -> Result<Vec<Tensor>, String> { Err("boom".into()) });
+        let pool = WorkerPool::new(1, 4, exec, metrics.clone());
+        let (batch, rxs) = mk_batch("v", 3);
+        pool.submit(batch);
+        for rx in &rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.output.unwrap_err(), "boom");
+        }
+        pool.shutdown();
+        assert_eq!(metrics.variant("v").errors.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn try_submit_sheds_on_full_queue() {
+        let metrics = Arc::new(Metrics::new());
+        // Slow executor + queue depth 1 forces Full.
+        let exec: Arc<dyn Executor> = Arc::new(|_v: &str, inputs: &[&Tensor]| {
+            std::thread::sleep(Duration::from_millis(50));
+            Ok(inputs.iter().map(|t| (*t).clone()).collect::<Vec<_>>())
+        });
+        let pool = WorkerPool::new(1, 1, exec, metrics);
+        let mut shed = 0;
+        let mut rx_keep = Vec::new();
+        for _ in 0..6 {
+            let (batch, rxs) = mk_batch("v", 1);
+            match pool.try_submit(batch) {
+                Ok(()) => rx_keep.extend(rxs),
+                Err(_returned) => shed += 1,
+            }
+        }
+        assert!(shed > 0, "bounded queue must shed under load");
+        for rx in &rx_keep {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap().output.unwrap();
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn parallel_workers_make_progress() {
+        let metrics = Arc::new(Metrics::new());
+        let exec: Arc<dyn Executor> = Arc::new(|_v: &str, inputs: &[&Tensor]| {
+            std::thread::sleep(Duration::from_millis(20));
+            Ok(inputs.iter().map(|t| (*t).clone()).collect::<Vec<_>>())
+        });
+        let pool = WorkerPool::new(4, 16, exec, metrics);
+        let t0 = Instant::now();
+        let mut rxs = Vec::new();
+        for _ in 0..8 {
+            let (batch, r) = mk_batch("v", 1);
+            pool.submit(batch);
+            rxs.extend(r);
+        }
+        for rx in &rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        let elapsed = t0.elapsed();
+        pool.shutdown();
+        // 8 × 20 ms serial = 160 ms; 4 workers should finish well under.
+        assert!(elapsed < Duration::from_millis(120), "no parallelism: {elapsed:?}");
+    }
+}

@@ -1,0 +1,225 @@
+//! Synthetic activation matrices with paper-calibrated structure.
+//!
+//! Figure 3 of the paper establishes three facts about intermediate
+//! activations that STaMP exploits or must survive:
+//!
+//! 1. the sequence autocorrelation is ≈ Toeplitz (LLM) or block-Toeplitz
+//!    (LVM, from flattening a 2-D grid);
+//! 2. a few feature channels carry large outliers (what feature transforms
+//!    fix — SmoothQuant/QuaRot's motivation);
+//! 3. LLMs have a "massive activation" attention-sink first token
+//!    (paper §B.2, Sun et al. 2024).
+//!
+//! [`ActivationGenerator`] samples matrices with all three properties with
+//! tunable strength, used for calibration sets, Figure 2/3/4 inputs, and
+//! property tests.
+
+use crate::linalg::{ar1_covariance, block_toeplitz_2d, cholesky};
+use crate::tensor::{Tensor, XorShiftRng};
+
+/// Declarative description of an activation distribution.
+#[derive(Clone, Debug)]
+pub struct ActivationSpec {
+    /// Sequence length (for Grid: h·w).
+    pub seq_len: usize,
+    /// Feature width.
+    pub dim: usize,
+    /// Sequence correlation structure.
+    pub correlation: Correlation,
+    /// Number of outlier feature channels.
+    pub outlier_channels: usize,
+    /// Outlier magnitude multiplier (×RMS).
+    pub outlier_scale: f32,
+    /// Massive first-token (attention sink) magnitude, 0 = none.
+    pub sink_scale: f32,
+}
+
+#[derive(Clone, Debug)]
+pub enum Correlation {
+    /// Independent tokens (negative control: sequence transforms cannot help).
+    None,
+    /// AR(1) along the sequence: `S[i,j] = ρ^|i−j|` (LLM-like, Fig 3a right).
+    Ar1 { rho: f32 },
+    /// Separable 2-D AR over an `h×w` grid (LVM-like, Fig 3a left).
+    Grid2d { h: usize, w: usize, rho_y: f32, rho_x: f32 },
+}
+
+impl ActivationSpec {
+    /// LLM-layer preset (≈ LLaMA attention-layer input, Fig 3 right).
+    pub fn llm(seq_len: usize, dim: usize) -> Self {
+        ActivationSpec {
+            seq_len,
+            dim,
+            correlation: Correlation::Ar1 { rho: 0.95 },
+            outlier_channels: dim / 64,
+            outlier_scale: 20.0,
+            sink_scale: 50.0,
+        }
+    }
+
+    /// LVM-layer preset (≈ PixArt-Σ cross-attn input over a token grid).
+    pub fn lvm(h: usize, w: usize, dim: usize) -> Self {
+        ActivationSpec {
+            seq_len: h * w,
+            dim,
+            correlation: Correlation::Grid2d { h, w, rho_y: 0.9, rho_x: 0.9 },
+            outlier_channels: dim / 64,
+            outlier_scale: 15.0,
+            sink_scale: 0.0,
+        }
+    }
+
+    /// Uncorrelated control.
+    pub fn iid(seq_len: usize, dim: usize) -> Self {
+        ActivationSpec {
+            seq_len,
+            dim,
+            correlation: Correlation::None,
+            outlier_channels: 0,
+            outlier_scale: 1.0,
+            sink_scale: 0.0,
+        }
+    }
+}
+
+/// Sampler bound to one spec; factors the covariance once.
+pub struct ActivationGenerator {
+    spec: ActivationSpec,
+    /// Cholesky factor of the sequence covariance (None for iid).
+    chol: Option<Tensor>,
+    /// Which channels are outliers (chosen deterministically from the spec).
+    outlier_idx: Vec<usize>,
+}
+
+impl ActivationGenerator {
+    pub fn new(spec: ActivationSpec) -> Self {
+        let chol = match &spec.correlation {
+            Correlation::None => None,
+            Correlation::Ar1 { rho } => Some(cholesky(&ar1_covariance(spec.seq_len, *rho, 1.0))),
+            Correlation::Grid2d { h, w, rho_y, rho_x } => {
+                assert_eq!(h * w, spec.seq_len);
+                Some(cholesky(&block_toeplitz_2d(*h, *w, *rho_y, *rho_x, 1.0)))
+            }
+        };
+        // Spread outlier channels deterministically.
+        let stride = if spec.outlier_channels > 0 { spec.dim / spec.outlier_channels } else { 1 };
+        let outlier_idx = (0..spec.outlier_channels).map(|k| k * stride + stride / 2).collect();
+        ActivationGenerator { spec, chol, outlier_idx }
+    }
+
+    pub fn spec(&self) -> &ActivationSpec {
+        &self.spec
+    }
+
+    /// Sample one `seq_len × dim` activation matrix.
+    pub fn sample(&self, seed: u64) -> Tensor {
+        let s = self.spec.seq_len;
+        let d = self.spec.dim;
+        let z = Tensor::randn(&[s, d], seed);
+        let mut x = match &self.chol {
+            Some(l) => l.matmul(&z),
+            None => z,
+        };
+        // Outlier channels: amplify, with a per-channel deterministic sign
+        // pattern (mimics the static channel outliers of LLM activations).
+        let mut rng = XorShiftRng::new(seed ^ 0xA5A5_A5A5);
+        for &j in &self.outlier_idx {
+            let sign = if rng.next_f32() < 0.5 { -1.0 } else { 1.0 };
+            for i in 0..s {
+                let v = x.at(i, j);
+                x.set(i, j, sign * (v.abs() + 1.0) * self.spec.outlier_scale);
+            }
+        }
+        // Attention-sink token.
+        if self.spec.sink_scale > 0.0 {
+            for j in 0..d {
+                let v = x.at(0, j);
+                x.set(0, j, v * self.spec.sink_scale);
+            }
+        }
+        x
+    }
+
+    /// A calibration set of `n` samples.
+    pub fn calibration_set(&self, n: usize, seed: u64) -> Vec<Tensor> {
+        (0..n).map(|i| self.sample(seed.wrapping_add(i as u64 * 7919))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats;
+
+    #[test]
+    fn ar1_sample_is_correlated() {
+        let g = ActivationGenerator::new(ActivationSpec {
+            outlier_channels: 0,
+            sink_scale: 0.0,
+            ..ActivationSpec::llm(64, 32)
+        });
+        let samples = g.calibration_set(32, 1);
+        let cov = stats::autocorrelation(&samples);
+        // Adjacent-token correlation ≈ ρ = 0.95.
+        let c01 = cov.at(0, 1) / (cov.at(0, 0) * cov.at(1, 1)).sqrt();
+        assert!((c01 - 0.95).abs() < 0.05, "adjacent corr {c01}");
+    }
+
+    #[test]
+    fn iid_sample_is_uncorrelated() {
+        let g = ActivationGenerator::new(ActivationSpec::iid(64, 32));
+        let samples = g.calibration_set(64, 2);
+        let cov = stats::autocorrelation(&samples);
+        let c01 = cov.at(0, 1) / cov.at(0, 0);
+        assert!(c01.abs() < 0.1, "iid corr {c01}");
+    }
+
+    #[test]
+    fn outlier_channels_present() {
+        let spec = ActivationSpec::llm(32, 128);
+        let g = ActivationGenerator::new(spec);
+        let x = g.sample(3);
+        let absmax = stats::channel_absmax(&x);
+        let median = {
+            let mut v = absmax.clone();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v[v.len() / 2]
+        };
+        let outliers = absmax.iter().filter(|&&m| m > 5.0 * median).count();
+        assert!(outliers >= 2, "found {outliers} outlier channels");
+    }
+
+    #[test]
+    fn sink_token_massive() {
+        let g = ActivationGenerator::new(ActivationSpec::llm(64, 64));
+        let x = g.sample(4);
+        let e = stats::token_energies(&x);
+        let rest_max = e[1..].iter().cloned().fold(0.0f64, f64::max);
+        assert!(e[0] > 10.0 * rest_max, "sink energy {} vs rest max {}", e[0], rest_max);
+    }
+
+    #[test]
+    fn grid_sample_block_structure() {
+        let g = ActivationGenerator::new(ActivationSpec {
+            outlier_channels: 0,
+            ..ActivationSpec::lvm(8, 8, 16)
+        });
+        let samples = g.calibration_set(48, 5);
+        let cov = stats::autocorrelation(&samples);
+        let norm = |i: usize, j: usize| cov.at(i, j) / (cov.at(i, i) * cov.at(j, j)).sqrt();
+        // Neighbor within a grid row more correlated than across rows at
+        // equal sequence distance... sequence distance 1 (same row) vs
+        // sequence distance 8 (vertical neighbor) both high; distance 7
+        // (row wrap) low.
+        assert!(norm(0, 1) > 0.7);
+        assert!(norm(0, 8) > 0.7);
+        assert!(norm(7, 8) < norm(0, 1) - 0.2, "wrap {} vs in-row {}", norm(7, 8), norm(0, 1));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = ActivationGenerator::new(ActivationSpec::llm(16, 16));
+        assert_eq!(g.sample(9), g.sample(9));
+        assert_ne!(g.sample(9), g.sample(10));
+    }
+}

@@ -1,0 +1,22 @@
+//! Data substrate.
+//!
+//! The reproduction environment has no datasets (see DESIGN.md §3), so this
+//! module builds the closest synthetic equivalents:
+//!
+//! * [`corpus`] — a deterministic English-like corpus + word tokenizer,
+//!   standing in for WikiText-2. Generated from a template grammar with a
+//!   Zipfian vocabulary so that n-gram statistics are non-trivial and a
+//!   tiny LM trained on it reaches meaningfully-below-uniform perplexity.
+//! * [`activations`] — samplers for activation matrices with prescribed
+//!   (block-)Toeplitz autocorrelation and per-channel outliers, calibrated
+//!   to the qualitative structure of the paper's Figure 3.
+//! * [`prompts`] — small prompt sets standing in for COCO / MJHQ in the
+//!   LVM tables (they seed the DiT latent generator).
+
+pub mod activations;
+pub mod corpus;
+pub mod prompts;
+
+pub use activations::{ActivationGenerator, ActivationSpec};
+pub use corpus::{Corpus, Tokenizer};
+pub use prompts::PromptSet;

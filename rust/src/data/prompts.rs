@@ -1,0 +1,131 @@
+//! Prompt sets standing in for the paper's COCO / MJHQ evaluation prompts.
+//!
+//! In the LVM tables each prompt seeds the DiT latent generator (conditioning
+//! embedding + initial latent), so what matters for the reproduction is that
+//! the two sets induce *different but fixed* conditioning distributions —
+//! mirroring how COCO (natural captions) and MJHQ (aesthetic prompts) differ.
+
+use crate::tensor::{Tensor, XorShiftRng};
+
+/// A named prompt set; prompts are hashed into conditioning embeddings.
+pub struct PromptSet {
+    pub name: &'static str,
+    pub prompts: Vec<&'static str>,
+}
+
+const COCO_LIKE: &[&str] = &[
+    "a cat that has a shirt on its back",
+    "a guy with a backpack looking at the ground to his left",
+    "two dogs running across a grassy field",
+    "a red bicycle leaning against a brick wall",
+    "a bowl of fruit on a wooden table",
+    "a train arriving at a crowded station",
+    "children playing soccer in a park",
+    "a fishing boat docked at the harbor",
+    "an old clock tower above the town square",
+    "a plate of pasta with tomato sauce",
+    "a person riding a horse on the beach",
+    "a laptop and a cup of coffee on a desk",
+    "a bus stopped at a traffic light downtown",
+    "a bird perched on a power line",
+    "a kitchen with stainless steel appliances",
+    "a man holding an umbrella in the rain",
+];
+
+const MJHQ_LIKE: &[&str] = &[
+    "a cute little dog looking up at the stars in the night sky, filled with hope and determination",
+    "ethereal crystal palace floating above clouds, golden hour, highly detailed",
+    "portrait of a wise elder with intricate tattoos, dramatic lighting",
+    "bioluminescent forest at midnight, fantasy concept art",
+    "steampunk airship over a victorian city, cinematic composition",
+    "a serene japanese garden with koi pond, studio ghibli style",
+    "futuristic neon metropolis in the rain, cyberpunk aesthetic",
+    "ancient library with floating books and warm candlelight",
+    "majestic dragon curled around a snowy mountain peak",
+    "underwater city with glass domes and schools of fish",
+    "cosmic whale swimming through a nebula, surreal art",
+    "a knight in ornate armor standing in a field of silver flowers",
+    "desert oasis under two moons, science fantasy illustration",
+    "clockwork butterfly resting on a mechanical rose",
+    "northern lights over a frozen lake, photorealistic",
+    "floating islands connected by rope bridges at sunset",
+];
+
+impl PromptSet {
+    pub fn coco() -> Self {
+        PromptSet { name: "COCO", prompts: COCO_LIKE.to_vec() }
+    }
+
+    pub fn mjhq() -> Self {
+        PromptSet { name: "MJHQ", prompts: MJHQ_LIKE.to_vec() }
+    }
+
+    /// Deterministic 64-bit hash of a prompt (FNV-1a).
+    pub fn hash(prompt: &str) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for b in prompt.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        h
+    }
+
+    /// Embed a prompt into a conditioning vector of width `d` (unit RMS).
+    /// Stand-in for the pooled T5/CLIP text embedding the DiT consumes.
+    pub fn embed(prompt: &str, d: usize) -> Tensor {
+        let mut rng = XorShiftRng::new(Self::hash(prompt));
+        let mut v = Vec::with_capacity(d);
+        for _ in 0..d {
+            v.push(rng.next_gaussian());
+        }
+        let rms = (v.iter().map(|x| x * x).sum::<f32>() / d as f32).sqrt().max(1e-6);
+        Tensor::from_vec(&[1, d], v.into_iter().map(|x| x / rms).collect())
+    }
+
+    /// Per-prompt token embeddings (seq of conditioning tokens, for
+    /// cross-attention K/V). `n` tokens of width `d`.
+    pub fn embed_tokens(prompt: &str, n: usize, d: usize) -> Tensor {
+        let mut rng = XorShiftRng::new(Self::hash(prompt) ^ 0x746f6b656e73);
+        let mut v = Vec::with_capacity(n * d);
+        for _ in 0..n * d {
+            v.push(rng.next_gaussian() * 0.7);
+        }
+        Tensor::from_vec(&[n, d], v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sets_nonempty_distinct() {
+        let c = PromptSet::coco();
+        let m = PromptSet::mjhq();
+        assert_eq!(c.prompts.len(), 16);
+        assert_eq!(m.prompts.len(), 16);
+        assert_ne!(c.prompts[0], m.prompts[0]);
+    }
+
+    #[test]
+    fn embedding_deterministic_and_distinct() {
+        let a = PromptSet::embed("a cat", 32);
+        let b = PromptSet::embed("a cat", 32);
+        let c = PromptSet::embed("a dog", 32);
+        assert_eq!(a, b);
+        assert!(a.max_abs_diff(&c) > 0.1);
+    }
+
+    #[test]
+    fn embedding_unit_rms() {
+        let e = PromptSet::embed("test prompt", 64);
+        let rms = (e.sq_norm() / 64.0).sqrt();
+        assert!((rms - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn token_embeddings_shape() {
+        let t = PromptSet::embed_tokens("hello", 8, 16);
+        assert_eq!(t.shape(), &[8, 16]);
+    }
+}

@@ -1,0 +1,212 @@
+//! Analytic figure reproductions: the Theorem-1 bound-vs-error comparison
+//! (Fig. 2b), autocorrelation / energy-spectrum / basis data (Fig. 3),
+//! and the bit-allocation strategy comparison (Fig. 4a).
+
+use crate::linalg::eigh;
+use crate::quant::{optimal_bits, quantization_error, theorem1_bound, BitAllocation, Granularity};
+use crate::stats::{autocorrelation, token_energies};
+use crate::tensor::Tensor;
+use crate::transforms::{
+    DctTransform, HaarDwt, IdentitySeq, KltTransform, SequenceTransform, WhtTransform,
+};
+
+/// One point of the Figure-2b curves.
+#[derive(Clone, Debug)]
+pub struct BoundPoint {
+    pub avg_bits: f64,
+    pub measured_error: f64,
+    pub bound: f64,
+}
+
+/// Figure 2b: upper bound and measured quantization error across average
+/// bit widths, for a given transform + allocation strategy.
+pub fn fig2_bound_curve(
+    x: &Tensor,
+    transform: &dyn SequenceTransform,
+    allocations: &[BitAllocation],
+) -> Vec<BoundPoint> {
+    allocations
+        .iter()
+        .map(|bits| BoundPoint {
+            avg_bits: bits.average_bits(x.rows()),
+            measured_error: quantization_error(x, transform, bits, Granularity::PerToken),
+            bound: theorem1_bound(x, transform, bits),
+        })
+        .collect()
+}
+
+/// Figure-3b data: per-token energy spectra (descending) under each
+/// transform, normalized to total energy 1.
+pub struct EnergySpectra {
+    pub identity: Vec<f64>,
+    pub klt: Vec<f64>,
+    pub dct: Vec<f64>,
+    pub wht: Vec<f64>,
+    pub dwt: Vec<f64>,
+}
+
+pub fn fig3_energy_spectra(samples: &[Tensor]) -> EnergySpectra {
+    let s = samples[0].rows();
+    let cov = autocorrelation(samples);
+    let klt = KltTransform::from_autocorrelation(&cov);
+    let dct = DctTransform::new(s);
+    let wht = WhtTransform::new(s);
+    let dwt = HaarDwt::new(s, HaarDwt::max_levels(s).min(3));
+    let id = IdentitySeq::new(s);
+
+    let spectrum = |t: &dyn SequenceTransform| -> Vec<f64> {
+        let mut acc = vec![0.0f64; s];
+        for x in samples {
+            let y = t.forward(x);
+            for (a, e) in acc.iter_mut().zip(token_energies(&y)) {
+                *a += e;
+            }
+        }
+        let total: f64 = acc.iter().sum();
+        let mut v: Vec<f64> = acc.iter().map(|&e| e / total).collect();
+        v.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        v
+    };
+
+    EnergySpectra {
+        identity: spectrum(&id),
+        klt: spectrum(&klt),
+        dct: spectrum(&dct),
+        wht: spectrum(&wht),
+        dwt: spectrum(&dwt),
+    }
+}
+
+/// Fraction of energy in the top-k coefficients of a (sorted) spectrum.
+pub fn topk_share(spectrum: &[f64], k: usize) -> f64 {
+    spectrum[..k.min(spectrum.len())].iter().sum()
+}
+
+/// Figure-3a data: the (normalized) autocorrelation matrix itself.
+pub fn fig3_autocorrelation(samples: &[Tensor]) -> Tensor {
+    let cov = autocorrelation(samples);
+    let n = cov.rows();
+    let mut out = cov.clone();
+    for i in 0..n {
+        for j in 0..n {
+            let d = (cov.at(i, i) * cov.at(j, j)).sqrt().max(1e-12);
+            out.set(i, j, cov.at(i, j) / d);
+        }
+    }
+    out
+}
+
+/// Figure-3 eigenvalue spectrum of the autocorrelation (for DESIGN.md's
+/// Szegő checks).
+pub fn autocorr_eigenvalues(samples: &[Tensor]) -> Vec<f32> {
+    let cov = autocorrelation(samples);
+    eigh(&cov, 60, 1e-9).values
+}
+
+/// Figure-4a: the three bit-allocation strategies compared on one energy
+/// vector — (uniform, continuous-optimal, 2-level) with their Theorem-1
+/// objective values `Σ eᵢ/2^{2bᵢ}`.
+pub struct AllocationComparison {
+    pub uniform_objective: f64,
+    pub optimal_objective: f64,
+    pub two_level_objective: f64,
+    pub avg_bits: f64,
+}
+
+pub fn fig4a_allocations(energies: &[f64], avg_bits: f64, hp_tokens: usize) -> AllocationComparison {
+    let s = energies.len();
+    let objective = |bits: &[f64]| -> f64 {
+        energies.iter().zip(bits).map(|(&e, &b)| e / 2f64.powf(2.0 * b)).sum()
+    };
+    let uniform = vec![avg_bits; s];
+    let e32: Vec<f32> = energies.iter().map(|&e| e as f32).collect();
+    let optimal = optimal_bits(&e32, avg_bits * s as f64);
+    // 2-level at the same budget: hp_tokens at hp bits, rest at lp such
+    // that the average matches (continuous lp for a fair comparison).
+    let hp_bits = 8.0f64;
+    let lp_bits = (avg_bits * s as f64 - hp_bits * hp_tokens as f64) / (s - hp_tokens) as f64;
+    let two_level: Vec<f64> =
+        (0..s).map(|i| if i < hp_tokens { hp_bits } else { lp_bits }).collect();
+    AllocationComparison {
+        uniform_objective: objective(&uniform),
+        optimal_objective: objective(&optimal),
+        two_level_objective: objective(&two_level),
+        avg_bits,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{ActivationGenerator, ActivationSpec};
+
+    fn samples() -> Vec<Tensor> {
+        let spec = ActivationSpec {
+            outlier_channels: 0,
+            sink_scale: 0.0,
+            ..ActivationSpec::llm(64, 32)
+        };
+        ActivationGenerator::new(spec).calibration_set(8, 3)
+    }
+
+    #[test]
+    fn bound_dominates_error_everywhere() {
+        let x = &samples()[0];
+        let t = HaarDwt::new(64, 3);
+        let allocs: Vec<BitAllocation> =
+            (3..=8).map(|b| BitAllocation::uniform(b)).collect();
+        for p in fig2_bound_curve(x, &t, &allocs) {
+            assert!(p.measured_error <= p.bound, "err {} > bound {}", p.measured_error, p.bound);
+            assert!(p.bound.is_finite());
+        }
+    }
+
+    #[test]
+    fn stamp_curve_below_uniform_identity() {
+        // The Fig-2b claim: at avg 5 bits, DWT + 2-level < identity uniform.
+        let x = &samples()[0];
+        let id = IdentitySeq::new(64);
+        let dwt = HaarDwt::new(64, 3);
+        let uni = quantization_error(x, &id, &BitAllocation::uniform(5), Granularity::PerToken);
+        // 8 hp tokens of 64 at 8b, rest ~4.57b -> use 8/4 mix at avg 4.5.
+        let mix = quantization_error(
+            x,
+            &dwt,
+            &BitAllocation::two_level(8, 8, 4),
+            Granularity::PerToken,
+        );
+        assert!(mix < uni, "stamp {mix} !< uniform {uni}");
+    }
+
+    #[test]
+    fn spectra_ordering_klt_best() {
+        let sp = fig3_energy_spectra(&samples());
+        let k = 8;
+        let klt = topk_share(&sp.klt, k);
+        let dct = topk_share(&sp.dct, k);
+        let dwt = topk_share(&sp.dwt, k);
+        let id = topk_share(&sp.identity, k);
+        assert!(klt >= dct - 0.02, "klt {klt} dct {dct}");
+        assert!(dct > id, "dct {dct} id {id}");
+        assert!(dwt > id, "dwt {dwt} id {id}");
+        // KLT top-8 of 64 on ρ=0.95 AR(1) data concentrates hard.
+        assert!(klt > 0.6, "klt share {klt}");
+    }
+
+    #[test]
+    fn autocorr_normalized_diag() {
+        let ac = fig3_autocorrelation(&samples());
+        for i in 0..ac.rows() {
+            assert!((ac.at(i, i) - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn allocation_objectives_ordered() {
+        // optimal ≤ two-level ≤ uniform on a concentrated energy vector.
+        let energies: Vec<f64> = (0..64).map(|i| 100.0 / (1.0 + i as f64).powi(2)).collect();
+        let c = fig4a_allocations(&energies, 5.0, 8);
+        assert!(c.optimal_objective <= c.two_level_objective * 1.0001);
+        assert!(c.two_level_objective < c.uniform_objective);
+    }
+}

@@ -1,0 +1,195 @@
+//! LVM fidelity evaluation (Tables 1/4/5, Figures 4b/7/9).
+//!
+//! The primary measured quantity is **SQNR between the FP and quantized
+//! model outputs**, in two spaces:
+//!
+//! * *latent* — the raw DiT output (paper: "SQNR (latent)", Table 5);
+//! * *image* — the latent pushed through a fixed deterministic "decoder"
+//!   (a smoothing + channel-mixing linear map standing in for the VAE;
+//!   DESIGN.md §3), matching the paper's image-space SQNR which is always
+//!   a few dB above the latent one because decoding attenuates
+//!   high-frequency quantization noise.
+//!
+//! Quality scores the reproduction cannot measure (Image Reward, CLIP,
+//! CLIP-IQA — they need the real pretrained scorers) are replaced by
+//! *documented monotone proxies* of image SQNR, so the orderings and
+//! improve/degrade relationships the paper's tables demonstrate are
+//! faithfully reproduced while absolute values are explicitly synthetic.
+
+use crate::model::{Dit, FpHook, LinearHook};
+use crate::stats::sqnr;
+use crate::tensor::Tensor;
+
+/// Fixed "VAE decoder" stand-in: per-token channel mixing followed by a
+/// 3×3 spatial box smoothing over the latent grid.
+pub fn decode_latent(dit: &Dit, z: &Tensor) -> Tensor {
+    let (h, w) = (dit.cfg.grid_h, dit.cfg.grid_w);
+    let d = z.cols();
+    // Channel mixing with a deterministic orthogonal-ish matrix.
+    let mix = Tensor::randn(&[d, d], 0xDEC0DE).scale(1.0 / (d as f32).sqrt());
+    let mixed = z.matmul(&mix);
+    // 3×3 box filter over the grid.
+    let mut out = Tensor::zeros(&[h * w, d]);
+    for y in 0..h {
+        for x in 0..w {
+            let mut acc = vec![0.0f32; d];
+            let mut n = 0.0f32;
+            for dy in -1i64..=1 {
+                for dx in -1i64..=1 {
+                    let (yy, xx) = (y as i64 + dy, x as i64 + dx);
+                    if yy >= 0 && yy < h as i64 && xx >= 0 && xx < w as i64 {
+                        let src = mixed.row((yy as usize) * w + xx as usize);
+                        for j in 0..d {
+                            acc[j] += src[j];
+                        }
+                        n += 1.0;
+                    }
+                }
+            }
+            let dst = out.row_mut(y * w + x);
+            for j in 0..d {
+                dst[j] = acc[j] / n;
+            }
+        }
+    }
+    out
+}
+
+/// Monotone Image-Reward proxy: saturating map of image SQNR, scaled so
+/// the FP ceiling sits near the paper's FP values (≈0.9). Synthetic; see
+/// module docs.
+pub fn image_reward_proxy(image_sqnr_db: f64) -> f64 {
+    let ceiling = 0.93;
+    if image_sqnr_db.is_infinite() {
+        return ceiling;
+    }
+    ceiling * (image_sqnr_db / 9.0).tanh().max(-1.0)
+}
+
+/// Monotone CLIP-score proxy (paper FP ≈ 31.5).
+pub fn clip_proxy(image_sqnr_db: f64) -> f64 {
+    let ceiling = 31.6;
+    if image_sqnr_db.is_infinite() {
+        return ceiling;
+    }
+    ceiling - 2.2 * (-(image_sqnr_db - 2.0) / 6.0).exp().min(3.0)
+}
+
+/// Monotone CLIP-IQA proxy (paper FP ≈ 0.9).
+pub fn clip_iqa_proxy(image_sqnr_db: f64) -> f64 {
+    let ceiling = 0.91;
+    if image_sqnr_db.is_infinite() {
+        return ceiling;
+    }
+    ceiling * (1.0 - (-(image_sqnr_db.max(0.0)) / 7.0).exp() * 0.5)
+}
+
+/// Aggregated LVM fidelity over a prompt set.
+#[derive(Clone, Debug)]
+pub struct LvmEval {
+    pub latent_sqnr: f64,
+    pub image_sqnr: f64,
+    pub image_reward: f64,
+    pub clip: f64,
+    pub clip_iqa: f64,
+    pub prompts: usize,
+}
+
+/// Run the full generation loop per prompt under both FP and the hook,
+/// and aggregate fidelity. SQNR is averaged in dB across prompts (the
+/// paper's convention of reporting a single dataset-level figure).
+pub fn lvm_eval(dit: &Dit, hook: &dyn LinearHook, prompts: &[&str], seed: u64) -> LvmEval {
+    assert!(!prompts.is_empty());
+    let mut lat = 0.0f64;
+    let mut img = 0.0f64;
+    for (i, p) in prompts.iter().enumerate() {
+        let z_fp = dit.sample(&FpHook, p, seed + i as u64);
+        let z_q = dit.sample(hook, p, seed + i as u64);
+        let s_lat = sqnr(&z_fp, &z_q);
+        let s_img = sqnr(&decode_latent(dit, &z_fp), &decode_latent(dit, &z_q));
+        lat += s_lat;
+        img += s_img;
+    }
+    let latent_sqnr = lat / prompts.len() as f64;
+    let image_sqnr = img / prompts.len() as f64;
+    LvmEval {
+        latent_sqnr,
+        image_sqnr,
+        image_reward: image_reward_proxy(image_sqnr),
+        clip: clip_proxy(image_sqnr),
+        clip_iqa: clip_iqa_proxy(image_sqnr),
+        prompts: prompts.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{ActQuantCfg, BaselineKind, QuantHook, QuantStack};
+    use crate::model::DitConfig;
+    use std::collections::HashMap;
+
+    fn tiny_dit() -> Dit {
+        Dit::new(
+            DitConfig { grid_h: 8, grid_w: 8, d_model: 32, n_heads: 2, n_layers: 2, d_ff: 64, ctx_tokens: 4, steps: 2 },
+            42,
+        )
+    }
+
+    #[test]
+    fn proxies_monotone() {
+        for f in [image_reward_proxy, clip_proxy, clip_iqa_proxy] {
+            let mut prev = f(-5.0);
+            for s in [0.0, 3.0, 6.0, 9.0, 15.0, 30.0] {
+                let v = f(s);
+                assert!(v >= prev, "proxy not monotone at {s}");
+                prev = v;
+            }
+            assert!(f(f64::INFINITY) >= prev);
+        }
+    }
+
+    #[test]
+    fn fp_eval_is_perfect() {
+        let dit = tiny_dit();
+        let stack = QuantStack::fp();
+        let hook = QuantHook::new(&stack);
+        let e = lvm_eval(&dit, &hook, &["a cat"], 1);
+        assert!(e.latent_sqnr.is_infinite());
+        assert!(e.image_sqnr.is_infinite());
+        assert!((e.image_reward - 0.93).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantized_eval_degrades_and_more_bits_help() {
+        let dit = tiny_dit();
+        let mk = |bits: u32| {
+            QuantStack::build(
+                BaselineKind::Rtn,
+                &HashMap::new(),
+                Some(ActQuantCfg { bits, hp_tokens: 0, ..ActQuantCfg::w4a4_per_token() }),
+                None,
+                None,
+                7,
+            )
+            .with_lvm_skips()
+        };
+        let s3 = mk(3);
+        let s6 = mk(6);
+        let e3 = lvm_eval(&dit, &QuantHook::new(&s3), &["a cat", "a dog"], 2);
+        let e6 = lvm_eval(&dit, &QuantHook::new(&s6), &["a cat", "a dog"], 2);
+        assert!(e3.latent_sqnr.is_finite());
+        assert!(e6.latent_sqnr > e3.latent_sqnr, "{} !> {}", e6.latent_sqnr, e3.latent_sqnr);
+        assert!(e6.image_reward >= e3.image_reward);
+    }
+
+    #[test]
+    fn decode_smooths() {
+        let dit = tiny_dit();
+        let z = Tensor::randn(&[64, 16], 5);
+        let img = decode_latent(&dit, &z);
+        assert_eq!(img.shape(), z.shape());
+        // Box filtering reduces total energy of white noise.
+        assert!(img.sq_norm() < z.sq_norm());
+    }
+}

@@ -1,0 +1,19 @@
+//! Evaluation harnesses: the computations behind every table and figure.
+//!
+//! * [`perplexity`] — WikiText-style PPL of a (quantized) GPT (Table 2).
+//! * [`lvm`] — DiT latent/image SQNR and the proxy quality metrics
+//!   (Tables 1/4/5, Figures 4/7/9). See DESIGN.md §3 for the metric
+//!   substitutions — proxies are *monotone in measured fidelity*, so row
+//!   orderings (the reproduced quantity) are meaningful, absolute values
+//!   are not.
+//! * [`figures`] — the analytic reproductions (Theorem-1 bound curves,
+//!   energy spectra, bit-allocation comparisons).
+
+pub mod figures;
+pub mod lvm;
+pub mod perplexity;
+pub mod tables;
+
+pub use lvm::{image_reward_proxy, lvm_eval, LvmEval};
+pub use perplexity::perplexity;
+pub use tables::{table1_lvm, table2_llm, table4_sites, table5_metrics, TableOpts};

@@ -1,0 +1,72 @@
+//! Perplexity evaluation (Table 2's metric): `exp(mean CE)` of next-token
+//! prediction over fixed-length corpus sequences, computed from the hooked
+//! forward so any [`crate::baselines::QuantStack`] can be measured.
+
+use crate::model::{Gpt, LinearHook};
+use crate::tensor::Tensor;
+
+/// Mean cross-entropy (nats/token) over the given sequences.
+pub fn cross_entropy(gpt: &Gpt, hook: &dyn LinearHook, seqs: &[&[u32]]) -> f64 {
+    assert!(!seqs.is_empty());
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for seq in seqs {
+        let logits = gpt.logits_hooked(hook, seq);
+        total += sequence_ce(&logits, seq);
+        count += seq.len() - 1;
+    }
+    total / count as f64
+}
+
+/// Perplexity over the given sequences.
+pub fn perplexity(gpt: &Gpt, hook: &dyn LinearHook, seqs: &[&[u32]]) -> f64 {
+    cross_entropy(gpt, hook, seqs).exp()
+}
+
+/// Summed CE of one sequence from raw logits (numerically-stable
+/// log-softmax).
+fn sequence_ce(logits: &Tensor, seq: &[u32]) -> f64 {
+    let mut total = 0.0f64;
+    for i in 0..seq.len() - 1 {
+        let row = logits.row(i);
+        let target = seq[i + 1] as usize;
+        let mx = row.iter().cloned().fold(f32::MIN, f32::max) as f64;
+        let lse: f64 = row.iter().map(|&v| ((v as f64) - mx).exp()).sum::<f64>().ln() + mx;
+        total += lse - row[target] as f64;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Corpus;
+    use crate::model::{FpHook, GptConfig};
+
+    #[test]
+    fn untrained_ppl_near_vocab_size() {
+        let gpt = Gpt::new(GptConfig::tiny(), 1);
+        let corpus = Corpus::generate(512, 2);
+        let seqs = corpus.sequences(128);
+        let ppl = perplexity(&gpt, &FpHook, &seqs);
+        // Untrained ⇒ near-uniform ⇒ PPL ≈ vocab size (72).
+        assert!(ppl > 40.0 && ppl < 110.0, "ppl {ppl}");
+    }
+
+    #[test]
+    fn trained_ppl_much_lower() {
+        let (gpt, corpus) = crate::train::build_trained_model("tiny", 150);
+        let seqs = corpus.sequences(128);
+        let ppl = perplexity(&gpt, &FpHook, &seqs[..4.min(seqs.len())]);
+        assert!(ppl < 25.0, "trained ppl {ppl}");
+    }
+
+    #[test]
+    fn ce_matches_forward_loss() {
+        let gpt = Gpt::new(GptConfig::tiny(), 3);
+        let seq: Vec<u32> = (0..64).map(|i| ((i * 11) % 70) as u32).collect();
+        let (loss, _) = gpt.forward_loss(&seq);
+        let ce = cross_entropy(&gpt, &FpHook, &[&seq]);
+        assert!((loss - ce).abs() < 1e-3, "forward_loss {loss} vs eval ce {ce}");
+    }
+}

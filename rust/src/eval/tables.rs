@@ -1,0 +1,511 @@
+//! Table/figure harnesses: one function per paper table or figure, each
+//! returning a [`crate::report::Table`] with the same rows/columns the
+//! paper reports. Sequence lengths are scaled to the tiny testbed with the
+//! *effective average bit width held at the paper's value* (e.g. 8 hp
+//! tokens of 256 ⇒ 4.125 avg bits, the paper's 64/2048 LLM setting).
+
+use crate::baselines::{
+    ActQuantCfg, BaselineKind, CalibHook, KvQuantCfg, QuantHook, QuantStack, SiteStats,
+    WeightQuantCfg,
+};
+use crate::data::{Corpus, PromptSet};
+use crate::eval::lvm::{lvm_eval, LvmEval};
+use crate::eval::perplexity::perplexity;
+use crate::model::{Dit, DitConfig, FpHook, Gpt};
+use crate::quant::Granularity;
+use crate::report::Table;
+use crate::stamp::SeqTransformKind;
+use crate::train::build_trained_model;
+use std::collections::HashMap;
+
+/// Harness knobs (tests use `fast()`, the shipped binaries `full()`).
+#[derive(Clone, Copy, Debug)]
+pub struct TableOpts {
+    pub train_steps: usize,
+    pub eval_seqs: usize,
+    pub prompts_per_set: usize,
+    pub dit_steps: usize,
+    /// High-precision tokens at the scaled sequence length (8/256 matches
+    /// the paper's 64/2048 = 4.125 avg bits).
+    pub hp_tokens: usize,
+    pub seq_len: usize,
+}
+
+impl TableOpts {
+    pub fn full() -> Self {
+        TableOpts { train_steps: 300, eval_seqs: 4, prompts_per_set: 6, dit_steps: 6, hp_tokens: 8, seq_len: 256 }
+    }
+
+    pub fn fast() -> Self {
+        TableOpts { train_steps: 60, eval_seqs: 1, prompts_per_set: 2, dit_steps: 2, hp_tokens: 8, seq_len: 128 }
+    }
+
+    fn act_cfg(&self, bits: u32) -> ActQuantCfg {
+        ActQuantCfg {
+            bits,
+            hp_tokens: self.hp_tokens,
+            hp_bits: 8,
+            granularity: Granularity::PerToken,
+            range_shrink: 1.0,
+        }
+    }
+}
+
+/// Calibrate site statistics for a GPT over a few corpus sequences.
+pub fn calibrate_gpt(gpt: &Gpt, corpus: &Corpus, seq_len: usize) -> HashMap<String, SiteStats> {
+    let hook = CalibHook::new(4);
+    for seq in corpus.sequences(seq_len).iter().take(2) {
+        let _ = gpt.logits_hooked(&hook, seq);
+    }
+    hook.take()
+}
+
+/// Calibrate site statistics for a DiT over a couple of prompts.
+pub fn calibrate_dit(dit: &Dit) -> HashMap<String, SiteStats> {
+    let hook = CalibHook::new(4);
+    for (i, p) in ["calibration prompt one", "calibration prompt two"].iter().enumerate() {
+        let _ = dit.sample(&hook, p, 1000 + i as u64);
+    }
+    hook.take()
+}
+
+fn llm_stack(
+    kind: BaselineKind,
+    stats: &HashMap<String, SiteStats>,
+    opts: &TableOpts,
+    stamp: Option<SeqTransformKind>,
+) -> QuantStack {
+    let mut act = opts.act_cfg(4);
+    if kind == BaselineKind::QuaRot {
+        act.range_shrink = 0.9;
+    }
+    let kv = KvQuantCfg { bits: 4, hp_tokens: opts.hp_tokens, hp_bits: 8 };
+    let mut s = QuantStack::build(
+        kind,
+        stats,
+        Some(act),
+        Some(WeightQuantCfg::w4_per_channel()),
+        Some(kv),
+        0x5EED,
+    );
+    if let Some(t) = stamp {
+        s = s.with_stamp(QuantStack::llm_stamp(t));
+    }
+    s
+}
+
+fn lvm_stack(
+    kind: BaselineKind,
+    stats: &HashMap<String, SiteStats>,
+    opts: &TableOpts,
+    grid: (usize, usize),
+    stamp: bool,
+) -> QuantStack {
+    // LVM protocol (§B.1): non-STaMP rows use NO mixed-precision tokens
+    // (unlike the LLM protocol where all baselines keep 64 hp tokens).
+    let act = ActQuantCfg {
+        bits: 4,
+        hp_tokens: if stamp { opts.hp_tokens * 2 } else { 0 },
+        hp_bits: 8,
+        granularity: Granularity::PerBlock { block: 64 },
+        range_shrink: 1.0,
+    };
+    let mut s = QuantStack::build(
+        kind,
+        stats,
+        Some(act),
+        Some(WeightQuantCfg::w4_block64()),
+        None,
+        0x5EED,
+    )
+    .with_lvm_skips();
+    if stamp {
+        let mut cfg = QuantStack::lvm_stamp(grid.0, grid.1);
+        cfg.hp_tokens = opts.hp_tokens * 2; // 2-D grids concentrate into a quarter block
+        s = s.with_stamp(cfg);
+    }
+    s
+}
+
+/// **Table 2** — LLM W4A4KV4 perplexity, baselines × {✗, ✓ STaMP}.
+pub fn table2_llm(opts: &TableOpts) -> Table {
+    let mut table = Table::new(
+        "Table 2: LLM W4A4KV4 perplexity (64-token-hp effective 4.125 bits)",
+        &["model", "FP", "method", "PPL", "PPL +STaMP"],
+    );
+    for variant in ["tiny", "small", "medium", "wide"] {
+        let (gpt, corpus) = build_trained_model(variant, opts.train_steps);
+        let seqs_all = corpus.sequences(opts.seq_len);
+        let seqs: Vec<&[u32]> = seqs_all.iter().take(opts.eval_seqs).cloned().collect();
+        let fp = perplexity(&gpt, &FpHook, &seqs);
+        let stats = calibrate_gpt(&gpt, &corpus, opts.seq_len);
+        for kind in [
+            BaselineKind::Rtn,
+            BaselineKind::SmoothQuant,
+            BaselineKind::QuaRot,
+            BaselineKind::FlatQuant,
+        ] {
+            let plain = llm_stack(kind, &stats, opts, None);
+            let stamped = llm_stack(kind, &stats, opts, Some(SeqTransformKind::HaarDwt));
+            let p_plain = perplexity(&gpt, &QuantHook::new(&plain), &seqs);
+            let p_stamp = perplexity(&gpt, &QuantHook::new(&stamped), &seqs);
+            table.row(vec![
+                variant.into(),
+                Table::num(fp),
+                kind.label().into(),
+                Table::num(p_plain),
+                Table::num(p_stamp),
+            ]);
+        }
+    }
+    table
+}
+
+fn dit_for(model: &str, opts: &TableOpts) -> Dit {
+    let mut cfg = match model {
+        "pixart" => DitConfig::pixart(),
+        "sana" => DitConfig::sana(),
+        other => panic!("unknown dit {other}"),
+    };
+    cfg.steps = opts.dit_steps;
+    let mut dit = Dit::new(cfg, 0xD17);
+    // Real-DiT activation pathology (massive channels), exactly
+    // function-preserving — see Dit::inject_outlier_channels.
+    let d = dit.cfg.d_model;
+    dit.inject_outlier_channels((d / 32).max(2), 25.0);
+    dit
+}
+
+fn prompt_slice(set: &PromptSet, n: usize) -> Vec<&'static str> {
+    set.prompts.iter().take(n).cloned().collect()
+}
+
+/// **Table 1** — LVM W4A4 block-64: image SQNR + IR proxy for
+/// RTN/ViDiT-Q/SVDQuant × {✗, ✓}, 2 models × 2 prompt sets.
+pub fn table1_lvm(opts: &TableOpts) -> Table {
+    let mut table = Table::new(
+        "Table 1: LVM W4A4 (block 64) image SQNR and Image-Reward proxy",
+        &["model", "dataset", "method", "SQNR", "SQNR+STaMP", "IR", "IR+STaMP"],
+    );
+    for model in ["pixart", "sana"] {
+        let dit = dit_for(model, opts);
+        let grid = (dit.cfg.grid_h, dit.cfg.grid_w);
+        let stats = calibrate_dit(&dit);
+        for set in [PromptSet::coco(), PromptSet::mjhq()] {
+            let prompts = prompt_slice(&set, opts.prompts_per_set);
+            for kind in [BaselineKind::Rtn, BaselineKind::ViDitQ, BaselineKind::SvdQuant] {
+                let plain = lvm_stack(kind, &stats, opts, grid, false);
+                let stamped = lvm_stack(kind, &stats, opts, grid, true);
+                let e_plain = lvm_eval(&dit, &QuantHook::new(&plain), &prompts, 7);
+                let e_stamp = lvm_eval(&dit, &QuantHook::new(&stamped), &prompts, 7);
+                table.row(vec![
+                    model.into(),
+                    set.name.into(),
+                    kind.label().into(),
+                    Table::num(e_plain.image_sqnr),
+                    Table::num(e_stamp.image_sqnr),
+                    Table::num(e_plain.image_reward),
+                    Table::num(e_stamp.image_reward),
+                ]);
+            }
+        }
+    }
+    table
+}
+
+/// **Table 4** — per-activation-site A4 ablation on the PixArt analogue.
+pub fn table4_sites(opts: &TableOpts) -> Table {
+    let mut table = Table::new(
+        "Table 4: per-site A4 ablation (image SQNR, PixArt analogue)",
+        &["site", "Identity", "QuaRot", "STaMP", "QuaRot+STaMP"],
+    );
+    let dit = dit_for("pixart", opts);
+    let grid = (dit.cfg.grid_h, dit.cfg.grid_w);
+    let stats = calibrate_dit(&dit);
+    let prompts = prompt_slice(&PromptSet::coco(), opts.prompts_per_set.min(3));
+    for site in ["attn1.to_q", "attn1.to_out", "attn2.to_q", "attn2.to_out", "ffn.up_proj", "ffn.down_proj"] {
+        let eval_one = |kind: BaselineKind, stamp: bool| -> LvmEval {
+            // Act-only quantization at the target site.
+            let mut s = match kind {
+                BaselineKind::Rtn => QuantStack::build(kind, &stats, Some(opts.act_cfg(4)), None, None, 0x5EED),
+                k => QuantStack::build(k, &stats, Some(opts.act_cfg(4)), None, None, 0x5EED),
+            }
+            .with_lvm_skips()
+            .only(site);
+            if stamp {
+                let mut cfg = QuantStack::lvm_stamp(grid.0, grid.1);
+                cfg.hp_tokens = opts.hp_tokens * 2;
+                s = s.with_stamp(cfg);
+            }
+            lvm_eval(&dit, &QuantHook::new(&s), &prompts, 11)
+        };
+        table.row(vec![
+            site.into(),
+            Table::num(eval_one(BaselineKind::Rtn, false).image_sqnr),
+            Table::num(eval_one(BaselineKind::QuaRot, false).image_sqnr),
+            Table::num(eval_one(BaselineKind::Rtn, true).image_sqnr),
+            Table::num(eval_one(BaselineKind::QuaRot, true).image_sqnr),
+        ]);
+    }
+    table
+}
+
+/// **Table 5** — companion metrics (CLIP / CLIP-IQA proxies + latent SQNR).
+pub fn table5_metrics(opts: &TableOpts) -> Table {
+    let mut table = Table::new(
+        "Table 5: companion metrics (proxies; DESIGN.md metric substitutions)",
+        &["model", "dataset", "method", "STaMP", "CLIP", "CLIP-IQA", "SQNR latent"],
+    );
+    for model in ["pixart", "sana"] {
+        let dit = dit_for(model, opts);
+        let grid = (dit.cfg.grid_h, dit.cfg.grid_w);
+        let stats = calibrate_dit(&dit);
+        for set in [PromptSet::coco(), PromptSet::mjhq()] {
+            let prompts = prompt_slice(&set, opts.prompts_per_set.min(4));
+            for kind in [BaselineKind::Rtn, BaselineKind::SvdQuant, BaselineKind::ViDitQ] {
+                for stamp in [false, true] {
+                    let s = lvm_stack(kind, &stats, opts, grid, stamp);
+                    let e = lvm_eval(&dit, &QuantHook::new(&s), &prompts, 13);
+                    table.row(vec![
+                        model.into(),
+                        set.name.into(),
+                        kind.label().into(),
+                        if stamp { "yes" } else { "no" }.into(),
+                        Table::num(e.clip),
+                        Table::num(e.clip_iqa),
+                        Table::num(e.latent_sqnr),
+                    ]);
+                }
+            }
+        }
+    }
+    table
+}
+
+/// **Figure 4b** — #high-precision tokens vs SQNR vs average bits
+/// (activation-only quantization, QuaRot features as in the paper).
+pub fn fig4b_sweep(opts: &TableOpts) -> Table {
+    let mut table = Table::new(
+        "Figure 4b: high-precision token count vs image SQNR (A4, act-only)",
+        &["hp_tokens", "avg_bits", "SQNR uniform(no transform)", "SQNR STaMP(dwt2d)"],
+    );
+    let dit = dit_for("pixart", opts);
+    let grid = (dit.cfg.grid_h, dit.cfg.grid_w);
+    let s_tokens = dit.cfg.seq_len();
+    let stats = calibrate_dit(&dit);
+    let prompts = prompt_slice(&PromptSet::coco(), opts.prompts_per_set.min(3));
+    for hp in [0usize, 4, 8, 16, 32, 64] {
+        let mk = |stamp: bool| {
+            let act = ActQuantCfg {
+                bits: 4,
+                hp_tokens: hp,
+                hp_bits: 8,
+                granularity: Granularity::PerToken,
+                range_shrink: 1.0,
+            };
+            let mut s = QuantStack::build(BaselineKind::QuaRot, &stats, Some(act), None, None, 0x5EED)
+                .with_lvm_skips();
+            if stamp {
+                let mut cfg = QuantStack::lvm_stamp(grid.0, grid.1);
+                cfg.hp_tokens = hp;
+                s = s.with_stamp(cfg);
+            }
+            s
+        };
+        let avg = 4.0 + 4.0 * hp as f64 / s_tokens as f64;
+        let e_uni = lvm_eval(&dit, &QuantHook::new(&mk(false)), &prompts, 17);
+        let e_stamp = lvm_eval(&dit, &QuantHook::new(&mk(true)), &prompts, 17);
+        table.row(vec![
+            hp.to_string(),
+            format!("{avg:.3}"),
+            Table::num(e_uni.image_sqnr),
+            Table::num(e_stamp.image_sqnr),
+        ]);
+    }
+    table
+}
+
+/// **Figure 7** — feature transforms × sequence transforms grid.
+/// LVM half: image SQNR; LLM half: perplexity.
+pub fn fig7_grid(opts: &TableOpts) -> (Table, Table) {
+    let seq_kinds: [(&str, Option<SeqTransformKind>); 4] = [
+        ("none", None),
+        ("DCT", Some(SeqTransformKind::Dct)),
+        ("WHT", Some(SeqTransformKind::Wht)),
+        ("DWT", Some(SeqTransformKind::HaarDwt)),
+    ];
+    let feat_kinds = [
+        BaselineKind::Rtn, // = identity features
+        BaselineKind::SmoothQuant,
+        BaselineKind::QuaRot,
+        BaselineKind::FlatQuant,
+    ];
+
+    // LVM half (act-only A4, as in the paper's Figure 7).
+    let mut lvm = Table::new(
+        "Figure 7a: feature x sequence transforms, A4 PixArt analogue (image SQNR)",
+        &["feature", "none", "DCT", "WHT", "DWT"],
+    );
+    let dit = dit_for("pixart", opts);
+    let stats = calibrate_dit(&dit);
+    let prompts = prompt_slice(&PromptSet::coco(), opts.prompts_per_set.min(3));
+    for kind in feat_kinds {
+        let mut row = vec![kind.label().to_string()];
+        for (_, seq) in &seq_kinds {
+            let mut s = QuantStack::build(kind, &stats, Some(opts.act_cfg(4)), None, None, 0x5EED)
+                .with_lvm_skips();
+            if let Some(t) = seq {
+                // 2-D DWT for the DWT cell (the paper's LVM config); 1-D
+                // for DCT/WHT which have no 2-D variant in the paper.
+                let cfg = if matches!(t, SeqTransformKind::HaarDwt) {
+                    let mut c = QuantStack::lvm_stamp(dit.cfg.grid_h, dit.cfg.grid_w);
+                    c.hp_tokens = opts.hp_tokens * 2;
+                    c
+                } else {
+                    let mut c = crate::stamp::StampConfig {
+                        transform: *t,
+                        ..Default::default()
+                    };
+                    c.hp_tokens = opts.hp_tokens * 2;
+                    c
+                };
+                s = s.with_stamp(cfg);
+            }
+            let e = lvm_eval(&dit, &QuantHook::new(&s), &prompts, 19);
+            row.push(Table::num(e.image_sqnr));
+        }
+        lvm.row(row);
+    }
+
+    // LLM half (A4 perplexity).
+    let mut llm = Table::new(
+        "Figure 7b: feature x sequence transforms, A4 LLM analogue (PPL)",
+        &["feature", "none", "DCT", "WHT", "DWT"],
+    );
+    let (gpt, corpus) = build_trained_model("small", opts.train_steps);
+    let seqs_all = corpus.sequences(opts.seq_len);
+    let seqs: Vec<&[u32]> = seqs_all.iter().take(opts.eval_seqs).cloned().collect();
+    let stats = calibrate_gpt(&gpt, &corpus, opts.seq_len);
+    for kind in feat_kinds {
+        let mut row = vec![kind.label().to_string()];
+        for (_, seq) in &seq_kinds {
+            let mut s = QuantStack::build(kind, &stats, Some(opts.act_cfg(4)), None, None, 0x5EED);
+            if let Some(t) = seq {
+                s = s.with_stamp(QuantStack::llm_stamp(*t));
+            }
+            let p = perplexity(&gpt, &QuantHook::new(&s), &seqs);
+            row.push(Table::num(p));
+        }
+        llm.row(row);
+    }
+    (lvm, llm)
+}
+
+/// **Figure 9** — per-token vs per-block(16..256) vs STaMP: SQNR at equal
+/// *storage-accounted* average bits (16-bit scales, paper Appendix C).
+pub fn fig9_blockq(opts: &TableOpts) -> Table {
+    let mut table = Table::new(
+        "Figure 9: granularity tradeoff (act-only, incl. 16-bit scale overhead)",
+        &["scheme", "avg_bits", "image SQNR"],
+    );
+    let dit = dit_for("pixart", opts);
+    let grid = (dit.cfg.grid_h, dit.cfg.grid_w);
+    let d = dit.cfg.d_model;
+    let stats = calibrate_dit(&dit);
+    let prompts = prompt_slice(&PromptSet::coco(), opts.prompts_per_set.min(3));
+
+    let run = |gran: Granularity, hp: usize, stamp: bool| -> LvmEval {
+        let act = ActQuantCfg { bits: 4, hp_tokens: hp, hp_bits: 8, granularity: gran, range_shrink: 1.0 };
+        let mut s =
+            QuantStack::build(BaselineKind::Rtn, &stats, Some(act), None, None, 0x5EED).with_lvm_skips();
+        if stamp {
+            let mut cfg = QuantStack::lvm_stamp(grid.0, grid.1);
+            cfg.hp_tokens = hp;
+            s = s.with_stamp(cfg);
+        }
+        lvm_eval(&dit, &QuantHook::new(&s), &prompts, 23)
+    };
+
+    // Per-token baseline.
+    let pt = run(Granularity::PerToken, 0, false);
+    table.row(vec![
+        "per-token".into(),
+        format!("{:.3}", 4.0 + Granularity::PerToken.param_overhead_bits(d)),
+        Table::num(pt.image_sqnr),
+    ]);
+    // Per-block at several block sizes.
+    for block in [16usize, 32, 64, 128] {
+        let e = run(Granularity::PerBlock { block }, 0, false);
+        table.row(vec![
+            format!("per-block {block}"),
+            format!("{:.3}", 4.0 + Granularity::PerBlock { block }.param_overhead_bits(d)),
+            Table::num(e.image_sqnr),
+        ]);
+    }
+    // STaMP per-token with a few hp counts.
+    let s_tokens = dit.cfg.seq_len();
+    for hp in [8usize, 16, 32] {
+        let e = run(Granularity::PerToken, hp, true);
+        let avg = 4.0
+            + 4.0 * hp as f64 / s_tokens as f64
+            + Granularity::PerToken.param_overhead_bits(d);
+        table.row(vec![format!("STaMP hp={hp}"), format!("{avg:.3}"), Table::num(e.image_sqnr)]);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &str) -> f64 {
+        if v == "inf" {
+            f64::INFINITY
+        } else {
+            v.parse().unwrap()
+        }
+    }
+
+    #[test]
+    fn table2_shape_holds() {
+        // The paper's core LLM claim: STaMP improves (reduces PPL for)
+        // every baseline row.
+        let mut opts = TableOpts::fast();
+        opts.train_steps = 80;
+        let t = table2_llm(&opts);
+        assert_eq!(t.rows.len(), 16);
+        let mut improved = 0usize;
+        for row in &t.rows {
+            let plain = parse(&row[3]);
+            let stamped = parse(&row[4]);
+            if stamped < plain {
+                improved += 1;
+            }
+        }
+        // Allow a little slack on the tiny testbed but demand the shape.
+        assert!(improved >= 12, "STaMP improved only {improved}/16 rows:\n{}", t.render());
+    }
+
+    #[test]
+    fn table1_shape_holds() {
+        let t = table1_lvm(&TableOpts::fast());
+        assert_eq!(t.rows.len(), 12);
+        let mut improved = 0usize;
+        for row in &t.rows {
+            if parse(&row[4]) > parse(&row[3]) {
+                improved += 1;
+            }
+        }
+        assert!(improved >= 9, "STaMP improved only {improved}/12 rows:\n{}", t.render());
+    }
+
+    #[test]
+    fn fig4b_knee_exists() {
+        let t = fig4b_sweep(&TableOpts::fast());
+        // SQNR with STaMP at hp=16 must beat hp=0 substantially.
+        let find = |hp: &str| -> f64 {
+            t.rows.iter().find(|r| r[0] == hp).map(|r| parse(&r[3])).unwrap()
+        };
+        assert!(find("16") > find("0") + 1.0, "no knee:\n{}", t.render());
+    }
+}

@@ -1,0 +1,55 @@
+//! # STaMP — Sequence Transformation and Mixed Precision
+//!
+//! Full-stack reproduction of *"STaMP: Sequence Transformation and Mixed
+//! Precision for Low-Precision Activation Quantization"* (Federici et al.,
+//! 2025): a post-training activation-quantization technique that applies an
+//! orthogonal transform **along the sequence dimension** to concentrate
+//! token energy into a few coefficients, then quantizes those at higher
+//! precision (8b) and the rest at low precision (4b).
+//!
+//! The crate is organised in three layers:
+//!
+//! * **Substrates** — [`tensor`], [`linalg`], [`stats`]: dense f32 math,
+//!   a Jacobi eigensolver (for the KLT), autocorrelation estimation.
+//! * **Core library** — [`transforms`] (KLT / DCT / WHT / Haar-DWT sequence
+//!   transforms and Hadamard / SmoothQuant / FlatQuant feature transforms),
+//!   [`quant`] (per-token / per-block quantizers, mixed-precision bit
+//!   allocation, the Theorem-1 error bound), [`baselines`] (RTN,
+//!   SmoothQuant, QuaRot, ViDiT-Q SDCB, SVDQuant, FlatQuant-lite),
+//!   [`model`] (tiny GPT / DiT with quantization hook points), [`eval`]
+//!   (perplexity, SQNR, the paper's table harnesses).
+//! * **Runtime** — [`runtime`] (PJRT client: load AOT-lowered HLO text
+//!   produced by `python/compile/aot.py` and execute it) and
+//!   [`coordinator`] (request router, dynamic batcher, worker pools,
+//!   metrics) so quantized variants can be *served*, not just evaluated.
+//!
+//! Python/JAX/Pallas exists only on the compile path (`python/compile/`);
+//! the request path is pure Rust + PJRT.
+
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod linalg;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod stamp;
+pub mod stats;
+pub mod tensor;
+pub mod testkit;
+pub mod train;
+pub mod transforms;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::quant::{BitAllocation, Granularity, QuantScheme, Quantizer};
+    pub use crate::stamp::{SeqTransformKind, Stamp, StampConfig};
+    pub use crate::stats::sqnr;
+    pub use crate::tensor::Tensor;
+    pub use crate::transforms::{FeatureTransform, SequenceTransform};
+}

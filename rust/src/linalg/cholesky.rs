@@ -1,0 +1,65 @@
+//! Cholesky factorization, used by the synthetic-activation generator to
+//! sample sequences with a prescribed (block-)Toeplitz autocorrelation:
+//! if `S = L Lᵀ` then `L z` with `z ~ N(0, I)` has covariance `S`.
+
+use crate::tensor::Tensor;
+
+/// Lower-triangular `L` with `a = L Lᵀ`. Panics if `a` is not (numerically)
+/// positive definite; callers add a small diagonal jitter when factoring
+/// estimated covariances.
+pub fn cholesky(a: &Tensor) -> Tensor {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "cholesky needs a square matrix");
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut acc = a.at(i, j) as f64;
+            for k in 0..j {
+                acc -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                assert!(acc > 0.0, "matrix not positive definite at pivot {i} (acc={acc})");
+                l[i * n + i] = acc.sqrt();
+            } else {
+                l[i * n + j] = acc / l[j * n + j];
+            }
+        }
+    }
+    Tensor::from_vec(&[n, n], l.into_iter().map(|x| x as f32).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity() {
+        let l = cholesky(&Tensor::eye(5));
+        assert!(l.max_abs_diff(&Tensor::eye(5)) < 1e-6);
+    }
+
+    #[test]
+    fn reconstructs_spd() {
+        let b = Tensor::randn(&[10, 10], 4);
+        let mut a = b.transpose().matmul(&b);
+        for i in 0..10 {
+            a.set(i, i, a.at(i, i) + 0.1); // jitter
+        }
+        let l = cholesky(&a);
+        let rec = l.matmul(&l.transpose());
+        assert!(rec.max_abs_diff(&a) < 1e-3);
+        // Strictly upper part must be zero.
+        for i in 0..10 {
+            for j in (i + 1)..10 {
+                assert_eq!(l.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_indefinite() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        cholesky(&a);
+    }
+}

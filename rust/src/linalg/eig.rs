@@ -1,0 +1,165 @@
+//! Cyclic Jacobi eigensolver for symmetric matrices.
+//!
+//! Used to compute the Karhunen–Loève transform: the KLT basis is the
+//! eigenbasis of the sequence autocorrelation `S = E[XXᵀ]` (paper §3.2).
+//! Jacobi is O(n³) per sweep but unconditionally stable and needs no
+//! external LAPACK — sequence lengths here are ≤ 4096 and the KLT is a
+//! calibration-time operation, so this is more than fast enough.
+
+use crate::tensor::Tensor;
+
+/// Eigendecomposition of a symmetric matrix: `a = V diag(λ) Vᵀ`.
+///
+/// Eigenvalues are sorted in **descending** order; `vectors` holds the
+/// corresponding eigenvectors as **rows** (so `vectors` is `Uᵀ`, i.e. it is
+/// directly usable as the KLT sequence transform `L`).
+pub struct EigResult {
+    pub values: Vec<f32>,
+    /// Row i = eigenvector for `values[i]`.
+    pub vectors: Tensor,
+}
+
+/// Cyclic-by-row Jacobi. `a` must be symmetric; asymmetry below 1e-4 is
+/// tolerated (it is symmetrized internally).
+pub fn eigh(a: &Tensor, max_sweeps: usize, tol: f64) -> EigResult {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "eigh needs a square matrix");
+
+    // Work in f64 for accumulation accuracy.
+    let mut m: Vec<f64> = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            m[i * n + j] = 0.5 * (a.at(i, j) as f64 + a.at(j, i) as f64);
+        }
+    }
+    // v accumulates the rotations; rows end up as eigenvectors of `a`.
+    let mut v: Vec<f64> = vec![0.0; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += m[p * n + q] * m[p * n + q];
+            }
+        }
+        if off.sqrt() <= tol {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[p * n + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+
+                // Rotate rows/cols p and q of m.
+                for k in 0..n {
+                    let mkp = m[k * n + p];
+                    let mkq = m[k * n + q];
+                    m[k * n + p] = c * mkp - s * mkq;
+                    m[k * n + q] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[p * n + k];
+                    let mqk = m[q * n + k];
+                    m[p * n + k] = c * mpk - s * mqk;
+                    m[q * n + k] = s * mpk + c * mqk;
+                }
+                // Accumulate the rotation into v (row-eigenvector form).
+                for k in 0..n {
+                    let vpk = v[p * n + k];
+                    let vqk = v[q * n + k];
+                    v[p * n + k] = c * vpk - s * vqk;
+                    v[q * n + k] = s * vpk + c * vqk;
+                }
+            }
+        }
+    }
+
+    // Extract and sort by descending eigenvalue.
+    let mut order: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| m[i * n + i]).collect();
+    order.sort_by(|&i, &j| diag[j].partial_cmp(&diag[i]).unwrap());
+
+    let mut values = Vec::with_capacity(n);
+    let mut vectors = Tensor::zeros(&[n, n]);
+    for (row, &idx) in order.iter().enumerate() {
+        values.push(diag[idx] as f32);
+        for k in 0..n {
+            vectors.set(row, k, v[idx * n + k] as f32);
+        }
+    }
+    EigResult { values, vectors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::orthogonality_defect;
+
+    fn reconstruct(r: &EigResult) -> Tensor {
+        // a = Vᵀ diag(λ) V with V rows = eigenvectors.
+        let n = r.values.len();
+        let mut d = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            d.set(i, i, r.values[i]);
+        }
+        r.vectors.transpose().matmul(&d).matmul(&r.vectors)
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let mut a = Tensor::zeros(&[3, 3]);
+        a.set(0, 0, 1.0);
+        a.set(1, 1, 5.0);
+        a.set(2, 2, 3.0);
+        let r = eigh(&a, 30, 1e-12);
+        assert!((r.values[0] - 5.0).abs() < 1e-5);
+        assert!((r.values[1] - 3.0).abs() < 1e-5);
+        assert!((r.values[2] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1.
+        let a = Tensor::from_vec(&[2, 2], vec![2., 1., 1., 2.]);
+        let r = eigh(&a, 30, 1e-12);
+        assert!((r.values[0] - 3.0).abs() < 1e-5);
+        assert!((r.values[1] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn random_spd_reconstructs() {
+        let b = Tensor::randn(&[16, 16], 77);
+        let a = b.transpose().matmul(&b); // SPD
+        let r = eigh(&a, 50, 1e-10);
+        let rec = reconstruct(&r);
+        assert!(rec.max_abs_diff(&a) < 1e-2, "diff {}", rec.max_abs_diff(&a));
+        assert!(orthogonality_defect(&r.vectors) < 1e-4);
+        // All eigenvalues of an SPD matrix are non-negative.
+        assert!(r.values.iter().all(|&l| l > -1e-4));
+        // Descending order.
+        for w in r.values.windows(2) {
+            assert!(w[0] >= w[1] - 1e-5);
+        }
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let b = Tensor::randn(&[12, 12], 5);
+        let a = b.transpose().matmul(&b);
+        let r = eigh(&a, 50, 1e-10);
+        let tr: f32 = (0..12).map(|i| a.at(i, i)).sum();
+        let sum: f32 = r.values.iter().sum();
+        assert!((tr - sum).abs() / tr.abs() < 1e-4);
+    }
+}

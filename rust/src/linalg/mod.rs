@@ -1,0 +1,58 @@
+//! Linear-algebra substrate: symmetric eigendecomposition (for the KLT),
+//! Cholesky (for sampling correlated activations), Toeplitz builders, and
+//! orthogonality checks used throughout the transform tests.
+
+mod cholesky;
+mod eig;
+mod toeplitz;
+
+pub use cholesky::cholesky;
+pub use eig::{eigh, EigResult};
+pub use toeplitz::{ar1_covariance, block_toeplitz_2d, toeplitz};
+
+use crate::tensor::Tensor;
+
+/// Max |QᵀQ − I| — zero for a perfectly orthogonal matrix.
+pub fn orthogonality_defect(q: &Tensor) -> f32 {
+    let qtq = q.transpose().matmul(q);
+    qtq.max_abs_diff(&Tensor::eye(q.cols()))
+}
+
+/// Solve `L y = b` for lower-triangular `L` (forward substitution).
+pub fn solve_lower(l: &Tensor, b: &[f32]) -> Vec<f32> {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0f32; n];
+    for i in 0..n {
+        let mut acc = b[i];
+        for j in 0..i {
+            acc -= l.at(i, j) * y[j];
+        }
+        y[i] = acc / l.at(i, i);
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_is_orthogonal() {
+        assert_eq!(orthogonality_defect(&Tensor::eye(8)), 0.0);
+    }
+
+    #[test]
+    fn scaled_identity_is_not() {
+        let q = Tensor::eye(4).scale(2.0);
+        assert!(orthogonality_defect(&q) > 1.0);
+    }
+
+    #[test]
+    fn solve_lower_roundtrip() {
+        let l = Tensor::from_vec(&[2, 2], vec![2.0, 0.0, 1.0, 3.0]);
+        let y = solve_lower(&l, &[4.0, 7.0]);
+        assert!((y[0] - 2.0).abs() < 1e-6);
+        assert!((y[1] - (7.0 - 2.0) / 3.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,112 @@
+//! Toeplitz and block-Toeplitz covariance builders.
+//!
+//! Figure 3 of the paper shows that the sequence autocorrelation
+//! `S = E[XXᵀ]` of LLM activations is approximately Toeplitz (stationary
+//! local correlation), and LVM activations are *block*-Toeplitz because a
+//! 2-D token grid is flattened row-major into a 1-D sequence. These
+//! builders produce the idealized versions used by the synthetic activation
+//! generator and by the Szegő-approximation tests (DCT ≈ KLT eigenbasis).
+
+use crate::tensor::Tensor;
+
+/// Symmetric Toeplitz matrix from its first row `r` (r[0] = diagonal).
+pub fn toeplitz(r: &[f32]) -> Tensor {
+    let n = r.len();
+    let mut t = Tensor::zeros(&[n, n]);
+    for i in 0..n {
+        for j in 0..n {
+            t.set(i, j, r[i.abs_diff(j)]);
+        }
+    }
+    t
+}
+
+/// AR(1) covariance: `S[i,j] = σ² ρ^{|i−j|}`. The canonical stationary
+/// local-correlation model; `ρ → 1` is the strongly-correlated regime where
+/// sequence transforms win the most.
+pub fn ar1_covariance(n: usize, rho: f32, sigma2: f32) -> Tensor {
+    let r: Vec<f32> = (0..n).map(|k| sigma2 * rho.powi(k as i32)).collect();
+    toeplitz(&r)
+}
+
+/// Block-Toeplitz covariance for an `h×w` token grid flattened row-major:
+/// `S[(y1,x1),(y2,x2)] = σ² ρy^{|y1−y2|} ρx^{|x1−x2|}` (separable 2-D AR).
+/// This reproduces the block-diagonal band structure of Figure 3a (LVM).
+pub fn block_toeplitz_2d(h: usize, w: usize, rho_y: f32, rho_x: f32, sigma2: f32) -> Tensor {
+    let n = h * w;
+    let mut t = Tensor::zeros(&[n, n]);
+    for y1 in 0..h {
+        for x1 in 0..w {
+            for y2 in 0..h {
+                for x2 in 0..w {
+                    let v = sigma2
+                        * rho_y.powi(y1.abs_diff(y2) as i32)
+                        * rho_x.powi(x1.abs_diff(x2) as i32);
+                    t.set(y1 * w + x1, y2 * w + x2, v);
+                }
+            }
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toeplitz_structure() {
+        let t = toeplitz(&[1.0, 0.5, 0.25]);
+        assert_eq!(t.at(0, 0), 1.0);
+        assert_eq!(t.at(1, 1), 1.0);
+        assert_eq!(t.at(0, 1), 0.5);
+        assert_eq!(t.at(1, 0), 0.5);
+        assert_eq!(t.at(0, 2), 0.25);
+        // Constant along diagonals.
+        assert_eq!(t.at(1, 2), t.at(0, 1));
+    }
+
+    #[test]
+    fn ar1_decay_and_symmetry() {
+        let s = ar1_covariance(8, 0.9, 2.0);
+        assert!((s.at(3, 3) - 2.0).abs() < 1e-6);
+        assert!((s.at(0, 1) - 1.8).abs() < 1e-6);
+        for i in 0..8 {
+            for j in 0..8 {
+                assert_eq!(s.at(i, j), s.at(j, i));
+            }
+        }
+        // Monotone decay with distance.
+        assert!(s.at(0, 1) > s.at(0, 4));
+    }
+
+    #[test]
+    fn ar1_is_positive_definite() {
+        let s = ar1_covariance(16, 0.95, 1.0);
+        // Cholesky succeeding is the PD check.
+        let l = crate::linalg::cholesky(&s);
+        assert!(l.matmul(&l.transpose()).max_abs_diff(&s) < 1e-4);
+    }
+
+    #[test]
+    fn block_structure() {
+        let s = block_toeplitz_2d(3, 3, 0.8, 0.5, 1.0);
+        // Same row of the grid: pure ρx decay.
+        assert!((s.at(0, 1) - 0.5).abs() < 1e-6);
+        // Same column of the grid (distance w in the sequence): ρy decay.
+        assert!((s.at(0, 3) - 0.8).abs() < 1e-6);
+        // Diagonal neighbor: product.
+        assert!((s.at(0, 4) - 0.4).abs() < 1e-6);
+        // Row-adjacent tokens at opposite grid edges (wrap in flattening)
+        // are *less* correlated than same-row neighbors — the block
+        // boundary structure of Fig 3a.
+        assert!(s.at(2, 3) < s.at(0, 1));
+    }
+
+    #[test]
+    fn block_toeplitz_positive_definite() {
+        let s = block_toeplitz_2d(4, 4, 0.9, 0.9, 1.0);
+        let l = crate::linalg::cholesky(&s);
+        assert!(l.matmul(&l.transpose()).max_abs_diff(&s) < 1e-4);
+    }
+}

@@ -1,0 +1,267 @@
+//! `stamp` — leader entrypoint for the STaMP reproduction.
+//!
+//! Subcommands regenerate every table/figure of the paper (DESIGN.md §5),
+//! run the quantized-variant serving demo over the coordinator, and train
+//! the tiny evaluation models. See `stamp help`.
+
+use anyhow::Result;
+use stamp::baselines::{BaselineKind, QuantHook, QuantStack};
+use stamp::cli::{emit, Args, HELP};
+use stamp::config::RunConfig;
+use stamp::coordinator::{Executor, Server};
+use stamp::data::{ActivationGenerator, ActivationSpec};
+use stamp::eval::tables::{self, TableOpts};
+use stamp::eval::{figures, perplexity};
+use stamp::model::FpHook;
+use stamp::quant::BitAllocation;
+use stamp::report::Table;
+use stamp::tensor::Tensor;
+use stamp::transforms::{HaarDwt, IdentitySeq, SequenceTransform};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    match args.command.as_str() {
+        "eval" => cmd_eval(&args),
+        "report" => cmd_report(&args),
+        "serve" => cmd_serve(&args),
+        "train" => cmd_train(&args),
+        "info" => cmd_info(),
+        _ => {
+            print!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+fn opts_for(args: &Args) -> TableOpts {
+    if args.has_flag("fast") {
+        TableOpts::fast()
+    } else {
+        TableOpts::full()
+    }
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let what = args.positional.first().map(|s| s.as_str()).unwrap_or("table2");
+    let opts = opts_for(args);
+    let csv = args.csv_dir();
+    match what {
+        "table1" => emit(&tables::table1_lvm(&opts), csv.as_deref()),
+        "table2" => emit(&tables::table2_llm(&opts), csv.as_deref()),
+        "table4" => emit(&tables::table4_sites(&opts), csv.as_deref()),
+        "table5" => emit(&tables::table5_metrics(&opts), csv.as_deref()),
+        "fig4b" => emit(&tables::fig4b_sweep(&opts), csv.as_deref()),
+        "fig7" => {
+            let (lvm, llm) = tables::fig7_grid(&opts);
+            emit(&lvm, csv.as_deref());
+            emit(&llm, csv.as_deref());
+        }
+        "fig9" => emit(&tables::fig9_blockq(&opts), csv.as_deref()),
+        other => anyhow::bail!("unknown eval target `{other}` (see `stamp help`)"),
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let what = args.positional.first().map(|s| s.as_str()).unwrap_or("fig2");
+    let csv = args.csv_dir();
+    // Shared activation source: LLM-preset AR(1) (Fig 3 right).
+    let gen = ActivationGenerator::new(ActivationSpec {
+        outlier_channels: 0,
+        sink_scale: 0.0,
+        ..ActivationSpec::llm(128, 64)
+    });
+    let samples = gen.calibration_set(16, 0xF16);
+    match what {
+        "fig2" => {
+            let x = &samples[0];
+            let mut t = Table::new(
+                "Figure 2b: Theorem-1 bound vs measured error (avg 3..8 bits)",
+                &["avg_bits", "scheme", "measured", "bound"],
+            );
+            let id = IdentitySeq::new(128);
+            let dwt = HaarDwt::new(128, 3);
+            for b in 3u32..=8 {
+                for (name, tr, alloc) in [
+                    ("uniform", &id as &dyn SequenceTransform, BitAllocation::uniform(b)),
+                    (
+                        "STaMP(dwt,2-level)",
+                        &dwt as &dyn SequenceTransform,
+                        // 16 hp tokens of 128 at 8b → avg slightly above b−1.
+                        BitAllocation::two_level(16, 8, b.saturating_sub(1).max(1)),
+                    ),
+                ] {
+                    let pts = figures::fig2_bound_curve(x, tr, &[alloc.clone()]);
+                    let p = &pts[0];
+                    t.row(vec![
+                        format!("{:.2}", p.avg_bits),
+                        name.into(),
+                        format!("{:.4}", p.measured_error),
+                        format!("{:.4}", p.bound),
+                    ]);
+                }
+            }
+            emit(&t, csv.as_deref());
+        }
+        "fig3" => {
+            let sp = figures::fig3_energy_spectra(&samples);
+            let mut t = Table::new(
+                "Figure 3b: cumulative energy share of top-k transformed tokens",
+                &["k", "identity", "KLT", "DCT", "WHT", "DWT"],
+            );
+            for k in [1usize, 2, 4, 8, 16, 32, 64, 128] {
+                t.row(vec![
+                    k.to_string(),
+                    format!("{:.3}", figures::topk_share(&sp.identity, k)),
+                    format!("{:.3}", figures::topk_share(&sp.klt, k)),
+                    format!("{:.3}", figures::topk_share(&sp.dct, k)),
+                    format!("{:.3}", figures::topk_share(&sp.wht, k)),
+                    format!("{:.3}", figures::topk_share(&sp.dwt, k)),
+                ]);
+            }
+            emit(&t, csv.as_deref());
+            // Fig 3a: lag profile of the autocorrelation.
+            let ac = figures::fig3_autocorrelation(&samples);
+            let prof = stamp::stats::lag_profile(&ac);
+            let mut t = Table::new(
+                "Figure 3a: autocorrelation lag profile (Toeplitz check)",
+                &["lag", "normalized |S[i,i+lag]|"],
+            );
+            for lag in [0usize, 1, 2, 4, 8, 16, 32, 64] {
+                t.row(vec![lag.to_string(), format!("{:.4}", prof[lag])]);
+            }
+            emit(&t, csv.as_deref());
+        }
+        "fig4a" => {
+            let eig = figures::autocorr_eigenvalues(&samples);
+            let energies: Vec<f64> = eig.iter().map(|&l| (l as f64).max(1e-12)).collect();
+            let mut t = Table::new(
+                "Figure 4a: bit-allocation objective at avg 5 bits",
+                &["strategy", "objective (Σ e/2^2b)"],
+            );
+            let c = figures::fig4a_allocations(&energies, 5.0, 16);
+            t.row(vec!["uniform, no transform".into(), format!("{:.5}", c.uniform_objective)]);
+            t.row(vec!["optimal continuous".into(), format!("{:.5}", c.optimal_objective)]);
+            t.row(vec!["2-level {8,low}".into(), format!("{:.5}", c.two_level_objective)]);
+            emit(&t, csv.as_deref());
+        }
+        other => anyhow::bail!("unknown report target `{other}`"),
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let variant = args.positional.first().map(|s| s.as_str()).unwrap_or("small");
+    let steps: usize = args.flag("steps").map(|s| s.parse()).transpose()?.unwrap_or(300);
+    println!("training GPT `{variant}` for {steps} steps on the synthetic corpus…");
+    let t0 = std::time::Instant::now();
+    let (gpt, corpus) = stamp::train::build_trained_model(variant, steps);
+    let seqs_all = corpus.sequences(256);
+    let seqs: Vec<&[u32]> = seqs_all.iter().take(4).cloned().collect();
+    let ppl = perplexity(&gpt, &FpHook, &seqs);
+    println!(
+        "done in {:.1?}: {} params, eval FP perplexity {:.2}",
+        t0.elapsed(),
+        gpt.n_params(),
+        ppl
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = match args.flag("config") {
+        Some(path) => RunConfig::from_file(path)?,
+        None => RunConfig::defaults(),
+    };
+    let n_requests: usize = args.flag("requests").map(|s| s.parse()).transpose()?.unwrap_or(64);
+    println!("serve: building quantized variants ({} workers)…", cfg.serve.workers);
+
+    // Build a small DiT and three quant variants as the served "models".
+    let dit = Arc::new(stamp::model::Dit::new(
+        stamp::model::DitConfig { steps: 2, ..stamp::model::DitConfig::pixart() },
+        0xD17,
+    ));
+    let stats = tables::calibrate_dit(&dit);
+    let opts = TableOpts::fast();
+    let mk_stack = |kind: BaselineKind, stamp: bool| -> QuantStack {
+        let act = stamp::baselines::ActQuantCfg {
+            bits: cfg.quant.act_bits,
+            hp_tokens: opts.hp_tokens,
+            hp_bits: cfg.quant.hp_bits,
+            granularity: stamp::quant::Granularity::PerToken,
+            range_shrink: 1.0,
+        };
+        let mut s = QuantStack::build(kind, &stats, Some(act), None, None, 1).with_lvm_skips();
+        if stamp {
+            s = s.with_stamp(QuantStack::lvm_stamp(dit.cfg.grid_h, dit.cfg.grid_w));
+        }
+        s
+    };
+    let variants: Vec<(String, QuantStack)> = vec![
+        ("fp".into(), QuantStack::fp()),
+        ("rtn-a4".into(), mk_stack(BaselineKind::Rtn, false)),
+        ("rtn-a4+stamp".into(), mk_stack(BaselineKind::Rtn, true)),
+    ];
+    let names: Vec<String> = variants.iter().map(|(n, _)| n.clone()).collect();
+    let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+
+    let dit_exec = dit.clone();
+    let stacks: std::collections::HashMap<String, QuantStack> = variants.into_iter().collect();
+    let executor: Arc<dyn Executor> = Arc::new(move |variant: &str, inputs: &[&Tensor]| {
+        let stack = stacks.get(variant).ok_or_else(|| format!("no stack for {variant}"))?;
+        let hook = QuantHook::new(stack);
+        Ok(inputs
+            .iter()
+            .map(|z| dit_exec.denoise_step(&hook, z, "serving demo prompt", 0))
+            .collect())
+    });
+
+    let server = Server::start(&cfg.serve, &name_refs, executor);
+    let handle = server.handle();
+    println!("submitting {n_requests} denoise requests round-robin over {names:?}…");
+    let t0 = std::time::Instant::now();
+    let gen = ActivationGenerator::new(ActivationSpec::lvm(dit.cfg.grid_h, dit.cfg.grid_w, dit.latent_dim));
+    let receivers: Vec<_> = (0..n_requests)
+        .map(|i| {
+            let variant = &names[i % names.len()];
+            handle.submit(variant, gen.sample(i as u64)).1
+        })
+        .collect();
+    let mut ok = 0usize;
+    for rx in &receivers {
+        if rx.recv_timeout(Duration::from_secs(60)).map(|r| r.output.is_ok()).unwrap_or(false) {
+            ok += 1;
+        }
+    }
+    let elapsed = t0.elapsed();
+    println!(
+        "{ok}/{n_requests} ok in {elapsed:.1?} ({:.1} req/s)\n--- metrics ---\n{}",
+        n_requests as f64 / elapsed.as_secs_f64(),
+        handle.metrics.snapshot()
+    );
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("stamp reproduction — crate {}", env!("CARGO_PKG_VERSION"));
+    match stamp::runtime::Engine::cpu() {
+        Ok(engine) => {
+            println!("PJRT platform: {} ({} device(s))", engine.platform(), engine.device_count());
+        }
+        Err(e) => println!("PJRT unavailable: {e}"),
+    }
+    match stamp::runtime::ArtifactRegistry::load("artifacts") {
+        Ok(reg) => {
+            println!("artifacts ({}):", reg.entries().len());
+            for e in reg.entries() {
+                println!("  {:<24} {} (inputs {})", e.name, e.file, e.inputs);
+            }
+        }
+        Err(_) => println!("no artifacts yet — run `make artifacts`"),
+    }
+    Ok(())
+}

@@ -1,0 +1,502 @@
+//! GPT-style causal LM: token embedding → N×(RMSNorm→MHA→RMSNorm→gated MLP)
+//! → final norm → tied-embedding logits. Hand-written backward for training;
+//! hooked forward for quantized evaluation (sites per Figure 5: `attn1`,
+//! `attn1.to_out`, `ffn.up_proj`, `ffn.down_proj`, plus `.k`/`.v` KV sites).
+
+use super::attention::{AttnCache, MultiHeadAttention};
+use super::linear::{Linear, LinearHook};
+use super::norm::RmsNorm;
+use crate::tensor::{Tensor, XorShiftRng};
+
+#[derive(Clone, Debug)]
+pub struct GptConfig {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+}
+
+impl GptConfig {
+    /// The four "model sizes" used for the Table-2 analogue rows.
+    pub fn tiny() -> Self {
+        GptConfig { vocab_size: 72, d_model: 64, n_heads: 4, n_layers: 2, d_ff: 128, max_seq: 256 }
+    }
+    pub fn small() -> Self {
+        GptConfig { vocab_size: 72, d_model: 128, n_heads: 4, n_layers: 4, d_ff: 256, max_seq: 256 }
+    }
+    pub fn medium() -> Self {
+        // All linear in-dims are powers of two so Hadamard feature
+        // transforms (QuaRot) apply without Kronecker padding.
+        GptConfig { vocab_size: 72, d_model: 128, n_heads: 4, n_layers: 6, d_ff: 256, max_seq: 256 }
+    }
+    pub fn wide() -> Self {
+        GptConfig { vocab_size: 72, d_model: 256, n_heads: 8, n_layers: 4, d_ff: 512, max_seq: 256 }
+    }
+}
+
+/// One transformer block.
+pub struct Block {
+    pub norm1: RmsNorm,
+    pub attn: MultiHeadAttention,
+    pub norm2: RmsNorm,
+    pub up: Linear,
+    pub gate: Linear,
+    pub down: Linear,
+}
+
+/// Per-block forward cache for backward.
+pub struct BlockCache {
+    x: Tensor,
+    n1: Tensor,
+    n1_inv: Vec<f32>,
+    attn: AttnCache,
+    x_mid: Tensor,
+    n2: Tensor,
+    n2_inv: Vec<f32>,
+    up_out: Tensor,
+    gate_out: Tensor,
+    act: Tensor,
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+fn silu_grad(x: f32) -> f32 {
+    let s = 1.0 / (1.0 + (-x).exp());
+    s * (1.0 + x * (1.0 - s))
+}
+
+impl Block {
+    fn new(cfg: &GptConfig, rng: &mut XorShiftRng) -> Self {
+        Block {
+            norm1: RmsNorm::new(cfg.d_model),
+            attn: MultiHeadAttention::new(cfg.d_model, cfg.n_heads, true, rng),
+            norm2: RmsNorm::new(cfg.d_model),
+            up: Linear::new(cfg.d_model, cfg.d_ff, false, rng),
+            gate: Linear::new(cfg.d_model, cfg.d_ff, false, rng),
+            down: Linear::new(cfg.d_ff, cfg.d_model, false, rng),
+        }
+    }
+
+    fn forward_train(&self, x: &Tensor) -> (Tensor, BlockCache) {
+        let (n1, n1_inv) = self.norm1.forward(x);
+        let (a, attn_cache) = self.attn.forward_train(&n1);
+        let x_mid = x.add(&a);
+        let (n2, n2_inv) = self.norm2.forward(&x_mid);
+        let up_out = self.up.forward(&n2);
+        let gate_out = self.gate.forward(&n2);
+        // act = silu(gate) * up
+        let act = gate_out.zip(&up_out, |g, u| silu(g) * u);
+        let m = self.down.forward(&act);
+        let out = x_mid.add(&m);
+        (
+            out,
+            BlockCache { x: x.clone(), n1, n1_inv, attn: attn_cache, x_mid, n2, n2_inv, up_out, gate_out, act },
+        )
+    }
+
+    fn forward_hooked(&self, hook: &dyn LinearHook, layer: usize, x: &Tensor) -> Tensor {
+        let (n1, _) = self.norm1.forward(x);
+        let a = self.attn.forward_hooked(hook, &format!("layer{layer}.attn1"), &n1);
+        let x_mid = x.add(&a);
+        let (n2, _) = self.norm2.forward(&x_mid);
+        let up_out =
+            hook.linear(&format!("layer{layer}.ffn.up_proj"), &n2, &self.up.w, self.up.b.as_deref());
+        let gate_out = hook.linear(
+            &format!("layer{layer}.ffn.gate_proj"),
+            &n2,
+            &self.gate.w,
+            self.gate.b.as_deref(),
+        );
+        let act = gate_out.zip(&up_out, |g, u| silu(g) * u);
+        let m = hook.linear(
+            &format!("layer{layer}.ffn.down_proj"),
+            &act,
+            &self.down.w,
+            self.down.b.as_deref(),
+        );
+        x_mid.add(&m)
+    }
+
+    fn backward(&mut self, cache: &BlockCache, dy: &Tensor) -> Tensor {
+        // out = x_mid + down(act)
+        let dact = self.down.backward(&cache.act, dy);
+        // act = silu(gate) * up
+        let dgate = dact.zip(&cache.up_out, |d, u| d * u).zip(&cache.gate_out, |du, g| du * silu_grad(g));
+        let dup = dact.zip(&cache.gate_out, |d, g| d * silu(g));
+        let dn2 = self.up.backward(&cache.n2, &dup).add(&self.gate.backward(&cache.n2, &dgate));
+        let dx_mid_from_mlp = self.norm2.backward(&cache.x_mid, &cache.n2_inv, &dn2);
+        let dx_mid = dy.add(&dx_mid_from_mlp);
+        // x_mid = x + attn(n1)
+        let dn1 = self.attn.backward(&cache.attn, &dx_mid);
+        let dx_from_attn = self.norm1.backward(&cache.x, &cache.n1_inv, &dn1);
+        dx_mid.add(&dx_from_attn)
+    }
+
+    fn zero_grad(&mut self) {
+        self.norm1.zero_grad();
+        self.attn.zero_grad();
+        self.norm2.zero_grad();
+        self.up.zero_grad();
+        self.gate.zero_grad();
+        self.down.zero_grad();
+    }
+
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut [f32], &[f32])) {
+        self.norm1.visit_params(f);
+        self.attn.visit_params(f);
+        self.norm2.visit_params(f);
+        self.up.visit_params(f);
+        self.gate.visit_params(f);
+        self.down.visit_params(f);
+    }
+
+    fn n_params(&self) -> usize {
+        self.attn.n_params()
+            + self.up.n_params()
+            + self.gate.n_params()
+            + self.down.n_params()
+            + 2 * self.norm1.gamma.len()
+    }
+}
+
+/// The full GPT model.
+pub struct Gpt {
+    pub cfg: GptConfig,
+    /// Token embedding `[vocab, d_model]`; also used (tied) for logits.
+    pub embed: Tensor,
+    gembed: Tensor,
+    /// Learned positional embedding `[max_seq, d_model]`.
+    pub pos: Tensor,
+    gpos: Tensor,
+    pub blocks: Vec<Block>,
+    pub final_norm: RmsNorm,
+}
+
+/// Full forward cache.
+pub struct GptCache {
+    tokens: Vec<u32>,
+    h0: Tensor,
+    block_caches: Vec<BlockCache>,
+    hn: Tensor,
+    hn_inv: Vec<f32>,
+    normed: Tensor,
+    /// Softmax probabilities `[s, vocab]`.
+    probs: Tensor,
+}
+
+impl Gpt {
+    pub fn new(cfg: GptConfig, seed: u64) -> Self {
+        let mut rng = XorShiftRng::new(seed);
+        let mut embed = Tensor::zeros(&[cfg.vocab_size, cfg.d_model]);
+        for v in embed.data_mut() {
+            *v = rng.next_gaussian() * 0.05;
+        }
+        let mut pos = Tensor::zeros(&[cfg.max_seq, cfg.d_model]);
+        for v in pos.data_mut() {
+            *v = rng.next_gaussian() * 0.02;
+        }
+        let blocks = (0..cfg.n_layers).map(|_| Block::new(&cfg, &mut rng)).collect();
+        Gpt {
+            gembed: Tensor::zeros(embed.shape()),
+            gpos: Tensor::zeros(pos.shape()),
+            embed,
+            pos,
+            blocks,
+            final_norm: RmsNorm::new(cfg.d_model),
+            cfg,
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.embed.len()
+            + self.pos.len()
+            + self.blocks.iter().map(|b| b.n_params()).sum::<usize>()
+            + self.final_norm.gamma.len()
+    }
+
+    fn embed_tokens(&self, tokens: &[u32]) -> Tensor {
+        let d = self.cfg.d_model;
+        let mut h = Tensor::zeros(&[tokens.len(), d]);
+        for (i, &t) in tokens.iter().enumerate() {
+            let t = t as usize;
+            assert!(t < self.cfg.vocab_size, "token {t} out of vocab");
+            for j in 0..d {
+                let v = self.embed.at(t, j) + self.pos.at(i, j);
+                h.set(i, j, v);
+            }
+        }
+        h
+    }
+
+    /// Logits for a token sequence (hooked; pass [`super::FpHook`] for FP).
+    pub fn logits_hooked(&self, hook: &dyn LinearHook, tokens: &[u32]) -> Tensor {
+        assert!(tokens.len() <= self.cfg.max_seq);
+        let mut h = self.embed_tokens(tokens);
+        for (l, b) in self.blocks.iter().enumerate() {
+            h = b.forward_hooked(hook, l, &h);
+        }
+        let (hn, _) = self.final_norm.forward(&h);
+        // Tied embedding head — the `head` site (kept FP, like the paper
+        // which only quantizes linears inside transformer blocks).
+        crate::tensor::matmul_transb(&hn, &self.embed)
+    }
+
+    /// Training forward: returns (mean cross-entropy over next-token
+    /// prediction, cache). Targets are `tokens[1..]`.
+    pub fn forward_loss(&self, tokens: &[u32]) -> (f64, GptCache) {
+        let s = tokens.len();
+        assert!(s >= 2);
+        let h0 = self.embed_tokens(tokens);
+        let mut h = h0.clone();
+        let mut block_caches = Vec::with_capacity(self.blocks.len());
+        for b in &self.blocks {
+            let (nh, c) = b.forward_train(&h);
+            h = nh;
+            block_caches.push(c);
+        }
+        let (normed, hn_inv) = self.final_norm.forward(&h);
+        let mut logits = crate::tensor::matmul_transb(&normed, &self.embed);
+        super::softmax_rows(&mut logits);
+        let probs = logits;
+        // CE over positions 0..s-1 predicting tokens[i+1].
+        let mut loss = 0.0f64;
+        for i in 0..s - 1 {
+            let t = tokens[i + 1] as usize;
+            loss -= (probs.at(i, t).max(1e-12) as f64).ln();
+        }
+        loss /= (s - 1) as f64;
+        (
+            loss,
+            GptCache { tokens: tokens.to_vec(), h0, block_caches, hn: h, hn_inv, normed, probs },
+        )
+    }
+
+    /// Backward from the cached forward; accumulates all gradients.
+    pub fn backward(&mut self, cache: &GptCache) {
+        let s = cache.tokens.len();
+        let scale = 1.0 / (s - 1) as f32;
+        // dlogits = (probs − onehot)/ (s−1) for rows 0..s−2, zero for last.
+        let mut dlogits = cache.probs.clone();
+        for i in 0..s {
+            if i < s - 1 {
+                let t = cache.tokens[i + 1] as usize;
+                let row = dlogits.row_mut(i);
+                row[t] -= 1.0;
+                for v in row.iter_mut() {
+                    *v *= scale;
+                }
+            } else {
+                dlogits.row_mut(i).fill(0.0);
+            }
+        }
+        // logits = normed @ embedᵀ ⇒ dnormed = dlogits @ embed;
+        // dembed += dlogitsᵀ @ normed.
+        let dnormed = crate::tensor::matmul(&dlogits, &self.embed);
+        let dembed_head = crate::tensor::matmul(&dlogits.transpose(), &cache.normed);
+        self.gembed = self.gembed.add(&dembed_head);
+
+        let mut dh = self.final_norm.backward(&cache.hn, &cache.hn_inv, &dnormed);
+        for (b, c) in self.blocks.iter_mut().zip(&cache.block_caches).rev() {
+            dh = b.backward(c, &dh);
+        }
+        // Embedding + positional grads.
+        for (i, &t) in cache.tokens.iter().enumerate() {
+            let t = t as usize;
+            for j in 0..self.cfg.d_model {
+                let g = dh.at(i, j);
+                self.gembed.set(t, j, self.gembed.at(t, j) + g);
+                self.gpos.set(i, j, self.gpos.at(i, j) + g);
+            }
+        }
+        let _ = &cache.h0;
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.gembed.data_mut().fill(0.0);
+        self.gpos.data_mut().fill(0.0);
+        for b in &mut self.blocks {
+            b.zero_grad();
+        }
+        self.final_norm.zero_grad();
+    }
+
+    pub fn visit_params(&mut self, f: &mut dyn FnMut(&mut [f32], &[f32])) {
+        let ge = self.gembed.data().to_vec();
+        f(self.embed.data_mut(), &ge);
+        let gp = self.gpos.data().to_vec();
+        f(self.pos.data_mut(), &gp);
+        for b in &mut self.blocks {
+            b.visit_params(f);
+        }
+        self.final_norm.visit_params(f);
+    }
+
+    /// Function-preserving outlier-channel injection.
+    ///
+    /// Real LLMs exhibit per-channel "massive activations" (Sun et al.
+    /// 2024) that make low-bit activation quantization catastrophic — the
+    /// regime Table 2 studies. Tiny models trained on a synthetic corpus
+    /// lack them, so we create them *exactly function-preservingly* (the
+    /// inverse of SmoothQuant's rebalancing): scale RMSNorm gains (and V/up
+    /// projection columns) by `scale` on `count` channels and divide the
+    /// consuming weight rows by `scale`. FP outputs are bit-identical up
+    /// to float associativity; quantized behaviour becomes realistic.
+    pub fn inject_outlier_channels(&mut self, count: usize, scale: f32) {
+        let d = self.cfg.d_model;
+        let pick = |n: usize| -> Vec<usize> {
+            let stride = (n / count.max(1)).max(1);
+            (0..count).map(|k| (k * stride + stride / 2) % n).collect()
+        };
+        // Add a large near-constant offset c·e_j at each norm output
+        // (massive activations are approximately token-constant — the
+        // property STaMP's sequence transform compresses), and subtract
+        // the exact compensation c·W[j,:] from each consumer's bias.
+        fn compensate(lin: &mut Linear, j: usize, c: f32) {
+            let comp: Vec<f32> = lin.w.row(j).iter().map(|&w| -c * w).collect();
+            match &mut lin.b {
+                Some(bias) => {
+                    for (b, v) in bias.iter_mut().zip(&comp) {
+                        *b += v;
+                    }
+                }
+                None => {
+                    lin.b = Some(comp);
+                    lin.gb = Some(vec![0.0; lin.w.cols()]);
+                }
+            }
+        }
+        let ch_d = pick(d);
+        for blk in &mut self.blocks {
+            for (idx, &j) in ch_d.iter().enumerate() {
+                let c = scale * if idx % 2 == 0 { 1.0 } else { -1.0 };
+                blk.norm1.beta[j] += c;
+                compensate(&mut blk.attn.wq, j, c);
+                compensate(&mut blk.attn.wk, j, c);
+                compensate(&mut blk.attn.wv, j, c);
+                blk.norm2.beta[j] += c;
+                compensate(&mut blk.up, j, c);
+                compensate(&mut blk.gate, j, c);
+            }
+        }
+    }
+
+    /// Iterate `f` over every block-internal weight matrix with its site
+    /// name — used by weight-quantizing baselines (RTN etc.).
+    pub fn visit_weights_mut(&mut self, f: &mut dyn FnMut(&str, &mut Tensor)) {
+        for (l, b) in self.blocks.iter_mut().enumerate() {
+            f(&format!("layer{l}.attn1.wq"), &mut b.attn.wq.w);
+            f(&format!("layer{l}.attn1.wk"), &mut b.attn.wk.w);
+            f(&format!("layer{l}.attn1.wv"), &mut b.attn.wv.w);
+            f(&format!("layer{l}.attn1.to_out"), &mut b.attn.wo.w);
+            f(&format!("layer{l}.ffn.up_proj"), &mut b.up.w);
+            f(&format!("layer{l}.ffn.gate_proj"), &mut b.gate.w);
+            f(&format!("layer{l}.ffn.down_proj"), &mut b.down.w);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::FpHook;
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        let gpt = Gpt::new(GptConfig::tiny(), 1);
+        let tokens: Vec<u32> = (0..16).map(|i| i % 72).collect();
+        let logits = gpt.logits_hooked(&FpHook, &tokens);
+        assert_eq!(logits.shape(), &[16, 72]);
+        assert!(logits.all_finite());
+    }
+
+    #[test]
+    fn loss_near_uniform_at_init() {
+        let gpt = Gpt::new(GptConfig::tiny(), 2);
+        let tokens: Vec<u32> = (0..32).map(|i| (i * 7) % 72).collect();
+        let (loss, _) = gpt.forward_loss(&tokens);
+        let uniform = (72f64).ln();
+        assert!((loss - uniform).abs() < 0.5, "loss {loss} vs uniform {uniform}");
+    }
+
+    #[test]
+    fn backward_decreases_loss_one_sgd_step() {
+        let mut gpt = Gpt::new(GptConfig::tiny(), 3);
+        let tokens: Vec<u32> = (0..32).map(|i| (i * 3 + 1) % 72).collect();
+        let (l0, cache) = gpt.forward_loss(&tokens);
+        gpt.zero_grad();
+        gpt.backward(&cache);
+        let lr = 0.1f32;
+        gpt.visit_params(&mut |p, g| {
+            for (pi, gi) in p.iter_mut().zip(g) {
+                *pi -= lr * gi;
+            }
+        });
+        let (l1, _) = gpt.forward_loss(&tokens);
+        assert!(l1 < l0, "loss did not decrease: {l0} -> {l1}");
+    }
+
+    #[test]
+    fn grad_numerical_embedding() {
+        let mut gpt = Gpt::new(GptConfig { n_layers: 1, ..GptConfig::tiny() }, 4);
+        let tokens: Vec<u32> = vec![1, 5, 9, 5, 1, 3];
+        let (_, cache) = gpt.forward_loss(&tokens);
+        gpt.zero_grad();
+        gpt.backward(&cache);
+        let ana = gpt.gembed.at(5, 3) as f64;
+        let eps = 1e-3f32;
+        let l0 = gpt.forward_loss(&tokens).0;
+        gpt.embed.set(5, 3, gpt.embed.at(5, 3) + eps);
+        let l1 = gpt.forward_loss(&tokens).0;
+        let num = (l1 - l0) / eps as f64;
+        assert!((num - ana).abs() < 0.05 * ana.abs().max(0.1), "num {num} ana {ana}");
+    }
+
+    #[test]
+    fn hooked_fp_matches_train_path_logits() {
+        let gpt = Gpt::new(GptConfig::tiny(), 5);
+        let tokens: Vec<u32> = (0..24).map(|i| (i * 5) % 72).collect();
+        let logits = gpt.logits_hooked(&FpHook, &tokens);
+        // Recompute through forward_loss's internals: probs row argmax equal.
+        let (_, cache) = gpt.forward_loss(&tokens);
+        for i in 0..tokens.len() {
+            let a = logits.row(i).iter().cloned().fold(f32::MIN, f32::max);
+            let ai = logits.row(i).iter().position(|&v| v == a).unwrap();
+            let p = cache.probs.row(i).iter().cloned().fold(f32::MIN, f32::max);
+            let pi = cache.probs.row(i).iter().position(|&v| v == p).unwrap();
+            assert_eq!(ai, pi, "argmax mismatch at {i}");
+        }
+    }
+
+    #[test]
+    fn outlier_injection_preserves_function() {
+        let mut gpt = Gpt::new(GptConfig::tiny(), 9);
+        let tokens: Vec<u32> = (0..48).map(|i| ((i * 7 + 2) % 70) as u32).collect();
+        let before = gpt.logits_hooked(&FpHook, &tokens);
+        gpt.inject_outlier_channels(4, 30.0);
+        let after = gpt.logits_hooked(&FpHook, &tokens);
+        let rel = before.max_abs_diff(&after) / before.abs_max().max(1e-6);
+        assert!(rel < 1e-3, "function changed: rel {rel}");
+        // And the activations now have outlier channels.
+        let hook = crate::model::CaptureHook::with_filter("ffn.up_proj");
+        let _ = gpt.logits_hooked(&hook, &tokens);
+        let acts = hook.take().remove("layer0.ffn.up_proj").unwrap();
+        let absmax = crate::stats::channel_absmax(&acts[0]);
+        let mut sorted = absmax.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[sorted.len() / 2];
+        let top = sorted[sorted.len() - 1];
+        assert!(top > 10.0 * median, "no outliers: top {top} median {median}");
+    }
+
+    #[test]
+    fn param_count_sane() {
+        let gpt = Gpt::new(GptConfig::small(), 6);
+        let n = gpt.n_params();
+        // 4 layers × (4·128² attn + 3·128·256 mlp) + embeddings.
+        assert!(n > 500_000 && n < 1_500_000, "n_params {n}");
+    }
+}

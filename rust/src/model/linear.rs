@@ -1,0 +1,228 @@
+//! Linear layers + the quantization hook interface.
+//!
+//! Every linear in the models calls `hook.linear(site, x, w, bias)` instead
+//! of multiplying directly, so a single forward implementation serves FP
+//! evaluation, activation capture (calibration), and every quantized
+//! baseline — the hook *is* the quantization configuration.
+
+use crate::tensor::{matmul, Tensor, XorShiftRng};
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+/// Interception point for every linear layer input.
+pub trait LinearHook {
+    /// Compute `x @ w + bias` with whatever transformation/quantization the
+    /// hook implements. `site` is the Figure-5 activation-site name, with a
+    /// `layerN.` prefix (e.g. `layer3.ffn.up_proj`).
+    fn linear(&self, site: &str, x: &Tensor, w: &Tensor, bias: Option<&[f32]>) -> Tensor;
+
+    /// Hook for KV-cache tensors (`k`/`v` per layer), post-projection.
+    /// Default: identity (FP cache).
+    fn kv(&self, _site: &str, t: &Tensor) -> Tensor {
+        t.clone()
+    }
+}
+
+/// Full-precision pass-through hook.
+pub struct FpHook;
+
+impl LinearHook for FpHook {
+    fn linear(&self, _site: &str, x: &Tensor, w: &Tensor, bias: Option<&[f32]>) -> Tensor {
+        let mut y = matmul(x, w);
+        if let Some(b) = bias {
+            y = y.add_row_broadcast(b);
+        }
+        y
+    }
+}
+
+/// Calibration hook: records every site's input activation, then computes
+/// the FP result. Interior mutability because the hook is shared immutably
+/// across the forward pass.
+#[derive(Default)]
+pub struct CaptureHook {
+    captured: RefCell<HashMap<String, Vec<Tensor>>>,
+    /// Optional site filter: only capture sites containing this substring.
+    pub filter: Option<String>,
+}
+
+impl CaptureHook {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_filter(filter: &str) -> Self {
+        CaptureHook { captured: RefCell::new(HashMap::new()), filter: Some(filter.to_string()) }
+    }
+
+    pub fn take(&self) -> HashMap<String, Vec<Tensor>> {
+        self.captured.borrow_mut().drain().collect()
+    }
+
+    pub fn sites(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.captured.borrow().keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+impl LinearHook for CaptureHook {
+    fn linear(&self, site: &str, x: &Tensor, w: &Tensor, bias: Option<&[f32]>) -> Tensor {
+        let keep = self.filter.as_ref().map(|f| site.contains(f.as_str())).unwrap_or(true);
+        if keep {
+            self.captured.borrow_mut().entry(site.to_string()).or_default().push(x.clone());
+        }
+        FpHook.linear(site, x, w, bias)
+    }
+}
+
+/// A trainable linear layer, weight stored `[in, out]`.
+pub struct Linear {
+    pub w: Tensor,
+    pub b: Option<Vec<f32>>,
+    // Gradients (allocated lazily by backward).
+    pub gw: Tensor,
+    pub gb: Option<Vec<f32>>,
+}
+
+impl Linear {
+    /// Kaiming-ish init: N(0, 1/√in).
+    pub fn new(d_in: usize, d_out: usize, bias: bool, rng: &mut XorShiftRng) -> Self {
+        let scale = 1.0 / (d_in as f32).sqrt();
+        let mut w = Tensor::zeros(&[d_in, d_out]);
+        for v in w.data_mut() {
+            *v = rng.next_gaussian() * scale;
+        }
+        Linear {
+            w,
+            b: if bias { Some(vec![0.0; d_out]) } else { None },
+            gw: Tensor::zeros(&[d_in, d_out]),
+            gb: if bias { Some(vec![0.0; d_out]) } else { None },
+        }
+    }
+
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let mut y = matmul(x, &self.w);
+        if let Some(b) = &self.b {
+            y = y.add_row_broadcast(b);
+        }
+        y
+    }
+
+    /// Hooked forward for quantized evaluation.
+    pub fn forward_hooked(&self, hook: &dyn LinearHook, site: &str, x: &Tensor) -> Tensor {
+        hook.linear(site, x, &self.w, self.b.as_deref())
+    }
+
+    /// Backward: given input `x` and output grad `dy`, accumulate `gw`,
+    /// `gb` and return `dx`.
+    pub fn backward(&mut self, x: &Tensor, dy: &Tensor) -> Tensor {
+        // gw += xᵀ dy
+        let gw = matmul(&x.transpose(), dy);
+        self.gw = self.gw.add(&gw);
+        if let (Some(gb), true) = (&mut self.gb, self.b.is_some()) {
+            for i in 0..dy.rows() {
+                for (g, &v) in gb.iter_mut().zip(dy.row(i)) {
+                    *g += v;
+                }
+            }
+        }
+        // dx = dy wᵀ
+        crate::tensor::matmul_transb(dy, &self.w)
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.gw.data_mut().fill(0.0);
+        if let Some(gb) = &mut self.gb {
+            gb.fill(0.0);
+        }
+    }
+
+    /// Visit (param, grad) pairs for the optimizer.
+    pub fn visit_params(&mut self, f: &mut dyn FnMut(&mut [f32], &[f32])) {
+        // Split borrows: copy grad out (small) to satisfy the borrow checker.
+        let gw = self.gw.data().to_vec();
+        f(self.w.data_mut(), &gw);
+        if let (Some(b), Some(gb)) = (&mut self.b, &self.gb) {
+            let gbc = gb.clone();
+            f(b, &gbc);
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.w.len() + self.b.as_ref().map(|b| b.len()).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_matches_manual() {
+        let mut rng = XorShiftRng::new(1);
+        let l = Linear::new(4, 3, true, &mut rng);
+        let x = Tensor::randn(&[2, 4], 2);
+        let y = l.forward(&x);
+        let want = matmul(&x, &l.w).add_row_broadcast(l.b.as_ref().unwrap());
+        assert_eq!(y, want);
+    }
+
+    #[test]
+    fn backward_gradients_numerically() {
+        // Finite-difference check of dL/dw and dL/dx for L = Σ y².
+        let mut rng = XorShiftRng::new(3);
+        let mut l = Linear::new(3, 2, true, &mut rng);
+        let x = Tensor::randn(&[4, 3], 4);
+        let y = l.forward(&x);
+        let dy = y.scale(2.0); // dL/dy for L = Σ y²
+        let dx = l.backward(&x, &dy);
+
+        let loss = |l: &Linear, x: &Tensor| -> f64 { l.forward(x).sq_norm() };
+        let eps = 1e-3f32;
+
+        // Check a few weight entries.
+        for &(i, j) in &[(0usize, 0usize), (1, 1), (2, 0)] {
+            let mut lp = Linear {
+                w: l.w.clone(),
+                b: l.b.clone(),
+                gw: Tensor::zeros(&[3, 2]),
+                gb: None,
+            };
+            lp.w.set(i, j, lp.w.at(i, j) + eps);
+            let num = (loss(&lp, &x) - loss(&l, &x)) / eps as f64;
+            let ana = l.gw.at(i, j) as f64;
+            assert!((num - ana).abs() < 0.05 * ana.abs().max(1.0), "w[{i}{j}] num {num} ana {ana}");
+        }
+        // Check an input entry.
+        let mut xp = x.clone();
+        xp.set(0, 0, xp.at(0, 0) + eps);
+        let num = (loss(&l, &xp) - loss(&l, &x)) / eps as f64;
+        assert!((num - dx.at(0, 0) as f64).abs() < 0.05 * num.abs().max(1.0));
+    }
+
+    #[test]
+    fn capture_hook_records() {
+        let mut rng = XorShiftRng::new(5);
+        let l = Linear::new(4, 4, false, &mut rng);
+        let hook = CaptureHook::new();
+        let x = Tensor::randn(&[2, 4], 6);
+        let _ = l.forward_hooked(&hook, "layer0.ffn.up_proj", &x);
+        let got = hook.take();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got["layer0.ffn.up_proj"][0], x);
+    }
+
+    #[test]
+    fn capture_hook_filter() {
+        let mut rng = XorShiftRng::new(5);
+        let l = Linear::new(4, 4, false, &mut rng);
+        let hook = CaptureHook::with_filter("attn1");
+        let x = Tensor::randn(&[2, 4], 6);
+        let _ = l.forward_hooked(&hook, "layer0.ffn.up_proj", &x);
+        let _ = l.forward_hooked(&hook, "layer0.attn1", &x);
+        let got = hook.take();
+        assert_eq!(got.len(), 1);
+        assert!(got.contains_key("layer0.attn1"));
+    }
+}

@@ -1,0 +1,128 @@
+//! RMSNorm (as in LLaMA) with hand-written backward.
+
+use crate::tensor::Tensor;
+
+pub struct RmsNorm {
+    pub gamma: Vec<f32>,
+    pub ggamma: Vec<f32>,
+    /// Additive per-channel offset β. Zero by default; the outlier-channel
+    /// injection (Gpt::inject_outlier_channels) uses it to create the
+    /// near-constant "massive activation" channels of real LLMs.
+    pub beta: Vec<f32>,
+    pub gbeta: Vec<f32>,
+    eps: f32,
+}
+
+impl RmsNorm {
+    pub fn new(d: usize) -> Self {
+        RmsNorm {
+            gamma: vec![1.0; d],
+            ggamma: vec![0.0; d],
+            beta: vec![0.0; d],
+            gbeta: vec![0.0; d],
+            eps: 1e-5,
+        }
+    }
+
+    /// Forward, also returning the per-row inverse RMS needed by backward.
+    pub fn forward(&self, x: &Tensor) -> (Tensor, Vec<f32>) {
+        let d = x.cols();
+        let mut out = x.clone();
+        let mut inv_rms = Vec::with_capacity(x.rows());
+        for i in 0..x.rows() {
+            let row = out.row_mut(i);
+            let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+            let inv = 1.0 / (ms + self.eps).sqrt();
+            inv_rms.push(inv);
+            for ((v, g), b) in row.iter_mut().zip(&self.gamma).zip(&self.beta) {
+                *v = *v * inv * g + b;
+            }
+        }
+        (out, inv_rms)
+    }
+
+    /// Backward. `x` is the forward input, `inv_rms` from forward.
+    pub fn backward(&mut self, x: &Tensor, inv_rms: &[f32], dy: &Tensor) -> Tensor {
+        let d = x.cols();
+        let mut dx = Tensor::zeros(&[x.rows(), d]);
+        for i in 0..x.rows() {
+            let xr = x.row(i);
+            let dyr = dy.row(i);
+            let inv = inv_rms[i];
+            // y_j = x_j · inv · γ_j + β_j with inv = (mean(x²)+eps)^{-1/2}
+            // dL/dβ_j = dy_j; dL/dγ_j = dy_j · x_j · inv
+            // dL/dx_j = inv·γ_j·dy_j − x_j·inv³/d · Σ_k dy_k γ_k x_k
+            let mut dot = 0.0f32;
+            for k in 0..d {
+                dot += dyr[k] * self.gamma[k] * xr[k];
+                self.ggamma[k] += dyr[k] * xr[k] * inv;
+                self.gbeta[k] += dyr[k];
+            }
+            let coef = inv * inv * inv * dot / d as f32;
+            let dxr = dx.row_mut(i);
+            for j in 0..d {
+                dxr[j] = inv * self.gamma[j] * dyr[j] - xr[j] * coef;
+            }
+        }
+        dx
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.ggamma.fill(0.0);
+        self.gbeta.fill(0.0);
+    }
+
+    pub fn visit_params(&mut self, f: &mut dyn FnMut(&mut [f32], &[f32])) {
+        let g = self.ggamma.clone();
+        f(&mut self.gamma, &g);
+        let gb = self.gbeta.clone();
+        f(&mut self.beta, &gb);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_rms_output() {
+        let n = RmsNorm::new(8);
+        let x = Tensor::randn(&[4, 8], 1).scale(5.0);
+        let (y, _) = n.forward(&x);
+        for i in 0..4 {
+            let ms: f32 = y.row(i).iter().map(|v| v * v).sum::<f32>() / 8.0;
+            assert!((ms - 1.0).abs() < 1e-3, "row {i} ms {ms}");
+        }
+    }
+
+    #[test]
+    fn backward_numerical() {
+        let mut n = RmsNorm::new(4);
+        // Non-trivial gamma.
+        for (i, g) in n.gamma.iter_mut().enumerate() {
+            *g = 1.0 + 0.1 * i as f32;
+        }
+        let x = Tensor::randn(&[3, 4], 2);
+        let (y, inv) = n.forward(&x);
+        let dy = y.scale(2.0); // L = Σy²
+        let dx = n.backward(&x, &inv, &dy);
+
+        let loss = |n: &RmsNorm, x: &Tensor| -> f64 { n.forward(x).0.sq_norm() };
+        let eps = 1e-3f32;
+        // dx check.
+        for &(i, j) in &[(0usize, 0usize), (1, 2), (2, 3)] {
+            let mut xp = x.clone();
+            xp.set(i, j, xp.at(i, j) + eps);
+            let num = (loss(&n, &xp) - loss(&n, &x)) / eps as f64;
+            let ana = dx.at(i, j) as f64;
+            assert!((num - ana).abs() < 0.05 * ana.abs().max(0.5), "dx[{i},{j}] num {num} ana {ana}");
+        }
+        // dgamma check.
+        let mut n2 = RmsNorm::new(4);
+        n2.gamma = n.gamma.clone();
+        n2.gamma[1] += eps;
+        let num = (loss(&n2, &x) - loss(&n, &x)) / eps as f64;
+        let ana = n.ggamma[1] as f64;
+        assert!((num - ana).abs() < 0.05 * ana.abs().max(0.5), "dγ num {num} ana {ana}");
+    }
+}

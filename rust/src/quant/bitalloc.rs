@@ -1,0 +1,183 @@
+//! Bit-width allocation across tokens (paper §3.3 + Appendix A.2).
+//!
+//! Given per-token energies `e`, the allocation minimizing the Theorem-1
+//! bound under a total budget `B = Σ b_i` is the reverse-waterfilling
+//! solution `b*_i = log₂√e_i + C`. Real hardware supports only a few
+//! integer widths, so the paper ships the 2-level scheme: the leading
+//! `hp_tokens` at `hp_bits`, everything else at `lp_bits`.
+
+/// Declarative per-token bit-width policy.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BitAllocation {
+    /// Every token at the same width.
+    Uniform(u32),
+    /// First `hp_tokens` tokens at `hp_bits`, rest at `lp_bits` (STaMP).
+    TwoLevel { hp_tokens: usize, hp_bits: u32, lp_bits: u32 },
+    /// Fully explicit per-token widths.
+    Explicit(Vec<u32>),
+}
+
+impl BitAllocation {
+    pub fn uniform(bits: u32) -> Self {
+        BitAllocation::Uniform(bits)
+    }
+
+    pub fn two_level(hp_tokens: usize, hp_bits: u32, lp_bits: u32) -> Self {
+        BitAllocation::TwoLevel { hp_tokens, hp_bits, lp_bits }
+    }
+
+    /// Bit width of token `i` in a sequence of length `s`.
+    pub fn bits_for(&self, i: usize, s: usize) -> u32 {
+        match self {
+            BitAllocation::Uniform(b) => *b,
+            BitAllocation::TwoLevel { hp_tokens, hp_bits, lp_bits } => {
+                if i < *hp_tokens {
+                    *hp_bits
+                } else {
+                    *lp_bits
+                }
+            }
+            BitAllocation::Explicit(v) => {
+                assert_eq!(v.len(), s, "explicit allocation length mismatch");
+                v[i]
+            }
+        }
+    }
+
+    /// Materialize the per-token widths for sequence length `s`.
+    pub fn resolve(&self, s: usize) -> Vec<u32> {
+        (0..s).map(|i| self.bits_for(i, s)).collect()
+    }
+
+    /// Average bits per token (excluding scale-parameter overhead).
+    pub fn average_bits(&self, s: usize) -> f64 {
+        match self {
+            BitAllocation::Uniform(b) => *b as f64,
+            BitAllocation::TwoLevel { hp_tokens, hp_bits, lp_bits } => {
+                let hp = (*hp_tokens).min(s) as f64;
+                (hp * *hp_bits as f64 + (s as f64 - hp) * *lp_bits as f64) / s as f64
+            }
+            BitAllocation::Explicit(v) => {
+                v.iter().map(|&b| b as f64).sum::<f64>() / v.len() as f64
+            }
+        }
+    }
+}
+
+/// Continuous-optimal allocation `b*_i = log₂ √e_i + C` for a total budget
+/// of `total_bits` (Appendix A.2, Eq. 18). Returns real-valued widths;
+/// callers floor/clamp for hardware.
+pub fn optimal_bits(energies: &[f32], total_bits: f64) -> Vec<f64> {
+    let s = energies.len();
+    assert!(s > 0);
+    let half_logs: Vec<f64> =
+        energies.iter().map(|&e| 0.5 * (e.max(1e-30) as f64).log2()).collect();
+    let c = (total_bits - half_logs.iter().sum::<f64>()) / s as f64;
+    half_logs.iter().map(|&h| h + c).collect()
+}
+
+/// Integer, hardware-friendly projection of the optimal allocation onto
+/// two levels {lp_bits, hp_bits}: pick `k` = number of high-precision
+/// tokens that (greedily, by energy order) minimizes the Theorem-1 bound
+/// subject to an average-bits budget. Energies must be sorted descending
+/// (which they are after any of the sequence transforms).
+pub fn two_level_bits(
+    energies: &[f32],
+    hp_bits: u32,
+    lp_bits: u32,
+    max_average_bits: f64,
+) -> BitAllocation {
+    let s = energies.len() as f64;
+    // Max k under the average-bit budget.
+    let extra_per_hp = (hp_bits - lp_bits) as f64;
+    let budget_k = ((max_average_bits - lp_bits as f64) * s / extra_per_hp).floor().max(0.0)
+        as usize;
+    let k = budget_k.min(energies.len());
+
+    // Verify monotonicity of benefit: adding hp tokens in energy order only
+    // helps, so the budget-maximal k is also the bound-minimal one.
+    BitAllocation::two_level(k, hp_bits, lp_bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn optimal_sums_to_budget() {
+        let e = vec![16.0, 4.0, 1.0, 0.25];
+        let b = optimal_bits(&e, 20.0);
+        let sum: f64 = b.iter().sum();
+        assert!((sum - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn optimal_follows_log_energy() {
+        // e_i = 4·e_j ⇒ b_i = b_j + 1 (log₂√4 = 1).
+        let e = vec![4.0, 1.0];
+        let b = optimal_bits(&e, 10.0);
+        assert!((b[0] - b[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn optimal_equalizes_error_ratio() {
+        // At the optimum, e_i / 2^{2 b_i} is constant (Eq. 13).
+        let e = vec![100.0, 10.0, 1.0, 0.1];
+        let b = optimal_bits(&e, 24.0);
+        let ratios: Vec<f64> =
+            e.iter().zip(&b).map(|(&ei, &bi)| ei as f64 / 2f64.powf(2.0 * bi)).collect();
+        for r in &ratios[1..] {
+            assert!((r - ratios[0]).abs() / ratios[0] < 1e-9);
+        }
+    }
+
+    #[test]
+    fn uniform_energies_give_uniform_bits() {
+        let e = vec![2.0; 8];
+        let b = optimal_bits(&e, 32.0);
+        for &bi in &b {
+            assert!((bi - 4.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn two_level_respects_budget() {
+        let e: Vec<f32> = (0..1024).map(|i| 1.0 / (1.0 + i as f32)).collect();
+        let alloc = two_level_bits(&e, 8, 4, 4.25);
+        // 4.25 avg with {8,4} ⇒ k = 0.25·1024/4 = 64 tokens.
+        assert_eq!(alloc, BitAllocation::two_level(64, 8, 4));
+        assert!(alloc.average_bits(1024) <= 4.25 + 1e-9);
+    }
+
+    #[test]
+    fn two_level_zero_budget_headroom() {
+        let e = vec![1.0f32; 16];
+        let alloc = two_level_bits(&e, 8, 4, 4.0);
+        assert_eq!(alloc, BitAllocation::two_level(0, 8, 4));
+    }
+
+    #[test]
+    fn bits_for_boundaries() {
+        let a = BitAllocation::two_level(3, 8, 4);
+        assert_eq!(a.bits_for(0, 10), 8);
+        assert_eq!(a.bits_for(2, 10), 8);
+        assert_eq!(a.bits_for(3, 10), 4);
+        assert_eq!(a.bits_for(9, 10), 4);
+    }
+
+    #[test]
+    fn explicit_allocation() {
+        let a = BitAllocation::Explicit(vec![2, 4, 8]);
+        assert_eq!(a.resolve(3), vec![2, 4, 8]);
+        assert!((a.average_bits(3) - 14.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn average_bits_paper_numbers() {
+        // SANA: s=2048, 64 hp tokens → 4.125 (paper §B.1).
+        let a = BitAllocation::two_level(64, 8, 4);
+        assert!((a.average_bits(2048) - 4.125).abs() < 1e-12);
+        // PixArt-Σ: s=4096 → 4.0625.
+        assert!((a.average_bits(4096) - 4.0625).abs() < 1e-12);
+    }
+}

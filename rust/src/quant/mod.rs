@@ -1,0 +1,150 @@
+//! Integer quantization substrate (paper §2.1).
+//!
+//! Implements the quantize/de-quantize pair `Q(X) = Q⁻¹(Q_int(X))` of
+//! Eq. 1 with asymmetric min-max scales, at three granularities
+//! (per-tensor / per-token / per-block), with a *per-token bit width*
+//! `b_i` so the mixed-precision allocation of §3.1/§3.3 plugs in directly.
+
+mod bitalloc;
+mod error;
+mod qdq;
+
+pub use bitalloc::{optimal_bits, two_level_bits, BitAllocation};
+pub use error::{quantization_error, theorem1_bound};
+pub use qdq::{quantize_dequantize_rows, QuantParams};
+
+use crate::tensor::Tensor;
+
+/// Scale/offset sharing granularity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    /// One scale for the whole matrix.
+    PerTensor,
+    /// One scale per token (row) — the paper's default for activations.
+    PerToken,
+    /// One scale per contiguous block of `block` features within a row —
+    /// SVDQuant-style block quantization (Fig. 9 / Table 1 setting).
+    PerBlock { block: usize },
+}
+
+impl Granularity {
+    /// Effective *storage* bits per element contributed by the fp16 scale
+    /// and zero-point parameters, used for the Fig. 9 average-bit-width
+    /// accounting (paper Appendix C: "16 bits for each scale parameter").
+    pub fn param_overhead_bits(&self, d: usize) -> f64 {
+        let per_group = 32.0; // fp16 scale + fp16 offset
+        match self {
+            Granularity::PerTensor => 0.0, // amortized to nothing
+            Granularity::PerToken => per_group / d as f64,
+            Granularity::PerBlock { block } => per_group / *block as f64,
+        }
+    }
+}
+
+/// A complete activation quantization scheme.
+#[derive(Clone, Debug)]
+pub struct QuantScheme {
+    pub granularity: Granularity,
+    /// Bits for each token. Length 1 means "uniform".
+    pub bits: BitAllocation,
+}
+
+impl QuantScheme {
+    /// Uniform b-bit scheme at the given granularity.
+    pub fn uniform(bits: u32, granularity: Granularity) -> Self {
+        QuantScheme { granularity, bits: BitAllocation::uniform(bits) }
+    }
+
+    /// The paper's 2-level STaMP scheme: `hp_tokens` leading tokens at
+    /// `hp_bits`, the rest at `lp_bits`.
+    pub fn two_level(hp_tokens: usize, hp_bits: u32, lp_bits: u32, granularity: Granularity) -> Self {
+        QuantScheme { granularity, bits: BitAllocation::two_level(hp_tokens, hp_bits, lp_bits) }
+    }
+
+    /// Average bits/element over `s` tokens of width `d`, *including* the
+    /// scale-parameter overhead.
+    pub fn average_bits(&self, s: usize, d: usize) -> f64 {
+        self.bits.average_bits(s) + self.granularity.param_overhead_bits(d)
+    }
+
+    /// Quantize-dequantize an `s×d` activation matrix.
+    pub fn apply(&self, x: &Tensor) -> Tensor {
+        quantize_dequantize_rows(x, &self.bits, self.granularity)
+    }
+}
+
+/// A quantizer bound to a fixed sequence length — precomputes the per-token
+/// bit vector once and exposes the hot-path apply.
+pub struct Quantizer {
+    scheme: QuantScheme,
+    bits_per_token: Vec<u32>,
+}
+
+impl Quantizer {
+    pub fn new(scheme: QuantScheme, s: usize) -> Self {
+        let bits_per_token = scheme.bits.resolve(s);
+        Quantizer { scheme, bits_per_token }
+    }
+
+    pub fn scheme(&self) -> &QuantScheme {
+        &self.scheme
+    }
+
+    pub fn bits_per_token(&self) -> &[u32] {
+        &self.bits_per_token
+    }
+
+    pub fn apply(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.rows(), self.bits_per_token.len());
+        self.scheme.apply(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn average_bits_two_level() {
+        // Paper §3.3: 64 tokens at 8b, rest at 4b over 1024 tokens
+        // → 4 + 64·4/1024 = 4.25 raw; PixArt has s=4096 → 4.0625.
+        let sch = QuantScheme::two_level(64, 8, 4, Granularity::PerTensor);
+        assert!((sch.bits.average_bits(4096) - 4.0625).abs() < 1e-9);
+        assert!((sch.bits.average_bits(2048) - 4.125).abs() < 1e-9);
+    }
+
+    #[test]
+    fn param_overhead() {
+        let g = Granularity::PerBlock { block: 64 };
+        assert!((g.param_overhead_bits(4096) - 0.5).abs() < 1e-9);
+        let pt = Granularity::PerToken;
+        assert!((pt.param_overhead_bits(64) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn high_bits_near_lossless() {
+        let x = Tensor::randn(&[32, 64], 1);
+        let sch = QuantScheme::uniform(16, Granularity::PerToken);
+        let xq = sch.apply(&x);
+        assert!(xq.max_abs_diff(&x) < 1e-3);
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let x = Tensor::randn(&[32, 64], 2);
+        let mut last = f64::MAX;
+        for b in [2u32, 4, 6, 8] {
+            let sch = QuantScheme::uniform(b, Granularity::PerToken);
+            let err = sch.apply(&x).sub(&x).sq_norm();
+            assert!(err < last, "bits {b}: err {err} !< {last}");
+            last = err;
+        }
+    }
+
+    #[test]
+    fn quantizer_resolves_bits() {
+        let q = Quantizer::new(QuantScheme::two_level(4, 8, 4, Granularity::PerToken), 16);
+        assert_eq!(&q.bits_per_token()[..5], &[8, 8, 8, 8, 4]);
+        assert_eq!(q.bits_per_token().len(), 16);
+    }
+}

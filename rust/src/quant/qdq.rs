@@ -1,0 +1,202 @@
+//! The quantize/de-quantize hot path.
+//!
+//! Asymmetric min-max quantization (Eq. 1 + the clipping-free scale of
+//! §2.1): for a group `g` with bit width `b`,
+//! `scale = range(g)/(2^b − 1)`, `zero = −min(g)/scale`, and
+//! `QDQ(x) = (clamp(round(x/scale) + zero, 0, 2^b−1) − zero)·scale`.
+//! With min-max scales the clamp never bites (by construction), leaving
+//! pure rounding error — the regime Theorem 1 analyzes.
+
+use super::{BitAllocation, Granularity};
+use crate::tensor::Tensor;
+
+/// Scale/offset for one quantization group.
+#[derive(Clone, Copy, Debug)]
+pub struct QuantParams {
+    pub scale: f32,
+    pub zero: f32,
+    pub qmax: f32,
+}
+
+impl QuantParams {
+    /// Min-max parameters for a slice at bit width `bits`.
+    pub fn min_max(group: &[f32], bits: u32) -> Self {
+        debug_assert!(bits >= 1 && bits <= 24);
+        let mut mn = f32::MAX;
+        let mut mx = f32::MIN;
+        for &v in group {
+            mn = mn.min(v);
+            mx = mx.max(v);
+        }
+        let qmax = ((1u64 << bits) - 1) as f32;
+        let range = (mx - mn).max(1e-12);
+        let scale = range / qmax;
+        let zero = (-mn / scale).round_ties_even();
+        QuantParams { scale, zero, qmax }
+    }
+
+    /// Quantize-dequantize one value.
+    #[inline(always)]
+    pub fn qdq(&self, v: f32) -> f32 {
+        let q = (v / self.scale + self.zero).round_ties_even().clamp(0.0, self.qmax);
+        (q - self.zero) * self.scale
+    }
+
+    /// Quantize-dequantize a slice in place.
+    #[inline]
+    pub fn qdq_slice(&self, group: &mut [f32]) {
+        let inv = 1.0 / self.scale;
+        for v in group.iter_mut() {
+            let q = (*v * inv + self.zero).round_ties_even().clamp(0.0, self.qmax);
+            *v = (q - self.zero) * self.scale;
+        }
+    }
+}
+
+/// Quantize-dequantize an `s×d` matrix row-wise with per-token bit widths.
+pub fn quantize_dequantize_rows(x: &Tensor, bits: &BitAllocation, gran: Granularity) -> Tensor {
+    let (s, d) = (x.rows(), x.cols());
+    let mut out = x.clone();
+    match gran {
+        Granularity::PerTensor => {
+            // One scale — but bit width may still vary per token, so compute
+            // global min/max once and derive per-bit-width params from it.
+            let data = out.data();
+            let mut mn = f32::MAX;
+            let mut mx = f32::MIN;
+            for &v in data {
+                mn = mn.min(v);
+                mx = mx.max(v);
+            }
+            for i in 0..s {
+                let b = bits.bits_for(i, s);
+                let qmax = ((1u64 << b) - 1) as f32;
+                let scale = (mx - mn).max(1e-12) / qmax;
+                let zero = (-mn / scale).round_ties_even();
+                QuantParams { scale, zero, qmax }.qdq_slice(out.row_mut(i));
+            }
+        }
+        Granularity::PerToken => {
+            for i in 0..s {
+                let b = bits.bits_for(i, s);
+                let p = QuantParams::min_max(out.row(i), b);
+                p.qdq_slice(out.row_mut(i));
+            }
+        }
+        Granularity::PerBlock { block } => {
+            assert!(block > 0);
+            for i in 0..s {
+                let b = bits.bits_for(i, s);
+                let row = out.row_mut(i);
+                for blk in row.chunks_mut(block.min(d)) {
+                    let p = QuantParams::min_max(blk, b);
+                    p.qdq_slice(blk);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::BitAllocation;
+
+    #[test]
+    fn params_basic() {
+        // [0, 1] at 2 bits → levels {0, 1/3, 2/3, 1}.
+        let p = QuantParams::min_max(&[0.0, 1.0], 2);
+        assert!((p.scale - 1.0 / 3.0).abs() < 1e-6);
+        assert_eq!(p.zero, 0.0);
+        assert!((p.qdq(0.5) - 1.0 / 3.0).abs() < 1e-6 || (p.qdq(0.5) - 2.0 / 3.0).abs() < 1e-6);
+        assert!((p.qdq(1.0) - 1.0).abs() < 1e-6);
+        assert!((p.qdq(0.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn minmax_endpoints_exact() {
+        // Min-max asymmetric quantization represents min and max exactly
+        // (up to the rounding of the zero point at fine scales).
+        let data = vec![-3.7f32, 0.2, 1.9, 8.4];
+        for bits in [4u32, 8] {
+            let p = QuantParams::min_max(&data, bits);
+            let step = p.scale;
+            assert!((p.qdq(8.4) - 8.4).abs() <= step, "max at {bits}b");
+            assert!((p.qdq(-3.7) + 3.7).abs() <= step, "min at {bits}b");
+        }
+    }
+
+    #[test]
+    fn rounding_error_bounded_by_half_scale() {
+        let x = Tensor::randn(&[16, 32], 3);
+        for i in 0..16 {
+            let p = QuantParams::min_max(x.row(i), 4);
+            for &v in x.row(i) {
+                assert!((p.qdq(v) - v).abs() <= 0.5 * p.scale + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn no_clipping_with_minmax() {
+        // Quantized values must stay within [min, max] of the group, up to
+        // the half-step shift introduced by rounding the zero point.
+        let x = Tensor::randn(&[8, 64], 7);
+        let out = quantize_dequantize_rows(&x, &BitAllocation::uniform(3), Granularity::PerToken);
+        for i in 0..8 {
+            let r = x.row(i);
+            let mn = r.iter().cloned().fold(f32::MAX, f32::min);
+            let mx = r.iter().cloned().fold(f32::MIN, f32::max);
+            let step = QuantParams::min_max(r, 3).scale;
+            for &v in out.row(i) {
+                assert!(v >= mn - 0.51 * step && v <= mx + 0.51 * step);
+            }
+        }
+    }
+
+    #[test]
+    fn per_block_better_than_per_token_with_outlier() {
+        // A single outlier ruins the whole row's scale per-token, but only
+        // one block's scale per-block.
+        let mut x = Tensor::randn(&[4, 128], 9);
+        for i in 0..4 {
+            x.set(i, 0, 80.0);
+        }
+        let bits = BitAllocation::uniform(4);
+        let pt = quantize_dequantize_rows(&x, &bits, Granularity::PerToken);
+        let pb = quantize_dequantize_rows(&x, &bits, Granularity::PerBlock { block: 16 });
+        assert!(pb.sub(&x).sq_norm() < pt.sub(&x).sq_norm());
+    }
+
+    #[test]
+    fn block_equal_to_token_when_block_is_row() {
+        let x = Tensor::randn(&[6, 32], 11);
+        let bits = BitAllocation::uniform(5);
+        let pt = quantize_dequantize_rows(&x, &bits, Granularity::PerToken);
+        let pb = quantize_dequantize_rows(&x, &bits, Granularity::PerBlock { block: 32 });
+        assert_eq!(pt, pb);
+    }
+
+    #[test]
+    fn mixed_bits_rows_differ() {
+        let x = Tensor::randn(&[8, 64], 13);
+        let two = BitAllocation::two_level(4, 8, 2);
+        let out = quantize_dequantize_rows(&x, &two, Granularity::PerToken);
+        // hp rows much closer than lp rows.
+        let hp_err: f64 = (0..4)
+            .map(|i| out.row(i).iter().zip(x.row(i)).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>())
+            .sum();
+        let lp_err: f64 = (4..8)
+            .map(|i| out.row(i).iter().zip(x.row(i)).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>())
+            .sum();
+        assert!(hp_err * 100.0 < lp_err, "hp {hp_err} lp {lp_err}");
+    }
+
+    #[test]
+    fn constant_row_is_exact() {
+        let x = Tensor::full(&[2, 16], 3.25);
+        let out = quantize_dequantize_rows(&x, &BitAllocation::uniform(2), Granularity::PerToken);
+        assert!(out.max_abs_diff(&x) < 1e-5);
+    }
+}

@@ -1,0 +1,148 @@
+//! Table/figure output formatting: aligned text tables for the terminal
+//! plus CSV emission for downstream plotting. Every eval binary goes
+//! through this so the paper-reproduction artifacts have one format.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// A simple column-aligned table builder.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Format a float with sensible precision for table cells.
+    pub fn num(v: f64) -> String {
+        if v.is_infinite() {
+            return "inf".to_string();
+        }
+        if v.abs() >= 1000.0 {
+            format!("{v:.0}")
+        } else if v.abs() >= 100.0 {
+            format!("{v:.1}")
+        } else {
+            format!("{v:.2}")
+        }
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "## {}", self.title);
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(out, "{:<w$}", c, w = widths[i] + 2);
+                let _ = i;
+            }
+            let _ = writeln!(out);
+        };
+        line(&mut out, &self.headers);
+        let total: usize = widths.iter().map(|w| w + 2).sum::<usize>();
+        let _ = writeln!(out, "{}", "-".repeat(total.min(120)));
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        let _ = ncol;
+        out
+    }
+
+    /// Render as CSV.
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| -> String {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+
+    /// Write CSV next to printing; returns the rendered text.
+    pub fn emit(&self, csv_dir: Option<&Path>) -> std::io::Result<String> {
+        if let Some(dir) = csv_dir {
+            std::fs::create_dir_all(dir)?;
+            let slug: String = self
+                .title
+                .chars()
+                .map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+                .collect();
+            let mut f = std::fs::File::create(dir.join(format!("{slug}.csv")))?;
+            f.write_all(self.to_csv().as_bytes())?;
+        }
+        Ok(self.render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Demo", &["name", "value"]);
+        t.row(vec!["short".into(), "1.00".into()]);
+        t.row(vec!["much-longer-name".into(), "2.00".into()]);
+        let s = t.render();
+        assert!(s.contains("## Demo"));
+        assert!(s.contains("much-longer-name"));
+        // Both value cells start at the same column.
+        let lines: Vec<&str> = s.lines().collect();
+        let col = lines[1].find("value").unwrap();
+        assert_eq!(&lines[3][col..col + 4], "1.00");
+        assert_eq!(&lines[4][col..col + 4], "2.00");
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["has,comma".into(), "has\"quote".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"has,comma\""));
+        assert!(csv.contains("\"has\"\"quote\""));
+    }
+
+    #[test]
+    fn num_formatting() {
+        assert_eq!(Table::num(f64::INFINITY), "inf");
+        assert_eq!(Table::num(6.139), "6.14");
+        assert_eq!(Table::num(668.2), "668.2");
+        assert_eq!(Table::num(99723.0), "99723");
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

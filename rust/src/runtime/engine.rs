@@ -1,0 +1,115 @@
+//! PJRT engine: client lifecycle + executable loading/execution.
+
+use crate::tensor::Tensor;
+use std::path::Path;
+
+/// Errors surfaced from the PJRT layer.
+#[derive(Debug)]
+pub enum ExecError {
+    Client(String),
+    Load(String),
+    Run(String),
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::Client(m) => write!(f, "PJRT client error: {m}"),
+            ExecError::Load(m) => write!(f, "artifact load error: {m}"),
+            ExecError::Run(m) => write!(f, "execution error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}
+
+/// A compiled executable, tied to the engine's client.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub source: String,
+}
+
+/// The PJRT engine: one client, many executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// CPU PJRT client (the only backend in this environment; a TPU/GPU
+    /// plugin would slot in here unchanged).
+    pub fn cpu() -> Result<Engine, ExecError> {
+        let client = xla::PjRtClient::cpu().map_err(|e| ExecError::Client(e.to_string()))?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load(&self, path: &Path) -> Result<Executable, ExecError> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| ExecError::Load("non-utf8 path".into()))?,
+        )
+        .map_err(|e| ExecError::Load(format!("{}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| ExecError::Load(format!("compiling {}: {e}", path.display())))?;
+        Ok(Executable { exe, source: path.display().to_string() })
+    }
+
+    /// Execute with f32 tensor inputs; returns flat f32 outputs.
+    ///
+    /// Artifacts are lowered with `return_tuple=True`, so the single
+    /// result literal is a tuple that we flatten.
+    pub fn run(&self, exe: &Executable, inputs: &[Tensor]) -> Result<Vec<Tensor>, ExecError> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let flat = xla::Literal::vec1(t.data());
+                let shape: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+                flat.reshape(&shape).map_err(|e| ExecError::Run(e.to_string()))
+            })
+            .collect::<Result<_, _>>()?;
+        let result = self
+            .exe_run(exe, &literals)?
+            .to_tuple()
+            .map_err(|e| ExecError::Run(format!("untupling result: {e}")))?;
+        result
+            .into_iter()
+            .map(|lit| {
+                let shape = lit
+                    .array_shape()
+                    .map_err(|e| ExecError::Run(e.to_string()))?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                let data = lit.to_vec::<f32>().map_err(|e| ExecError::Run(e.to_string()))?;
+                Ok(Tensor::from_vec(&dims, data))
+            })
+            .collect()
+    }
+
+    fn exe_run(&self, exe: &Executable, literals: &[xla::Literal]) -> Result<xla::Literal, ExecError> {
+        let bufs = exe
+            .exe
+            .execute::<xla::Literal>(literals)
+            .map_err(|e| ExecError::Run(format!("{}: {e}", exe.source)))?;
+        bufs[0][0].to_literal_sync().map_err(|e| ExecError::Run(e.to_string()))
+    }
+
+    /// Convenience for smoke tests: run with zero-filled inputs of the
+    /// given shapes, returning flat output vectors.
+    pub fn run_f32(
+        &self,
+        exe: &Executable,
+        input_shapes: &[Vec<usize>],
+    ) -> Result<Vec<Vec<f32>>, ExecError> {
+        let inputs: Vec<Tensor> = input_shapes.iter().map(|s| Tensor::zeros(s)).collect();
+        Ok(self.run(exe, &inputs)?.into_iter().map(|t| t.into_vec()).collect())
+    }
+}

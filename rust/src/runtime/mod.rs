@@ -1,0 +1,44 @@
+//! PJRT runtime: loads the HLO-text artifacts that `python/compile/aot.py`
+//! lowers from the JAX/Pallas model (L2/L1) and executes them from Rust —
+//! Python never runs on the request path.
+//!
+//! Interchange is **HLO text** (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+
+mod engine;
+mod registry;
+
+pub use engine::{Engine, ExecError};
+pub use registry::{ArtifactManifest, ArtifactRegistry};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    /// Full AOT round-trip against real artifacts, exercised only when
+    /// `make artifacts` has produced them (integration environments).
+    #[test]
+    fn loads_and_runs_artifacts_when_present() {
+        let dir = std::env::var("STAMP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        let manifest = Path::new(&dir).join("manifest.toml");
+        if !manifest.exists() {
+            eprintln!("skipping: no artifacts at {dir} (run `make artifacts`)");
+            return;
+        }
+        let reg = ArtifactRegistry::load(&dir).expect("manifest parses");
+        assert!(!reg.entries().is_empty());
+        let engine = Engine::cpu().expect("PJRT CPU client");
+        for entry in reg.entries() {
+            let exe = engine.load(&reg.path_for(entry)).expect("artifact compiles");
+            let outputs = engine
+                .run_f32(&exe, &entry.input_shapes())
+                .expect("artifact executes on zero inputs");
+            assert!(!outputs.is_empty(), "{}: no outputs", entry.name);
+            for o in &outputs {
+                assert!(o.iter().all(|v| v.is_finite()), "{}: non-finite output", entry.name);
+            }
+        }
+    }
+}

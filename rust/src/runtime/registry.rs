@@ -1,0 +1,115 @@
+//! Artifact registry: discovers AOT artifacts from `artifacts/manifest.toml`
+//! (written by `python/compile/aot.py`) and maps model-variant names to
+//! HLO files + input signatures.
+//!
+//! Manifest format (one section per artifact):
+//! ```toml
+//! [artifact.stamp_linear]
+//! file = "stamp_linear.hlo.txt"
+//! inputs = "256x128;128x64"   # `;`-separated, `x`-separated dims
+//! outputs = "256x64"
+//! ```
+
+use crate::config::Toml;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub name: String,
+    pub file: String,
+    pub inputs: String,
+    pub outputs: String,
+}
+
+impl ArtifactManifest {
+    /// Parse the `inputs` signature into shapes.
+    pub fn input_shapes(&self) -> Vec<Vec<usize>> {
+        parse_shapes(&self.inputs)
+    }
+
+    pub fn output_shapes(&self) -> Vec<Vec<usize>> {
+        parse_shapes(&self.outputs)
+    }
+}
+
+fn parse_shapes(sig: &str) -> Vec<Vec<usize>> {
+    sig.split(';')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| s.trim().split('x').map(|d| d.parse::<usize>().expect("bad dim")).collect())
+        .collect()
+}
+
+/// The registry: all artifacts in one directory.
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    entries: Vec<ArtifactManifest>,
+}
+
+impl ArtifactRegistry {
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.toml");
+        let text = std::fs::read_to_string(&manifest_path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", manifest_path.display()))?;
+        let doc = Toml::parse(&text).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        let mut entries = Vec::new();
+        for (section, kv) in &doc.sections {
+            if let Some(name) = section.strip_prefix("artifact.") {
+                entries.push(ArtifactManifest {
+                    name: name.to_string(),
+                    file: kv
+                        .get("file")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| anyhow::anyhow!("{section}: missing `file`"))?
+                        .to_string(),
+                    inputs: kv.get("inputs").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+                    outputs: kv.get("outputs").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+                });
+            }
+        }
+        entries.sort_by(|a, b| a.name.cmp(&b.name));
+        Ok(ArtifactRegistry { dir, entries })
+    }
+
+    pub fn entries(&self) -> &[ArtifactManifest] {
+        &self.entries
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactManifest> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn path_for(&self, entry: &ArtifactManifest) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join(format!("stamp-reg-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.toml"),
+            "[artifact.alpha]\nfile = \"a.hlo.txt\"\ninputs = \"2x3;3x4\"\noutputs = \"2x4\"\n\
+             [artifact.beta]\nfile = \"b.hlo.txt\"\ninputs = \"8\"\n",
+        )
+        .unwrap();
+        let reg = ArtifactRegistry::load(&dir).unwrap();
+        assert_eq!(reg.entries().len(), 2);
+        let a = reg.get("alpha").unwrap();
+        assert_eq!(a.input_shapes(), vec![vec![2, 3], vec![3, 4]]);
+        assert_eq!(a.output_shapes(), vec![vec![2, 4]]);
+        assert!(reg.path_for(a).ends_with("a.hlo.txt"));
+        assert!(reg.get("gamma").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        assert!(ArtifactRegistry::load("/nonexistent-dir-xyz").is_err());
+    }
+}

@@ -1,0 +1,408 @@
+//! The STaMP pipeline: sequence transform + mixed-precision quantization,
+//! packaged as (a) a standalone activation quantizer and (b) a quantized
+//! linear-layer operator implementing the pseudocode of Figure 2a:
+//!
+//! ```text
+//! Y = L⁻¹( Q(L X R) · (R⁻¹ W) ) + 1βᵀ
+//! ```
+//!
+//! The inverse sequence transform commutes past the (quantized) matmul
+//! (Eq. 7), and the feature transform's inverse is fused into the weight,
+//! so at runtime the only extra work is `L`, `Q`, and `L⁻¹` — both `L`s
+//! O(sd) for the Haar DWT.
+
+use crate::quant::{BitAllocation, Granularity, QuantScheme, Quantizer};
+use crate::tensor::Tensor;
+use crate::transforms::{
+    DctTransform, FeatureTransform, HaarDwt, HaarDwt2d, IdentitySeq, KltTransform,
+    SequenceTransform, WhtTransform,
+};
+
+/// Which sequence transform to instantiate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeqTransformKind {
+    Identity,
+    /// 1-D Haar DWT with `levels` analysis steps (the paper's default: 3).
+    HaarDwt,
+    /// 2-D Haar DWT over an `h×w` token grid (LVM latents).
+    HaarDwt2d { h: usize, w: usize },
+    Dct,
+    Wht,
+}
+
+impl SeqTransformKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SeqTransformKind::Identity => "identity",
+            SeqTransformKind::HaarDwt => "dwt",
+            SeqTransformKind::HaarDwt2d { .. } => "dwt2d",
+            SeqTransformKind::Dct => "dct",
+            SeqTransformKind::Wht => "wht",
+        }
+    }
+}
+
+/// Configuration for a STaMP activation quantizer.
+#[derive(Clone, Debug)]
+pub struct StampConfig {
+    pub transform: SeqTransformKind,
+    /// DWT levels (ignored by other transforms). Paper uses 3.
+    pub levels: usize,
+    /// Number of leading (high-energy) coefficients kept at `hp_bits`.
+    pub hp_tokens: usize,
+    pub hp_bits: u32,
+    pub lp_bits: u32,
+    pub granularity: Granularity,
+    /// LLM attention-sink handling (paper §B.2): keep token 0 out of the
+    /// transform so its massive outliers stay representable at 8 bits.
+    pub skip_first_token: bool,
+}
+
+impl Default for StampConfig {
+    fn default() -> Self {
+        StampConfig {
+            transform: SeqTransformKind::HaarDwt,
+            levels: 3,
+            hp_tokens: 64,
+            hp_bits: 8,
+            lp_bits: 4,
+            granularity: Granularity::PerToken,
+            skip_first_token: false,
+        }
+    }
+}
+
+impl StampConfig {
+    /// Construct the sequence transform for sequence length `s` (after any
+    /// first-token exclusion).
+    fn build_transform(&self, s: usize) -> Box<dyn SequenceTransform> {
+        match self.transform {
+            SeqTransformKind::Identity => Box::new(IdentitySeq::new(s)),
+            SeqTransformKind::HaarDwt => {
+                let max = HaarDwt::max_levels(s);
+                Box::new(HaarDwt::new(s, self.levels.min(max).max(1)))
+            }
+            SeqTransformKind::HaarDwt2d { h, w } => {
+                assert_eq!(h * w, s, "2-D grid {h}x{w} != sequence length {s}");
+                let max = HaarDwt::max_levels(h.min(w));
+                Box::new(HaarDwt2d::new(h, w, self.levels.min(max).max(1)))
+            }
+            SeqTransformKind::Dct => Box::new(DctTransform::new(s)),
+            SeqTransformKind::Wht => Box::new(WhtTransform::new(s)),
+        }
+    }
+}
+
+/// A STaMP activation quantizer bound to a fixed sequence length.
+///
+/// Sequence lengths that don't fit the transform (odd lengths after the
+/// attention-sink exclusion, non-power-of-two for WHT) are zero-padded up
+/// to the next valid length; Haar mixes a trailing sample with a zero row
+/// into an `(x/√2, x/√2)` pair, so padding preserves energy and perfect
+/// reconstruction (the paper picks Haar for exactly this "minimal padding"
+/// property, §3.2 fn. 2).
+pub struct Stamp {
+    cfg: StampConfig,
+    transform: Box<dyn SequenceTransform>,
+    quantizer: Quantizer,
+    /// Full sequence length including a skipped first token.
+    s_total: usize,
+    /// Effective (pre-padding) transformed length.
+    s_eff: usize,
+    /// Zero rows appended before the transform.
+    pad: usize,
+}
+
+impl Stamp {
+    pub fn new(cfg: StampConfig, s: usize) -> Self {
+        let s_eff = if cfg.skip_first_token { s - 1 } else { s };
+        // Padding requirements per transform.
+        let s_pad = match cfg.transform {
+            SeqTransformKind::HaarDwt => {
+                let levels = cfg.levels.min(HaarDwt::max_levels(s_eff.next_power_of_two())).max(1);
+                let m = 1usize << levels;
+                s_eff.div_ceil(m) * m
+            }
+            SeqTransformKind::Wht => s_eff.next_power_of_two(),
+            _ => s_eff,
+        };
+        let transform = cfg.build_transform(s_pad);
+        let scheme = QuantScheme {
+            granularity: cfg.granularity,
+            bits: BitAllocation::two_level(cfg.hp_tokens.min(s_pad), cfg.hp_bits, cfg.lp_bits),
+        };
+        let quantizer = Quantizer::new(scheme, s_pad);
+        Stamp { cfg, transform, quantizer, s_total: s, s_eff, pad: s_pad - s_eff }
+    }
+
+    /// Append the zero padding rows.
+    fn pad_rows(&self, x: &Tensor) -> Tensor {
+        if self.pad == 0 {
+            x.clone()
+        } else {
+            x.vcat(&Tensor::zeros(&[self.pad, x.cols()]))
+        }
+    }
+
+    /// Build a KLT-based STaMP from calibration samples (optimality
+    /// reference; not a `SeqTransformKind` because it needs data).
+    pub fn with_klt(cfg: StampConfig, samples: &[Tensor]) -> Self {
+        assert!(!cfg.skip_first_token, "KLT path does not implement sink exclusion");
+        let s = samples[0].rows();
+        let transform: Box<dyn SequenceTransform> = Box::new(KltTransform::calibrate(samples));
+        let scheme = QuantScheme {
+            granularity: cfg.granularity,
+            bits: BitAllocation::two_level(cfg.hp_tokens.min(s), cfg.hp_bits, cfg.lp_bits),
+        };
+        let quantizer = Quantizer::new(scheme, s);
+        Stamp { cfg, transform, quantizer, s_total: s, s_eff: s, pad: 0 }
+    }
+
+    pub fn config(&self) -> &StampConfig {
+        &self.cfg
+    }
+
+    pub fn transform(&self) -> &dyn SequenceTransform {
+        self.transform.as_ref()
+    }
+
+    /// Average activation bits/element (incl. scale overhead) — the number
+    /// reported in the tables (4.0625 / 4.125 in the paper). Padding rows
+    /// are excluded: a real kernel never materializes them.
+    pub fn average_bits(&self, d: usize) -> f64 {
+        let mut avg = self.quantizer.scheme().average_bits(self.s_eff, d);
+        if self.cfg.skip_first_token {
+            // First token is always hp_bits.
+            avg = (avg * self.s_eff as f64 + self.cfg.hp_bits as f64) / self.s_total as f64;
+        }
+        avg
+    }
+
+    /// Quantize-dequantize activations: `L⁻¹ Q(L X)`.
+    pub fn quantize_dequantize(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.rows(), self.s_total);
+        if self.cfg.skip_first_token {
+            let first = x.slice_rows(0, 1);
+            let rest = x.slice_rows(1, self.s_total);
+            // First token: plain hp-bit per-token quantization.
+            let qfirst = QuantScheme::uniform(self.cfg.hp_bits, self.cfg.granularity).apply(&first);
+            let lx = self.transform.forward(&self.pad_rows(&rest));
+            let q = self.quantizer.apply(&lx);
+            qfirst.vcat(&self.transform.inverse(&q).slice_rows(0, self.s_eff))
+        } else {
+            let lx = self.transform.forward(&self.pad_rows(x));
+            let q = self.quantizer.apply(&lx);
+            self.transform.inverse(&q).slice_rows(0, self.s_eff)
+        }
+    }
+
+    /// Transformed-domain QDQ without the inverse — what a fused
+    /// STaMP-linear kernel consumes (the inverse is applied after the
+    /// matmul via [`Stamp::inverse_trim`], see [`StampLinear`]).
+    pub fn quantize_transformed(&self, x: &Tensor) -> Tensor {
+        assert!(!self.cfg.skip_first_token, "fused path handles sink in StampLinear");
+        let lx = self.transform.forward(&self.pad_rows(x));
+        self.quantizer.apply(&lx)
+    }
+
+    /// Apply `L⁻¹` and drop padding rows (the post-matmul step of Eq. 7).
+    pub fn inverse_trim(&self, y: &Tensor) -> Tensor {
+        self.transform.inverse(y).slice_rows(0, self.s_eff)
+    }
+
+    /// FLOP overhead of the two transform applications around one linear
+    /// layer (Table 3 accounting).
+    pub fn transform_flops(&self, d: usize) -> u64 {
+        2 * self.transform.flops(d)
+    }
+}
+
+/// A STaMP-quantized linear layer `X ↦ X W + β` (Figure 2a).
+///
+/// Owns the (optionally feature-transform-fused) weight and executes
+/// `L⁻¹(Q(L X R) W_fused) + 1βᵀ`, postponing the sequence inverse until
+/// after the matmul (Eq. 7).
+pub struct StampLinear {
+    stamp: Stamp,
+    /// Weight stored `[in, out]`, with `R⁻¹` already fused.
+    weight: Tensor,
+    bias: Option<Vec<f32>>,
+    feature: Box<dyn FeatureTransform>,
+}
+
+impl StampLinear {
+    pub fn new(
+        stamp: Stamp,
+        weight: Tensor,
+        bias: Option<Vec<f32>>,
+        feature: Box<dyn FeatureTransform>,
+    ) -> Self {
+        assert_eq!(weight.rows(), feature.dim(), "weight in-dim vs feature transform");
+        let fused = feature.fuse_into_weight(&weight);
+        StampLinear { stamp, weight: fused, bias, feature }
+    }
+
+    /// Plain un-quantized reference forward (for SQNR baselines).
+    pub fn forward_fp(&self, x: &Tensor, original_weight: &Tensor) -> Tensor {
+        let mut y = x.matmul(original_weight);
+        if let Some(b) = &self.bias {
+            y = y.add_row_broadcast(b);
+        }
+        y
+    }
+
+    /// Quantized forward implementing the Figure-2a pseudocode.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        // X R (feature transform on the activation side).
+        let xr = self.feature.apply(x);
+        // L X R, quantize in the transformed domain.
+        let q = self.stamp.quantize_transformed(&xr);
+        // Q(LXR) · (R⁻¹W)
+        let y = q.matmul(&self.weight);
+        // L⁻¹ (…), dropping transform padding rows.
+        let mut out = self.stamp.inverse_trim(&y);
+        // + 1βᵀ (bias is sequence-uniform so it commutes with L⁻¹, Eq. 7).
+        if let Some(b) = &self.bias {
+            out = out.add_row_broadcast(b);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{ar1_covariance, cholesky};
+    use crate::stats::sqnr;
+    use crate::transforms::IdentityFeature;
+
+    fn correlated(s: usize, d: usize, rho: f32, seed: u64) -> Tensor {
+        let cov = ar1_covariance(s, rho, 1.0);
+        cholesky(&cov).matmul(&Tensor::randn(&[s, d], seed))
+    }
+
+    #[test]
+    fn stamp_improves_sqnr_on_correlated_activations() {
+        let x = correlated(256, 64, 0.97, 31);
+        let base = Stamp::new(
+            StampConfig {
+                transform: SeqTransformKind::Identity,
+                hp_tokens: 0,
+                ..Default::default()
+            },
+            256,
+        );
+        let stamp = Stamp::new(StampConfig { hp_tokens: 32, ..Default::default() }, 256);
+        let s_base = sqnr(&x, &base.quantize_dequantize(&x));
+        let s_stamp = sqnr(&x, &stamp.quantize_dequantize(&x));
+        assert!(
+            s_stamp > s_base + 3.0,
+            "stamp {s_stamp:.2} dB vs base {s_base:.2} dB"
+        );
+    }
+
+    #[test]
+    fn all_transforms_functional() {
+        let x = correlated(64, 32, 0.9, 32);
+        for kind in [
+            SeqTransformKind::Identity,
+            SeqTransformKind::HaarDwt,
+            SeqTransformKind::Dct,
+            SeqTransformKind::Wht,
+            SeqTransformKind::HaarDwt2d { h: 8, w: 8 },
+        ] {
+            let st = Stamp::new(
+                StampConfig { transform: kind, hp_tokens: 8, ..Default::default() },
+                64,
+            );
+            let q = st.quantize_dequantize(&x);
+            assert!(q.all_finite(), "{:?}", kind);
+            assert!(sqnr(&x, &q) > 10.0, "{:?}: {}", kind, sqnr(&x, &q));
+        }
+    }
+
+    #[test]
+    fn average_bits_matches_paper() {
+        let st = Stamp::new(
+            StampConfig { granularity: Granularity::PerTensor, ..Default::default() },
+            4096,
+        );
+        assert!((st.average_bits(1152) - 4.0625).abs() < 1e-9);
+    }
+
+    #[test]
+    fn skip_first_token_preserves_sink() {
+        let mut x = correlated(129, 32, 0.9, 33);
+        // Massive outlier in token 0 (attention sink).
+        for j in 0..32 {
+            x.set(0, j, 500.0 * if j % 2 == 0 { 1.0 } else { -1.0 });
+        }
+        let st = Stamp::new(
+            StampConfig { skip_first_token: true, hp_tokens: 16, ..Default::default() },
+            129,
+        );
+        let q = st.quantize_dequantize(&x);
+        // First token must survive at 8-bit fidelity.
+        let first_sqnr = crate::stats::sqnr_slices(x.row(0), q.row(0));
+        assert!(first_sqnr > 35.0, "sink token SQNR {first_sqnr}");
+        // And the rest must round-trip sanely.
+        assert!(sqnr(&x, &q) > 20.0);
+    }
+
+    #[test]
+    fn klt_is_at_least_as_good_as_dwt() {
+        let s = 64;
+        let samples: Vec<Tensor> = (0..16).map(|i| correlated(s, 32, 0.95, 100 + i)).collect();
+        let x = correlated(s, 32, 0.95, 999);
+        let cfg = StampConfig { hp_tokens: 8, ..Default::default() };
+        let klt = Stamp::with_klt(cfg.clone(), &samples);
+        let dwt = Stamp::new(cfg, s);
+        let s_klt = sqnr(&x, &klt.quantize_dequantize(&x));
+        let s_dwt = sqnr(&x, &dwt.quantize_dequantize(&x));
+        // KLT is optimal in expectation; allow 1 dB sampling slack.
+        assert!(s_klt > s_dwt - 1.0, "klt {s_klt} vs dwt {s_dwt}");
+    }
+
+    #[test]
+    fn stamp_linear_function_preservation_at_high_bits() {
+        // At 16 bits the quantized layer must match the fp layer closely,
+        // proving the L/R plumbing is function-preserving.
+        let (s, din, dout) = (64, 32, 16);
+        let x = correlated(s, din, 0.9, 41);
+        let w = Tensor::randn(&[din, dout], 42);
+        let bias: Vec<f32> = (0..dout).map(|i| i as f32 * 0.1).collect();
+        let stamp = Stamp::new(
+            StampConfig { hp_bits: 16, lp_bits: 16, hp_tokens: 0, ..Default::default() },
+            s,
+        );
+        let layer = StampLinear::new(
+            stamp,
+            w.clone(),
+            Some(bias.clone()),
+            Box::new(crate::transforms::HadamardFeature::new(din, 7)),
+        );
+        let y_fp = x.matmul(&w).add_row_broadcast(&bias);
+        let y_q = layer.forward(&x);
+        let rel = y_q.max_abs_diff(&y_fp) / y_fp.abs_max();
+        assert!(rel < 1e-2, "rel err {rel}");
+    }
+
+    #[test]
+    fn stamp_linear_quantized_better_with_dwt() {
+        let (s, din, dout) = (128, 64, 32);
+        let x = correlated(s, din, 0.97, 51);
+        let w = Tensor::randn(&[din, dout], 52);
+        let y_fp = x.matmul(&w);
+
+        let mk = |kind: SeqTransformKind, hp: usize| {
+            let stamp = Stamp::new(
+                StampConfig { transform: kind, hp_tokens: hp, ..Default::default() },
+                s,
+            );
+            StampLinear::new(stamp, w.clone(), None, Box::new(IdentityFeature::new(din)))
+        };
+        let s_id = sqnr(&y_fp, &mk(SeqTransformKind::Identity, 0).forward(&x));
+        let s_dwt = sqnr(&y_fp, &mk(SeqTransformKind::HaarDwt, 16).forward(&x));
+        assert!(s_dwt > s_id + 2.0, "dwt {s_dwt} vs id {s_id}");
+    }
+}

@@ -1,0 +1,186 @@
+//! Activation statistics: autocorrelation estimation, energy spectra,
+//! SQNR, and range/outlier summaries. These drive the KLT calibration, the
+//! Figure-3 reproductions, and every fidelity number in the tables.
+
+use crate::tensor::{matmul, Tensor};
+
+/// Signal-to-quantization-noise ratio in dB (paper §5.1):
+/// `10·log₁₀(‖orig‖² / ‖orig − quant‖²)`. Returns `f64::INFINITY` for a
+/// perfect reconstruction.
+pub fn sqnr(orig: &Tensor, quant: &Tensor) -> f64 {
+    let sig = orig.sq_norm();
+    let noise = orig.sub(quant).sq_norm();
+    if noise == 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * (sig / noise).log10()
+}
+
+/// SQNR between two flat slices.
+pub fn sqnr_slices(orig: &[f32], quant: &[f32]) -> f64 {
+    assert_eq!(orig.len(), quant.len());
+    let sig: f64 = orig.iter().map(|&v| (v as f64).powi(2)).sum();
+    let noise: f64 =
+        orig.iter().zip(quant).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum();
+    if noise == 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * (sig / noise).log10()
+}
+
+/// Empirical sequence autocorrelation `S = E[XXᵀ]`, averaged over samples
+/// and normalized by total feature count (matches [`crate::transforms::KltTransform::calibrate`]).
+pub fn autocorrelation(samples: &[Tensor]) -> Tensor {
+    assert!(!samples.is_empty());
+    let s = samples[0].rows();
+    let mut cov = Tensor::zeros(&[s, s]);
+    let mut count = 0usize;
+    for x in samples {
+        assert_eq!(x.rows(), s);
+        cov = cov.add(&matmul(x, &x.transpose()));
+        count += x.cols();
+    }
+    cov.scale(1.0 / count as f32)
+}
+
+/// Per-token energies `e_i = ‖x_i‖²` of one activation matrix.
+pub fn token_energies(x: &Tensor) -> Vec<f64> {
+    (0..x.rows())
+        .map(|i| x.row(i).iter().map(|&v| (v as f64).powi(2)).sum())
+        .collect()
+}
+
+/// Fraction of total energy held by the first `k` tokens.
+pub fn prefix_energy_share(x: &Tensor, k: usize) -> f64 {
+    let e = token_energies(x);
+    let total: f64 = e.iter().sum();
+    if total == 0.0 {
+        return 0.0;
+    }
+    e[..k.min(e.len())].iter().sum::<f64>() / total
+}
+
+/// Per-token ranges `max_j x_ij − min_j x_ij` (the quantity the min-max
+/// scale is built from, Eq. 3).
+pub fn token_ranges(x: &Tensor) -> Vec<f32> {
+    (0..x.rows())
+        .map(|i| {
+            let r = x.row(i);
+            let mx = r.iter().cloned().fold(f32::MIN, f32::max);
+            let mn = r.iter().cloned().fold(f32::MAX, f32::min);
+            mx - mn
+        })
+        .collect()
+}
+
+/// Per-channel absolute maxima (SmoothQuant calibration input).
+pub fn channel_absmax(x: &Tensor) -> Vec<f32> {
+    let d = x.cols();
+    let mut m = vec![0.0f32; d];
+    for i in 0..x.rows() {
+        for (j, &v) in x.row(i).iter().enumerate() {
+            m[j] = m[j].max(v.abs());
+        }
+    }
+    m
+}
+
+/// Kurtosis of all entries — an outlier-heaviness summary used by the
+/// synthetic-activation calibration tests (massive activations ⇒ κ ≫ 3).
+pub fn kurtosis(x: &Tensor) -> f64 {
+    let n = x.len() as f64;
+    let mean = x.mean();
+    let m2: f64 = x.data().iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+    let m4: f64 = x.data().iter().map(|&v| (v as f64 - mean).powi(4)).sum::<f64>() / n;
+    if m2 == 0.0 {
+        return 0.0;
+    }
+    m4 / (m2 * m2)
+}
+
+/// Off-diagonal-decay profile of an autocorrelation matrix: mean |S[i,j]|
+/// at each lag, normalized by the mean diagonal. Near-Toeplitz matrices
+/// show a smooth decay; Figure-3a's structure check.
+pub fn lag_profile(s: &Tensor) -> Vec<f64> {
+    let n = s.rows();
+    let diag: f64 = (0..n).map(|i| s.at(i, i).abs() as f64).sum::<f64>() / n as f64;
+    (0..n)
+        .map(|lag| {
+            let cnt = n - lag;
+            let sum: f64 = (0..cnt).map(|i| s.at(i, i + lag).abs() as f64).sum();
+            sum / (cnt as f64 * diag.max(1e-12))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sqnr_perfect_is_inf() {
+        let x = Tensor::randn(&[4, 4], 1);
+        assert_eq!(sqnr(&x, &x), f64::INFINITY);
+    }
+
+    #[test]
+    fn sqnr_known_value() {
+        // noise = signal/100 → 20 dB.
+        let x = Tensor::full(&[1, 100], 1.0);
+        let y = x.map(|v| v + 0.1);
+        assert!((sqnr(&x, &y) - 20.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn autocorrelation_of_ar1_matches() {
+        use crate::linalg::{ar1_covariance, cholesky};
+        let s = 24;
+        let cov = ar1_covariance(s, 0.9, 1.0);
+        let l = cholesky(&cov);
+        let samples: Vec<Tensor> =
+            (0..64).map(|i| l.matmul(&Tensor::randn(&[s, 32], i))).collect();
+        let est = autocorrelation(&samples);
+        // Relative error on the (0, 1) entry should be small.
+        assert!((est.at(0, 1) - cov.at(0, 1)).abs() < 0.1, "{}", est.at(0, 1));
+        assert!((est.at(5, 5) - 1.0).abs() < 0.15);
+    }
+
+    #[test]
+    fn energies_and_prefix_share() {
+        let mut x = Tensor::zeros(&[4, 2]);
+        x.set(0, 0, 3.0);
+        x.set(1, 0, 1.0);
+        let e = token_energies(&x);
+        assert_eq!(e, vec![9.0, 1.0, 0.0, 0.0]);
+        assert!((prefix_energy_share(&x, 1) - 0.9).abs() < 1e-9);
+        assert!((prefix_energy_share(&x, 4) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ranges() {
+        let x = Tensor::from_vec(&[2, 3], vec![1.0, 5.0, 3.0, -1.0, 0.0, 1.0]);
+        assert_eq!(token_ranges(&x), vec![4.0, 2.0]);
+    }
+
+    #[test]
+    fn channel_absmax_basic() {
+        let x = Tensor::from_vec(&[2, 2], vec![1.0, -7.0, -2.0, 3.0]);
+        assert_eq!(channel_absmax(&x), vec![2.0, 7.0]);
+    }
+
+    #[test]
+    fn kurtosis_gaussian_near_3() {
+        let x = Tensor::randn(&[128, 128], 5);
+        let k = kurtosis(&x);
+        assert!((k - 3.0).abs() < 0.3, "kurtosis {k}");
+    }
+
+    #[test]
+    fn lag_profile_decays_for_ar1() {
+        use crate::linalg::ar1_covariance;
+        let prof = lag_profile(&ar1_covariance(16, 0.8, 1.0));
+        assert!((prof[0] - 1.0).abs() < 1e-6);
+        assert!(prof[1] > prof[4]);
+        assert!(prof[4] > prof[10]);
+    }
+}

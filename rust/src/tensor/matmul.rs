@@ -1,0 +1,135 @@
+//! Cache-blocked matmul kernels.
+//!
+//! The eval harnesses push tiny-transformer forwards through thousands of
+//! quantized linear layers, so this is one of the repo's hot paths. The
+//! implementation is an i-k-j loop order (unit-stride inner loop over the
+//! output row) with a k-panel blocking that keeps the `b` panel in L1/L2.
+//! See EXPERIMENTS.md §Perf for before/after numbers.
+
+use super::Tensor;
+
+/// k-panel height: 64 rows of `b` × up to 512 f32 columns ≈ 128 KiB worst
+/// case, comfortably inside L2; typical d≤256 keeps it in L1.
+const KC: usize = 64;
+
+/// `a (m×k) @ b (k×n) -> (m×n)`.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let mut out = Tensor::zeros(&[a.rows(), b.cols()]);
+    matmul_into(a, b, &mut out);
+    out
+}
+
+/// `a @ b` accumulated into a pre-allocated output (overwrites `out`).
+pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul inner-dim mismatch: {}x{} @ {}x{}", m, k, k2, n);
+    assert_eq!(out.shape(), &[m, n]);
+
+    let ad = a.data();
+    let bd = b.data();
+    let od = out.data_mut();
+    od.fill(0.0);
+
+    for kb in (0..k).step_by(KC) {
+        let kend = (kb + KC).min(k);
+        for i in 0..m {
+            let arow = &ad[i * k..(i + 1) * k];
+            let orow = &mut od[i * n..(i + 1) * n];
+            for p in kb..kend {
+                let av = arow[p];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &bd[p * n..(p + 1) * n];
+                // Unit-stride FMA loop; autovectorizes cleanly.
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+}
+
+/// `a (m×k) @ bᵀ` where `b` is stored as `(n×k)` — the natural layout for
+/// weight matrices kept as `[out, in]`. Dot-product inner loop, both
+/// operands unit-stride.
+pub fn matmul_transb(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (n, k2) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul_transb inner-dim mismatch");
+    let mut out = Tensor::zeros(&[m, n]);
+    let ad = a.data();
+    let bd = b.data();
+    let od = out.data_mut();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &bd[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (x, y) in arow.iter().zip(brow) {
+                acc += x * y;
+            }
+            od[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for p in 0..k {
+                    acc += a.at(i, p) * b.at(p, j);
+                }
+                out.set(i, j, acc);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_naive() {
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 33, 9), (64, 128, 32)] {
+            let a = Tensor::randn(&[m, k], (m * k) as u64);
+            let b = Tensor::randn(&[k, n], (k * n + 1) as u64);
+            let got = matmul(&a, &b);
+            let want = naive(&a, &b);
+            assert!(got.max_abs_diff(&want) < 1e-3, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn transb_matches() {
+        let a = Tensor::randn(&[7, 11], 1);
+        let b = Tensor::randn(&[5, 11], 2); // (n×k)
+        let got = matmul_transb(&a, &b);
+        let want = naive(&a, &b.transpose());
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn known_values() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_vec(&[2, 2], vec![1., 1., 1., 1.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn spans_kc_boundary() {
+        // k larger than the KC panel exercises the blocked accumulation.
+        let a = Tensor::randn(&[4, 3 * super::KC + 5], 11);
+        let b = Tensor::randn(&[3 * super::KC + 5, 6], 12);
+        let got = matmul(&a, &b);
+        let want = naive(&a, &b);
+        assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+}

@@ -1,0 +1,355 @@
+//! Dense row-major `f32` tensor substrate.
+//!
+//! The whole reproduction works on 2-D activation matrices `X ∈ R^{s×d}`
+//! (sequence × feature) plus occasional 3-D batches, so this module keeps a
+//! deliberately small surface: shape bookkeeping, elementwise ops, matmul,
+//! row/column views, and a couple of constructors (zeros / randn / from
+//! slices). Everything is `f32`, matching both the PJRT artifacts and the
+//! quantization math in the paper.
+
+mod matmul;
+mod rng;
+
+pub use matmul::{matmul, matmul_into, matmul_transb};
+pub use rng::XorShiftRng;
+
+use std::fmt;
+
+/// A dense row-major tensor of `f32` with up to 3 dimensions.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Create a tensor of zeros with the given shape.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Create a tensor filled with `v`.
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    /// Wrap an existing buffer. Panics if the length does not match.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "shape {:?} needs {} elements, got {}", shape, n, data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Standard-normal tensor from a deterministic seed (Box–Muller over
+    /// xorshift). Deterministic across runs/platforms.
+    pub fn randn(shape: &[usize], seed: u64) -> Self {
+        let n: usize = shape.iter().product();
+        let mut rng = XorShiftRng::new(seed);
+        let mut data = Vec::with_capacity(n);
+        while data.len() < n {
+            let (a, b) = rng.next_gaussian_pair();
+            data.push(a);
+            if data.len() < n {
+                data.push(b);
+            }
+        }
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Uniform tensor in `[lo, hi)` from a deterministic seed.
+    pub fn rand_uniform(shape: &[usize], lo: f32, hi: f32, seed: u64) -> Self {
+        let n: usize = shape.iter().product();
+        let mut rng = XorShiftRng::new(seed);
+        let data = (0..n).map(|_| lo + (hi - lo) * rng.next_f32()).collect();
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Identity matrix of size `n`.
+    pub fn eye(n: usize) -> Self {
+        let mut t = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Rows of a 2-D tensor (sequence length `s` in the paper's notation).
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.ndim(), 2, "rows() needs a 2-D tensor, got {:?}", self.shape);
+        self.shape[0]
+    }
+
+    /// Columns of a 2-D tensor (feature size `d`).
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.ndim(), 2, "cols() needs a 2-D tensor, got {:?}", self.shape);
+        self.shape[1]
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Borrow row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let d = self.cols();
+        &self.data[i * d..(i + 1) * d]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let d = self.cols();
+        &mut self.data[i * d..(i + 1) * d]
+    }
+
+    /// Element access for 2-D tensors.
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.ndim(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.ndim(), 2);
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    /// Reinterpret the buffer with a new shape of identical element count.
+    pub fn reshape(&self, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.data.len(), "reshape {:?} -> {:?}", self.shape, shape);
+        Tensor { shape: shape.to_vec(), data: self.data.clone() }
+    }
+
+    /// Transpose of a 2-D tensor.
+    pub fn transpose(&self) -> Tensor {
+        let (r, c) = (self.rows(), self.cols());
+        let mut out = Tensor::zeros(&[c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        out
+    }
+
+    /// Copy rows `[start, end)` into a new tensor.
+    pub fn slice_rows(&self, start: usize, end: usize) -> Tensor {
+        let d = self.cols();
+        Tensor::from_vec(&[end - start, d], self.data[start * d..end * d].to_vec())
+    }
+
+    /// Vertically stack two tensors with equal column counts.
+    pub fn vcat(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.cols(), other.cols());
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Tensor::from_vec(&[self.rows() + other.rows(), self.cols()], data)
+    }
+
+    /// Elementwise map into a new tensor.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    /// In-place elementwise map.
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+    }
+
+    /// Elementwise binary op; shapes must match.
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape, other.shape, "zip shape mismatch");
+        let data = self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn scale(&self, k: f32) -> Tensor {
+        self.map(|x| x * k)
+    }
+
+    /// Add `v` (length = cols) to every row, as a broadcast bias.
+    pub fn add_row_broadcast(&self, v: &[f32]) -> Tensor {
+        let d = self.cols();
+        assert_eq!(v.len(), d);
+        let mut out = self.clone();
+        for i in 0..self.rows() {
+            let row = out.row_mut(i);
+            for j in 0..d {
+                row[j] += v[j];
+            }
+        }
+        out
+    }
+
+    /// Squared Frobenius norm.
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f64 {
+        self.sq_norm().sqrt()
+    }
+
+    /// Max |x|.
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Mean of all entries.
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|&x| x as f64).sum::<f64>() / self.data.len() as f64
+    }
+
+    /// `self @ other` for 2-D tensors.
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        matmul(self, other)
+    }
+
+    /// Maximum absolute difference against another tensor.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (&a, &b)| m.max((a - b).abs()))
+    }
+
+    /// True when every entry is finite.
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 16 {
+            write!(f, " {:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = Tensor::zeros(&[3, 4]);
+        assert_eq!(t.shape(), &[3, 4]);
+        assert_eq!(t.len(), 12);
+        assert_eq!(t.rows(), 3);
+        assert_eq!(t.cols(), 4);
+        assert!(t.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let a = Tensor::randn(&[8, 8], 7);
+        let b = Tensor::randn(&[8, 8], 7);
+        assert_eq!(a, b);
+        let c = Tensor::randn(&[8, 8], 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn randn_moments() {
+        let t = Tensor::randn(&[64, 64], 123);
+        let mean = t.mean();
+        let var = t.data().iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>()
+            / t.len() as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let t = Tensor::randn(&[5, 9], 1);
+        assert_eq!(t.transpose().transpose(), t);
+    }
+
+    #[test]
+    fn row_access() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.row(0), &[1., 2., 3.]);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+        assert_eq!(t.at(1, 2), 6.0);
+    }
+
+    #[test]
+    fn slice_and_vcat_roundtrip() {
+        let t = Tensor::randn(&[6, 4], 2);
+        let a = t.slice_rows(0, 2);
+        let b = t.slice_rows(2, 6);
+        assert_eq!(a.vcat(&b), t);
+    }
+
+    #[test]
+    fn eye_matmul_identity() {
+        let t = Tensor::randn(&[4, 4], 3);
+        let i = Tensor::eye(4);
+        assert!(t.matmul(&i).max_abs_diff(&t) < 1e-6);
+        assert!(i.matmul(&t).max_abs_diff(&t) < 1e-6);
+    }
+
+    #[test]
+    fn broadcast_bias() {
+        let t = Tensor::zeros(&[2, 3]);
+        let out = t.add_row_broadcast(&[1.0, 2.0, 3.0]);
+        assert_eq!(out.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(out.row(1), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let t = Tensor::from_vec(&[1, 2], vec![3.0, 4.0]);
+        assert!((t.norm() - 5.0).abs() < 1e-9);
+        assert!((t.sq_norm() - 25.0).abs() < 1e-9);
+        assert_eq!(t.abs_max(), 4.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_bad_len_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,129 @@
+//! Minimal property-testing harness (offline stand-in for proptest; see
+//! DESIGN.md §3 crate-availability substitutions).
+//!
+//! [`check`] runs a property over `n` generated cases; on failure it
+//! re-runs with progressively simpler cases drawn from the same generator
+//! (size-bounded shrinking) and reports the smallest failing seed/case so
+//! the failure is reproducible from the printed seed.
+
+use crate::tensor::XorShiftRng;
+
+/// Case generation context handed to generators: a seeded RNG plus a
+/// "size" knob that shrinking reduces.
+pub struct Gen {
+    pub rng: XorShiftRng,
+    pub size: usize,
+}
+
+impl Gen {
+    /// Uniform usize in `[lo, hi]`, scaled down when shrinking.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let hi_eff = lo + ((hi - lo) * self.size) / 100;
+        lo + self.rng.next_below(hi_eff - lo + 1)
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.next_f32()
+    }
+
+    /// Power of two in `[lo, hi]` (both must be powers of two).
+    pub fn pow2_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo.is_power_of_two() && hi.is_power_of_two());
+        let lo_log = lo.trailing_zeros();
+        let hi_log = hi.trailing_zeros();
+        let span = ((hi_log - lo_log) as usize * self.size) / 100;
+        1 << (lo_log as usize + self.rng.next_below(span + 1))
+    }
+}
+
+/// Result of a property run.
+pub struct PropResult {
+    pub cases: usize,
+    pub failed_seed: Option<u64>,
+}
+
+/// Run `prop` over `n` cases generated from `base_seed`. Panics with the
+/// smallest failing case description on failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    n: usize,
+    base_seed: u64,
+    generate: impl Fn(&mut Gen) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let run_case = |seed: u64, size: usize| -> Option<(T, String)> {
+        let mut g = Gen { rng: XorShiftRng::new(seed), size };
+        let case = generate(&mut g);
+        match prop(&case) {
+            Ok(()) => None,
+            Err(msg) => Some((case, msg)),
+        }
+    };
+
+    for i in 0..n {
+        let seed = base_seed.wrapping_add(i as u64 * 0x9E37_79B9);
+        if let Some((case, msg)) = run_case(seed, 100) {
+            // Shrink: retry the same seed at smaller sizes, keep the
+            // smallest size that still fails.
+            let mut smallest: (usize, T, String) = (100, case, msg);
+            for size in [50usize, 25, 10, 5] {
+                if let Some((c, m)) = run_case(seed, size) {
+                    smallest = (size, c, m);
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed={seed}, size={}):\n  case: {:?}\n  error: {}",
+                smallest.0, smallest.1, smallest.2
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(
+            "add-commutes",
+            50,
+            1,
+            |g| (g.f32_in(-10.0, 10.0), g.f32_in(-10.0, 10.0)),
+            |(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("non-commutative".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "always-fails")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 5, 2, |g| g.usize_in(0, 10), |_| Err("always-fails".into()));
+    }
+
+    #[test]
+    fn pow2_in_range() {
+        let mut g = Gen { rng: XorShiftRng::new(3), size: 100 };
+        for _ in 0..100 {
+            let v = g.pow2_in(4, 64);
+            assert!(v.is_power_of_two() && (4..=64).contains(&v));
+        }
+    }
+
+    #[test]
+    fn shrinking_reduces_size_bound() {
+        let mut big = Gen { rng: XorShiftRng::new(7), size: 100 };
+        let mut small = Gen { rng: XorShiftRng::new(7), size: 5 };
+        // At size 5, usize_in(0, 100) can produce at most 5.
+        for _ in 0..50 {
+            assert!(small.usize_in(0, 100) <= 5);
+            let _ = big.usize_in(0, 100);
+        }
+    }
+}

@@ -1,0 +1,395 @@
+//! Feature-dimension transforms `R` (paper §2.2): applied as `X → X R`
+//! before quantization, with `R⁻¹` fused into the next linear layer's
+//! weight so the inverse is free at inference time.
+
+use super::FeatureTransform;
+use crate::tensor::{matmul, Tensor, XorShiftRng};
+
+/// Identity feature transform.
+pub struct IdentityFeature {
+    d: usize,
+}
+
+impl IdentityFeature {
+    pub fn new(d: usize) -> Self {
+        IdentityFeature { d }
+    }
+}
+
+impl FeatureTransform for IdentityFeature {
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn apply(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.cols(), self.d);
+        x.clone()
+    }
+    fn invert(&self, y: &Tensor) -> Tensor {
+        y.clone()
+    }
+    fn fuse_into_weight(&self, w: &Tensor) -> Tensor {
+        w.clone()
+    }
+    fn flops(&self, _s: usize) -> u64 {
+        0
+    }
+}
+
+/// QuaRot-style randomized Hadamard rotation: `R = H D / √d` with `D` a
+/// random ±1 diagonal. Spreads activation outliers across all channels,
+/// flattening the per-token range (Eq. 5). Orthogonal, so `R⁻¹ = Rᵀ`.
+pub struct HadamardFeature {
+    d: usize,
+    /// Random sign diagonal.
+    signs: Vec<f32>,
+}
+
+impl HadamardFeature {
+    pub fn new(d: usize, seed: u64) -> Self {
+        assert!(d.is_power_of_two(), "Hadamard needs power-of-two dim, got {d}");
+        let mut rng = XorShiftRng::new(seed);
+        let signs = (0..d).map(|_| if rng.next_f32() < 0.5 { -1.0 } else { 1.0 }).collect();
+        HadamardFeature { d, signs }
+    }
+
+    /// In-place fast Walsh–Hadamard butterfly over the columns of one row.
+    fn fwht_row(row: &mut [f32]) {
+        let d = row.len();
+        let mut len = 1usize;
+        while len < d {
+            let stride = len * 2;
+            for base in (0..d).step_by(stride) {
+                for i in base..base + len {
+                    let a = row[i];
+                    let b = row[i + len];
+                    row[i] = a + b;
+                    row[i + len] = a - b;
+                }
+            }
+            len = stride;
+        }
+    }
+
+    /// `X D H / √d` applied row-wise.
+    fn transform(&self, x: &Tensor, pre_sign: bool) -> Tensor {
+        assert_eq!(x.cols(), self.d);
+        let mut out = x.clone();
+        let scale = 1.0 / (self.d as f32).sqrt();
+        for i in 0..out.rows() {
+            let row = out.row_mut(i);
+            if pre_sign {
+                for (v, s) in row.iter_mut().zip(&self.signs) {
+                    *v *= s;
+                }
+            }
+            Self::fwht_row(row);
+            for v in row.iter_mut() {
+                *v *= scale;
+            }
+            if !pre_sign {
+                for (v, s) in row.iter_mut().zip(&self.signs) {
+                    *v *= s;
+                }
+            }
+        }
+        out
+    }
+}
+
+impl FeatureTransform for HadamardFeature {
+    fn name(&self) -> &'static str {
+        "hadamard"
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// `X R` with `R = D H/√d`.
+    fn apply(&self, x: &Tensor) -> Tensor {
+        self.transform(x, true)
+    }
+
+    /// `Y R⁻¹` with `R⁻¹ = Rᵀ = (H/√d) D` (H symmetric, D diagonal ±1).
+    fn invert(&self, y: &Tensor) -> Tensor {
+        self.transform(y, false)
+    }
+
+    /// `R⁻¹ W` for `W` stored `[in, out]`: apply `Rᵀ` to the *rows*, i.e.
+    /// transform `Wᵀ` columns — equivalently `((Wᵀ) R)ᵀ` using apply on Wᵀ.
+    fn fuse_into_weight(&self, w: &Tensor) -> Tensor {
+        assert_eq!(w.rows(), self.d, "weight [in,out] must have in=dim");
+        // R⁻¹ W = (Wᵀ R)ᵀ because R⁻¹ = Rᵀ.
+        self.apply(&w.transpose()).transpose()
+    }
+
+    fn flops(&self, s: usize) -> u64 {
+        let d = self.d as u64;
+        let logd = d.trailing_zeros() as u64;
+        // butterfly + sign + scale per row.
+        (d * logd + 2 * d) * s as u64
+    }
+}
+
+/// SmoothQuant-style per-channel scaling: `R = diag(1/λ_j)` with
+/// `λ_j = max|x_j|^α / max|w_j|^{1−α}` — shifts quantization difficulty
+/// from activations to weights (Xiao et al., 2023).
+pub struct ScalingFeature {
+    d: usize,
+    /// Per-channel divisor λ_j applied to activations.
+    lambdas: Vec<f32>,
+}
+
+impl ScalingFeature {
+    /// Calibrate from per-channel activation max and weight max.
+    pub fn calibrate(act_absmax: &[f32], w_absmax: &[f32], alpha: f32) -> Self {
+        assert_eq!(act_absmax.len(), w_absmax.len());
+        let lambdas = act_absmax
+            .iter()
+            .zip(w_absmax)
+            .map(|(&a, &w)| {
+                let a = a.max(1e-5);
+                let w = w.max(1e-5);
+                (a.powf(alpha) / w.powf(1.0 - alpha)).max(1e-5)
+            })
+            .collect();
+        ScalingFeature { d: act_absmax.len(), lambdas }
+    }
+
+    pub fn from_lambdas(lambdas: Vec<f32>) -> Self {
+        ScalingFeature { d: lambdas.len(), lambdas }
+    }
+
+    pub fn lambdas(&self) -> &[f32] {
+        &self.lambdas
+    }
+}
+
+impl FeatureTransform for ScalingFeature {
+    fn name(&self) -> &'static str {
+        "smoothquant-scale"
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn apply(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.cols(), self.d);
+        let mut out = x.clone();
+        for i in 0..out.rows() {
+            for (v, l) in out.row_mut(i).iter_mut().zip(&self.lambdas) {
+                *v /= l;
+            }
+        }
+        out
+    }
+
+    fn invert(&self, y: &Tensor) -> Tensor {
+        assert_eq!(y.cols(), self.d);
+        let mut out = y.clone();
+        for i in 0..out.rows() {
+            for (v, l) in out.row_mut(i).iter_mut().zip(&self.lambdas) {
+                *v *= l;
+            }
+        }
+        out
+    }
+
+    /// `diag(λ) W` — scale weight rows up to compensate.
+    fn fuse_into_weight(&self, w: &Tensor) -> Tensor {
+        assert_eq!(w.rows(), self.d);
+        let mut out = w.clone();
+        for i in 0..self.d {
+            let l = self.lambdas[i];
+            for v in out.row_mut(i) {
+                *v *= l;
+            }
+        }
+        out
+    }
+
+    fn flops(&self, s: usize) -> u64 {
+        (self.d as u64) * s as u64
+    }
+}
+
+/// FlatQuant-lite: a calibrated affine feature transform `R` (here a
+/// whitening-style rotation-plus-scale learned from per-channel second
+/// moments), with explicit inverse. Stands in for FlatQuant's
+/// Kronecker-factored learned transform (Sun et al., 2025) — same
+/// interface, same role in the baseline stack, calibration is closed-form
+/// instead of 15-epoch gradient descent.
+pub struct AffineFeature {
+    d: usize,
+    r: Tensor,
+    r_inv: Tensor,
+}
+
+impl AffineFeature {
+    /// Calibrate: whiten per-channel scale, then apply a fixed Hadamard
+    /// rotation — `R = diag(1/σ_j) H/√d`, `R⁻¹ = (H/√d)ᵀ diag(σ_j)`.
+    pub fn calibrate(x_samples: &[Tensor], seed: u64) -> Self {
+        assert!(!x_samples.is_empty());
+        let d = x_samples[0].cols();
+        assert!(d.is_power_of_two(), "AffineFeature needs power-of-two dim");
+        // Per-channel RMS.
+        let mut ms = vec![0.0f64; d];
+        let mut n = 0usize;
+        for x in x_samples {
+            assert_eq!(x.cols(), d);
+            for i in 0..x.rows() {
+                for (j, &v) in x.row(i).iter().enumerate() {
+                    ms[j] += (v as f64) * (v as f64);
+                }
+            }
+            n += x.rows();
+        }
+        let sigma: Vec<f32> = ms.iter().map(|&m| ((m / n as f64).sqrt() as f32).max(1e-4)).collect();
+
+        let had = HadamardFeature::new(d, seed);
+        // R = diag(1/σ) applied first, then Hadamard rotation: build dense
+        // matrices once at calibration time (runtime uses them via matmul;
+        // the dense form also lets tests verify exact invertibility).
+        let mut scale = Tensor::zeros(&[d, d]);
+        for j in 0..d {
+            scale.set(j, j, 1.0 / sigma[j]);
+        }
+        let h = had.apply(&Tensor::eye(d)); // rows i: e_i R_h
+        let r = scale.matmul(&h);
+        let mut unscale = Tensor::zeros(&[d, d]);
+        for j in 0..d {
+            unscale.set(j, j, sigma[j]);
+        }
+        let r_inv = h.transpose().matmul(&unscale);
+        AffineFeature { d, r, r_inv }
+    }
+
+    pub fn from_matrices(r: Tensor, r_inv: Tensor) -> Self {
+        assert_eq!(r.rows(), r.cols());
+        let d = r.rows();
+        AffineFeature { d, r, r_inv }
+    }
+}
+
+impl FeatureTransform for AffineFeature {
+    fn name(&self) -> &'static str {
+        "flatquant-affine"
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn apply(&self, x: &Tensor) -> Tensor {
+        matmul(x, &self.r)
+    }
+
+    fn invert(&self, y: &Tensor) -> Tensor {
+        matmul(y, &self.r_inv)
+    }
+
+    fn fuse_into_weight(&self, w: &Tensor) -> Tensor {
+        matmul(&self.r_inv, w)
+    }
+
+    fn flops(&self, s: usize) -> u64 {
+        2 * (self.d as u64) * (self.d as u64) * s as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_feature_contract(t: &dyn FeatureTransform, s: usize, seed: u64, tol: f32) {
+        let x = Tensor::randn(&[s, t.dim()], seed);
+        let y = t.apply(&x);
+        let back = t.invert(&y);
+        assert!(back.max_abs_diff(&x) < tol, "{} reconstruction", t.name());
+
+        // Function preservation: (X R)(R⁻¹ W) == X W.
+        let w = Tensor::randn(&[t.dim(), 12], seed + 1);
+        let fused = t.fuse_into_weight(&w);
+        let a = y.matmul(&fused);
+        let b = x.matmul(&w);
+        let rel = a.max_abs_diff(&b) / b.abs_max().max(1e-6);
+        assert!(rel < 1e-3, "{} function preservation rel {}", t.name(), rel);
+    }
+
+    #[test]
+    fn identity_contract() {
+        check_feature_contract(&IdentityFeature::new(16), 7, 1, 1e-6);
+    }
+
+    #[test]
+    fn hadamard_contract() {
+        check_feature_contract(&HadamardFeature::new(64, 5), 9, 2, 1e-4);
+    }
+
+    #[test]
+    fn hadamard_is_orthogonal() {
+        let t = HadamardFeature::new(32, 3);
+        let r = t.apply(&Tensor::eye(32));
+        assert!(crate::linalg::orthogonality_defect(&r) < 1e-5);
+    }
+
+    #[test]
+    fn hadamard_flattens_outliers() {
+        // One massive outlier channel → after rotation, per-row range shrinks.
+        let s = 16;
+        let d = 64;
+        let mut x = Tensor::randn(&[s, d], 8);
+        for i in 0..s {
+            x.set(i, 3, 100.0); // outlier channel
+        }
+        let t = HadamardFeature::new(d, 1);
+        let y = t.apply(&x);
+        let range = |m: &Tensor| -> f32 {
+            (0..s)
+                .map(|i| {
+                    let r = m.row(i);
+                    let mx = r.iter().cloned().fold(f32::MIN, f32::max);
+                    let mn = r.iter().cloned().fold(f32::MAX, f32::min);
+                    mx - mn
+                })
+                .sum::<f32>()
+                / s as f32
+        };
+        assert!(range(&y) < 0.5 * range(&x), "{} vs {}", range(&y), range(&x));
+    }
+
+    #[test]
+    fn scaling_contract() {
+        let act = vec![10.0; 16];
+        let w = vec![1.0; 16];
+        let t = ScalingFeature::calibrate(&act, &w, 0.5);
+        check_feature_contract(&t, 5, 4, 1e-4);
+        // α=0.5 with act=10,w=1 → λ=√10.
+        assert!((t.lambdas()[0] - 10f32.sqrt()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn scaling_reduces_activation_range() {
+        let mut x = Tensor::randn(&[8, 4], 6);
+        for i in 0..8 {
+            x.set(i, 0, x.at(i, 0) * 50.0);
+        }
+        let act_max: Vec<f32> =
+            (0..4).map(|j| (0..8).map(|i| x.at(i, j).abs()).fold(0.0, f32::max)).collect();
+        let w_max = vec![1.0; 4];
+        let t = ScalingFeature::calibrate(&act_max, &w_max, 0.5);
+        let y = t.apply(&x);
+        assert!(y.abs_max() < 0.5 * x.abs_max());
+    }
+
+    #[test]
+    fn affine_contract() {
+        let samples: Vec<Tensor> = (0..4).map(|i| Tensor::randn(&[32, 16], i)).collect();
+        let t = AffineFeature::calibrate(&samples, 7);
+        check_feature_contract(&t, 8, 5, 1e-3);
+    }
+}

@@ -1,0 +1,464 @@
+//! Orthonormal Haar discrete wavelet transform along the sequence axis.
+//!
+//! This is the transform the paper actually deploys (§3.2, §3.3): each
+//! level costs O(sd), it needs `levels ≤ log₂ s` steps, and it concentrates
+//! energy into a *discrete* set of levels — the property that makes the
+//! simple {8-bit × 64 tokens, 4-bit rest} allocation work. Coefficients are
+//! emitted in the standard multiresolution order
+//! `[approx_L | detail_L | detail_{L-1} | … | detail_1]`, so the
+//! high-energy approximation coefficients are the *leading* tokens and the
+//! mixed-precision scheme can simply keep "the first k tokens" in 8 bits.
+//!
+//! [`HaarDwt2d`] applies the separable 2-D version to a flattened `h×w`
+//! token grid (LVM latents), matching the paper's "one quarter per level"
+//! 2-D energy concentration.
+
+use super::SequenceTransform;
+use crate::tensor::Tensor;
+
+const SQRT1_2: f32 = std::f32::consts::FRAC_1_SQRT_2;
+
+/// Multi-level 1-D Haar DWT over the sequence (row) dimension.
+pub struct HaarDwt {
+    s: usize,
+    levels: usize,
+}
+
+impl HaarDwt {
+    /// `s` must be divisible by `2^levels`.
+    pub fn new(s: usize, levels: usize) -> Self {
+        assert!(levels >= 1, "need at least one level");
+        assert!(
+            s % (1 << levels) == 0,
+            "sequence length {s} not divisible by 2^{levels}"
+        );
+        HaarDwt { s, levels }
+    }
+
+    /// Largest level count usable for sequence length `s` (full pyramid).
+    pub fn max_levels(s: usize) -> usize {
+        s.trailing_zeros() as usize
+    }
+
+    pub fn levels(&self) -> usize {
+        self.levels
+    }
+
+    /// One analysis step on the first `n` rows of `x`, writing averages to
+    /// rows `[0, n/2)` and details to `[n/2, n)`.
+    ///
+    /// Approx coefficients are written **in place** (row `p` is only
+    /// written after rows `2p, 2p+1` were read, and `2p ≥ p`); details go
+    /// through a half-size scratch that is copied back once. This is 3
+    /// memory passes per level instead of the naive 5 (EXPERIMENTS.md
+    /// §Perf iteration 3).
+    fn step_forward(x: &mut Tensor, n: usize, scratch: &mut [f32]) {
+        let d = x.cols();
+        let half = n / 2;
+        let data = x.data_mut();
+        for p in 0..half {
+            let (head, tail) = data.split_at_mut((2 * p) * d);
+            let even = &tail[..d];
+            let odd = &tail[d..2 * d];
+            let det = &mut scratch[p * d..(p + 1) * d];
+            if p == 0 {
+                // approx row 0 aliases even row 0: stage through det first.
+                for j in 0..d {
+                    det[j] = (even[j] - odd[j]) * SQRT1_2;
+                }
+                for j in 0..d {
+                    tail[j] = (tail[j] + tail[d + j]) * SQRT1_2;
+                }
+            } else {
+                let approx = &mut head[p * d..(p + 1) * d];
+                for j in 0..d {
+                    approx[j] = (even[j] + odd[j]) * SQRT1_2;
+                    det[j] = (even[j] - odd[j]) * SQRT1_2;
+                }
+            }
+        }
+        data[half * d..n * d].copy_from_slice(&scratch[..half * d]);
+    }
+
+    /// One synthesis step inverting `step_forward`. Details are staged
+    /// through scratch, then rows are expanded in place descending (target
+    /// rows `2p, 2p+1 ≥ p` never clobber an unread approx row).
+    fn step_inverse(x: &mut Tensor, n: usize, scratch: &mut [f32]) {
+        let d = x.cols();
+        let half = n / 2;
+        let data = x.data_mut();
+        scratch[..half * d].copy_from_slice(&data[half * d..n * d]);
+        for p in (0..half).rev() {
+            let det = &scratch[p * d..(p + 1) * d];
+            let (head, tail) = data.split_at_mut((2 * p) * d);
+            if p == 0 {
+                for j in 0..d {
+                    let a = tail[j];
+                    tail[j] = (a + det[j]) * SQRT1_2;
+                    tail[d + j] = (a - det[j]) * SQRT1_2;
+                }
+            } else {
+                let avg = &head[p * d..(p + 1) * d];
+                for j in 0..d {
+                    tail[j] = (avg[j] + det[j]) * SQRT1_2;
+                    tail[d + j] = (avg[j] - det[j]) * SQRT1_2;
+                }
+            }
+        }
+    }
+}
+
+impl SequenceTransform for HaarDwt {
+    fn name(&self) -> &'static str {
+        "haar-dwt"
+    }
+
+    fn seq_len(&self) -> usize {
+        self.s
+    }
+
+    fn forward(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.rows(), self.s, "HaarDwt built for s={}, got {}", self.s, x.rows());
+        let mut out = x.clone();
+        let mut scratch = vec![0.0f32; (self.s / 2) * x.cols()];
+        let mut n = self.s;
+        for _ in 0..self.levels {
+            Self::step_forward(&mut out, n, &mut scratch);
+            n /= 2;
+        }
+        out
+    }
+
+    fn inverse(&self, y: &Tensor) -> Tensor {
+        assert_eq!(y.rows(), self.s);
+        let mut out = y.clone();
+        let mut scratch = vec![0.0f32; (self.s / 2) * y.cols()];
+        let mut n = self.s >> (self.levels - 1);
+        for _ in 0..self.levels {
+            Self::step_inverse(&mut out, n, &mut scratch);
+            n *= 2;
+        }
+        out
+    }
+
+    fn flops(&self, d: usize) -> u64 {
+        // Each level over n rows: n/2 butterflies × d features × 4 flops
+        // (add, sub, two scales) = 2nd flops; n halves per level.
+        let mut total = 0u64;
+        let mut n = self.s as u64;
+        for _ in 0..self.levels {
+            total += 2 * n * d as u64;
+            n /= 2;
+        }
+        total
+    }
+}
+
+/// Separable 2-D Haar DWT over a flattened `h×w` token grid.
+///
+/// Each level applies one Haar analysis step along `x` (within grid rows)
+/// then one along `y` (within grid columns), quartering the low-pass region
+/// per level. Output tokens are re-flattened so that the low-pass block
+/// occupies the *leading* sequence positions, nested per level (the 2-D
+/// analogue of the 1-D multiresolution order).
+pub struct HaarDwt2d {
+    h: usize,
+    w: usize,
+    levels: usize,
+}
+
+impl HaarDwt2d {
+    pub fn new(h: usize, w: usize, levels: usize) -> Self {
+        assert!(levels >= 1);
+        assert!(h % (1 << levels) == 0, "grid height {h} not divisible by 2^{levels}");
+        assert!(w % (1 << levels) == 0, "grid width {w} not divisible by 2^{levels}");
+        HaarDwt2d { h, w, levels }
+    }
+
+    pub fn grid(&self) -> (usize, usize) {
+        (self.h, self.w)
+    }
+
+    /// Index of token `(y, x)` in the flattened sequence.
+    #[inline]
+    fn idx(&self, y: usize, x: usize) -> usize {
+        y * self.w + x
+    }
+
+    /// Haar step along grid-x for the active `ah×aw` low-pass block.
+    fn step_x(&self, t: &mut Tensor, ah: usize, aw: usize) {
+        let d = t.cols();
+        let half = aw / 2;
+        let mut buf = vec![0.0f32; aw * d];
+        for y in 0..ah {
+            // Gather the active row into buf, transform, scatter back.
+            for x in 0..aw {
+                let src = self.idx(y, x) * d;
+                buf[x * d..(x + 1) * d].copy_from_slice(&t.data()[src..src + d]);
+            }
+            for p in 0..half {
+                for j in 0..d {
+                    let e = buf[2 * p * d + j];
+                    let o = buf[(2 * p + 1) * d + j];
+                    let dst_a = self.idx(y, p) * d + j;
+                    let dst_d = self.idx(y, half + p) * d + j;
+                    t.data_mut()[dst_a] = (e + o) * SQRT1_2;
+                    t.data_mut()[dst_d] = (e - o) * SQRT1_2;
+                }
+            }
+        }
+    }
+
+    fn step_x_inv(&self, t: &mut Tensor, ah: usize, aw: usize) {
+        let d = t.cols();
+        let half = aw / 2;
+        let mut buf = vec![0.0f32; aw * d];
+        for y in 0..ah {
+            for x in 0..aw {
+                let src = self.idx(y, x) * d;
+                buf[x * d..(x + 1) * d].copy_from_slice(&t.data()[src..src + d]);
+            }
+            for p in 0..half {
+                for j in 0..d {
+                    let a = buf[p * d + j];
+                    let dt = buf[(half + p) * d + j];
+                    t.data_mut()[self.idx(y, 2 * p) * d + j] = (a + dt) * SQRT1_2;
+                    t.data_mut()[self.idx(y, 2 * p + 1) * d + j] = (a - dt) * SQRT1_2;
+                }
+            }
+        }
+    }
+
+    /// Haar step along grid-y for the active block.
+    fn step_y(&self, t: &mut Tensor, ah: usize, aw: usize) {
+        let d = t.cols();
+        let half = ah / 2;
+        let mut buf = vec![0.0f32; ah * d];
+        for x in 0..aw {
+            for y in 0..ah {
+                let src = self.idx(y, x) * d;
+                buf[y * d..(y + 1) * d].copy_from_slice(&t.data()[src..src + d]);
+            }
+            for p in 0..half {
+                for j in 0..d {
+                    let e = buf[2 * p * d + j];
+                    let o = buf[(2 * p + 1) * d + j];
+                    t.data_mut()[self.idx(p, x) * d + j] = (e + o) * SQRT1_2;
+                    t.data_mut()[self.idx(half + p, x) * d + j] = (e - o) * SQRT1_2;
+                }
+            }
+        }
+    }
+
+    fn step_y_inv(&self, t: &mut Tensor, ah: usize, aw: usize) {
+        let d = t.cols();
+        let half = ah / 2;
+        let mut buf = vec![0.0f32; ah * d];
+        for x in 0..aw {
+            for y in 0..ah {
+                let src = self.idx(y, x) * d;
+                buf[y * d..(y + 1) * d].copy_from_slice(&t.data()[src..src + d]);
+            }
+            for p in 0..half {
+                for j in 0..d {
+                    let a = buf[p * d + j];
+                    let dt = buf[(half + p) * d + j];
+                    t.data_mut()[self.idx(2 * p, x) * d + j] = (a + dt) * SQRT1_2;
+                    t.data_mut()[self.idx(2 * p + 1, x) * d + j] = (a - dt) * SQRT1_2;
+                }
+            }
+        }
+    }
+
+    /// Permutation mapping grid position → output sequence position such
+    /// that lower-level (higher-energy) coefficients come first. We order
+    /// by the level at which a coefficient becomes low-pass, then raster.
+    fn output_order(&self) -> Vec<usize> {
+        // Region rank: coefficients inside the final low-pass block first,
+        // then each level's detail bands from coarsest to finest.
+        let mut keyed: Vec<(usize, usize)> = Vec::with_capacity(self.h * self.w);
+        for y in 0..self.h {
+            for x in 0..self.w {
+                // level k detail bands live at coords where
+                // max(y,x) ∈ [size_k/2, size_k) for size_k = h>>.. — rank by
+                // the smallest block that contains the coefficient.
+                let mut rank = 0usize;
+                for lvl in (1..=self.levels).rev() {
+                    let bh = self.h >> lvl;
+                    let bw = self.w >> lvl;
+                    if y < bh && x < bw {
+                        break;
+                    }
+                    rank += 1;
+                    if y < 2 * bh && x < 2 * bw {
+                        break;
+                    }
+                }
+                keyed.push((rank, y * self.w + x));
+            }
+        }
+        keyed.sort();
+        keyed.into_iter().map(|(_, i)| i).collect()
+    }
+}
+
+impl SequenceTransform for HaarDwt2d {
+    fn name(&self) -> &'static str {
+        "haar-dwt-2d"
+    }
+
+    fn seq_len(&self) -> usize {
+        self.h * self.w
+    }
+
+    fn forward(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.rows(), self.h * self.w);
+        let d = x.cols();
+        let mut t = x.clone();
+        let (mut ah, mut aw) = (self.h, self.w);
+        for _ in 0..self.levels {
+            self.step_x(&mut t, ah, aw);
+            self.step_y(&mut t, ah, aw);
+            ah /= 2;
+            aw /= 2;
+        }
+        // Reorder so low-pass coefficients lead the sequence.
+        let order = self.output_order();
+        let mut out = Tensor::zeros(&[self.h * self.w, d]);
+        for (dst, &src) in order.iter().enumerate() {
+            out.row_mut(dst).copy_from_slice(&t.data()[src * d..(src + 1) * d]);
+        }
+        out
+    }
+
+    fn inverse(&self, y: &Tensor) -> Tensor {
+        assert_eq!(y.rows(), self.h * self.w);
+        let d = y.cols();
+        // Undo the reorder.
+        let order = self.output_order();
+        let mut t = Tensor::zeros(&[self.h * self.w, d]);
+        for (src, &dst) in order.iter().enumerate() {
+            t.row_mut(dst).copy_from_slice(&y.data()[src * d..(src + 1) * d]);
+        }
+        let (mut ah, mut aw) = (self.h >> self.levels, self.w >> self.levels);
+        for _ in 0..self.levels {
+            ah *= 2;
+            aw *= 2;
+            self.step_y_inv(&mut t, ah, aw);
+            self.step_x_inv(&mut t, ah, aw);
+        }
+        t
+    }
+
+    fn flops(&self, d: usize) -> u64 {
+        let mut total = 0u64;
+        let (mut ah, mut aw) = (self.h as u64, self.w as u64);
+        for _ in 0..self.levels {
+            // x-pass + y-pass, each 2·(active cells)·d flops.
+            total += 4 * ah * aw * d as u64;
+            ah /= 2;
+            aw /= 2;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transforms::SequenceTransform;
+
+    #[test]
+    fn single_level_known_values() {
+        // x = [1, 3] per feature → avg = 4/√2, det = −2/√2.
+        let x = Tensor::from_vec(&[2, 1], vec![1.0, 3.0]);
+        let t = HaarDwt::new(2, 1);
+        let y = t.forward(&x);
+        assert!((y.at(0, 0) - 4.0 * SQRT1_2).abs() < 1e-6);
+        assert!((y.at(1, 0) + 2.0 * SQRT1_2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn constant_signal_concentrates_fully() {
+        // A constant sequence has ALL energy in the single approximation
+        // coefficient after a full pyramid.
+        let s = 64;
+        let x = Tensor::full(&[s, 4], 1.0);
+        let t = HaarDwt::new(s, HaarDwt::max_levels(s));
+        let y = t.forward(&x);
+        let e0: f32 = y.row(0).iter().map(|v| v * v).sum();
+        let etot = y.sq_norm() as f32;
+        assert!((e0 / etot - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn smooth_signal_energy_in_prefix() {
+        // AR(1)-like smooth ramp: ≥90% of energy in the first s/8 tokens
+        // after 3 levels.
+        let s = 128;
+        let d = 8;
+        let mut x = Tensor::zeros(&[s, d]);
+        for i in 0..s {
+            for j in 0..d {
+                x.set(i, j, ((i as f32) * 0.05 + j as f32).sin());
+            }
+        }
+        let t = HaarDwt::new(s, 3);
+        let y = t.forward(&x);
+        let prefix: f64 = (0..s / 8).map(|i| y.row(i).iter().map(|v| (*v as f64).powi(2)).sum::<f64>()).sum();
+        assert!(prefix / y.sq_norm() > 0.9, "prefix share {}", prefix / y.sq_norm());
+    }
+
+    #[test]
+    fn multilevel_roundtrip() {
+        let x = Tensor::randn(&[256, 16], 42);
+        for levels in 1..=4 {
+            let t = HaarDwt::new(256, levels);
+            let err = t.inverse(&t.forward(&x)).max_abs_diff(&x);
+            assert!(err < 1e-5, "levels={levels} err={err}");
+        }
+    }
+
+    #[test]
+    fn dwt2d_roundtrip_and_energy() {
+        let (h, w, d) = (16, 16, 8);
+        // Smooth 2-D field.
+        let mut x = Tensor::zeros(&[h * w, d]);
+        for y in 0..h {
+            for xg in 0..w {
+                for j in 0..d {
+                    x.set(y * w + xg, j, ((y as f32) * 0.2).cos() + ((xg as f32) * 0.15).sin());
+                }
+            }
+        }
+        let t = HaarDwt2d::new(h, w, 2);
+        let f = t.forward(&x);
+        assert!(t.inverse(&f).max_abs_diff(&x) < 1e-5);
+        // Energy preserved.
+        assert!(((f.sq_norm() - x.sq_norm()) / x.sq_norm()).abs() < 1e-6);
+        // Low-pass block = first h*w/16 tokens after 2 levels holds most energy.
+        let k = h * w / 16;
+        let prefix: f64 = (0..k).map(|i| f.row(i).iter().map(|v| (*v as f64).powi(2)).sum::<f64>()).sum();
+        assert!(prefix / f.sq_norm() > 0.95, "2-D prefix share {}", prefix / f.sq_norm());
+    }
+
+    #[test]
+    fn output_order_is_permutation() {
+        let t = HaarDwt2d::new(8, 8, 3);
+        let mut order = t.output_order();
+        order.sort();
+        assert_eq!(order, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_indivisible_length() {
+        HaarDwt::new(48, 5);
+    }
+
+    #[test]
+    fn flops_scale_linearly_in_d() {
+        let t = HaarDwt::new(128, 3);
+        assert_eq!(t.flops(16) * 2, t.flops(32));
+    }
+}

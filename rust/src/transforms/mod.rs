@@ -1,0 +1,172 @@
+//! Function-preserving transforms.
+//!
+//! The paper distinguishes two families (Eq. 6):
+//!
+//! * **Sequence transforms** `L` — (left-)invertible matrices applied along
+//!   the *sequence* dimension: `X → L X`. Orthogonal `L` preserves total
+//!   energy and the quantization error is exactly the error of the
+//!   transformed matrix (Theorem 1, Eq. 10). Implementations: [`KltTransform`]
+//!   (optimal, calibration-time eigenbasis of `E[XXᵀ]`), [`DctTransform`]
+//!   (Szegő approximation for Toeplitz autocorrelation), [`WhtTransform`]
+//!   (sign-only DCT approximation), [`HaarDwt`] / [`HaarDwt2d`] (the O(sd)
+//!   transform the paper ships), and [`IdentitySeq`].
+//! * **Feature transforms** `R` — applied along the feature dimension:
+//!   `X → X R`, with `R⁻¹` fused into the following weight. Implementations:
+//!   [`HadamardFeature`] (QuaRot-style randomized Hadamard),
+//!   [`ScalingFeature`] (SmoothQuant per-channel scaling), and
+//!   [`AffineFeature`] (FlatQuant-lite calibrated affine).
+
+mod dct;
+mod feature;
+mod haar;
+mod klt;
+mod wht;
+
+pub use dct::DctTransform;
+pub use feature::{AffineFeature, HadamardFeature, IdentityFeature, ScalingFeature};
+pub use haar::{HaarDwt, HaarDwt2d};
+pub use klt::KltTransform;
+pub use wht::WhtTransform;
+
+use crate::tensor::Tensor;
+
+/// An invertible linear transform applied along the sequence dimension.
+///
+/// Implementations must satisfy `inverse(forward(x)) == x` (up to float
+/// round-off) for any `x` with `x.rows() == seq_len()`, and orthogonal
+/// implementations additionally preserve the Frobenius norm.
+pub trait SequenceTransform: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Sequence length this instance was built for.
+    fn seq_len(&self) -> usize;
+
+    /// `L X`.
+    fn forward(&self, x: &Tensor) -> Tensor;
+
+    /// `L⁻¹ Y`.
+    fn inverse(&self, y: &Tensor) -> Tensor;
+
+    /// Whether `L` is orthogonal (`L⁻¹ = Lᵀ`); true for everything here.
+    fn orthogonal(&self) -> bool {
+        true
+    }
+
+    /// Floating-point ops for one forward application on an `s×d` input.
+    /// Used by the Table-3 overhead harness.
+    fn flops(&self, d: usize) -> u64;
+
+    /// Materialize `L` (s×s) by transforming the identity. Slow; used in
+    /// tests and for the Figure-3c basis visualizations.
+    fn matrix(&self) -> Tensor {
+        let s = self.seq_len();
+        self.forward(&Tensor::eye(s))
+    }
+}
+
+/// Identity sequence transform (the "no STaMP" arm of every ablation).
+pub struct IdentitySeq {
+    s: usize,
+}
+
+impl IdentitySeq {
+    pub fn new(s: usize) -> Self {
+        IdentitySeq { s }
+    }
+}
+
+impl SequenceTransform for IdentitySeq {
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+    fn seq_len(&self) -> usize {
+        self.s
+    }
+    fn forward(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.rows(), self.s);
+        x.clone()
+    }
+    fn inverse(&self, y: &Tensor) -> Tensor {
+        y.clone()
+    }
+    fn flops(&self, _d: usize) -> u64 {
+        0
+    }
+}
+
+/// An invertible linear transform applied along the feature dimension.
+pub trait FeatureTransform: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Feature width this instance was built for.
+    fn dim(&self) -> usize;
+
+    /// `X R`.
+    fn apply(&self, x: &Tensor) -> Tensor;
+
+    /// `Y R⁻¹`.
+    fn invert(&self, y: &Tensor) -> Tensor;
+
+    /// Fuse `R⁻¹` into a following weight stored `[in, out]`: `W → R⁻¹ W`,
+    /// so that `(X R)(R⁻¹ W) = X W` and the inverse costs nothing at
+    /// runtime (paper §2.2 / Ashkboos et al. 2024).
+    fn fuse_into_weight(&self, w: &Tensor) -> Tensor;
+
+    /// FLOPs for one application on an `s×d` input.
+    fn flops(&self, s: usize) -> u64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Shared contract test: reconstruction + energy preservation for every
+    /// orthogonal sequence transform at several sizes.
+    fn check_seq_contract(t: &dyn SequenceTransform, d: usize, seed: u64) {
+        let s = t.seq_len();
+        let x = Tensor::randn(&[s, d], seed);
+        let y = t.forward(&x);
+        assert_eq!(y.shape(), x.shape(), "{} shape", t.name());
+        let back = t.inverse(&y);
+        let err = back.max_abs_diff(&x);
+        assert!(err < 1e-4, "{} reconstruction err {}", t.name(), err);
+        if t.orthogonal() {
+            let rel = (y.sq_norm() - x.sq_norm()).abs() / x.sq_norm();
+            assert!(rel < 1e-5, "{} energy not preserved: rel {}", t.name(), rel);
+        }
+    }
+
+    #[test]
+    fn identity_contract() {
+        check_seq_contract(&IdentitySeq::new(17), 5, 1);
+    }
+
+    #[test]
+    fn all_transforms_contract() {
+        for s in [16usize, 64, 256] {
+            check_seq_contract(&HaarDwt::new(s, 3), 8, 2);
+            check_seq_contract(&DctTransform::new(s), 8, 3);
+            check_seq_contract(&WhtTransform::new(s), 8, 4);
+        }
+        check_seq_contract(&HaarDwt2d::new(8, 8, 2), 8, 5);
+    }
+
+    #[test]
+    fn matrices_are_orthogonal() {
+        use crate::linalg::orthogonality_defect;
+        for t in [
+            Box::new(HaarDwt::new(32, 3)) as Box<dyn SequenceTransform>,
+            Box::new(DctTransform::new(32)),
+            Box::new(WhtTransform::new(32)),
+            Box::new(HaarDwt2d::new(4, 8, 2)),
+        ] {
+            let m = t.matrix();
+            assert!(
+                orthogonality_defect(&m) < 1e-4,
+                "{} defect {}",
+                t.name(),
+                orthogonality_defect(&m)
+            );
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! Sequency-ordered Walsh–Hadamard transform along the sequence dimension.
+//!
+//! The paper's middle option (§3.2): retain only the *sign* of the Fourier
+//! coefficients, which approximates the DCT while allowing an add/sub-only
+//! butterfly (Fino & Algazi 1976) — O(s log s) with no multiplies beyond
+//! the final 1/√s normalization. Rows are permuted from Hadamard (natural)
+//! order to **sequency** order so that, like the DCT, low-index outputs
+//! carry the smooth (high-energy) content of locally-correlated sequences.
+
+use super::SequenceTransform;
+use crate::tensor::Tensor;
+
+/// Sequency-ordered WHT; requires power-of-two sequence length.
+pub struct WhtTransform {
+    s: usize,
+    /// `perm[k]` = natural-order Hadamard row carrying sequency rank k.
+    perm: Vec<usize>,
+    /// Inverse permutation.
+    inv_perm: Vec<usize>,
+}
+
+impl WhtTransform {
+    pub fn new(s: usize) -> Self {
+        assert!(s.is_power_of_two(), "WHT needs power-of-two length, got {s}");
+        // Natural-order Hadamard row h has H[h, n] = (−1)^{popcount(h & n)}.
+        // Its sequency (number of sign changes over n = 0..s−1) is computed
+        // directly; sorting rows by sequency yields the Walsh ordering.
+        let mut seq_of_row: Vec<(usize, usize)> = (0..s)
+            .map(|h| {
+                let mut changes = 0usize;
+                let mut prev = 1i32;
+                for n in 0..s {
+                    let sign = if (h & n).count_ones() % 2 == 0 { 1 } else { -1 };
+                    if n > 0 && sign != prev {
+                        changes += 1;
+                    }
+                    prev = sign;
+                }
+                (changes, h)
+            })
+            .collect();
+        seq_of_row.sort();
+        let perm: Vec<usize> = seq_of_row.into_iter().map(|(_, h)| h).collect();
+        let mut inv_perm = vec![0usize; s];
+        for (k, &h) in perm.iter().enumerate() {
+            inv_perm[h] = k;
+        }
+        WhtTransform { s, perm, inv_perm }
+    }
+
+    /// In-place natural-order fast WHT butterfly over rows (unnormalized).
+    fn fwht_rows(x: &mut Tensor) {
+        let s = x.rows();
+        let d = x.cols();
+        let data = x.data_mut();
+        let mut len = 1usize;
+        while len < s {
+            let stride = len * 2;
+            for base in (0..s).step_by(stride) {
+                for i in base..base + len {
+                    let (a_off, b_off) = (i * d, (i + len) * d);
+                    for j in 0..d {
+                        let a = data[a_off + j];
+                        let b = data[b_off + j];
+                        data[a_off + j] = a + b;
+                        data[b_off + j] = a - b;
+                    }
+                }
+            }
+            len = stride;
+        }
+    }
+}
+
+impl SequenceTransform for WhtTransform {
+    fn name(&self) -> &'static str {
+        "wht"
+    }
+
+    fn seq_len(&self) -> usize {
+        self.s
+    }
+
+    fn forward(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.rows(), self.s);
+        let d = x.cols();
+        let mut t = x.clone();
+        Self::fwht_rows(&mut t);
+        let scale = 1.0 / (self.s as f32).sqrt();
+        // Permute natural order → sequency order and normalize.
+        let mut out = Tensor::zeros(&[self.s, d]);
+        for k in 0..self.s {
+            let src = self.perm[k] * d;
+            let dst = out.row_mut(k);
+            for j in 0..d {
+                dst[j] = t.data()[src + j] * scale;
+            }
+        }
+        out
+    }
+
+    fn inverse(&self, y: &Tensor) -> Tensor {
+        assert_eq!(y.rows(), self.s);
+        let d = y.cols();
+        // Un-permute, then apply the self-inverse butterfly.
+        let mut t = Tensor::zeros(&[self.s, d]);
+        for h in 0..self.s {
+            let src = self.inv_perm[h] * d;
+            t.row_mut(h).copy_from_slice(&y.data()[src..src + d]);
+        }
+        Self::fwht_rows(&mut t);
+        let scale = 1.0 / (self.s as f32).sqrt();
+        t.map_inplace(|v| v * scale);
+        t
+    }
+
+    fn flops(&self, d: usize) -> u64 {
+        // s log₂ s add/subs per feature + s normalizing multiplies.
+        let s = self.s as u64;
+        let logs = s.trailing_zeros() as u64;
+        (s * logs + s) * d as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::orthogonality_defect;
+
+    #[test]
+    fn matches_explicit_hadamard_4() {
+        let t = WhtTransform::new(4);
+        let m = t.matrix();
+        // Sequency-ordered Walsh rows for s=4 (normalized by 1/2):
+        // [+ + + +], [+ + − −], [+ − − +], [+ − + −]
+        let want = [
+            [0.5, 0.5, 0.5, 0.5],
+            [0.5, 0.5, -0.5, -0.5],
+            [0.5, -0.5, -0.5, 0.5],
+            [0.5, -0.5, 0.5, -0.5],
+        ];
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!((m.at(i, j) - want[i][j]).abs() < 1e-6, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn sequency_is_monotone() {
+        let t = WhtTransform::new(32);
+        let m = t.matrix();
+        let mut prev = 0usize;
+        for k in 0..32 {
+            let mut changes = 0usize;
+            for n in 1..32 {
+                if (m.at(k, n) > 0.0) != (m.at(k, n - 1) > 0.0) {
+                    changes += 1;
+                }
+            }
+            assert!(changes >= prev, "row {k}: sequency {changes} < {prev}");
+            assert_eq!(changes, k, "Walsh row k has exactly k sign changes");
+            prev = changes;
+        }
+    }
+
+    #[test]
+    fn orthonormal_and_roundtrip() {
+        let t = WhtTransform::new(64);
+        assert!(orthogonality_defect(&t.matrix()) < 1e-5);
+        let x = Tensor::randn(&[64, 9], 10);
+        assert!(t.inverse(&t.forward(&x)).max_abs_diff(&x) < 1e-5);
+    }
+
+    #[test]
+    fn constant_signal_to_first_row() {
+        let t = WhtTransform::new(16);
+        let x = Tensor::full(&[16, 2], 1.0);
+        let y = t.forward(&x);
+        let e0: f64 = y.row(0).iter().map(|v| (*v as f64).powi(2)).sum();
+        assert!((e0 / y.sq_norm() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_power_of_two() {
+        WhtTransform::new(24);
+    }
+}

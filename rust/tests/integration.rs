@@ -1,0 +1,221 @@
+//! Integration tests: cross-module flows that unit tests can't cover —
+//! calibrate → quantize → evaluate → serve, config-driven stack assembly,
+//! and coordinator end-to-end under a real quantized executor.
+
+use stamp::baselines::{ActQuantCfg, BaselineKind, QuantHook, QuantStack, WeightQuantCfg};
+use stamp::config::{RunConfig, ServeSpec};
+use stamp::coordinator::{Executor, Server};
+use stamp::data::{ActivationGenerator, ActivationSpec, Corpus, PromptSet};
+use stamp::eval::perplexity;
+use stamp::eval::tables::{calibrate_dit, calibrate_gpt};
+use stamp::model::{Dit, DitConfig, FpHook, Gpt, GptConfig};
+use stamp::stamp::{SeqTransformKind, Stamp, StampConfig};
+use stamp::stats::sqnr;
+use stamp::tensor::Tensor;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Calibrate → build stack → eval: the Table-2 pipeline on one model,
+/// asserting the full ordering FP < QuaRot+STaMP < QuaRot < RTN (in PPL).
+#[test]
+fn llm_pipeline_ordering() {
+    let corpus = Corpus::generate(20_000, 5);
+    let mut gpt = Gpt::new(GptConfig::tiny(), 6);
+    let tc = stamp::train::TrainConfig { steps: 80, ..Default::default() };
+    stamp::train::train_gpt(&mut gpt, &corpus, &tc, 1, |_, _| {});
+    gpt.inject_outlier_channels(2, 30.0);
+
+    let seqs_all = corpus.sequences(128);
+    let seqs: Vec<&[u32]> = seqs_all.iter().take(2).cloned().collect();
+    let stats = calibrate_gpt(&gpt, &corpus, 128);
+
+    let fp = perplexity(&gpt, &FpHook, &seqs);
+    let act = ActQuantCfg { hp_tokens: 8, ..ActQuantCfg::w4a4_per_token() };
+    let rtn = QuantStack::build(
+        BaselineKind::Rtn,
+        &stats,
+        Some(act.clone()),
+        Some(WeightQuantCfg::w4_per_channel()),
+        None,
+        1,
+    );
+    let quarot = QuantStack::build(
+        BaselineKind::QuaRot,
+        &stats,
+        Some(act.clone()),
+        Some(WeightQuantCfg::w4_per_channel()),
+        None,
+        1,
+    );
+    let quarot_stamp = QuantStack::build(
+        BaselineKind::QuaRot,
+        &stats,
+        Some(act),
+        Some(WeightQuantCfg::w4_per_channel()),
+        None,
+        1,
+    )
+    .with_stamp(QuantStack::llm_stamp(SeqTransformKind::HaarDwt));
+
+    let p_rtn = perplexity(&gpt, &QuantHook::new(&rtn), &seqs);
+    let p_qr = perplexity(&gpt, &QuantHook::new(&quarot), &seqs);
+    let p_qrs = perplexity(&gpt, &QuantHook::new(&quarot_stamp), &seqs);
+
+    assert!(fp < p_qrs, "fp {fp} !< quarot+stamp {p_qrs}");
+    assert!(p_qrs < p_rtn, "quarot+stamp {p_qrs} !< rtn {p_rtn}");
+    assert!(p_qr < p_rtn, "quarot {p_qr} !< rtn {p_rtn}");
+}
+
+/// The LVM pipeline end-to-end: calibrated SVDQuant+STaMP beats plain RTN
+/// on generation fidelity.
+#[test]
+fn lvm_pipeline_fidelity() {
+    let dit = Dit::new(
+        DitConfig { grid_h: 8, grid_w: 8, d_model: 64, n_heads: 4, n_layers: 2, d_ff: 128, ctx_tokens: 4, steps: 2 },
+        3,
+    );
+    let stats = calibrate_dit(&dit);
+    let act = ActQuantCfg { hp_tokens: 0, ..ActQuantCfg::w4a4_per_token() };
+    let rtn = QuantStack::build(BaselineKind::Rtn, &stats, Some(act.clone()), None, None, 2)
+        .with_lvm_skips();
+    let mut stamped_act = act;
+    stamped_act.hp_tokens = 8;
+    let svd_stamp =
+        QuantStack::build(BaselineKind::SvdQuant, &stats, Some(stamped_act), None, None, 2)
+            .with_lvm_skips()
+            .with_stamp(QuantStack::lvm_stamp(8, 8));
+
+    let prompt = PromptSet::coco().prompts[0];
+    let z_fp = dit.sample(&FpHook, prompt, 9);
+    let z_rtn = dit.sample(&QuantHook::new(&rtn), prompt, 9);
+    let z_ss = dit.sample(&QuantHook::new(&svd_stamp), prompt, 9);
+    let s_rtn = sqnr(&z_fp, &z_rtn);
+    let s_ss = sqnr(&z_fp, &z_ss);
+    assert!(s_ss > s_rtn, "svdquant+stamp {s_ss} !> rtn {s_rtn}");
+}
+
+/// Config file → stack assembly → evaluation (the CLI's serve path).
+#[test]
+fn config_driven_stack() {
+    let toml = r#"
+[model]
+kind = "gpt"
+variant = "tiny"
+seq_len = 128
+
+[quant]
+baseline = "smoothquant"
+stamp = true
+transform = "wht"
+act_bits = 4
+hp_tokens = 8
+"#;
+    let cfg = RunConfig::from_toml_str(toml).unwrap();
+    assert_eq!(cfg.quant.baseline_kind().unwrap(), Some(BaselineKind::SmoothQuant));
+    assert_eq!(cfg.quant.seq_transform().unwrap(), SeqTransformKind::Wht);
+    let act = cfg.quant.act_cfg();
+    assert_eq!(act.bits, 4);
+    assert_eq!(act.hp_tokens, 8);
+
+    // Assemble and run it.
+    let gpt = Gpt::new(GptConfig::tiny(), 8);
+    let corpus = Corpus::generate(2_000, 8);
+    let stats = calibrate_gpt(&gpt, &corpus, 128);
+    let mut stack = QuantStack::build(
+        cfg.quant.baseline_kind().unwrap().unwrap(),
+        &stats,
+        Some(act),
+        None,
+        None,
+        3,
+    );
+    if cfg.quant.stamp {
+        stack = stack.with_stamp(QuantStack::llm_stamp(cfg.quant.seq_transform().unwrap()));
+    }
+    let seqs_all = corpus.sequences(128);
+    let seqs: Vec<&[u32]> = seqs_all.iter().take(1).cloned().collect();
+    let p = perplexity(&gpt, &QuantHook::new(&stack), &seqs);
+    assert!(p.is_finite() && p > 1.0);
+}
+
+/// Coordinator serving a real STaMP-quantized executor: responses must be
+/// numerically identical to calling the quantizer inline (determinism
+/// across the threaded path) and batching must kick in.
+#[test]
+fn serve_quantized_deterministic() {
+    let s = 64;
+    let stamp = Arc::new(Stamp::new(
+        StampConfig { hp_tokens: 8, ..Default::default() },
+        s,
+    ));
+    let stamp2 = stamp.clone();
+    let executor: Arc<dyn Executor> = Arc::new(move |_v: &str, inputs: &[&Tensor]| {
+        Ok(inputs.iter().map(|x| stamp2.quantize_dequantize(x)).collect::<Vec<_>>())
+    });
+    let spec = ServeSpec { workers: 3, max_batch: 4, max_wait_us: 500, queue_depth: 32 };
+    let server = Server::start(&spec, &["stamp-a4"], executor);
+    let handle = server.handle();
+
+    let gen = ActivationGenerator::new(ActivationSpec {
+        outlier_channels: 0,
+        sink_scale: 0.0,
+        ..ActivationSpec::llm(s, 32)
+    });
+    let inputs: Vec<Tensor> = (0..24).map(|i| gen.sample(i)).collect();
+    let rxs: Vec<_> = inputs.iter().map(|x| handle.submit("stamp-a4", x.clone()).1).collect();
+    for (x, rx) in inputs.iter().zip(&rxs) {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        let out = resp.output.unwrap();
+        let want = stamp.quantize_dequantize(x);
+        assert!(out.max_abs_diff(&want) < 1e-6, "served result differs from inline");
+    }
+    let vm = handle.metrics.variant("stamp-a4");
+    assert!(vm.mean_batch_size() > 1.0, "batching never engaged");
+    server.shutdown();
+}
+
+/// Property: across random stacks, quantized logits stay finite and the
+/// FP stack is always exact — the hook layer never corrupts numerics.
+#[test]
+fn property_hook_numerics() {
+    let gpt = Gpt::new(GptConfig::tiny(), 10);
+    let corpus = Corpus::generate(2_000, 10);
+    let stats = calibrate_gpt(&gpt, &corpus, 64);
+    stamp::testkit::check(
+        "hook-numerics",
+        12,
+        0xABCD,
+        |g| {
+            let kind = match g.usize_in(0, 4) {
+                0 => BaselineKind::Rtn,
+                1 => BaselineKind::SmoothQuant,
+                2 => BaselineKind::QuaRot,
+                3 => BaselineKind::FlatQuant,
+                _ => BaselineKind::SvdQuant,
+            };
+            let bits = g.usize_in(2, 8) as u32;
+            let hp = g.usize_in(0, 16);
+            let stamp = g.usize_in(0, 1) == 1;
+            (kind, bits, hp, stamp)
+        },
+        |&(kind, bits, hp, stamp)| {
+            let act = ActQuantCfg {
+                bits,
+                hp_tokens: hp,
+                hp_bits: 8,
+                granularity: stamp::quant::Granularity::PerToken,
+                range_shrink: 1.0,
+            };
+            let mut s = QuantStack::build(kind, &stats, Some(act), None, None, 11);
+            if stamp {
+                s = s.with_stamp(QuantStack::llm_stamp(SeqTransformKind::HaarDwt));
+            }
+            let tokens: Vec<u32> = (0..64).map(|i| ((i * 3) % 70) as u32).collect();
+            let logits = gpt.logits_hooked(&QuantHook::new(&s), &tokens);
+            if !logits.all_finite() {
+                return Err(format!("non-finite logits for {kind:?} b={bits} hp={hp} stamp={stamp}"));
+            }
+            Ok(())
+        },
+    );
+}

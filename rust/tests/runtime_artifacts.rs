@@ -1,0 +1,92 @@
+//! Runtime integration: load every AOT artifact through PJRT and verify
+//! numerics against the quantization semantics implemented in Rust.
+//! Skipped (with a notice) when `make artifacts` hasn't run.
+
+use stamp::quant::{BitAllocation, Granularity, QuantScheme};
+use stamp::runtime::{ArtifactRegistry, Engine};
+use stamp::stats::sqnr;
+use stamp::tensor::Tensor;
+use stamp::transforms::{HaarDwt, SequenceTransform};
+
+fn registry() -> Option<ArtifactRegistry> {
+    let dir = std::env::var("STAMP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    match ArtifactRegistry::load(&dir) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("skipping runtime tests: {e} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn all_artifacts_compile_and_run() {
+    let Some(reg) = registry() else { return };
+    let engine = Engine::cpu().expect("PJRT CPU client");
+    assert!(!reg.entries().is_empty());
+    for entry in reg.entries() {
+        let exe = engine.load(&reg.path_for(entry)).unwrap_or_else(|e| panic!("{e}"));
+        let inputs: Vec<Tensor> = entry
+            .input_shapes()
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Tensor::randn(s, 40 + i as u64).scale(0.2))
+            .collect();
+        let outputs = engine.run(&exe, &inputs).unwrap_or_else(|e| panic!("{}: {e}", entry.name));
+        let out_shapes = entry.output_shapes();
+        assert_eq!(outputs.len(), out_shapes.len(), "{}", entry.name);
+        for (o, s) in outputs.iter().zip(&out_shapes) {
+            assert_eq!(o.shape(), &s[..], "{}", entry.name);
+            assert!(o.all_finite(), "{}: non-finite", entry.name);
+        }
+    }
+}
+
+/// The `stamp_qdq` artifact (Pallas DWT + mixed QDQ lowered by jax) must
+/// match the Rust-native implementation of the same math — the strongest
+/// cross-layer consistency check in the repo.
+#[test]
+fn stamp_qdq_artifact_matches_rust() {
+    let Some(reg) = registry() else { return };
+    let Some(entry) = reg.get("stamp_qdq") else { return };
+    let engine = Engine::cpu().expect("PJRT CPU client");
+    let exe = engine.load(&reg.path_for(entry)).expect("compiles");
+    let shape = &entry.input_shapes()[0];
+    let s = shape[0];
+
+    let x = Tensor::randn(shape, 77).scale(1.3);
+    let got = engine.run(&exe, &[x.clone()]).expect("runs").remove(0);
+
+    // Rust-native: 3-level DWT + two-level {8b x 8, 4b} per-token QDQ.
+    let dwt = HaarDwt::new(s, 3);
+    let scheme = QuantScheme {
+        granularity: Granularity::PerToken,
+        bits: BitAllocation::two_level(8, 8, 4),
+    };
+    let want = dwt.inverse(&scheme.apply(&dwt.forward(&x)));
+
+    let fidelity = sqnr(&want, &got);
+    assert!(
+        fidelity > 35.0,
+        "jax-lowered and rust-native STaMP QDQ disagree: {fidelity:.1} dB"
+    );
+}
+
+/// FP model artifact sanity: output differs from input (it computes) and
+/// the quantized-model artifact tracks the FP one at reasonable fidelity.
+#[test]
+fn model_artifacts_consistent() {
+    let Some(reg) = registry() else { return };
+    let (Some(fp), Some(qt)) = (reg.get("model_fp"), reg.get("model_stamp")) else { return };
+    let engine = Engine::cpu().expect("PJRT CPU client");
+    let fp_exe = engine.load(&reg.path_for(fp)).expect("fp compiles");
+    let qt_exe = engine.load(&reg.path_for(qt)).expect("stamp compiles");
+    let shape = &fp.input_shapes()[0];
+    let x = Tensor::randn(shape, 99).scale(0.5);
+    let y_fp = engine.run(&fp_exe, &[x.clone()]).expect("fp runs").remove(0);
+    let y_qt = engine.run(&qt_exe, &[x.clone()]).expect("stamp runs").remove(0);
+    assert!(y_fp.max_abs_diff(&x) > 1e-3, "model is not the identity");
+    let fidelity = sqnr(&y_fp, &y_qt);
+    assert!(fidelity > 3.0, "quantized model too far from FP: {fidelity:.1} dB");
+    assert!(fidelity.is_finite(), "quantized model identical to FP — quant not applied?");
+}
