@@ -1,0 +1,24 @@
+# Convenience targets. `artifacts` is the optional PJRT compile path
+# (python/compile/README.md); everything Rust goes through cargo directly.
+
+ARTIFACTS_DIR ?= artifacts
+
+.PHONY: build test bench artifacts clean
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench --bench microbench
+
+# Lower the jax/Pallas kernels + model forwards to HLO-text artifacts
+# consumed by `--features pjrt` builds (requires a Python env with jax).
+artifacts:
+	python3 -m python.compile.aot --out-dir $(ARTIFACTS_DIR)
+
+clean:
+	cargo clean
+	rm -rf $(ARTIFACTS_DIR)

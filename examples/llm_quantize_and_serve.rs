@@ -1,4 +1,4 @@
-//! END-TO-END DRIVER (DESIGN.md §validation): proves all layers compose.
+//! END-TO-END DRIVER (rust/DESIGN.md §8, validation): proves all layers compose.
 //!
 //! 1. Train a tiny GPT on the synthetic corpus (logging the loss curve);
 //! 2. post-training-quantize it W4A4KV4 (RTN) ± STaMP,

@@ -8,8 +8,12 @@
 //! channel. This mirrors production single-device serving layouts.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example pjrt_serving
+//! make artifacts && cargo run --release --features pjrt --example pjrt_serving
 //! ```
+//!
+//! Requires the `pjrt` cargo feature (this example is gated behind
+//! `required-features` in `rust/Cargo.toml`); the default build serves the
+//! same coordinator path through `stamp::runtime::NativeExecutor` instead.
 
 use stamp::config::ServeSpec;
 use stamp::coordinator::{Executor, Server};
@@ -27,7 +31,7 @@ struct DeviceJob {
     reply: mpsc::Sender<Result<Tensor, String>>,
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> stamp::error::Result<()> {
     let dir = std::env::var("STAMP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     let reg = match ArtifactRegistry::load(&dir) {
         Ok(r) => r,
@@ -98,10 +102,10 @@ fn main() -> anyhow::Result<()> {
 
     println!("compiling {} artifacts on the device-owner thread…", variants.len());
     loop {
-        match ready_rx.recv().map_err(|e| anyhow::anyhow!("device thread died: {e}"))? {
+        match ready_rx.recv().map_err(|e| stamp::err!("device thread died: {e}"))? {
             Ok(msg) if msg == "__ready__" => break,
             Ok(msg) => println!("{msg}"),
-            Err(e) => anyhow::bail!("artifact load failed: {e}"),
+            Err(e) => stamp::bail!("artifact load failed: {e}"),
         }
     }
 

@@ -2,7 +2,7 @@
 
 HLO text (NOT `.serialize()`): jax ≥ 0.5 emits HloModuleProtos with 64-bit
 instruction ids that the runtime's xla_extension 0.5.1 rejects; the text
-parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+parser reassigns ids and round-trips cleanly (rust/DESIGN.md §4).
 
 Run via `make artifacts` (no-op when inputs are unchanged). Python never
 runs at request time — the Rust binary is self-contained afterwards.

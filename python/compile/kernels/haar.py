@@ -1,6 +1,6 @@
 """L1 Pallas kernel: multi-level Haar DWT along the sequence dimension.
 
-TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the *feature*
+TPU mapping (rust/DESIGN.md §9, hardware adaptation): the grid tiles the *feature*
 dimension so each grid step streams an (s × D_TILE) panel HBM→VMEM, runs
 ALL `levels` butterfly steps on the resident panel, and writes back once —
 one HBM round-trip instead of `levels` (the paper's memory-layout-aware
@@ -8,7 +8,8 @@ CUDA kernel, rethought for VMEM). The sequence dimension stays whole inside
 the block because every level's butterfly is a strided add/sub over it.
 
 interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
-custom-calls; real-TPU perf is estimated analytically in EXPERIMENTS.md.
+custom-calls; real-TPU perf is estimated analytically in
+rust/EXPERIMENTS.md §Hardware notes.
 """
 
 import functools

@@ -6,7 +6,7 @@
 use stamp::bench::Harness;
 use stamp::coordinator::{DynamicBatcher, Request};
 use stamp::quant::{BitAllocation, Granularity, QuantScheme};
-use stamp::tensor::{matmul, Tensor};
+use stamp::tensor::{matmul, matmul_transb, Tensor};
 use stamp::transforms::{
     DctTransform, HaarDwt, HadamardFeature, SequenceTransform, WhtTransform,
 };
@@ -15,6 +15,10 @@ use std::time::{Duration, Instant};
 
 fn main() {
     let mut h = Harness::new();
+    println!(
+        "threads: {} (set STAMP_THREADS=1 for the serial baseline)",
+        stamp::parallel::num_threads()
+    );
     let s = 2048usize;
     let d = 512usize;
     let x = Tensor::randn(&[s, d], 1);
@@ -55,6 +59,19 @@ fn main() {
     let st = h.bench("matmul 256x512x512", || matmul(&a, &w));
     let flops = 2.0 * 256.0 * 512.0 * 512.0;
     println!("    -> {:.2} GFLOP/s", st.throughput(flops) / 1e9);
+
+    // Square sizes (m=n=k): the EXPERIMENTS.md §Perf threading table.
+    Harness::header("matmul m=n=k (threaded vs STAMP_THREADS=1)");
+    for n in [256usize, 512] {
+        let a = Tensor::randn(&[n, n], 6);
+        let b = Tensor::randn(&[n, n], 7);
+        let st = h.bench(&format!("matmul {n}x{n}x{n}"), || matmul(&a, &b));
+        let flops = 2.0 * (n as f64).powi(3);
+        println!("    -> {:.2} GFLOP/s", st.throughput(flops) / 1e9);
+        let bt = Tensor::randn(&[n, n], 8);
+        let st = h.bench(&format!("matmul_transb {n}x({n}x{n})"), || matmul_transb(&a, &bt));
+        println!("    -> {:.2} GFLOP/s", st.throughput(flops) / 1e9);
+    }
 
     Harness::header("coordinator hot path");
     let st = h.bench("batcher push+flush (batch 8)", || {

@@ -71,13 +71,18 @@ impl RunConfig {
                 hp_bits: 8,
                 act_block: 0,
             },
-            serve: ServeSpec { workers: 2, max_batch: 8, max_wait_us: 2000, queue_depth: 256 },
+            serve: ServeSpec {
+                workers: crate::coordinator::WorkerPool::default_workers(),
+                max_batch: 8,
+                max_wait_us: 2000,
+                queue_depth: 256,
+            },
             artifacts_dir: "artifacts".into(),
         }
     }
 
-    pub fn from_toml_str(text: &str) -> anyhow::Result<Self> {
-        let doc = Toml::parse(text).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    pub fn from_toml_str(text: &str) -> crate::error::Result<Self> {
+        let doc = Toml::parse(text).map_err(crate::error::Error::msg)?;
         let d = Self::defaults();
         Ok(RunConfig {
             model: ModelSpec {
@@ -109,15 +114,15 @@ impl RunConfig {
         })
     }
 
-    pub fn from_file(path: &str) -> anyhow::Result<Self> {
+    pub fn from_file(path: &str) -> crate::error::Result<Self> {
         let text = std::fs::read_to_string(path)
-            .map_err(|e| anyhow::anyhow!("reading config {path}: {e}"))?;
+            .map_err(|e| crate::err!("reading config {path}: {e}"))?;
         Self::from_toml_str(&text)
     }
 }
 
 impl QuantSpec {
-    pub fn baseline_kind(&self) -> anyhow::Result<Option<BaselineKind>> {
+    pub fn baseline_kind(&self) -> crate::error::Result<Option<BaselineKind>> {
         Ok(Some(match self.baseline.as_str() {
             "fp" => return Ok(None),
             "rtn" => BaselineKind::Rtn,
@@ -126,17 +131,17 @@ impl QuantSpec {
             "flatquant" => BaselineKind::FlatQuant,
             "viditq" => BaselineKind::ViDitQ,
             "svdquant" => BaselineKind::SvdQuant,
-            other => anyhow::bail!("unknown baseline `{other}`"),
+            other => crate::bail!("unknown baseline `{other}`"),
         }))
     }
 
-    pub fn seq_transform(&self) -> anyhow::Result<crate::stamp::SeqTransformKind> {
+    pub fn seq_transform(&self) -> crate::error::Result<crate::stamp::SeqTransformKind> {
         Ok(match self.transform.as_str() {
             "dwt" => crate::stamp::SeqTransformKind::HaarDwt,
             "dct" => crate::stamp::SeqTransformKind::Dct,
             "wht" => crate::stamp::SeqTransformKind::Wht,
             "identity" => crate::stamp::SeqTransformKind::Identity,
-            other => anyhow::bail!("unknown sequence transform `{other}`"),
+            other => crate::bail!("unknown sequence transform `{other}`"),
         })
     }
 

@@ -1,6 +1,13 @@
 //! Worker pool: N std threads draining a bounded batch queue and running
 //! an [`Executor`]. Bounded queues give natural backpressure: the router
 //! blocks (or sheds) when workers fall behind.
+//!
+//! Sizing comes from the same [`crate::parallel`] policy the tensor/quant
+//! kernels use (`STAMP_THREADS`), via [`WorkerPool::default_workers`], and
+//! worker threads are marked kernel-serial
+//! ([`crate::parallel::set_kernel_serial`]): kernels invoked from a worker
+//! run on that worker's thread alone, so batch-level and kernel-level
+//! parallelism never multiply into oversubscription.
 
 use super::{Batch, Metrics, Response};
 use crate::tensor::Tensor;
@@ -33,6 +40,15 @@ pub struct WorkerPool {
 }
 
 impl WorkerPool {
+    /// Worker count used when a config doesn't pin one: the crate-wide
+    /// thread policy ([`crate::parallel::num_threads`], i.e.
+    /// `STAMP_THREADS` when set), capped at 8. Workers run kernels
+    /// serially (see [`crate::parallel::set_kernel_serial`]), so N workers
+    /// use ≈ N cores; the cap just bounds idle threads on very wide hosts.
+    pub fn default_workers() -> usize {
+        crate::parallel::num_threads().clamp(1, 8)
+    }
+
     pub fn new(
         workers: usize,
         queue_depth: usize,
@@ -88,6 +104,9 @@ impl WorkerPool {
 }
 
 fn worker_loop(rx: Arc<Mutex<Receiver<Batch>>>, executor: Arc<dyn Executor>, metrics: Arc<Metrics>) {
+    // Workers own the cores at batch granularity; kernels they call run
+    // serially so inter-op × intra-op parallelism can't oversubscribe.
+    crate::parallel::set_kernel_serial(true);
     loop {
         // Hold the lock only while receiving so workers pull concurrently.
         let batch = match rx.lock().unwrap().recv() {

@@ -1,0 +1,139 @@
+//! Crate-wide error type: a minimal, dependency-free stand-in for `anyhow`
+//! (DESIGN.md §3 crate-availability substitutions).
+//!
+//! The repo's error handling is message-shaped — configs that fail to
+//! parse, artifacts that fail to load — so a single string-carrying
+//! [`Error`] plus the `err!`/`bail!` macros (exported at the crate root)
+//! cover every call site without pulling a dependency into the default
+//! build.
+//!
+//! ```
+//! use stamp::error::{Error, Result};
+//!
+//! fn parse_bits(s: &str) -> Result<u32> {
+//!     let b: u32 = s.parse()?; // std error types convert via `?`
+//!     if b == 0 {
+//!         stamp::bail!("bit width must be positive, got `{s}`");
+//!     }
+//!     Ok(b)
+//! }
+//!
+//! assert_eq!(parse_bits("4").unwrap(), 4);
+//! assert!(parse_bits("zero").is_err());
+//! assert!(parse_bits("0").unwrap_err().to_string().contains("positive"));
+//! ```
+
+/// A boxed, message-carrying error.
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl std::fmt::Display) -> Self {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error { msg: s }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Self {
+        Error { msg: s.to_string() }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::msg(e)
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Self {
+        Error::msg(e)
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Self {
+        Error::msg(e)
+    }
+}
+
+impl From<std::fmt::Error> for Error {
+    fn from(e: std::fmt::Error) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// Construct an [`Error`](crate::error::Error) from a format string.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`](crate::error::Error) built from a format
+/// string (the `anyhow::bail!` shape).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_message() {
+        let e = Error::msg("boom");
+        assert_eq!(e.to_string(), "boom");
+        assert!(format!("{e:?}").contains("boom"));
+    }
+
+    #[test]
+    fn converts_from_std_errors() {
+        fn inner() -> Result<u32> {
+            Ok("17".parse::<u32>()?)
+        }
+        assert_eq!(inner().unwrap(), 17);
+        fn bad() -> Result<u32> {
+            Ok("x".parse::<u32>()?)
+        }
+        assert!(bad().is_err());
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = err!("bad value `{}`", 7);
+        assert_eq!(e.to_string(), "bad value `7`");
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(f(-1).unwrap_err().to_string().contains("negative"));
+    }
+}

@@ -9,8 +9,11 @@
 //!
 //! The crate is organised in three layers:
 //!
-//! * **Substrates** — [`tensor`], [`linalg`], [`stats`]: dense f32 math,
-//!   a Jacobi eigensolver (for the KLT), autocorrelation estimation.
+//! * **Substrates** — [`tensor`], [`linalg`], [`stats`], [`parallel`]:
+//!   dense f32 math with row-parallel hot kernels, a Jacobi eigensolver
+//!   (for the KLT), autocorrelation estimation, and the scoped fork-join
+//!   layer (`STAMP_THREADS` override) the kernels and the coordinator
+//!   share.
 //! * **Core library** — [`transforms`] (KLT / DCT / WHT / Haar-DWT sequence
 //!   transforms and Hadamard / SmoothQuant / FlatQuant feature transforms),
 //!   [`quant`] (per-token / per-block quantizers, mixed-precision bit
@@ -18,13 +21,27 @@
 //!   SmoothQuant, QuaRot, ViDiT-Q SDCB, SVDQuant, FlatQuant-lite),
 //!   [`model`] (tiny GPT / DiT with quantization hook points), [`eval`]
 //!   (perplexity, SQNR, the paper's table harnesses).
-//! * **Runtime** — [`runtime`] (PJRT client: load AOT-lowered HLO text
-//!   produced by `python/compile/aot.py` and execute it) and
-//!   [`coordinator`] (request router, dynamic batcher, worker pools,
-//!   metrics) so quantized variants can be *served*, not just evaluated.
+//! * **Runtime** — [`runtime`] (the always-available pure-Rust
+//!   `NativeExecutor`, plus — behind the `pjrt` cargo feature — the PJRT
+//!   client that loads AOT-lowered HLO text produced by
+//!   `python/compile/aot.py`) and [`coordinator`] (request router, dynamic
+//!   batcher, worker pools, metrics) so quantized variants can be
+//!   *served*, not just evaluated.
 //!
 //! Python/JAX/Pallas exists only on the compile path (`python/compile/`);
-//! the request path is pure Rust + PJRT.
+//! the request path is pure Rust (+ PJRT when the `pjrt` feature is on).
+//! Default builds have **zero external dependencies** — see README.md for
+//! the feature matrix and DESIGN.md §3 for the stand-in policy.
+
+// CI lints with `clippy -- -D warnings` (.github/workflows/ci.yml). The
+// hand-rolled substrate code (DESIGN.md §3) deliberately uses explicit
+// index arithmetic mirroring the paper's notation, and several types keep
+// argument-taking constructors without a meaningful `Default`.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::new_without_default,
+    clippy::too_many_arguments
+)]
 
 pub mod baselines;
 pub mod bench;
@@ -32,9 +49,11 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod error;
 pub mod eval;
 pub mod linalg;
 pub mod model;
+pub mod parallel;
 pub mod quant;
 pub mod report;
 pub mod runtime;

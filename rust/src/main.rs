@@ -4,7 +4,7 @@
 //! run the quantized-variant serving demo over the coordinator, and train
 //! the tiny evaluation models. See `stamp help`.
 
-use anyhow::Result;
+use stamp::error::Result;
 use stamp::baselines::{BaselineKind, QuantHook, QuantStack};
 use stamp::cli::{emit, Args, HELP};
 use stamp::config::RunConfig;
@@ -60,7 +60,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
             emit(&llm, csv.as_deref());
         }
         "fig9" => emit(&tables::fig9_blockq(&opts), csv.as_deref()),
-        other => anyhow::bail!("unknown eval target `{other}` (see `stamp help`)"),
+        other => stamp::bail!("unknown eval target `{other}` (see `stamp help`)"),
     }
     Ok(())
 }
@@ -148,7 +148,7 @@ fn cmd_report(args: &Args) -> Result<()> {
             t.row(vec!["2-level {8,low}".into(), format!("{:.5}", c.two_level_objective)]);
             emit(&t, csv.as_deref());
         }
-        other => anyhow::bail!("unknown report target `{other}`"),
+        other => stamp::bail!("unknown report target `{other}`"),
     }
     Ok(())
 }
@@ -248,12 +248,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 fn cmd_info() -> Result<()> {
     println!("stamp reproduction — crate {}", env!("CARGO_PKG_VERSION"));
+    println!(
+        "threads: {} (STAMP_THREADS={})",
+        stamp::parallel::num_threads(),
+        std::env::var("STAMP_THREADS").unwrap_or_else(|_| "unset".into())
+    );
+    #[cfg(feature = "pjrt")]
     match stamp::runtime::Engine::cpu() {
         Ok(engine) => {
             println!("PJRT platform: {} ({} device(s))", engine.platform(), engine.device_count());
         }
         Err(e) => println!("PJRT unavailable: {e}"),
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("PJRT: disabled (build with `--features pjrt`; native executor always available)");
     match stamp::runtime::ArtifactRegistry::load("artifacts") {
         Ok(reg) => {
             println!("artifacts ({}):", reg.entries().len());

@@ -1,0 +1,306 @@
+//! Home-grown data parallelism for the hot paths (DESIGN.md §7).
+//!
+//! One policy, two consumers:
+//!
+//! * **Fork-join kernels** — [`for_each_chunk_mut`] / [`for_row_chunks`] /
+//!   [`join_chunks`] split a row-major buffer into one contiguous chunk
+//!   per worker and run a closure on each via `std::thread::scope`, so
+//!   borrowed (non-`'static`) data flows in without `Arc` gymnastics.
+//!   Used by [`crate::tensor::matmul`] and the per-token QDQ loop in
+//!   [`crate::quant`].
+//! * **Long-lived workers** — [`crate::coordinator::WorkerPool`] sizes its
+//!   thread count from the same [`num_threads`] policy, and worker threads
+//!   are marked [`set_kernel_serial`]: kernels invoked from a pool worker
+//!   run serially, so batch-level (inter-op) and kernel-level (intra-op)
+//!   parallelism never multiply into oversubscription — one knob
+//!   (`STAMP_THREADS`) governs the whole process.
+//!
+//! The degree of parallelism is resolved once per process:
+//! `STAMP_THREADS` if set (a value of `1` forces the serial fallback on
+//! every path), else `std::thread::available_parallelism()`. Kernels also
+//! fall back to the serial path when the work is too small to amortize a
+//! thread spawn ([`MIN_PARALLEL_ELEMS`]), so tiny tensors — the bulk of the
+//! unit-test workload — never pay the fork-join cost.
+
+use std::sync::OnceLock;
+
+/// Below this many `f32` elements of work a kernel stays single-threaded;
+/// spawn + join costs ~10–40 µs per worker, which a 64×64 matmul would
+/// never win back.
+pub const MIN_PARALLEL_ELEMS: usize = 64 * 1024;
+
+static NUM_THREADS: OnceLock<usize> = OnceLock::new();
+
+/// Worker count used by all parallel paths, resolved once per process.
+///
+/// Priority: `STAMP_THREADS` env var (clamped to `[1, 256]`; unparsable
+/// values are ignored), then `std::thread::available_parallelism()`, then 1.
+pub fn num_threads() -> usize {
+    *NUM_THREADS.get_or_init(|| {
+        if let Ok(v) = std::env::var("STAMP_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n >= 1 {
+                    return n.min(256);
+                }
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+thread_local! {
+    /// Set on coordinator worker threads: kernels called from them stay
+    /// serial (the pool already owns the cores at batch granularity).
+    static KERNEL_SERIAL: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Mark (or unmark) the current thread as kernel-serial. Called by
+/// [`crate::coordinator::WorkerPool`] worker threads at startup; test
+/// harnesses may use it to pin the serial path explicitly.
+pub fn set_kernel_serial(serial: bool) {
+    KERNEL_SERIAL.with(|c| c.set(serial));
+}
+
+/// Whether kernels on the current thread must run serially.
+pub fn kernel_serial() -> bool {
+    KERNEL_SERIAL.with(|c| c.get())
+}
+
+/// Worker count for a kernel on *this* thread: 1 on kernel-serial
+/// (coordinator worker) threads, [`num_threads`] otherwise. Fork-join
+/// helpers gate on this, not on [`num_threads`] directly.
+pub fn effective_threads() -> usize {
+    if kernel_serial() {
+        1
+    } else {
+        num_threads()
+    }
+}
+
+/// Split `n` items into at most `workers` contiguous ranges of
+/// near-equal length. Returns `(start, end)` pairs covering `0..n`.
+pub fn split_ranges(n: usize, workers: usize) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    let base = n / workers;
+    let extra = n % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut start = 0;
+    for w in 0..workers {
+        let len = base + usize::from(w < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+/// Run `f(chunk_index, row_range, chunk)` over `rows` equal row-chunks of a
+/// row-major `rows × row_len` buffer, one chunk per worker.
+///
+/// Serial when [`effective_threads`] is 1, when there is a single chunk,
+/// or when the buffer is smaller than [`MIN_PARALLEL_ELEMS`] — the closure
+/// then runs on the caller's thread with identical semantics (and
+/// identical floating-point results: parallelism only changes *who*
+/// computes a row, never the reduction order within it).
+pub fn for_each_chunk_mut<T, F>(data: &mut [T], rows: usize, row_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, (usize, usize), &mut [T]) + Sync,
+{
+    assert_eq!(data.len(), rows * row_len, "buffer is not rows × row_len");
+    let threads = effective_threads();
+    let ranges = split_ranges(rows, threads);
+    if threads == 1 || ranges.len() <= 1 || data.len() < MIN_PARALLEL_ELEMS {
+        f(0, (0, rows), data);
+        return;
+    }
+    std::thread::scope(|scope| {
+        let mut rest = data;
+        let mut consumed = 0usize;
+        for (i, &(r0, r1)) in ranges.iter().enumerate() {
+            let take = (r1 - r0) * row_len;
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(take);
+            rest = tail;
+            consumed += take;
+            let fr = &f;
+            scope.spawn(move || fr(i, (r0, r1), chunk));
+        }
+        debug_assert_eq!(consumed, rows * row_len);
+    });
+}
+
+/// Fork-join a row-chunked kernel over a `rows × row_len` output buffer,
+/// gated on a caller-supplied **work** estimate (e.g. `m·n·k` multiply-adds
+/// for a matmul, where the output alone understates the cost of a
+/// tall-inner-dimension product). Runs `f(chunk, r0, r1)` per worker;
+/// serial — on the caller's thread, same semantics — when
+/// [`effective_threads`] is 1, `rows < 2` (rows are the only split axis),
+/// or `work < MIN_PARALLEL_ELEMS`.
+pub fn for_row_chunks<T, F>(out: &mut [T], rows: usize, row_len: usize, work: usize, f: F)
+where
+    T: Send,
+    F: Fn(&mut [T], usize, usize) + Sync,
+{
+    assert_eq!(out.len(), rows * row_len, "buffer is not rows × row_len");
+    let threads = effective_threads();
+    if threads == 1 || rows < 2 || work < MIN_PARALLEL_ELEMS {
+        f(out, 0, rows);
+        return;
+    }
+    let ranges = split_ranges(rows, threads);
+    if ranges.len() <= 1 {
+        f(out, 0, rows);
+        return;
+    }
+    std::thread::scope(|scope| {
+        let mut rest = out;
+        for &(r0, r1) in &ranges {
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut((r1 - r0) * row_len);
+            rest = tail;
+            let fr = &f;
+            scope.spawn(move || fr(chunk, r0, r1));
+        }
+    });
+}
+
+/// Fork-join over precomputed ranges with shared read-only context: runs
+/// `f(range)` for every range concurrently (serially when
+/// [`effective_threads`] is 1 or only one range is given). Unlike
+/// [`for_each_chunk_mut`] nothing is borrowed mutably — writers coordinate
+/// through interior mutability or disjoint outputs of their own.
+pub fn join_chunks<F>(ranges: &[(usize, usize)], f: F)
+where
+    F: Fn((usize, usize)) + Sync,
+{
+    if effective_threads() == 1 || ranges.len() <= 1 {
+        for &r in ranges {
+            f(r);
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        for &r in ranges {
+            let fr = &f;
+            scope.spawn(move || fr(r));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_covers_everything() {
+        for n in [0usize, 1, 7, 64, 1000] {
+            for w in [1usize, 2, 3, 8, 64] {
+                let ranges = split_ranges(n, w);
+                let total: usize = ranges.iter().map(|(a, b)| b - a).sum();
+                assert_eq!(total, n, "n={n} w={w}");
+                // Contiguous and ordered.
+                let mut cursor = 0;
+                for &(a, b) in &ranges {
+                    assert_eq!(a, cursor);
+                    assert!(b > a);
+                    cursor = b;
+                }
+                assert!(ranges.len() <= w.max(1));
+            }
+        }
+    }
+
+    #[test]
+    fn split_balances_within_one() {
+        let ranges = split_ranges(10, 3);
+        let lens: Vec<usize> = ranges.iter().map(|(a, b)| b - a).collect();
+        assert_eq!(lens.iter().sum::<usize>(), 10);
+        assert!(lens.iter().max().unwrap() - lens.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn chunked_map_touches_every_row_once() {
+        // Large enough to take the parallel path on multi-core hosts.
+        let rows = 512;
+        let row_len = 256;
+        let mut data = vec![0.0f32; rows * row_len];
+        for_each_chunk_mut(&mut data, rows, row_len, |_idx, (r0, _r1), chunk| {
+            for (local, row) in chunk.chunks_mut(row_len).enumerate() {
+                let global = r0 + local;
+                for v in row.iter_mut() {
+                    *v += global as f32;
+                }
+            }
+        });
+        for r in 0..rows {
+            assert!(data[r * row_len..(r + 1) * row_len].iter().all(|&v| v == r as f32));
+        }
+    }
+
+    #[test]
+    fn small_buffers_run_serially_with_full_range() {
+        let mut data = vec![1.0f32; 8];
+        let mut seen = Vec::new();
+        // Single chunk ⇒ the closure must receive the whole range.
+        for_each_chunk_mut(&mut data, 4, 2, |idx, range, chunk| {
+            // Serial path: safe to capture mutably via a pointer-free check.
+            assert_eq!(idx, 0);
+            assert_eq!(range, (0, 4));
+            assert_eq!(chunk.len(), 8);
+        });
+        seen.push(1);
+        assert_eq!(seen.len(), 1);
+    }
+
+    #[test]
+    fn join_chunks_runs_all_ranges() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let total = AtomicUsize::new(0);
+        let ranges = split_ranges(100, 4);
+        join_chunks(&ranges, |(a, b)| {
+            total.fetch_add(b - a, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn num_threads_is_stable_and_positive() {
+        let a = num_threads();
+        let b = num_threads();
+        assert_eq!(a, b);
+        assert!(a >= 1);
+    }
+
+    #[test]
+    fn row_chunks_cover_buffer_exactly_once() {
+        let (rows, row_len) = (300, 8);
+        let mut data = vec![0.0f32; rows * row_len];
+        // Work forced above the threshold so the parallel path runs on
+        // multi-core hosts.
+        for_row_chunks(&mut data, rows, row_len, MIN_PARALLEL_ELEMS, |chunk, r0, _r1| {
+            for (local, row) in chunk.chunks_mut(row_len).enumerate() {
+                for v in row.iter_mut() {
+                    *v += (r0 + local) as f32;
+                }
+            }
+        });
+        for r in 0..rows {
+            assert!(data[r * row_len..(r + 1) * row_len].iter().all(|&v| v == r as f32));
+        }
+    }
+
+    #[test]
+    fn kernel_serial_flag_is_per_thread() {
+        assert!(!kernel_serial());
+        set_kernel_serial(true);
+        assert!(kernel_serial());
+        assert_eq!(effective_threads(), 1);
+        // Other threads are unaffected.
+        std::thread::scope(|s| {
+            s.spawn(|| assert!(!kernel_serial()));
+        });
+        set_kernel_serial(false);
+        assert_eq!(effective_threads(), num_threads());
+    }
+}

@@ -54,9 +54,19 @@ impl QuantParams {
 }
 
 /// Quantize-dequantize an `s×d` matrix row-wise with per-token bit widths.
+///
+/// Every token (row) is an independent quantization problem once its
+/// parameters are known, so the row loop runs chunked across the
+/// [`crate::parallel`] workers for all three granularities; per-tensor
+/// granularity first takes its one global min/max pass serially. Results
+/// are bit-identical to the serial loop (each row's arithmetic is
+/// untouched — only which thread computes it changes).
 pub fn quantize_dequantize_rows(x: &Tensor, bits: &BitAllocation, gran: Granularity) -> Tensor {
     let (s, d) = (x.rows(), x.cols());
     let mut out = x.clone();
+    if s == 0 || d == 0 {
+        return out;
+    }
     match gran {
         Granularity::PerTensor => {
             // One scale — but bit width may still vary per token, so compute
@@ -68,31 +78,36 @@ pub fn quantize_dequantize_rows(x: &Tensor, bits: &BitAllocation, gran: Granular
                 mn = mn.min(v);
                 mx = mx.max(v);
             }
-            for i in 0..s {
-                let b = bits.bits_for(i, s);
-                let qmax = ((1u64 << b) - 1) as f32;
-                let scale = (mx - mn).max(1e-12) / qmax;
-                let zero = (-mn / scale).round_ties_even();
-                QuantParams { scale, zero, qmax }.qdq_slice(out.row_mut(i));
-            }
+            crate::parallel::for_each_chunk_mut(out.data_mut(), s, d, |_, (r0, _), chunk| {
+                for (local, row) in chunk.chunks_mut(d).enumerate() {
+                    let b = bits.bits_for(r0 + local, s);
+                    let qmax = ((1u64 << b) - 1) as f32;
+                    let scale = (mx - mn).max(1e-12) / qmax;
+                    let zero = (-mn / scale).round_ties_even();
+                    QuantParams { scale, zero, qmax }.qdq_slice(row);
+                }
+            });
         }
         Granularity::PerToken => {
-            for i in 0..s {
-                let b = bits.bits_for(i, s);
-                let p = QuantParams::min_max(out.row(i), b);
-                p.qdq_slice(out.row_mut(i));
-            }
+            crate::parallel::for_each_chunk_mut(out.data_mut(), s, d, |_, (r0, _), chunk| {
+                for (local, row) in chunk.chunks_mut(d).enumerate() {
+                    let b = bits.bits_for(r0 + local, s);
+                    let p = QuantParams::min_max(row, b);
+                    p.qdq_slice(row);
+                }
+            });
         }
         Granularity::PerBlock { block } => {
             assert!(block > 0);
-            for i in 0..s {
-                let b = bits.bits_for(i, s);
-                let row = out.row_mut(i);
-                for blk in row.chunks_mut(block.min(d)) {
-                    let p = QuantParams::min_max(blk, b);
-                    p.qdq_slice(blk);
+            crate::parallel::for_each_chunk_mut(out.data_mut(), s, d, |_, (r0, _), chunk| {
+                for (local, row) in chunk.chunks_mut(d).enumerate() {
+                    let b = bits.bits_for(r0 + local, s);
+                    for blk in row.chunks_mut(block.min(d)) {
+                        let p = QuantParams::min_max(blk, b);
+                        p.qdq_slice(blk);
+                    }
                 }
-            }
+            });
         }
     }
     out
@@ -191,6 +206,21 @@ mod tests {
             .map(|i| out.row(i).iter().zip(x.row(i)).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>())
             .sum();
         assert!(hp_err * 100.0 < lp_err, "hp {hp_err} lp {lp_err}");
+    }
+
+    #[test]
+    fn parallel_rows_match_serial_semantics() {
+        // 512×256 clears the parallel threshold, so the chunked path runs;
+        // every row must be bit-identical to the same row quantized inline.
+        let x = Tensor::randn(&[512, 256], 17);
+        let bits = BitAllocation::two_level(64, 8, 4);
+        let out = quantize_dequantize_rows(&x, &bits, Granularity::PerToken);
+        for i in [0usize, 63, 64, 200, 511] {
+            let p = QuantParams::min_max(x.row(i), bits.bits_for(i, 512));
+            let mut want = x.row(i).to_vec();
+            p.qdq_slice(&mut want);
+            assert_eq!(out.row(i), &want[..], "row {i}");
+        }
     }
 
     #[test]

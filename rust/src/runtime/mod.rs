@@ -1,18 +1,33 @@
-//! PJRT runtime: loads the HLO-text artifacts that `python/compile/aot.py`
-//! lowers from the JAX/Pallas model (L2/L1) and executes them from Rust —
-//! Python never runs on the request path.
+//! Execution runtime: artifact discovery, the pure-Rust [`NativeExecutor`],
+//! and (behind the `pjrt` cargo feature) the PJRT engine that loads the
+//! HLO-text artifacts `python/compile/aot.py` lowers from the JAX/Pallas
+//! model — Python never runs on the request path.
 //!
-//! Interchange is **HLO text** (not serialized protos): jax ≥ 0.5 emits
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+//! Two backends implement the serving story (DESIGN.md §6):
+//!
+//! * **Native** (always available, zero dependencies) — [`NativeExecutor`]
+//!   runs the quantized Rust models ([`crate::model::gpt`] /
+//!   [`crate::model::dit`]) directly, so `coordinator` workers can serve
+//!   without any XLA toolchain present.
+//! * **PJRT** (`--features pjrt`) — `Engine` compiles and executes
+//!   AOT-lowered HLO. Interchange is **HLO text** (not serialized protos):
+//!   jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//!   rejects; the text parser reassigns ids (DESIGN.md §4). The default
+//!   `xla` dependency is a vendored API stub that reports "PJRT not
+//!   linked" at runtime; swap in a real `xla` crate via a `[patch]` entry
+//!   to talk to actual hardware.
 
+#[cfg(feature = "pjrt")]
 mod engine;
+mod native;
 mod registry;
 
+#[cfg(feature = "pjrt")]
 pub use engine::{Engine, ExecError};
+pub use native::{NativeExecutor, NativeModel};
 pub use registry::{ArtifactManifest, ArtifactRegistry};
 
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
     use std::path::Path;

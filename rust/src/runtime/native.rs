@@ -1,0 +1,254 @@
+//! Pure-Rust serving backend: runs quantized [`crate::model::gpt`] /
+//! [`crate::model::dit`] forwards behind the [`Executor`] trait, so the
+//! coordinator serves real quantized models in dependency-free builds
+//! (no PJRT, no Python — the `pjrt` feature is purely additive).
+//!
+//! Each registered variant owns its model handle (shared via `Arc`, so many
+//! variants can serve the same weights under different [`QuantStack`]s) and
+//! an optional stack; `None` serves the FP reference. One batch executes
+//! its requests sequentially on the calling worker thread — parallelism
+//! comes from [`crate::coordinator::WorkerPool`] at batch granularity
+//! (worker threads are kernel-serial, see [`crate::parallel`]); when the
+//! executor is driven directly, outside a pool, the matmul/QDQ kernels
+//! fan out instead.
+
+use crate::baselines::{QuantHook, QuantStack};
+use crate::coordinator::Executor;
+use crate::model::{Dit, FpHook, Gpt, LinearHook};
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// What a native variant runs.
+pub enum NativeModel {
+    /// Causal-LM next-token scoring: the request tensor is a `1×s` row of
+    /// token ids encoded as f32 (the coordinator's tensor-only wire
+    /// format); the response is the `s×vocab` logits matrix.
+    Gpt(Arc<Gpt>),
+    /// One denoising step at `t = 0` on a `seq×latent` latent under a fixed
+    /// conditioning prompt; the response is the predicted residual.
+    Dit { model: Arc<Dit>, prompt: String },
+}
+
+struct Variant {
+    model: NativeModel,
+    /// `None` serves the FP reference forward.
+    stack: Option<QuantStack>,
+}
+
+/// Registry of named native variants implementing [`Executor`].
+#[derive(Default)]
+pub struct NativeExecutor {
+    variants: HashMap<String, Variant>,
+}
+
+impl NativeExecutor {
+    pub fn new() -> Self {
+        NativeExecutor { variants: HashMap::new() }
+    }
+
+    /// Register a GPT variant (builder-style).
+    pub fn with_gpt(mut self, name: &str, model: Arc<Gpt>, stack: Option<QuantStack>) -> Self {
+        self.variants.insert(name.to_string(), Variant { model: NativeModel::Gpt(model), stack });
+        self
+    }
+
+    /// Register a DiT variant conditioned on a fixed prompt.
+    pub fn with_dit(
+        mut self,
+        name: &str,
+        model: Arc<Dit>,
+        prompt: &str,
+        stack: Option<QuantStack>,
+    ) -> Self {
+        self.variants.insert(
+            name.to_string(),
+            Variant { model: NativeModel::Dit { model, prompt: prompt.to_string() }, stack },
+        );
+        self
+    }
+
+    /// Registered variant names (sorted), for wiring up the server.
+    pub fn variant_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.variants.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    fn run_one(&self, variant: &Variant, hook: &dyn LinearHook, input: &Tensor) -> Result<Tensor, String> {
+        match &variant.model {
+            NativeModel::Gpt(gpt) => {
+                if input.ndim() != 2 || input.rows() != 1 {
+                    return Err(format!("gpt variant expects a 1×s token row, got {:?}", input.shape()));
+                }
+                // Strict decode: `as u32` would saturate NaN/negatives to 0
+                // and silently serve logits for token 0 on corrupt input.
+                let tokens: Vec<u32> = input
+                    .data()
+                    .iter()
+                    .map(|&v| {
+                        if !v.is_finite() || v < 0.0 || v.fract() != 0.0 {
+                            return Err(format!("non-token value {v} in request tensor"));
+                        }
+                        let t = v as u32;
+                        if t as usize >= gpt.cfg.vocab_size {
+                            return Err(format!("token {t} out of vocab {}", gpt.cfg.vocab_size));
+                        }
+                        Ok(t)
+                    })
+                    .collect::<Result<_, String>>()?;
+                if tokens.len() > gpt.cfg.max_seq {
+                    return Err(format!("sequence {} exceeds max_seq {}", tokens.len(), gpt.cfg.max_seq));
+                }
+                Ok(gpt.logits_hooked(hook, &tokens))
+            }
+            NativeModel::Dit { model, prompt } => {
+                if input.ndim() != 2
+                    || input.rows() != model.cfg.seq_len()
+                    || input.cols() != model.latent_dim
+                {
+                    return Err(format!(
+                        "dit variant expects {}×{} latents, got {:?}",
+                        model.cfg.seq_len(),
+                        model.latent_dim,
+                        input.shape()
+                    ));
+                }
+                Ok(model.denoise_step(hook, input, prompt, 0))
+            }
+        }
+    }
+}
+
+impl Executor for NativeExecutor {
+    fn execute(&self, variant: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>, String> {
+        let v = self
+            .variants
+            .get(variant)
+            .ok_or_else(|| format!("no native variant `{variant}`"))?;
+        // The QuantHook's weight/STaMP caches are per-call interior state
+        // (RefCell), so build one per batch — weights quantize once per
+        // batch, which is the same amortization the eval harnesses get.
+        let mut out = Vec::with_capacity(inputs.len());
+        match &v.stack {
+            Some(stack) => {
+                let hook = QuantHook::new(stack);
+                for x in inputs {
+                    out.push(self.run_one(v, &hook, x)?);
+                }
+            }
+            None => {
+                for x in inputs {
+                    out.push(self.run_one(v, &FpHook, x)?);
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{ActQuantCfg, BaselineKind};
+    use crate::config::ServeSpec;
+    use crate::coordinator::Server;
+    use crate::model::{DitConfig, GptConfig};
+    use std::time::Duration;
+
+    fn tiny_gpt_exec() -> (NativeExecutor, Arc<Gpt>) {
+        let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 5));
+        let act = ActQuantCfg { hp_tokens: 8, ..ActQuantCfg::w4a4_per_token() };
+        let stack = QuantStack::build(
+            BaselineKind::Rtn,
+            &HashMap::new(),
+            Some(act),
+            None,
+            None,
+            1,
+        );
+        let exec = NativeExecutor::new()
+            .with_gpt("fp", gpt.clone(), None)
+            .with_gpt("rtn-a4", gpt.clone(), Some(stack));
+        (exec, gpt)
+    }
+
+    fn token_row(n: usize) -> Tensor {
+        let toks: Vec<f32> = (0..n).map(|i| ((i * 5) % 70) as f32).collect();
+        Tensor::from_vec(&[1, n], toks)
+    }
+
+    #[test]
+    fn fp_variant_matches_direct_forward() {
+        let (exec, gpt) = tiny_gpt_exec();
+        let input = token_row(16);
+        let out = exec.execute("fp", &[&input]).unwrap();
+        let tokens: Vec<u32> = input.data().iter().map(|&v| v as u32).collect();
+        let want = gpt.logits_hooked(&FpHook, &tokens);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].max_abs_diff(&want) < 1e-6);
+    }
+
+    #[test]
+    fn quantized_variant_differs_but_stays_finite() {
+        let (exec, _) = tiny_gpt_exec();
+        let input = token_row(16);
+        let fp = exec.execute("fp", &[&input]).unwrap().remove(0);
+        let q = exec.execute("rtn-a4", &[&input]).unwrap().remove(0);
+        assert!(q.all_finite());
+        assert!(q.max_abs_diff(&fp) > 1e-6, "quantization must perturb logits");
+    }
+
+    #[test]
+    fn rejects_unknown_variant_and_bad_shapes() {
+        let (exec, _) = tiny_gpt_exec();
+        let input = token_row(8);
+        assert!(exec.execute("nope", &[&input]).unwrap_err().contains("no native variant"));
+        let bad = Tensor::zeros(&[2, 8]);
+        assert!(exec.execute("fp", &[&bad]).unwrap_err().contains("1×s"));
+        let oov = Tensor::from_vec(&[1, 2], vec![0.0, 9999.0]);
+        assert!(exec.execute("fp", &[&oov]).unwrap_err().contains("out of vocab"));
+        // Corrupt values must be rejected, not saturated to token 0.
+        for bad in [-1.0f32, f32::NAN, 0.5] {
+            let t = Tensor::from_vec(&[1, 2], vec![1.0, bad]);
+            assert!(
+                exec.execute("fp", &[&t]).unwrap_err().contains("non-token value"),
+                "{bad} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn dit_variant_serves_denoise_steps() {
+        let dit = Arc::new(Dit::new(
+            DitConfig { grid_h: 4, grid_w: 4, d_model: 32, n_heads: 2, n_layers: 1, d_ff: 64, ctx_tokens: 2, steps: 2 },
+            7,
+        ));
+        let exec = NativeExecutor::new().with_dit("dit-fp", dit.clone(), "a red cube", None);
+        let z = Tensor::randn(&[dit.cfg.seq_len(), dit.latent_dim], 3).scale(0.3);
+        let out = exec.execute("dit-fp", &[&z]).unwrap().remove(0);
+        assert_eq!(out.shape(), z.shape());
+        assert!(out.all_finite());
+        let want = dit.denoise_step(&FpHook, &z, "a red cube", 0);
+        assert!(out.max_abs_diff(&want) < 1e-6);
+    }
+
+    #[test]
+    fn serves_through_coordinator_end_to_end() {
+        let (exec, gpt) = tiny_gpt_exec();
+        let names = exec.variant_names();
+        assert_eq!(names, vec!["fp".to_string(), "rtn-a4".to_string()]);
+        let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let spec = ServeSpec { workers: 2, max_batch: 4, max_wait_us: 500, queue_depth: 16 };
+        let server = Server::start(&spec, &refs, Arc::new(exec));
+        let handle = server.handle();
+        let input = token_row(12);
+        let resp = handle.call("fp", input.clone(), Duration::from_secs(30)).unwrap();
+        let logits = resp.output.unwrap();
+        let tokens: Vec<u32> = input.data().iter().map(|&v| v as u32).collect();
+        assert!(logits.max_abs_diff(&gpt.logits_hooked(&FpHook, &tokens)) < 1e-6);
+        let resp = handle.call("rtn-a4", input, Duration::from_secs(30)).unwrap();
+        assert!(resp.output.unwrap().all_finite());
+        server.shutdown();
+    }
+}

@@ -11,6 +11,7 @@
 //! ```
 
 use crate::config::Toml;
+use crate::error::{Error, Result};
 use std::path::{Path, PathBuf};
 
 #[derive(Clone, Debug)]
@@ -46,12 +47,12 @@ pub struct ArtifactRegistry {
 }
 
 impl ArtifactRegistry {
-    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest_path = dir.join("manifest.toml");
         let text = std::fs::read_to_string(&manifest_path)
-            .map_err(|e| anyhow::anyhow!("reading {}: {e}", manifest_path.display()))?;
-        let doc = Toml::parse(&text).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+            .map_err(|e| crate::err!("reading {}: {e}", manifest_path.display()))?;
+        let doc = Toml::parse(&text).map_err(Error::msg)?;
         let mut entries = Vec::new();
         for (section, kv) in &doc.sections {
             if let Some(name) = section.strip_prefix("artifact.") {
@@ -60,7 +61,7 @@ impl ArtifactRegistry {
                     file: kv
                         .get("file")
                         .and_then(|v| v.as_str())
-                        .ok_or_else(|| anyhow::anyhow!("{section}: missing `file`"))?
+                        .ok_or_else(|| crate::err!("{section}: missing `file`"))?
                         .to_string(),
                     inputs: kv.get("inputs").and_then(|v| v.as_str()).unwrap_or("").to_string(),
                     outputs: kv.get("outputs").and_then(|v| v.as_str()).unwrap_or("").to_string(),

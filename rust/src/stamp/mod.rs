@@ -43,6 +43,34 @@ impl SeqTransformKind {
 }
 
 /// Configuration for a STaMP activation quantizer.
+///
+/// The default is the paper's main setting (3-level Haar DWT, 64 tokens at
+/// 8 bits, the rest at 4, per-token scales). Typical usage — build a
+/// [`Stamp`] for a sequence length and quantize activations:
+///
+/// ```
+/// use stamp::stamp::{SeqTransformKind, Stamp, StampConfig};
+/// use stamp::tensor::Tensor;
+///
+/// let cfg = StampConfig {
+///     transform: SeqTransformKind::HaarDwt,
+///     hp_tokens: 16, // leading coefficients kept at hp_bits
+///     hp_bits: 8,
+///     lp_bits: 4,
+///     ..Default::default()
+/// };
+/// let stamp = Stamp::new(cfg, 256);
+///
+/// // Average storage cost interpolates between lp and hp bits.
+/// let avg = stamp.average_bits(64);
+/// assert!(avg > 4.0 && avg < 5.0, "avg bits {avg}");
+///
+/// // Quantize-dequantize is shape-preserving and finite.
+/// let x = Tensor::randn(&[256, 64], 1);
+/// let q = stamp.quantize_dequantize(&x);
+/// assert_eq!(q.shape(), x.shape());
+/// assert!(q.all_finite());
+/// ```
 #[derive(Clone, Debug)]
 pub struct StampConfig {
     pub transform: SeqTransformKind,

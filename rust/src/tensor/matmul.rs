@@ -1,12 +1,17 @@
-//! Cache-blocked matmul kernels.
+//! Cache-blocked, row-parallel matmul kernels.
 //!
 //! The eval harnesses push tiny-transformer forwards through thousands of
 //! quantized linear layers, so this is one of the repo's hot paths. The
 //! implementation is an i-k-j loop order (unit-stride inner loop over the
-//! output row) with a k-panel blocking that keeps the `b` panel in L1/L2.
-//! See EXPERIMENTS.md §Perf for before/after numbers.
+//! output row) with a k-panel blocking that keeps the `b` panel in L1/L2,
+//! parallelized over contiguous row-chunks of the output via
+//! [`crate::parallel`] (each worker owns a disjoint slice of `out`, so the
+//! per-row reduction order — and therefore the floating-point result — is
+//! identical to the serial kernel). Small products stay serial; see
+//! EXPERIMENTS.md §Perf for before/after numbers and the thresholds.
 
 use super::Tensor;
+use crate::parallel;
 
 /// k-panel height: 64 rows of `b` × up to 512 f32 columns ≈ 128 KiB worst
 /// case, comfortably inside L2; typical d≤256 keeps it in L1.
@@ -31,11 +36,23 @@ pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
     let od = out.data_mut();
     od.fill(0.0);
 
+    // Gate on total multiply-adds (m·n·k), not output size: a product with
+    // a tall inner dimension has little output but plenty of work. Rows
+    // are the only split axis, so single-row products stay serial
+    // regardless (for_row_chunks enforces both).
+    parallel::for_row_chunks(od, m, n, m.saturating_mul(n).saturating_mul(k), |chunk, r0, r1| {
+        matmul_rows(ad, bd, chunk, r0, r1, k, n)
+    });
+}
+
+/// The serial k-blocked kernel over output rows `[r0, r1)`; `ochunk` is the
+/// corresponding slice of the output buffer.
+fn matmul_rows(ad: &[f32], bd: &[f32], ochunk: &mut [f32], r0: usize, r1: usize, k: usize, n: usize) {
     for kb in (0..k).step_by(KC) {
         let kend = (kb + KC).min(k);
-        for i in 0..m {
+        for i in r0..r1 {
             let arow = &ad[i * k..(i + 1) * k];
-            let orow = &mut od[i * n..(i + 1) * n];
+            let orow = &mut ochunk[(i - r0) * n..(i - r0 + 1) * n];
             for p in kb..kend {
                 let av = arow[p];
                 if av == 0.0 {
@@ -53,7 +70,8 @@ pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
 
 /// `a (m×k) @ bᵀ` where `b` is stored as `(n×k)` — the natural layout for
 /// weight matrices kept as `[out, in]`. Dot-product inner loop, both
-/// operands unit-stride.
+/// operands unit-stride; parallel over row-chunks of the output like
+/// [`matmul_into`].
 pub fn matmul_transb(a: &Tensor, b: &Tensor) -> Tensor {
     let (m, k) = (a.rows(), a.cols());
     let (n, k2) = (b.rows(), b.cols());
@@ -62,18 +80,26 @@ pub fn matmul_transb(a: &Tensor, b: &Tensor) -> Tensor {
     let ad = a.data();
     let bd = b.data();
     let od = out.data_mut();
-    for i in 0..m {
+    parallel::for_row_chunks(od, m, n, m.saturating_mul(n).saturating_mul(k), |chunk, r0, r1| {
+        transb_rows(ad, bd, chunk, r0, r1, k, n)
+    });
+    out
+}
+
+/// The serial dot-product kernel over output rows `[r0, r1)` of `a @ bᵀ`.
+fn transb_rows(ad: &[f32], bd: &[f32], ochunk: &mut [f32], r0: usize, r1: usize, k: usize, n: usize) {
+    for i in r0..r1 {
         let arow = &ad[i * k..(i + 1) * k];
-        for j in 0..n {
+        let orow = &mut ochunk[(i - r0) * n..(i - r0 + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
             let brow = &bd[j * k..(j + 1) * k];
             let mut acc = 0.0f32;
             for (x, y) in arow.iter().zip(brow) {
                 acc += x * y;
             }
-            od[i * n + j] = acc;
+            *o = acc;
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -121,6 +147,19 @@ mod tests {
         let b = Tensor::from_vec(&[2, 2], vec![1., 1., 1., 1.]);
         let c = matmul(&a, &b);
         assert_eq!(c.data(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn parallel_path_matches_naive() {
+        // Big enough that m·n·k clears MIN_PARALLEL_ELEMS, so the threaded
+        // path runs (unless STAMP_THREADS=1, where the serial path is the
+        // contract anyway).
+        let (m, k, n) = (96, 80, 72);
+        let a = Tensor::randn(&[m, k], 21);
+        let b = Tensor::randn(&[k, n], 22);
+        assert!(matmul(&a, &b).max_abs_diff(&naive(&a, &b)) < 1e-3);
+        let bt = Tensor::randn(&[n, k], 23);
+        assert!(matmul_transb(&a, &bt).max_abs_diff(&naive(&a, &bt.transpose())) < 1e-3);
     }
 
     #[test]

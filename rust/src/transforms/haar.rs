@@ -19,6 +19,22 @@ use crate::tensor::Tensor;
 const SQRT1_2: f32 = std::f32::consts::FRAC_1_SQRT_2;
 
 /// Multi-level 1-D Haar DWT over the sequence (row) dimension.
+///
+/// The Haar basis is orthonormal, so the transform preserves total energy
+/// (Frobenius norm) exactly — the property Theorem 1 relies on to equate
+/// transformed-domain and original-domain quantization error:
+///
+/// ```
+/// use stamp::tensor::Tensor;
+/// use stamp::transforms::{HaarDwt, SequenceTransform};
+///
+/// let t = HaarDwt::new(128, 3);
+/// let x = Tensor::randn(&[128, 16], 3);
+/// let y = t.forward(&x);
+/// let rel = (y.sq_norm() - x.sq_norm()).abs() / x.sq_norm();
+/// assert!(t.orthogonal());
+/// assert!(rel < 1e-5, "energy drifted by {rel:e}");
+/// ```
 pub struct HaarDwt {
     s: usize,
     levels: usize,

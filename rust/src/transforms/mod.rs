@@ -35,6 +35,31 @@ use crate::tensor::Tensor;
 /// Implementations must satisfy `inverse(forward(x)) == x` (up to float
 /// round-off) for any `x` with `x.rows() == seq_len()`, and orthogonal
 /// implementations additionally preserve the Frobenius norm.
+///
+/// The round-trip contract, checked here for every shipped transform:
+///
+/// ```
+/// use stamp::tensor::Tensor;
+/// use stamp::transforms::{
+///     DctTransform, HaarDwt, IdentitySeq, SequenceTransform, WhtTransform,
+/// };
+///
+/// let x = Tensor::randn(&[64, 8], 7);
+/// let transforms: Vec<Box<dyn SequenceTransform>> = vec![
+///     Box::new(IdentitySeq::new(64)),
+///     Box::new(HaarDwt::new(64, 3)),
+///     Box::new(DctTransform::new(64)),
+///     Box::new(WhtTransform::new(64)),
+/// ];
+/// for t in &transforms {
+///     let roundtrip = t.inverse(&t.forward(&x));
+///     assert!(
+///         roundtrip.max_abs_diff(&x) < 1e-4,
+///         "{} does not invert its forward",
+///         t.name()
+///     );
+/// }
+/// ```
 pub trait SequenceTransform: Send + Sync {
     fn name(&self) -> &'static str;
 

@@ -1,6 +1,9 @@
 //! Runtime integration: load every AOT artifact through PJRT and verify
 //! numerics against the quantization semantics implemented in Rust.
-//! Skipped (with a notice) when `make artifacts` hasn't run.
+//! Skipped (with a notice) when `make artifacts` hasn't run, and compiled
+//! only under the `pjrt` cargo feature (the default build has no PJRT
+//! engine to load artifacts with).
+#![cfg(feature = "pjrt")]
 
 use stamp::quant::{BitAllocation, Granularity, QuantScheme};
 use stamp::runtime::{ArtifactRegistry, Engine};

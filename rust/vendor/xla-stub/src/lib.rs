@@ -1,0 +1,182 @@
+//! API-surface stub for the `xla` PJRT bindings.
+//!
+//! The STaMP reproduction's `pjrt` feature needs an `xla` crate to compile
+//! against, but build environments for this repo are offline and most have
+//! no XLA toolchain. This stub keeps `cargo build --features pjrt`
+//! compiling everywhere: it mirrors exactly the slice of the real crate's
+//! API that `stamp::runtime::engine` touches, and every entry point that
+//! would talk to a device returns [`Error`] ("PJRT runtime not linked").
+//!
+//! To run against real hardware, point Cargo at a real `xla` crate:
+//!
+//! ```toml
+//! [patch.crates-io]        # or a [patch."…"] for the vendored path
+//! xla = { path = "/path/to/real/xla-rs" }
+//! ```
+//!
+//! Data-only types ([`Literal`], [`ArrayShape`]) are functional so callers
+//! can build inputs before the first device call fails cleanly.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type matching the shape the engine consumes (`Display` only).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn not_linked(what: &str) -> Error {
+    Error(format!(
+        "{what}: xla stub — PJRT runtime not linked in this build; \
+         patch the `xla` dependency with a real crate to use hardware"
+    ))
+}
+
+/// A host-side literal: flat f32 data plus dimensions.
+#[derive(Clone, Debug, Default)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from an f32 slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements into dims {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Decompose a tuple literal. The stub never produces tuples, so this
+    /// only ever reports the missing runtime.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(not_linked("Literal::to_tuple"))
+    }
+
+    /// Shape accessor.
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    /// Typed element extraction; unavailable without the real runtime's
+    /// layout handling.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(not_linked("Literal::to_vec"))
+    }
+}
+
+/// Dimensions of an array-shaped literal.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    /// Parse an HLO-text artifact. Requires the real parser.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(not_linked("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping a module proto.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// A device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(not_linked("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled executable bound to a client.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(not_linked("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// The PJRT client. [`PjRtClient::cpu`] fails in the stub, so downstream
+/// code observes "PJRT unavailable" before any other call can happen.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(not_linked("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(not_linked("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literals_are_functional() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert!(l.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn device_paths_report_missing_runtime() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("PJRT runtime not linked"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
