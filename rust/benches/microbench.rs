@@ -1,12 +1,15 @@
 //! §Perf micro-benchmarks: the L3 hot paths in isolation — QDQ throughput,
+//! the packed integer path (quantize + qgemm vs QDQ + f32 matmul),
 //! sequence transforms, matmul, the coordinator's router/batcher, and the
 //! end-to-end serving loop. Baseline/after numbers recorded in
-//! EXPERIMENTS.md §Perf.
+//! EXPERIMENTS.md §Perf; results also land in `BENCH_microbench.json`
+//! (machine-readable; `STAMP_BENCH_QUICK=1` bounds the run for CI smoke).
 
+use stamp::baselines::{quantize_weight, quantize_weight_packed, WeightQuantCfg};
 use stamp::bench::Harness;
 use stamp::coordinator::{DynamicBatcher, Request};
-use stamp::quant::{BitAllocation, Granularity, QuantScheme};
-use stamp::tensor::{matmul, matmul_transb, Tensor};
+use stamp::quant::{BitAllocation, Granularity, QuantScheme, Quantizer};
+use stamp::tensor::{matmul, matmul_transb, qgemm, Tensor};
 use stamp::transforms::{
     DctTransform, HaarDwt, HadamardFeature, SequenceTransform, WhtTransform,
 };
@@ -14,7 +17,7 @@ use stamp::transforms::FeatureTransform;
 use std::time::{Duration, Instant};
 
 fn main() {
-    let mut h = Harness::new();
+    let mut h = Harness::from_env();
     println!(
         "threads: {} (set STAMP_THREADS=1 for the serial baseline)",
         stamp::parallel::num_threads()
@@ -36,6 +39,27 @@ fn main() {
     println!("    -> {:.2} GB/s", st.throughput(bytes) / 1e9);
     let blk = QuantScheme::uniform(4, Granularity::PerBlock { block: 64 });
     let st = h.bench("qdq per-block-64 u4", || blk.apply(&x));
+    println!("    -> {:.2} GB/s", st.throughput(bytes) / 1e9);
+
+    // The acceptance gate for the packed path: at w4a4 two-level (the
+    // paper's main setting), quantize + integer GEMM must beat the
+    // simulated QDQ + f32 matmul it replaces. 2048×512 activations against
+    // a 512×512 weight, both per-output-channel W4.
+    Harness::header("packed integer path (2048x512x512, w4a4 two-level)");
+    let gemm_flops = 2.0 * (s as f64) * (d as f64) * (d as f64);
+    let w = Tensor::randn(&[d, d], 9);
+    let wcfg = WeightQuantCfg::w4_per_channel();
+    let wdq = quantize_weight(&w, &wcfg);
+    let qw = quantize_weight_packed(&w, &wcfg);
+    let quantizer = Quantizer::new(mixed.clone(), s);
+    let st = h.bench("qdq + f32 matmul (simulated w4a4)", || mixed.apply(&x).matmul(&wdq));
+    println!("    -> {:.2} GFLOP/s-equiv", st.throughput(gemm_flops) / 1e9);
+    let st = h.bench("quantize + qgemm (packed w4a4)", || qgemm(&quantizer.quantize(&x), &qw));
+    println!("    -> {:.2} GFLOP/s-equiv", st.throughput(gemm_flops) / 1e9);
+    let qa = quantizer.quantize(&x);
+    let st = h.bench("qgemm only (pre-quantized act)", || qgemm(&qa, &qw));
+    println!("    -> {:.2} GFLOP/s-equiv", st.throughput(gemm_flops) / 1e9);
+    let st = h.bench("quantize only (pack 2048x512)", || quantizer.quantize(&x));
     println!("    -> {:.2} GB/s", st.throughput(bytes) / 1e9);
 
     Harness::header("sequence transforms (2048x512)");
@@ -92,4 +116,11 @@ fn main() {
         out
     });
     println!("    -> {:.0} ns per request overhead", st.median_ns / 8.0);
+
+    // Machine-readable trajectory artifact (overridable for out-of-tree
+    // CI layouts).
+    let json_path =
+        std::env::var("STAMP_BENCH_JSON").unwrap_or_else(|_| "BENCH_microbench.json".into());
+    h.write_json(std::path::Path::new(&json_path)).expect("write bench json");
+    println!("\nwrote {json_path}");
 }

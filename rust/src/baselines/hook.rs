@@ -11,20 +11,54 @@
 //! Because QDQ is simulated in fp, applying `R⁻¹`/`L⁻¹` on the activation
 //! side is bit-identical to fusing them into the weight — the overhead of
 //! the *real* kernel placement is measured separately in the Table-3 bench.
+//!
+//! With [`QuantStack::packed`] set (the `quant.packed` config switch),
+//! step 3–5 instead run the real integer pipeline: the activation is
+//! quantized *once* into a bit-packed [`QTensor`] (in the transformed
+//! domain when STaMP is on, with `L⁻¹` applied after the product per
+//! Eq. 7), multiplied against a cached packed weight by
+//! [`crate::tensor::qgemm`], and scales fold on output. Configurations
+//! the packed lanes cannot express (non-4/8-bit widths, attention-sink
+//! exclusion, unquantized weights) fall back to the simulation per site.
 
-use super::{identity_for, quantize_weight, QuantStack};
+use super::{
+    identity_for, quantize_weight, quantize_weight_packed, ActQuantCfg, QuantStack, WeightQuantCfg,
+};
 use crate::model::LinearHook;
-use crate::quant::{BitAllocation, QuantScheme, Quantizer};
-use crate::stamp::Stamp;
-use crate::tensor::{matmul, Tensor};
+use crate::quant::{BitAllocation, QTensor, QuantScheme, Quantizer};
+use crate::stamp::{Stamp, StampConfig};
+use crate::tensor::{matmul, qgemm, Tensor};
 use crate::transforms::FeatureTransform;
 use std::cell::RefCell;
 use std::collections::HashMap;
+use std::rc::Rc;
+
+/// QuaRot's symmetric range clip, applied per token row: keep `keep` of
+/// each row's min-max range around its midpoint.
+fn shrink_rows(x: &mut Tensor, keep: f32) {
+    for i in 0..x.rows() {
+        let row = x.row_mut(i);
+        let mx = row.iter().cloned().fold(f32::MIN, f32::max);
+        let mn = row.iter().cloned().fold(f32::MAX, f32::min);
+        let mid = 0.5 * (mx + mn);
+        let half = 0.5 * (mx - mn) * keep;
+        for v in row.iter_mut() {
+            *v = v.clamp(mid - half, mid + half);
+        }
+    }
+}
+
+/// Whether a bit width fits the packed u8 lane formats.
+fn lanes_ok(bits: u32) -> bool {
+    bits == 4 || bits == 8
+}
 
 pub struct QuantHook<'a> {
     stack: &'a QuantStack,
     /// Quantized (fused) weights, keyed by site.
     w_cache: RefCell<HashMap<String, Tensor>>,
+    /// Bit-packed fused weights for the integer path, keyed by site.
+    wq_cache: RefCell<HashMap<String, Rc<QTensor>>>,
     /// STaMP instances keyed by sequence length.
     stamp_cache: RefCell<HashMap<usize, Stamp>>,
 }
@@ -34,6 +68,7 @@ impl<'a> QuantHook<'a> {
         QuantHook {
             stack,
             w_cache: RefCell::new(HashMap::new()),
+            wq_cache: RefCell::new(HashMap::new()),
             stamp_cache: RefCell::new(HashMap::new()),
         }
     }
@@ -48,6 +83,26 @@ impl<'a> QuantHook<'a> {
         }
     }
 
+    /// STaMP instance for sequence length `s` under the stack's act config
+    /// (the body of the per-length cache used by both execution paths).
+    fn build_stamp(&self, cfg: &StampConfig, act: &ActQuantCfg, s: usize) -> Stamp {
+        let mut c = cfg.clone();
+        c.hp_bits = act.hp_bits;
+        c.lp_bits = act.bits;
+        c.hp_tokens = act.hp_tokens;
+        c.granularity = act.granularity;
+        // 2-D grids don't apply to arbitrary (e.g. d_ff-wide context)
+        // lengths; fall back to 1-D DWT when the grid doesn't match this
+        // sequence length.
+        if let crate::stamp::SeqTransformKind::HaarDwt2d { h, w } = c.transform {
+            let s_eff = if c.skip_first_token { s - 1 } else { s };
+            if h * w != s_eff {
+                c.transform = crate::stamp::SeqTransformKind::HaarDwt;
+            }
+        }
+        Stamp::new(c, s)
+    }
+
     /// Activation QDQ under the stack's act config (+ optional STaMP).
     fn quantize_activation(&self, a: &Tensor) -> Tensor {
         let act = match &self.stack.act {
@@ -56,40 +111,13 @@ impl<'a> QuantHook<'a> {
         };
         let mut x = a.clone();
         if act.range_shrink < 1.0 {
-            // Clip each token's range symmetrically around its midpoint.
-            let keep = act.range_shrink;
-            for i in 0..x.rows() {
-                let row = x.row_mut(i);
-                let mx = row.iter().cloned().fold(f32::MIN, f32::max);
-                let mn = row.iter().cloned().fold(f32::MAX, f32::min);
-                let mid = 0.5 * (mx + mn);
-                let half = 0.5 * (mx - mn) * keep;
-                for v in row.iter_mut() {
-                    *v = v.clamp(mid - half, mid + half);
-                }
-            }
+            shrink_rows(&mut x, act.range_shrink);
         }
         let s = x.rows();
         match &self.stack.stamp {
             Some(cfg) => {
                 let mut cache = self.stamp_cache.borrow_mut();
-                let stamp = cache.entry(s).or_insert_with(|| {
-                    let mut c = cfg.clone();
-                    c.hp_bits = act.hp_bits;
-                    c.lp_bits = act.bits;
-                    c.hp_tokens = act.hp_tokens;
-                    c.granularity = act.granularity;
-                    // 2-D grids don't apply to arbitrary (e.g. d_ff-wide
-                    // context) lengths; fall back to 1-D DWT when the grid
-                    // doesn't match this sequence length.
-                    if let crate::stamp::SeqTransformKind::HaarDwt2d { h, w } = c.transform {
-                        let s_eff = if c.skip_first_token { s - 1 } else { s };
-                        if h * w != s_eff {
-                            c.transform = crate::stamp::SeqTransformKind::HaarDwt;
-                        }
-                    }
-                    Stamp::new(c, s)
-                });
+                let stamp = cache.entry(s).or_insert_with(|| self.build_stamp(cfg, act, s));
                 stamp.quantize_dequantize(&x)
             }
             None => {
@@ -104,14 +132,9 @@ impl<'a> QuantHook<'a> {
         }
     }
 
-    /// Quantized fused weight for a site (cached). Sites are unique per
-    /// weight matrix (model contract); the shape check guards against a
-    /// site accidentally being reused across different weights.
-    fn weight_for(&self, site: &str, w: &Tensor) -> Tensor {
-        if let Some(cached) = self.w_cache.borrow().get(site) {
-            assert_eq!(cached.shape(), w.shape(), "site {site} reused for a different weight");
-            return cached.clone();
-        }
+    /// The site's weight after SVDQuant low-rank removal and `R⁻¹` fusion
+    /// — shared by the simulated and packed weight caches.
+    fn fused_weight(&self, site: &str, w: &Tensor) -> Tensor {
         let mut wt = w.clone();
         // SVDQuant: remove the low-rank branch before quantizing.
         if let Some((u, v)) = self.stack.lowrank.get(site) {
@@ -121,11 +144,101 @@ impl<'a> QuantHook<'a> {
         if let Some(r) = self.stack.feature.get(site) {
             wt = r.fuse_into_weight(&wt);
         }
+        wt
+    }
+
+    /// Quantized fused weight for a site (cached). Sites are unique per
+    /// weight matrix (model contract); the shape check guards against a
+    /// site accidentally being reused across different weights.
+    fn weight_for(&self, site: &str, w: &Tensor) -> Tensor {
+        if let Some(cached) = self.w_cache.borrow().get(site) {
+            assert_eq!(cached.shape(), w.shape(), "site {site} reused for a different weight");
+            return cached.clone();
+        }
+        let mut wt = self.fused_weight(site, w);
         if let Some(cfg) = &self.stack.weight {
             wt = quantize_weight(&wt, cfg);
         }
         self.w_cache.borrow_mut().insert(site.to_string(), wt.clone());
         wt
+    }
+
+    /// Bit-packed fused weight for a site (cached), in the `[out, in]`
+    /// layout `qgemm` consumes.
+    fn packed_weight_for(&self, site: &str, w: &Tensor, cfg: &WeightQuantCfg) -> Rc<QTensor> {
+        if let Some(cached) = self.wq_cache.borrow().get(site) {
+            assert_eq!(
+                (cached.rows(), cached.cols()),
+                (w.cols(), w.rows()),
+                "site {site} reused for a different weight"
+            );
+            return cached.clone();
+        }
+        let packed = Rc::new(quantize_weight_packed(&self.fused_weight(site, w), cfg));
+        self.wq_cache.borrow_mut().insert(site.to_string(), packed.clone());
+        packed
+    }
+
+    /// The packed integer route for one linear, or `None` when this
+    /// stack/site cannot pack — non-4/8-bit lanes, attention-sink
+    /// exclusion, or no weight quantization — in which case the caller
+    /// falls back to the simulated QDQ path.
+    fn packed_linear(
+        &self,
+        site: &str,
+        x: &Tensor,
+        w: &Tensor,
+        bias: Option<&[f32]>,
+    ) -> Option<Tensor> {
+        if !self.stack.packed {
+            return None;
+        }
+        let act = self.stack.act.as_ref()?;
+        let wcfg = self.stack.weight.as_ref()?;
+        if !lanes_ok(act.bits) || !lanes_ok(wcfg.bits) {
+            return None;
+        }
+        if act.hp_tokens > 0 && !lanes_ok(act.hp_bits) {
+            return None;
+        }
+        if self.stack.stamp.as_ref().is_some_and(|c| c.skip_first_token) {
+            return None;
+        }
+        // Feature transform (+ QuaRot range shrink) on the activation side.
+        let mut a = match self.stack.feature.get(site) {
+            Some(r) => r.apply(x),
+            None => x.clone(),
+        };
+        if act.range_shrink < 1.0 {
+            shrink_rows(&mut a, act.range_shrink);
+        }
+        let s = a.rows();
+        let wq = self.packed_weight_for(site, w, wcfg);
+        let mut y = match &self.stack.stamp {
+            Some(cfg) => {
+                // Eq. 7: quantize L·a once into packed codes, integer-GEMM,
+                // then apply L⁻¹ *after* the product.
+                let mut cache = self.stamp_cache.borrow_mut();
+                let stamp = cache.entry(s).or_insert_with(|| self.build_stamp(cfg, act, s));
+                let qa = stamp.quantize_transformed_packed(&a);
+                stamp.inverse_trim(&qgemm(&qa, &wq))
+            }
+            None => {
+                let scheme = QuantScheme {
+                    granularity: act.granularity,
+                    bits: BitAllocation::two_level(act.hp_tokens.min(s), act.hp_bits, act.bits),
+                };
+                qgemm(&Quantizer::new(scheme, s).quantize(&a), &wq)
+            }
+        };
+        // SVDQuant low-rank branch stays in fp on the *original* input.
+        if let Some((u, v)) = self.stack.lowrank.get(site) {
+            y = y.add(&matmul(&matmul(x, u), v));
+        }
+        if let Some(b) = bias {
+            y = y.add_row_broadcast(b);
+        }
+        Some(y)
     }
 }
 
@@ -133,6 +246,11 @@ impl LinearHook for QuantHook<'_> {
     fn linear(&self, site: &str, x: &Tensor, w: &Tensor, bias: Option<&[f32]>) -> Tensor {
         if !self.site_enabled(site) {
             return crate::model::FpHook.linear(site, x, w, bias);
+        }
+        // Packed integer path (QTensor + qgemm) when the stack opts in and
+        // the configuration can pack; falls through to simulated QDQ.
+        if let Some(y) = self.packed_linear(site, x, w, bias) {
+            return y;
         }
         // Feature transform on the activation side.
         let a = match self.stack.feature.get(site) {
@@ -282,6 +400,125 @@ mod tests {
         let n2 = hook.w_cache.borrow().len();
         assert_eq!(n1, n2, "second pass must hit the cache");
         assert!(n1 >= 8);
+    }
+
+    #[test]
+    fn packed_stack_matches_simulated_closely() {
+        let gpt = Gpt::new(GptConfig::tiny(), 8);
+        let t = tokens(64);
+        let act = ActQuantCfg { hp_tokens: 8, ..ActQuantCfg::w4a4_per_token() };
+        let mk = |packed: bool| {
+            let s = QuantStack::build(
+                BaselineKind::Rtn,
+                &HashMap::new(),
+                Some(act.clone()),
+                Some(WeightQuantCfg::w4_per_channel()),
+                None,
+                7,
+            );
+            if packed {
+                s.with_packed()
+            } else {
+                s
+            }
+        };
+        let sim_stack = mk(false);
+        let packed_stack = mk(true);
+        let sim = gpt.logits_hooked(&QuantHook::new(&sim_stack), &t);
+        let hook = QuantHook::new(&packed_stack);
+        let packed = gpt.logits_hooked(&hook, &t);
+        assert!(hook.wq_cache.borrow().len() >= 8, "packed weights must be cached per site");
+        assert!(packed.all_finite());
+        // Same quantized values either way — only f32-vs-integer
+        // accumulation differs — so logits must agree tightly.
+        let s = sqnr(&sim, &packed);
+        assert!(s > 35.0, "packed vs simulated logits SQNR {s} dB");
+    }
+
+    #[test]
+    fn packed_stack_with_stamp_matches_simulated() {
+        let gpt = Gpt::new(GptConfig::tiny(), 12);
+        let t = tokens(64);
+        let act = ActQuantCfg { hp_tokens: 8, ..ActQuantCfg::w4a4_per_token() };
+        // STaMP without sink exclusion packs; L⁻¹ moves after the product
+        // (Eq. 7), so outputs match the simulated path up to accumulation.
+        let stamp_cfg = StampConfig::default();
+        let mk = |packed: bool| {
+            let s = QuantStack::build(
+                BaselineKind::Rtn,
+                &HashMap::new(),
+                Some(act.clone()),
+                Some(WeightQuantCfg::w4_per_channel()),
+                None,
+                7,
+            )
+            .with_stamp(stamp_cfg.clone());
+            if packed {
+                s.with_packed()
+            } else {
+                s
+            }
+        };
+        let sim_stack = mk(false);
+        let packed_stack = mk(true);
+        let sim = gpt.logits_hooked(&QuantHook::new(&sim_stack), &t);
+        let packed = gpt.logits_hooked(&QuantHook::new(&packed_stack), &t);
+        assert!(packed.all_finite());
+        let s = sqnr(&sim, &packed);
+        assert!(s > 30.0, "packed-STaMP vs simulated logits SQNR {s} dB");
+    }
+
+    #[test]
+    fn packed_falls_back_exactly_when_unpackable() {
+        let gpt = Gpt::new(GptConfig::tiny(), 9);
+        let t = tokens(48);
+        // Sink exclusion (llm_stamp) cannot pack: the packed flag must not
+        // change a single bit of the output.
+        let act = ActQuantCfg { hp_tokens: 4, ..ActQuantCfg::w4a4_per_token() };
+        let mk = |packed: bool| {
+            let s = QuantStack::build(
+                BaselineKind::Rtn,
+                &HashMap::new(),
+                Some(act.clone()),
+                Some(WeightQuantCfg::w4_per_channel()),
+                None,
+                7,
+            )
+            .with_stamp(QuantStack::llm_stamp(crate::stamp::SeqTransformKind::HaarDwt));
+            if packed {
+                s.with_packed()
+            } else {
+                s
+            }
+        };
+        let sim_stack = mk(false);
+        let packed_stack = mk(true);
+        let a = gpt.logits_hooked(&QuantHook::new(&sim_stack), &t);
+        let b = gpt.logits_hooked(&QuantHook::new(&packed_stack), &t);
+        assert_eq!(a, b, "fallback must be bit-identical to the simulated path");
+
+        // Unpackable lane width (3-bit) likewise falls back bit-identically.
+        let act3 = ActQuantCfg { bits: 3, hp_tokens: 0, ..ActQuantCfg::w4a4_per_token() };
+        let s3 = QuantStack::build(
+            BaselineKind::Rtn,
+            &HashMap::new(),
+            Some(act3.clone()),
+            Some(WeightQuantCfg::w4_per_channel()),
+            None,
+            7,
+        );
+        let s3p = QuantStack::build(
+            BaselineKind::Rtn,
+            &HashMap::new(),
+            Some(act3),
+            Some(WeightQuantCfg::w4_per_channel()),
+            None,
+            7,
+        )
+        .with_packed();
+        let a = gpt.logits_hooked(&QuantHook::new(&s3), &t);
+        let b = gpt.logits_hooked(&QuantHook::new(&s3p), &t);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -24,7 +24,7 @@ mod weights;
 pub use calib::{CalibHook, SiteStats};
 pub use hook::QuantHook;
 pub use lowrank::low_rank_factor;
-pub use weights::{quantize_weight, WeightQuantCfg};
+pub use weights::{quantize_weight, quantize_weight_packed, WeightQuantCfg};
 
 use crate::quant::Granularity;
 use crate::stamp::{SeqTransformKind, StampConfig};
@@ -137,6 +137,12 @@ pub struct QuantStack {
     /// If set, ONLY sites containing this substring are quantized
     /// (Table-4 per-site ablation).
     pub only_site: Option<String>,
+    /// Serve linears through the packed integer path
+    /// ([`crate::quant::QTensor`] + [`crate::tensor::qgemm`]) where the
+    /// configuration allows. Sites/configs the packed path cannot express
+    /// (non-4/8-bit lanes, attention-sink exclusion, no weight
+    /// quantization) fall back to the simulated QDQ transparently.
+    pub packed: bool,
 }
 
 impl QuantStack {
@@ -152,6 +158,7 @@ impl QuantStack {
             stamp: None,
             skip_sites: Vec::new(),
             only_site: None,
+            packed: false,
         }
     }
 
@@ -218,12 +225,22 @@ impl QuantStack {
             stamp: None,
             skip_sites: Vec::new(),
             only_site: None,
+            packed: false,
         }
     }
 
     /// Enable STaMP on this stack (the ✓ columns of Tables 1–2).
     pub fn with_stamp(mut self, cfg: StampConfig) -> Self {
         self.stamp = Some(cfg);
+        self
+    }
+
+    /// Serve through the packed integer path (the `quant.packed` config
+    /// switch): activations quantize once into [`crate::quant::QTensor`]
+    /// codes and multiply against pre-packed weights via
+    /// [`crate::tensor::qgemm`] instead of the f32 QDQ simulation.
+    pub fn with_packed(mut self) -> Self {
+        self.packed = true;
         self
     }
 

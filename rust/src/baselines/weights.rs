@@ -4,8 +4,13 @@
 //! Weights are stored `[in, out]`; per-output-channel quantization groups
 //! each *column*, per-block groups `block` consecutive in-entries within a
 //! column (the SVDQuant W4 block-64 setting of Table 1).
+//!
+//! Two forms: [`quantize_weight`] is the f32 QDQ simulation, and
+//! [`quantize_weight_packed`] produces the bit-packed [`QTensor`] (in the
+//! transposed `[out, in]` layout [`crate::tensor::qgemm`] consumes) whose
+//! dequantized values match the simulation bit-for-bit.
 
-use crate::quant::QuantParams;
+use crate::quant::{QTensor, QuantParams};
 use crate::tensor::Tensor;
 
 #[derive(Clone, Copy, Debug)]
@@ -48,6 +53,24 @@ pub fn quantize_weight(w: &Tensor, cfg: &WeightQuantCfg) -> Tensor {
     out
 }
 
+/// Pack a weight matrix (stored `[in, out]`) for the integer GEMM.
+///
+/// The packed layout is the transpose `[out, in]` — one row per output
+/// channel — so per-output-channel groups become per-row groups, per-block
+/// groups stay contiguous within a row, and the dot-product inner loop of
+/// [`crate::tensor::qgemm`] runs unit-stride over both operands. The
+/// codes/parameters are exactly those of [`quantize_weight`] under the
+/// same `cfg`: `quantize_weight_packed(w, cfg).dequantize()` equals
+/// `quantize_weight(w, cfg).transpose()` bit-for-bit.
+pub fn quantize_weight_packed(w: &Tensor, cfg: &WeightQuantCfg) -> QTensor {
+    assert!(
+        cfg.bits == 4 || cfg.bits == 8,
+        "packed weights need 4- or 8-bit lanes, got {}-bit",
+        cfg.bits
+    );
+    QTensor::from_weight(w, cfg.bits, cfg.block)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -84,6 +107,23 @@ mod tests {
         let pc = quantize_weight(&w, &WeightQuantCfg { bits: 4, block: None });
         let pb = quantize_weight(&w, &WeightQuantCfg { bits: 4, block: Some(16) });
         assert!(pb.sub(&w).sq_norm() < pc.sub(&w).sq_norm());
+    }
+
+    #[test]
+    fn packed_matches_simulated_bit_for_bit() {
+        let w = Tensor::randn(&[96, 12], 6);
+        for cfg in [
+            WeightQuantCfg::w4_per_channel(),
+            WeightQuantCfg::w4_block64(),
+            WeightQuantCfg { bits: 8, block: Some(16) },
+            WeightQuantCfg { bits: 8, block: Some(1024) }, // block > din clamps
+        ] {
+            let packed = quantize_weight_packed(&w, &cfg);
+            assert_eq!(packed.rows(), 12, "packed layout is [out, in]");
+            assert_eq!(packed.cols(), 96);
+            let want = quantize_weight(&w, &cfg).transpose();
+            assert_eq!(packed.dequantize(), want, "{cfg:?}");
+        }
     }
 
     #[test]

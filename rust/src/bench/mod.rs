@@ -2,7 +2,11 @@
 //!
 //! Deterministic wall-clock measurement with warmup, fixed-duration
 //! sampling, and robust statistics (median / p95). `cargo bench` targets
-//! are declared with `harness = false` and drive this directly.
+//! are declared with `harness = false` and drive this directly. Results
+//! can be serialized as machine-readable JSON (`BENCH_<target>.json`
+//! convention) so the perf trajectory is diffable across PRs, and
+//! `STAMP_BENCH_QUICK` switches [`Harness::from_env`] to bounded CI-smoke
+//! timings.
 
 use std::time::{Duration, Instant};
 
@@ -37,6 +41,30 @@ impl BenchStats {
             self.iters
         )
     }
+
+    /// One JSON object (hand-rolled — the offline build vendors no serde).
+    fn json(&self) -> String {
+        format!(
+            "{{\"name\":\"{}\",\"iters\":{},\"mean_ns\":{:.1},\"median_ns\":{:.1},\"p95_ns\":{:.1},\"min_ns\":{:.1}}}",
+            json_escape(&self.name),
+            self.iters,
+            self.mean_ns,
+            self.median_ns,
+            self.p95_ns,
+            self.min_ns
+        )
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        if c == '"' || c == '\\' {
+            out.push('\\');
+        }
+        out.push(c);
+    }
+    out
 }
 
 fn fmt_ns(ns: f64) -> String {
@@ -85,6 +113,16 @@ impl Harness {
         }
     }
 
+    /// Harness selected by the environment: [`Harness::quick`] when
+    /// `STAMP_BENCH_QUICK` is set to anything but `0` (the CI smoke step),
+    /// full timings otherwise.
+    pub fn from_env() -> Self {
+        match std::env::var("STAMP_BENCH_QUICK") {
+            Ok(v) if v != "0" => Harness::quick(),
+            _ => Harness::new(),
+        }
+    }
+
     /// Benchmark `f`, which must return something observable (prevents the
     /// optimizer from deleting the body via `std::hint::black_box`).
     pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> BenchStats {
@@ -119,6 +157,26 @@ impl Harness {
 
     pub fn results(&self) -> &[BenchStats] {
         &self.results
+    }
+
+    /// All collected results as one machine-readable JSON document,
+    /// stamped with the active worker count so 1-thread and N-thread runs
+    /// are distinguishable in the trajectory.
+    pub fn to_json(&self) -> String {
+        let rows: Vec<String> = self.results.iter().map(|r| r.json()).collect();
+        format!(
+            "{{\"threads\":{},\"benchmarks\":[{}]}}\n",
+            crate::parallel::num_threads(),
+            rows.join(",")
+        )
+    }
+
+    /// Write [`Harness::to_json`] to `path` (the `BENCH_<target>.json`
+    /// convention). Bench mains pass a relative path, which cargo
+    /// resolves against the *package* root (`rust/`) — cargo sets the
+    /// bench binary's cwd there, not at the workspace root.
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
     }
 
     /// Print a header for the stats lines.
@@ -164,6 +222,40 @@ mod tests {
             min_ns: 1e6,
         };
         assert!((s.throughput(1000.0) - 1e6).abs() < 1.0); // 1k items / ms = 1M/s
+    }
+
+    #[test]
+    fn json_output_is_well_formed() {
+        let mut h = Harness {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(5),
+            max_iters: 1000,
+            results: Vec::new(),
+        };
+        h.bench("alpha \"quoted\"", || 1 + 1);
+        h.bench("beta", || 2 + 2);
+        let json = h.to_json();
+        assert!(json.starts_with("{\"threads\":"));
+        assert!(json.contains("\"benchmarks\":["));
+        assert!(json.contains("\\\"quoted\\\""), "quotes must be escaped: {json}");
+        assert!(json.contains("\"name\":\"beta\""));
+        assert!(json.trim_end().ends_with("]}"));
+        // Balanced braces/brackets (cheap well-formedness proxy without a
+        // JSON parser in the dependency-free build).
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+        let opens = json.matches('{').count();
+        assert_eq!(opens, json.matches('}').count());
+        assert_eq!(opens, 3); // document + 2 benchmark rows
+    }
+
+    #[test]
+    fn from_env_defaults_to_full() {
+        // The test environment does not set STAMP_BENCH_QUICK; the default
+        // harness must use the full measurement window.
+        if std::env::var("STAMP_BENCH_QUICK").is_err() {
+            let h = Harness::from_env();
+            assert_eq!(h.measure, Harness::new().measure);
+        }
     }
 
     #[test]

@@ -31,6 +31,10 @@ pub struct QuantSpec {
     pub hp_bits: u32,
     /// 0 = per-token; >0 = per-block with this block size.
     pub act_block: usize,
+    /// Serve linears through the packed integer path (QTensor + qgemm)
+    /// instead of the f32 QDQ simulation; see
+    /// [`crate::baselines::QuantStack::with_packed`].
+    pub packed: bool,
 }
 
 #[derive(Clone, Debug)]
@@ -70,6 +74,7 @@ impl RunConfig {
                 hp_tokens: 64,
                 hp_bits: 8,
                 act_block: 0,
+                packed: false,
             },
             serve: ServeSpec {
                 workers: crate::coordinator::WorkerPool::default_workers(),
@@ -102,6 +107,7 @@ impl RunConfig {
                 hp_tokens: doc.int_or("quant", "hp_tokens", d.quant.hp_tokens as i64) as usize,
                 hp_bits: doc.int_or("quant", "hp_bits", d.quant.hp_bits as i64) as u32,
                 act_block: doc.int_or("quant", "act_block", d.quant.act_block as i64) as usize,
+                packed: doc.bool_or("quant", "packed", d.quant.packed),
             },
             serve: ServeSpec {
                 workers: doc.int_or("serve", "workers", d.serve.workers as i64) as usize,
@@ -190,6 +196,13 @@ mod tests {
         assert_eq!(q.baseline_kind().unwrap(), Some(BaselineKind::SvdQuant));
         q.baseline = "bogus".into();
         assert!(q.baseline_kind().is_err());
+    }
+
+    #[test]
+    fn packed_switch_parses() {
+        assert!(!RunConfig::defaults().quant.packed, "packed path is opt-in");
+        let cfg = RunConfig::from_toml_str("[quant]\npacked = true\n").unwrap();
+        assert!(cfg.quant.packed);
     }
 
     #[test]

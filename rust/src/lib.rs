@@ -10,10 +10,11 @@
 //! The crate is organised in three layers:
 //!
 //! * **Substrates** — [`tensor`], [`linalg`], [`stats`], [`parallel`]:
-//!   dense f32 math with row-parallel hot kernels, a Jacobi eigensolver
-//!   (for the KLT), autocorrelation estimation, and the scoped fork-join
-//!   layer (`STAMP_THREADS` override) the kernels and the coordinator
-//!   share.
+//!   dense f32 math with row-parallel hot kernels — including the integer
+//!   GEMM [`tensor::qgemm`] over bit-packed [`quant::QTensor`] operands —
+//!   a Jacobi eigensolver (for the KLT), autocorrelation estimation, and
+//!   the scoped fork-join layer (`STAMP_THREADS` override) the kernels and
+//!   the coordinator share.
 //! * **Core library** — [`transforms`] (KLT / DCT / WHT / Haar-DWT sequence
 //!   transforms and Hadamard / SmoothQuant / FlatQuant feature transforms),
 //!   [`quant`] (per-token / per-block quantizers, mixed-precision bit
@@ -66,9 +67,9 @@ pub mod transforms;
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
-    pub use crate::quant::{BitAllocation, Granularity, QuantScheme, Quantizer};
+    pub use crate::quant::{BitAllocation, Granularity, QTensor, QuantScheme, Quantizer};
     pub use crate::stamp::{SeqTransformKind, Stamp, StampConfig};
     pub use crate::stats::sqnr;
-    pub use crate::tensor::Tensor;
+    pub use crate::tensor::{qgemm, Tensor};
     pub use crate::transforms::{FeatureTransform, SequenceTransform};
 }

@@ -4,14 +4,21 @@
 //! Eq. 1 with asymmetric min-max scales, at three granularities
 //! (per-tensor / per-token / per-block), with a *per-token bit width*
 //! `b_i` so the mixed-precision allocation of §3.1/§3.3 plugs in directly.
+//!
+//! Two execution forms share one rounding rule ([`QuantParams::code`]):
+//! the f32 *simulation* ([`quantize_dequantize_rows`], [`Quantizer::apply`])
+//! and the *packed* integer form ([`QTensor`], [`Quantizer::quantize`])
+//! that stores real 4/8-bit codes for [`crate::tensor::qgemm`].
 
 mod bitalloc;
 mod error;
 mod qdq;
+mod qtensor;
 
 pub use bitalloc::{optimal_bits, two_level_bits, BitAllocation};
 pub use error::{quantization_error, theorem1_bound};
 pub use qdq::{quantize_dequantize_rows, QuantParams};
+pub use qtensor::QTensor;
 
 use crate::tensor::Tensor;
 
@@ -98,6 +105,25 @@ impl Quantizer {
         assert_eq!(x.rows(), self.bits_per_token.len());
         self.scheme.apply(x)
     }
+
+    /// Quantize into packed integer form (the deployment path). The
+    /// existing [`Quantizer::apply`] QDQ is exactly
+    /// `self.dequantize(&self.quantize(x))` — bit-for-bit.
+    pub fn quantize(&self, x: &Tensor) -> QTensor {
+        assert_eq!(x.rows(), self.bits_per_token.len());
+        QTensor::quantize(x, &self.scheme.bits, self.scheme.granularity)
+    }
+
+    /// Reconstruct f32 activations from a packed tensor.
+    pub fn dequantize(&self, q: &QTensor) -> Tensor {
+        q.dequantize()
+    }
+
+    /// Whether every resolved bit width packs into u8 lanes (4 or 8 bits)
+    /// — the precondition for [`Quantizer::quantize`] and the integer GEMM.
+    pub fn packable(&self) -> bool {
+        self.bits_per_token.iter().all(|&b| b == 4 || b == 8)
+    }
 }
 
 #[cfg(test)]
@@ -139,6 +165,17 @@ mod tests {
             assert!(err < last, "bits {b}: err {err} !< {last}");
             last = err;
         }
+    }
+
+    #[test]
+    fn quantizer_packed_roundtrip_matches_apply() {
+        let x = Tensor::randn(&[16, 32], 21);
+        let q = Quantizer::new(QuantScheme::two_level(4, 8, 4, Granularity::PerToken), 16);
+        let packed = q.quantize(&x);
+        assert_eq!(q.dequantize(&packed), q.apply(&x), "packed QDQ must equal simulated QDQ");
+        assert!(q.packable());
+        let wide = Quantizer::new(QuantScheme::uniform(16, Granularity::PerToken), 16);
+        assert!(!wide.packable());
     }
 
     #[test]

@@ -21,13 +21,21 @@ pub struct QuantParams {
 impl QuantParams {
     /// Min-max parameters for a slice at bit width `bits`.
     pub fn min_max(group: &[f32], bits: u32) -> Self {
-        debug_assert!(bits >= 1 && bits <= 24);
         let mut mn = f32::MAX;
         let mut mx = f32::MIN;
         for &v in group {
             mn = mn.min(v);
             mx = mx.max(v);
         }
+        QuantParams::from_range(mn, mx, bits)
+    }
+
+    /// Parameters from a precomputed `[mn, mx]` range at bit width `bits`
+    /// (the per-tensor path computes the range once globally; both callers
+    /// must share this derivation so packed and simulated quantization
+    /// agree bit-for-bit).
+    pub fn from_range(mn: f32, mx: f32, bits: u32) -> Self {
+        debug_assert!(bits >= 1 && bits <= 24);
         let qmax = ((1u64 << bits) - 1) as f32;
         let range = (mx - mn).max(1e-12);
         let scale = range / qmax;
@@ -35,11 +43,21 @@ impl QuantParams {
         QuantParams { scale, zero, qmax }
     }
 
+    /// The integer code `Q_int(v)` of Eq. 1, as an (integral) f32 in
+    /// `[0, qmax]`. `inv` must be `1.0 / self.scale`, hoisted by callers'
+    /// inner loops. Every quantization path — the simulated QDQ below and
+    /// the bit-packing in [`super::QTensor`] — funnels through this one
+    /// expression, so the packed store can never round differently from
+    /// the f32 simulation.
+    #[inline(always)]
+    pub fn code(&self, v: f32, inv: f32) -> f32 {
+        (v * inv + self.zero).round_ties_even().clamp(0.0, self.qmax)
+    }
+
     /// Quantize-dequantize one value.
     #[inline(always)]
     pub fn qdq(&self, v: f32) -> f32 {
-        let q = (v / self.scale + self.zero).round_ties_even().clamp(0.0, self.qmax);
-        (q - self.zero) * self.scale
+        (self.code(v, 1.0 / self.scale) - self.zero) * self.scale
     }
 
     /// Quantize-dequantize a slice in place.
@@ -47,8 +65,7 @@ impl QuantParams {
     pub fn qdq_slice(&self, group: &mut [f32]) {
         let inv = 1.0 / self.scale;
         for v in group.iter_mut() {
-            let q = (*v * inv + self.zero).round_ties_even().clamp(0.0, self.qmax);
-            *v = (q - self.zero) * self.scale;
+            *v = (self.code(*v, inv) - self.zero) * self.scale;
         }
     }
 }
@@ -81,10 +98,7 @@ pub fn quantize_dequantize_rows(x: &Tensor, bits: &BitAllocation, gran: Granular
             crate::parallel::for_each_chunk_mut(out.data_mut(), s, d, |_, (r0, _), chunk| {
                 for (local, row) in chunk.chunks_mut(d).enumerate() {
                     let b = bits.bits_for(r0 + local, s);
-                    let qmax = ((1u64 << b) - 1) as f32;
-                    let scale = (mx - mn).max(1e-12) / qmax;
-                    let zero = (-mn / scale).round_ties_even();
-                    QuantParams { scale, zero, qmax }.qdq_slice(row);
+                    QuantParams::from_range(mn, mx, b).qdq_slice(row);
                 }
             });
         }

@@ -1,0 +1,413 @@
+//! Bit-packed integer activation storage — the deployment-side counterpart
+//! of the simulated f32 QDQ ([`super::quantize_dequantize_rows`]).
+//!
+//! A [`QTensor`] holds the integer codes `Q_int(X)` of Eq. 1 packed into
+//! u8 words (4-bit rows two codes per byte, 8-bit rows one), plus the
+//! per-group [`QuantParams`] needed to reconstruct
+//! `X ≈ (Q_int(X) − zero)·scale`. Rows may carry *different* bit widths
+//! (the two-level mixed-precision allocation of §3.1/§3.3), and groups
+//! follow the same three granularities as the simulated path
+//! (per-tensor / per-token / per-block).
+//!
+//! The packing funnels every code through [`QuantParams::code`] — the same
+//! expression the f32 QDQ uses — so `QTensor::quantize(x).dequantize()` is
+//! **bit-for-bit identical** to [`super::quantize_dequantize_rows`] (the
+//! `packed_roundtrip_is_exact` property in `tests/packed.rs` holds this
+//! invariant across shapes, bit mixes, and granularities). Unlike the
+//! simulation, though, the payload here is real: `storage_bits` is the
+//! footprint a deployment ships, reproducing the `average_bits` accounting
+//! of the paper's tables (Appendix C: 16-bit scale + 16-bit offset per
+//! group) for the per-token/per-block layouts the tables report — see
+//! [`QTensor::average_storage_bits`] for the per-tensor caveat.
+
+use super::qdq::QuantParams;
+use super::{BitAllocation, Granularity};
+use crate::parallel;
+use crate::tensor::Tensor;
+use std::fmt;
+
+/// A 2-D matrix of bit-packed integer quantization codes with per-group
+/// scale/zero parameters. Produced by [`QTensor::quantize`] (or
+/// [`super::Quantizer::quantize`]), consumed by
+/// [`crate::tensor::qgemm`] and [`QTensor::dequantize`].
+#[derive(Clone)]
+pub struct QTensor {
+    rows: usize,
+    cols: usize,
+    granularity: Granularity,
+    /// Resolved bit width per row; packable widths are 4 and 8.
+    row_bits: Vec<u32>,
+    /// Packed codes; row `r` occupies `data[row_offsets[r]..row_offsets[r+1]]`.
+    /// 4-bit rows store two codes per byte, low nibble first.
+    data: Vec<u8>,
+    row_offsets: Vec<usize>,
+    /// Per-group parameters, `groups_per_row` entries per row, row-major.
+    params: Vec<QuantParams>,
+    /// Effective group length along a row (= cols for per-tensor/per-token).
+    group: usize,
+}
+
+/// Packed bytes for one row of `cols` codes at `bits`.
+fn row_bytes(cols: usize, bits: u32) -> usize {
+    match bits {
+        8 => cols,
+        4 => cols.div_ceil(2),
+        _ => unreachable!("packable bit widths are 4 and 8"),
+    }
+}
+
+/// Pack a row of integer codes (each `< 2^bits`) into `out`.
+fn pack_codes(codes: &[u8], bits: u32, out: &mut [u8]) {
+    match bits {
+        8 => out.copy_from_slice(codes),
+        4 => {
+            for (byte, pair) in out.iter_mut().zip(codes.chunks(2)) {
+                *byte = pair[0] | (pair.get(1).copied().unwrap_or(0) << 4);
+            }
+        }
+        _ => unreachable!("packable bit widths are 4 and 8"),
+    }
+}
+
+impl QTensor {
+    /// Quantize an `s×d` matrix into packed integer form. Mirrors
+    /// [`super::quantize_dequantize_rows`] exactly (same per-row bit
+    /// resolution, same group parameters, same rounding) but stores the
+    /// codes instead of immediately dequantizing them.
+    ///
+    /// Row-parallel like the simulated path: rows split into contiguous
+    /// chunks across the [`crate::parallel`] workers (packed rows have
+    /// variable byte strides, so the buffer is split at the precomputed
+    /// row offsets), with the identical serial fallback under
+    /// `STAMP_THREADS=1` or below the work threshold.
+    ///
+    /// Panics if any resolved bit width is not 4 or 8 — wider simulated
+    /// widths have no packed lane format.
+    pub fn quantize(x: &Tensor, bits: &BitAllocation, gran: Granularity) -> QTensor {
+        let (s, d) = (x.rows(), x.cols());
+        let row_bits: Vec<u32> = (0..s).map(|i| bits.bits_for(i, s)).collect();
+        for (i, &b) in row_bits.iter().enumerate() {
+            assert!(b == 4 || b == 8, "row {i}: packed lanes are 4- or 8-bit, got {b}-bit");
+        }
+        let group = match gran {
+            Granularity::PerBlock { block } => {
+                assert!(block > 0);
+                block.min(d).max(1)
+            }
+            _ => d.max(1),
+        };
+        let gpr = d.div_ceil(group);
+        let mut row_offsets = Vec::with_capacity(s + 1);
+        row_offsets.push(0usize);
+        for &b in &row_bits {
+            row_offsets.push(row_offsets.last().unwrap() + row_bytes(d, b));
+        }
+        let mut data = vec![0u8; *row_offsets.last().unwrap()];
+        let mut params = vec![QuantParams { scale: 1.0, zero: 0.0, qmax: 0.0 }; s * gpr];
+
+        // Per-tensor granularity: one global min/max pass; parameters stay
+        // per row because the bit width may still vary per row.
+        let global = if matches!(gran, Granularity::PerTensor) && s * d > 0 {
+            let mut mn = f32::MAX;
+            let mut mx = f32::MIN;
+            for &v in x.data() {
+                mn = mn.min(v);
+                mx = mx.max(v);
+            }
+            Some((mn, mx))
+        } else {
+            None
+        };
+
+        let quantize_rows = |r0: usize, r1: usize, dchunk: &mut [u8], pchunk: &mut [QuantParams]| {
+            let mut codes = vec![0u8; d];
+            for r in r0..r1 {
+                let b = row_bits[r];
+                let dstart = row_offsets[r] - row_offsets[r0];
+                let drow = &mut dchunk[dstart..dstart + row_bytes(d, b)];
+                let prow = &mut pchunk[(r - r0) * gpr..(r - r0 + 1) * gpr];
+                for (bi, blk) in x.row(r).chunks(group).enumerate() {
+                    let p = match global {
+                        Some((mn, mx)) => QuantParams::from_range(mn, mx, b),
+                        None => QuantParams::min_max(blk, b),
+                    };
+                    let inv = 1.0 / p.scale;
+                    for (c, &v) in codes[bi * group..bi * group + blk.len()].iter_mut().zip(blk)
+                    {
+                        *c = p.code(v, inv) as u8;
+                    }
+                    prow[bi] = p;
+                }
+                pack_codes(&codes[..d], b, drow);
+            }
+        };
+
+        let threads = parallel::effective_threads();
+        let ranges = parallel::split_ranges(s, threads);
+        if threads == 1 || ranges.len() <= 1 || s * d < parallel::MIN_PARALLEL_ELEMS {
+            quantize_rows(0, s, &mut data, &mut params);
+        } else {
+            std::thread::scope(|scope| {
+                let mut drest: &mut [u8] = &mut data;
+                let mut prest: &mut [QuantParams] = &mut params;
+                for &(r0, r1) in &ranges {
+                    let dlen = row_offsets[r1] - row_offsets[r0];
+                    let (dchunk, dtail) = std::mem::take(&mut drest).split_at_mut(dlen);
+                    drest = dtail;
+                    let (pchunk, ptail) =
+                        std::mem::take(&mut prest).split_at_mut((r1 - r0) * gpr);
+                    prest = ptail;
+                    let fr = &quantize_rows;
+                    scope.spawn(move || fr(r0, r1, dchunk, pchunk));
+                }
+            });
+        }
+
+        QTensor { rows: s, cols: d, granularity: gran, row_bits, data, row_offsets, params, group }
+    }
+
+    /// Pack a weight matrix stored `[in, out]` into the transposed
+    /// `[out, in]` layout the integer GEMM consumes: one row per output
+    /// channel, quantized per row (`block = None`, per-output-channel) or
+    /// per `block` consecutive in-entries within a row. Codes and
+    /// parameters are exactly those of the column-grouped f32 weight QDQ
+    /// (`crate::baselines::quantize_weight`) under the same settings.
+    pub fn from_weight(w: &Tensor, bits: u32, block: Option<usize>) -> QTensor {
+        let din = w.rows();
+        let gran = match block {
+            Some(b) => Granularity::PerBlock { block: b.min(din).max(1) },
+            None => Granularity::PerToken,
+        };
+        QTensor::quantize(&w.transpose(), &BitAllocation::uniform(bits), gran)
+    }
+
+    /// Reconstruct the f32 matrix `(Q_int(X) − zero)·scale`. Bit-for-bit
+    /// identical to what [`super::quantize_dequantize_rows`] returns for
+    /// the same input/allocation/granularity.
+    pub fn dequantize(&self) -> Tensor {
+        let mut out = Tensor::zeros(&[self.rows, self.cols]);
+        let (d, group) = (self.cols, self.group);
+        if self.rows == 0 || d == 0 {
+            return out;
+        }
+        parallel::for_each_chunk_mut(out.data_mut(), self.rows, d, |_, (r0, _), chunk| {
+            let mut codes = vec![0u8; d];
+            for (local, orow) in chunk.chunks_mut(d).enumerate() {
+                let r = r0 + local;
+                self.unpack_row_into(r, &mut codes);
+                let prow = self.row_params(r);
+                for (bi, oblk) in orow.chunks_mut(group).enumerate() {
+                    let p = prow[bi];
+                    let cblk = &codes[bi * group..bi * group + oblk.len()];
+                    for (o, &c) in oblk.iter_mut().zip(cblk) {
+                        *o = (c as f32 - p.zero) * p.scale;
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn granularity(&self) -> Granularity {
+        self.granularity
+    }
+
+    /// Bit width of row `r`.
+    pub fn bits_for_row(&self, r: usize) -> u32 {
+        self.row_bits[r]
+    }
+
+    /// Effective group length along a row (equals `cols` for per-tensor
+    /// and per-token granularity).
+    pub fn group_len(&self) -> usize {
+        self.group
+    }
+
+    /// Quantization groups per row.
+    pub fn groups_per_row(&self) -> usize {
+        self.cols.div_ceil(self.group)
+    }
+
+    /// Scale/zero parameters for row `r`, one entry per group.
+    pub fn row_params(&self, r: usize) -> &[QuantParams] {
+        let gpr = self.groups_per_row();
+        &self.params[r * gpr..(r + 1) * gpr]
+    }
+
+    /// The packed bytes of row `r`.
+    pub fn packed_row(&self, r: usize) -> &[u8] {
+        &self.data[self.row_offsets[r]..self.row_offsets[r + 1]]
+    }
+
+    /// Expand row `r` into one integer code per column. `dst.len()` must
+    /// equal `cols`.
+    pub fn unpack_row_into(&self, r: usize, dst: &mut [u8]) {
+        assert_eq!(dst.len(), self.cols);
+        let packed = self.packed_row(r);
+        match self.row_bits[r] {
+            8 => dst.copy_from_slice(packed),
+            4 => {
+                for (pair, &byte) in dst.chunks_mut(2).zip(packed) {
+                    pair[0] = byte & 0x0F;
+                    if let Some(hi) = pair.get_mut(1) {
+                        *hi = byte >> 4;
+                    }
+                }
+            }
+            _ => unreachable!("packable bit widths are 4 and 8"),
+        }
+    }
+
+    /// Packed payload size in bytes (what a deployment actually ships for
+    /// the codes; 4-bit rows of odd width carry one padding nibble).
+    pub fn payload_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Total storage footprint in bits: the packed payload plus 16-bit
+    /// scale + 16-bit zero per stored group (the Appendix-C accounting
+    /// behind the tables' `average_bits` column). Per-tensor granularity
+    /// stores one parameter pair per row because the two-level allocation
+    /// lets the bit width — and hence `qmax`-derived scale — vary per row.
+    pub fn storage_bits(&self) -> usize {
+        self.data.len() * 8 + self.params.len() * 32
+    }
+
+    /// `storage_bits` per element. Matches
+    /// [`super::QuantScheme::average_bits`] exactly for per-token and
+    /// block-divisible per-block layouts; per-tensor granularity reads
+    /// `32/cols` bits/element *higher* here (that accounting amortizes
+    /// parameters to zero, while this struct stores a pair per row since
+    /// the two-level allocation varies the bit width per row), and 4-bit
+    /// rows of odd width carry one padding nibble the accounting omits.
+    pub fn average_storage_bits(&self) -> f64 {
+        if self.rows * self.cols == 0 {
+            return 0.0;
+        }
+        self.storage_bits() as f64 / (self.rows * self.cols) as f64
+    }
+}
+
+impl fmt::Debug for QTensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "QTensor[{}x{} {:?}, {} groups/row, {} payload bytes]",
+            self.rows,
+            self.cols,
+            self.granularity,
+            self.groups_per_row(),
+            self.data.len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quantize_dequantize_rows;
+
+    #[test]
+    fn roundtrip_matches_qdq_all_granularities() {
+        let x = Tensor::randn(&[17, 23], 3);
+        let bits = BitAllocation::two_level(5, 8, 4);
+        for gran in [
+            Granularity::PerTensor,
+            Granularity::PerToken,
+            Granularity::PerBlock { block: 8 },
+            Granularity::PerBlock { block: 64 }, // block > d clamps to d
+        ] {
+            let q = QTensor::quantize(&x, &bits, gran);
+            let want = quantize_dequantize_rows(&x, &bits, gran);
+            assert_eq!(q.dequantize(), want, "{gran:?} must round-trip bit-for-bit");
+        }
+    }
+
+    #[test]
+    fn roundtrip_exact_on_parallel_sizes() {
+        // 512×256 clears MIN_PARALLEL_ELEMS, so the threaded packing path
+        // runs on multi-core hosts; the result must not depend on it.
+        let x = Tensor::randn(&[512, 256], 5);
+        let bits = BitAllocation::two_level(64, 8, 4);
+        let q = QTensor::quantize(&x, &bits, Granularity::PerToken);
+        let want = quantize_dequantize_rows(&x, &bits, Granularity::PerToken);
+        assert_eq!(q.dequantize(), want);
+    }
+
+    #[test]
+    fn mixed_rows_pack_at_different_strides() {
+        let x = Tensor::randn(&[4, 6], 7);
+        let bits = BitAllocation::two_level(2, 8, 4);
+        let q = QTensor::quantize(&x, &bits, Granularity::PerToken);
+        // 8-bit rows: 6 bytes; 4-bit rows: 3 bytes.
+        assert_eq!(q.packed_row(0).len(), 6);
+        assert_eq!(q.packed_row(1).len(), 6);
+        assert_eq!(q.packed_row(2).len(), 3);
+        assert_eq!(q.packed_row(3).len(), 3);
+        assert_eq!(q.bits_for_row(0), 8);
+        assert_eq!(q.bits_for_row(3), 4);
+        assert_eq!(q.payload_bytes(), 18);
+    }
+
+    #[test]
+    fn unpack_handles_odd_width() {
+        let x = Tensor::randn(&[2, 7], 9);
+        let q = QTensor::quantize(&x, &BitAllocation::uniform(4), Granularity::PerToken);
+        assert_eq!(q.packed_row(0).len(), 4); // 7 nibbles → 4 bytes
+        let mut codes = vec![0u8; 7];
+        q.unpack_row_into(0, &mut codes);
+        assert!(codes.iter().all(|&c| c <= 15));
+        // Round-trip through dequantize stays exact.
+        let want = quantize_dequantize_rows(&x, &BitAllocation::uniform(4), Granularity::PerToken);
+        assert_eq!(q.dequantize(), want);
+    }
+
+    #[test]
+    fn storage_matches_average_bits_accounting() {
+        // Uniform 4-bit per-token on an even width: payload is exactly
+        // 4 bits/element, params add 32/d — the same 4.25 bits/element the
+        // simulated accounting reports.
+        let x = Tensor::randn(&[64, 128], 11);
+        let q = QTensor::quantize(&x, &BitAllocation::uniform(4), Granularity::PerToken);
+        let scheme = crate::quant::QuantScheme::uniform(4, Granularity::PerToken);
+        let want = scheme.average_bits(64, 128);
+        assert!(
+            (q.average_storage_bits() - want).abs() < 1e-9,
+            "packed {} vs accounted {want}",
+            q.average_storage_bits()
+        );
+    }
+
+    #[test]
+    fn mixed_storage_between_lp_and_hp() {
+        let x = Tensor::randn(&[128, 64], 13);
+        let bits = BitAllocation::two_level(32, 8, 4);
+        let q = QTensor::quantize(&x, &bits, Granularity::PerToken);
+        let avg = q.average_storage_bits();
+        // 0.25·8 + 0.75·4 = 5 payload bits + 0.5 param bits.
+        assert!((avg - 5.5).abs() < 1e-9, "avg {avg}");
+    }
+
+    #[test]
+    #[should_panic(expected = "packed lanes")]
+    fn rejects_unpackable_bits() {
+        let x = Tensor::randn(&[4, 8], 1);
+        let _ = QTensor::quantize(&x, &BitAllocation::uniform(6), Granularity::PerToken);
+    }
+
+    #[test]
+    fn empty_edges() {
+        let x = Tensor::zeros(&[0, 8]);
+        let q = QTensor::quantize(&x, &BitAllocation::uniform(4), Granularity::PerToken);
+        assert_eq!(q.dequantize().shape(), &[0, 8]);
+        assert_eq!(q.payload_bytes(), 0);
+    }
+}

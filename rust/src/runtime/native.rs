@@ -5,12 +5,18 @@
 //!
 //! Each registered variant owns its model handle (shared via `Arc`, so many
 //! variants can serve the same weights under different [`QuantStack`]s) and
-//! an optional stack; `None` serves the FP reference. One batch executes
-//! its requests sequentially on the calling worker thread — parallelism
-//! comes from [`crate::coordinator::WorkerPool`] at batch granularity
-//! (worker threads are kernel-serial, see [`crate::parallel`]); when the
-//! executor is driven directly, outside a pool, the matmul/QDQ kernels
-//! fan out instead.
+//! an optional stack; `None` serves the FP reference. A stack with
+//! [`QuantStack::packed`] set (the `quant.packed` config switch) serves
+//! its forwards through the packed integer path — activations stored as
+//! bit-packed [`crate::quant::QTensor`] codes, products computed by the
+//! i32-accumulating [`crate::tensor::qgemm`] — instead of the f32 QDQ
+//! simulation. One batch executes its requests sequentially on the calling
+//! worker thread — parallelism comes from
+//! [`crate::coordinator::WorkerPool`] at batch granularity (worker threads
+//! are kernel-serial, see [`crate::parallel`]); when the executor is
+//! driven directly, outside a pool, the matmul/QDQ/qgemm kernels fan out
+//! instead. Either way every kernel is bit-identical at any thread count,
+//! so served responses never depend on `STAMP_THREADS`.
 
 use crate::baselines::{QuantHook, QuantStack};
 use crate::coordinator::Executor;
@@ -150,7 +156,7 @@ impl Executor for NativeExecutor {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::baselines::{ActQuantCfg, BaselineKind};
+    use crate::baselines::{ActQuantCfg, BaselineKind, WeightQuantCfg};
     use crate::config::ServeSpec;
     use crate::coordinator::Server;
     use crate::model::{DitConfig, GptConfig};
@@ -216,6 +222,45 @@ mod tests {
                 "{bad} must be rejected"
             );
         }
+    }
+
+    #[test]
+    fn packed_variant_serves_and_is_thread_count_invariant() {
+        let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 11));
+        let act = ActQuantCfg { hp_tokens: 8, ..ActQuantCfg::w4a4_per_token() };
+        let mk = |packed: bool| {
+            let s = QuantStack::build(
+                BaselineKind::Rtn,
+                &HashMap::new(),
+                Some(act.clone()),
+                Some(WeightQuantCfg::w4_per_channel()),
+                None,
+                1,
+            );
+            if packed {
+                s.with_packed()
+            } else {
+                s
+            }
+        };
+        let exec = NativeExecutor::new()
+            .with_gpt("sim", gpt.clone(), Some(mk(false)))
+            .with_gpt("packed", gpt, Some(mk(true)));
+        let input = token_row(16);
+
+        // Multi-threaded kernels (direct call) vs forced-serial kernels
+        // must produce byte-identical responses.
+        let threaded = exec.execute("packed", &[&input]).unwrap().remove(0);
+        crate::parallel::set_kernel_serial(true);
+        let serial = exec.execute("packed", &[&input]).unwrap().remove(0);
+        crate::parallel::set_kernel_serial(false);
+        assert_eq!(threaded, serial, "packed serving must not depend on thread count");
+
+        // And the packed path tracks the simulated one tightly.
+        let sim = exec.execute("sim", &[&input]).unwrap().remove(0);
+        assert!(threaded.all_finite());
+        let s = crate::stats::sqnr(&sim, &threaded);
+        assert!(s > 35.0, "packed vs simulated served logits SQNR {s} dB");
     }
 
     #[test]

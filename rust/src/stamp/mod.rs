@@ -11,8 +11,8 @@
 //! so at runtime the only extra work is `L`, `Q`, and `L⁻¹` — both `L`s
 //! O(sd) for the Haar DWT.
 
-use crate::quant::{BitAllocation, Granularity, QuantScheme, Quantizer};
-use crate::tensor::Tensor;
+use crate::quant::{BitAllocation, Granularity, QTensor, QuantScheme, Quantizer};
+use crate::tensor::{qgemm, Tensor};
 use crate::transforms::{
     DctTransform, FeatureTransform, HaarDwt, HaarDwt2d, IdentitySeq, KltTransform,
     SequenceTransform, WhtTransform,
@@ -233,6 +233,21 @@ impl Stamp {
         self.quantizer.apply(&lx)
     }
 
+    /// Packed counterpart of [`Stamp::quantize_transformed`]: the
+    /// bit-packed integer codes `Q_int(L X)`, ready for
+    /// [`crate::tensor::qgemm`]. Requires [`Stamp::packable`] bit widths.
+    pub fn quantize_transformed_packed(&self, x: &Tensor) -> QTensor {
+        assert!(!self.cfg.skip_first_token, "packed path does not implement sink exclusion");
+        let lx = self.transform.forward(&self.pad_rows(x));
+        self.quantizer.quantize(&lx)
+    }
+
+    /// Whether the configured bit widths pack into u8 lanes (4/8 bits) —
+    /// the precondition for the packed integer path.
+    pub fn packable(&self) -> bool {
+        self.quantizer.packable()
+    }
+
     /// Apply `L⁻¹` and drop padding rows (the post-matmul step of Eq. 7).
     pub fn inverse_trim(&self, y: &Tensor) -> Tensor {
         self.transform.inverse(y).slice_rows(0, self.s_eff)
@@ -249,13 +264,19 @@ impl Stamp {
 ///
 /// Owns the (optionally feature-transform-fused) weight and executes
 /// `L⁻¹(Q(L X R) W_fused) + 1βᵀ`, postponing the sequence inverse until
-/// after the matmul (Eq. 7).
+/// after the matmul (Eq. 7). With [`StampLinear::with_packed_weight`] the
+/// middle product runs on the packed integer path: `L X R` is quantized
+/// *once* into a [`QTensor`], multiplied against the pre-quantized packed
+/// weight by [`crate::tensor::qgemm`], and only then inverse-transformed.
 pub struct StampLinear {
     stamp: Stamp,
     /// Weight stored `[in, out]`, with `R⁻¹` already fused.
     weight: Tensor,
     bias: Option<Vec<f32>>,
     feature: Box<dyn FeatureTransform>,
+    /// Pre-quantized packed weight (`[out, in]`); `Some` switches
+    /// [`StampLinear::forward`] onto the integer fast path.
+    qweight: Option<QTensor>,
 }
 
 impl StampLinear {
@@ -267,7 +288,29 @@ impl StampLinear {
     ) -> Self {
         assert_eq!(weight.rows(), feature.dim(), "weight in-dim vs feature transform");
         let fused = feature.fuse_into_weight(&weight);
-        StampLinear { stamp, weight: fused, bias, feature }
+        StampLinear { stamp, weight: fused, bias, feature, qweight: None }
+    }
+
+    /// Pre-quantize the fused weight at `bits` (4/8) with optional
+    /// per-block grouping along the input dimension (`None` =
+    /// per-output-channel), and route subsequent forwards through the
+    /// packed integer path. Mirrors the settings of
+    /// [`crate::baselines::WeightQuantCfg`] without depending on it, so
+    /// the L2 stamp layer stays upstream of the baselines stacks.
+    pub fn with_packed_weight(mut self, bits: u32, block: Option<usize>) -> Self {
+        assert!(bits == 4 || bits == 8, "packed weights need 4- or 8-bit lanes, got {bits}-bit");
+        assert!(self.stamp.packable(), "packed path needs 4/8-bit activation lanes");
+        assert!(
+            !self.stamp.config().skip_first_token,
+            "packed path does not implement sink exclusion"
+        );
+        self.qweight = Some(QTensor::from_weight(&self.weight, bits, block));
+        self
+    }
+
+    /// The packed weight, when the integer path is enabled.
+    pub fn packed_weight(&self) -> Option<&QTensor> {
+        self.qweight.as_ref()
     }
 
     /// Plain un-quantized reference forward (for SQNR baselines).
@@ -279,14 +322,19 @@ impl StampLinear {
         y
     }
 
-    /// Quantized forward implementing the Figure-2a pseudocode.
+    /// Quantized forward implementing the Figure-2a pseudocode. With a
+    /// packed weight installed, the product is the real integer GEMM
+    /// (activations quantized once into packed codes, i32 accumulation,
+    /// scale folding on output); otherwise the simulated f32 QDQ product.
     pub fn forward(&self, x: &Tensor) -> Tensor {
         // X R (feature transform on the activation side).
         let xr = self.feature.apply(x);
-        // L X R, quantize in the transformed domain.
-        let q = self.stamp.quantize_transformed(&xr);
-        // Q(LXR) · (R⁻¹W)
-        let y = q.matmul(&self.weight);
+        let y = match &self.qweight {
+            // Packed: Q_int(LXR) ⊗ Q_int(R⁻¹W) via qgemm.
+            Some(qw) => qgemm(&self.stamp.quantize_transformed_packed(&xr), qw),
+            // Simulated: Q(LXR) · (R⁻¹W) in f32.
+            None => self.stamp.quantize_transformed(&xr).matmul(&self.weight),
+        };
         // L⁻¹ (…), dropping transform padding rows.
         let mut out = self.stamp.inverse_trim(&y);
         // + 1βᵀ (bias is sequence-uniform so it commutes with L⁻¹, Eq. 7).
@@ -413,6 +461,40 @@ mod tests {
         let y_q = layer.forward(&x);
         let rel = y_q.max_abs_diff(&y_fp) / y_fp.abs_max();
         assert!(rel < 1e-2, "rel err {rel}");
+    }
+
+    #[test]
+    fn stamp_linear_packed_matches_simulated_oracle() {
+        // The packed forward must agree with the simulated pipeline run on
+        // the QDQ'd weight — the only differences being f32-vs-integer
+        // accumulation order inside the product.
+        let (s, din, dout) = (64, 32, 16);
+        let x = correlated(s, din, 0.95, 61);
+        let w = Tensor::randn(&[din, dout], 62);
+        let bias: Vec<f32> = (0..dout).map(|i| i as f32 * 0.05).collect();
+        let mk_stamp = || Stamp::new(StampConfig { hp_tokens: 8, ..Default::default() }, s);
+        let packed = StampLinear::new(
+            mk_stamp(),
+            w.clone(),
+            Some(bias.clone()),
+            Box::new(IdentityFeature::new(din)),
+        )
+        .with_packed_weight(4, None);
+        assert!(packed.packed_weight().is_some());
+        let y = packed.forward(&x);
+
+        // Oracle: same pipeline with the simulated (QDQ) weight product —
+        // the dequantized packed codes ARE the W4 QDQ weight (bit-for-bit,
+        // see baselines::weights tests), back in [in, out] layout.
+        let oracle_stamp = mk_stamp();
+        let wq = QTensor::from_weight(&w, 4, None).dequantize().transpose();
+        let q = oracle_stamp.quantize_transformed(&x);
+        let mut want = oracle_stamp.inverse_trim(&q.matmul(&wq));
+        want = want.add_row_broadcast(&bias);
+
+        let tol = 1e-3 * want.abs_max().max(1.0);
+        let diff = y.max_abs_diff(&want);
+        assert!(diff <= tol, "packed forward diff {diff} > tol {tol}");
     }
 
     #[test]

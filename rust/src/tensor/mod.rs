@@ -5,12 +5,16 @@
 //! deliberately small surface: shape bookkeeping, elementwise ops, matmul,
 //! row/column views, and a couple of constructors (zeros / randn / from
 //! slices). Everything is `f32`, matching both the PJRT artifacts and the
-//! quantization math in the paper.
+//! quantization math in the paper — except [`qgemm`], the integer GEMM
+//! over bit-packed [`crate::quant::QTensor`] operands that accumulates in
+//! i32 and folds scales/zero-points on output.
 
 mod matmul;
+mod qgemm;
 mod rng;
 
 pub use matmul::{matmul, matmul_into, matmul_transb};
+pub use qgemm::qgemm;
 pub use rng::XorShiftRng;
 
 use std::fmt;

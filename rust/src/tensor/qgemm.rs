@@ -1,0 +1,262 @@
+//! Integer GEMM over bit-packed quantized operands.
+//!
+//! `qgemm(a, w)` multiplies a packed activation matrix `a` (`m×k`,
+//! [`QTensor`]) by a packed weight `w` stored **transposed** (`n×k`, one
+//! row per output channel — the layout [`crate::baselines`] produces, and
+//! the same convention as [`super::matmul_transb`]), returning the f32
+//! product `A · Wᵀ`.
+//!
+//! The kernel never dequantizes element-by-element. With
+//! `a[i][p] = (qa − za)·sa` and `w[j][p] = (qw − zw)·sw` (params constant
+//! over a group), each output element decomposes per *segment* — the joint
+//! refinement of the two operands' group partitions along `k` — as
+//!
+//! ```text
+//! Σ_p a·w = sa·sw · ( Σ qa·qw − za·Σ qw − zw·Σ qa + len·za·zw )
+//! ```
+//!
+//! so the hot loop is a pure u8×u8 dot product accumulated in `i32`
+//! (which autovectorizes to widening integer multiply-adds), with the
+//! scale/zero folding applied once per segment in f64. `Σ qw` per weight
+//! row/segment is precomputed once per call; `Σ qa` once per activation
+//! row. Parallelism mirrors [`super::matmul`]: contiguous row-chunks of
+//! the output via [`crate::parallel`], each worker owning a disjoint
+//! slice, so results are bit-identical at any thread count.
+
+use super::Tensor;
+use crate::parallel;
+use crate::quant::QTensor;
+
+/// One maximal run of `k` over which both operands' quantization
+/// parameters are constant.
+struct Seg {
+    start: usize,
+    end: usize,
+    a_group: usize,
+    w_group: usize,
+}
+
+/// Joint segmentation of `0..k` by the two group lengths.
+fn segments(k: usize, a_blk: usize, w_blk: usize) -> Vec<Seg> {
+    let mut out = Vec::new();
+    let mut p = 0usize;
+    while p < k {
+        let a_group = p / a_blk;
+        let w_group = p / w_blk;
+        let end = ((a_group + 1) * a_blk).min((w_group + 1) * w_blk).min(k);
+        out.push(Seg { start: p, end, a_group, w_group });
+        p = end;
+    }
+    out
+}
+
+/// u8×u8 dot product in i32. Codes are ≤ 255, so the accumulator is safe
+/// for `k ≤ 32768` (asserted by [`qgemm`]).
+#[inline]
+fn dot_codes(a: &[u8], b: &[u8]) -> i32 {
+    let mut acc = 0i32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x as i32 * y as i32;
+    }
+    acc
+}
+
+#[inline]
+fn sum_codes(a: &[u8]) -> i32 {
+    let mut acc = 0i32;
+    for &x in a {
+        acc += x as i32;
+    }
+    acc
+}
+
+/// `a (m×k, packed) · w (n×k, packed, transposed weight) -> m×n` f32, with
+/// i32 integer accumulation and per-segment scale/zero folding in f64.
+///
+/// Supports every combination the quantizers produce: mixed per-row bit
+/// widths (4/8) on either operand, and per-tensor / per-token / per-block
+/// grouping on either side (group partitions need not align — the joint
+/// segmentation handles, say, per-token activations against block-64
+/// weights).
+pub fn qgemm(a: &QTensor, w: &QTensor) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (n, k2) = (w.rows(), w.cols());
+    assert_eq!(k, k2, "qgemm inner-dim mismatch: {m}x{k} @ ({n}x{k2})ᵀ");
+    assert!(k <= 32_768, "qgemm i32 accumulators overflow beyond k = 32768 (got {k})");
+    let mut out = Tensor::zeros(&[m, n]);
+    if m == 0 || n == 0 || k == 0 {
+        return out;
+    }
+
+    let segs = segments(k, a.group_len(), w.group_len());
+    let nseg = segs.len();
+
+    // Unpack the weight codes once (n×k u8 — ¼ the f32 weight's bytes) and
+    // precompute per-row, per-segment code sums; both amortize over all m
+    // activation rows.
+    let mut wq = vec![0u8; n * k];
+    parallel::for_each_chunk_mut(&mut wq, n, k, |_, (r0, _), chunk| {
+        for (local, row) in chunk.chunks_mut(k).enumerate() {
+            w.unpack_row_into(r0 + local, row);
+        }
+    });
+    let mut wsums = vec![0i32; n * nseg];
+    for (j, srow) in wsums.chunks_mut(nseg).enumerate() {
+        let row = &wq[j * k..(j + 1) * k];
+        for (si, seg) in segs.iter().enumerate() {
+            srow[si] = sum_codes(&row[seg.start..seg.end]);
+        }
+    }
+
+    let od = out.data_mut();
+    parallel::for_row_chunks(od, m, n, m.saturating_mul(n).saturating_mul(k), |chunk, r0, r1| {
+        let mut arow = vec![0u8; k];
+        let mut asums = vec![0i32; nseg];
+        for i in r0..r1 {
+            a.unpack_row_into(i, &mut arow);
+            for (si, seg) in segs.iter().enumerate() {
+                asums[si] = sum_codes(&arow[seg.start..seg.end]);
+            }
+            let ap = a.row_params(i);
+            let orow = &mut chunk[(i - r0) * n..(i - r0 + 1) * n];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let wrow = &wq[j * k..(j + 1) * k];
+                let wp = w.row_params(j);
+                let wsum_row = &wsums[j * nseg..(j + 1) * nseg];
+                let mut acc = 0.0f64;
+                for (si, seg) in segs.iter().enumerate() {
+                    let dot = dot_codes(&arow[seg.start..seg.end], &wrow[seg.start..seg.end]);
+                    let pa = ap[seg.a_group];
+                    let pw = wp[seg.w_group];
+                    let (za, zw) = (pa.zero as f64, pw.zero as f64);
+                    let len = (seg.end - seg.start) as f64;
+                    acc += pa.scale as f64
+                        * pw.scale as f64
+                        * (dot as f64 - za * wsum_row[si] as f64 - zw * asums[si] as f64
+                            + len * za * zw);
+                }
+                *o = acc as f32;
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize_dequantize_rows, BitAllocation, Granularity};
+
+    /// The QDQ oracle: simulated-quantization matmul against the packed
+    /// integer product, tolerant only of f32-accumulation differences.
+    fn oracle(
+        x: &Tensor,
+        wt: &Tensor, // n×k, same transposed layout qgemm consumes
+        abits: &BitAllocation,
+        agran: Granularity,
+        wbits: &BitAllocation,
+        wgran: Granularity,
+    ) -> Tensor {
+        let xq = quantize_dequantize_rows(x, abits, agran);
+        let wq = quantize_dequantize_rows(wt, wbits, wgran);
+        super::super::matmul_transb(&xq, &wq)
+    }
+
+    fn assert_close(got: &Tensor, want: &Tensor, label: &str) {
+        let tol = 1e-3 * want.abs_max().max(1.0);
+        let diff = got.max_abs_diff(want);
+        assert!(diff <= tol, "{label}: diff {diff} > tol {tol}");
+    }
+
+    #[test]
+    fn matches_oracle_w4a4() {
+        let x = Tensor::randn(&[12, 32], 1);
+        let wt = Tensor::randn(&[9, 32], 2);
+        let ab = BitAllocation::uniform(4);
+        let wb = BitAllocation::uniform(4);
+        let qa = QTensor::quantize(&x, &ab, Granularity::PerToken);
+        let qw = QTensor::quantize(&wt, &wb, Granularity::PerToken);
+        let got = qgemm(&qa, &qw);
+        let want = oracle(&x, &wt, &ab, Granularity::PerToken, &wb, Granularity::PerToken);
+        assert_eq!(got.shape(), &[12, 9]);
+        assert_close(&got, &want, "w4a4");
+    }
+
+    #[test]
+    fn matches_oracle_mixed_rows_and_blocks() {
+        // Two-level mixed activation rows against block-grouped weights:
+        // the segment partitions deliberately misalign (row groups of 24
+        // vs weight blocks of 16 over k=48).
+        let x = Tensor::randn(&[20, 48], 3);
+        let wt = Tensor::randn(&[7, 48], 4);
+        let ab = BitAllocation::two_level(6, 8, 4);
+        let wb = BitAllocation::uniform(8);
+        let agran = Granularity::PerBlock { block: 24 };
+        let wgran = Granularity::PerBlock { block: 16 };
+        let got = qgemm(&QTensor::quantize(&x, &ab, agran), &QTensor::quantize(&wt, &wb, wgran));
+        let want = oracle(&x, &wt, &ab, agran, &wb, wgran);
+        assert_close(&got, &want, "mixed+blocks");
+    }
+
+    #[test]
+    fn matches_oracle_per_tensor() {
+        let x = Tensor::randn(&[8, 16], 5);
+        let wt = Tensor::randn(&[5, 16], 6);
+        let ab = BitAllocation::two_level(2, 8, 4);
+        let wb = BitAllocation::uniform(4);
+        let got = qgemm(
+            &QTensor::quantize(&x, &ab, Granularity::PerTensor),
+            &QTensor::quantize(&wt, &wb, Granularity::PerToken),
+        );
+        let want = oracle(&x, &wt, &ab, Granularity::PerTensor, &wb, Granularity::PerToken);
+        assert_close(&got, &want, "per-tensor");
+    }
+
+    #[test]
+    fn parallel_path_is_bit_identical_to_serial() {
+        // Big enough that m·n·k clears the fork threshold. The serial
+        // reference runs on this thread via the kernel-serial flag.
+        let x = Tensor::randn(&[96, 80], 7);
+        let wt = Tensor::randn(&[72, 80], 8);
+        let qa = QTensor::quantize(&x, &BitAllocation::two_level(16, 8, 4), Granularity::PerToken);
+        let qw = QTensor::quantize(&wt, &BitAllocation::uniform(4), Granularity::PerBlock { block: 16 });
+        let threaded = qgemm(&qa, &qw);
+        crate::parallel::set_kernel_serial(true);
+        let serial = qgemm(&qa, &qw);
+        crate::parallel::set_kernel_serial(false);
+        assert_eq!(threaded, serial, "qgemm must not depend on thread count");
+    }
+
+    #[test]
+    fn segments_cover_k_exactly_once() {
+        for &(k, a_blk, w_blk) in &[(48usize, 24usize, 16usize), (17, 17, 4), (64, 64, 64), (10, 3, 7)] {
+            let segs = segments(k, a_blk, w_blk);
+            let mut cursor = 0;
+            for s in &segs {
+                assert_eq!(s.start, cursor);
+                assert!(s.end > s.start);
+                assert_eq!(s.a_group, s.start / a_blk);
+                assert_eq!(s.w_group, s.start / w_blk);
+                // A segment never straddles a group boundary on either side.
+                assert!((s.end - 1) / a_blk == s.a_group && (s.end - 1) / w_blk == s.w_group);
+                cursor = s.end;
+            }
+            assert_eq!(cursor, k, "k={k} a={a_blk} w={w_blk}");
+        }
+    }
+
+    #[test]
+    fn eight_bit_is_near_fp() {
+        // At 8 bits both operands quantize finely; the integer product
+        // must land close to the plain f32 product.
+        let x = Tensor::randn(&[10, 24], 9);
+        let wt = Tensor::randn(&[6, 24], 10);
+        let got = qgemm(
+            &QTensor::quantize(&x, &BitAllocation::uniform(8), Granularity::PerToken),
+            &QTensor::quantize(&wt, &BitAllocation::uniform(8), Granularity::PerToken),
+        );
+        let fp = super::super::matmul_transb(&x, &wt);
+        let rel = got.max_abs_diff(&fp) / fp.abs_max();
+        assert!(rel < 0.1, "rel err {rel}");
+    }
+}

@@ -1,0 +1,221 @@
+//! Packed integer inference path: property tests holding the packed
+//! subsystem (QTensor + qgemm) to the simulated-QDQ oracle, plus
+//! integration coverage of the `NativeExecutor` packed serving path.
+//!
+//! Two invariants anchor the whole subsystem:
+//!
+//! 1. **Round-trip exactness** — `QTensor::quantize(x).dequantize()` is
+//!    bit-for-bit the f32 QDQ output for every granularity and bit mix,
+//!    so the packed path can never silently diverge from the simulated
+//!    one.
+//! 2. **GEMM parity** — `qgemm(quantize(x), qweight)` matches the oracle
+//!    `qdq(x) · qdq(w)ᵀ` to within accumulated-rounding tolerance (the
+//!    operands are *identical* quantized values; only f32-vs-integer
+//!    accumulation differs).
+//!
+//! Failures shrink and report the generating seed via `stamp::testkit`.
+
+use stamp::baselines::{quantize_weight, quantize_weight_packed, QuantStack, WeightQuantCfg};
+use stamp::config::{RunConfig, ServeSpec};
+use stamp::coordinator::Server;
+use stamp::model::{Gpt, GptConfig};
+use stamp::quant::{quantize_dequantize_rows, BitAllocation, Granularity, QTensor};
+use stamp::tensor::{matmul_transb, qgemm, Tensor};
+use stamp::testkit;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn granularity_from(code: usize, block: usize) -> Granularity {
+    match code {
+        0 => Granularity::PerTensor,
+        1 => Granularity::PerToken,
+        _ => Granularity::PerBlock { block },
+    }
+}
+
+#[derive(Debug)]
+struct GemmCase {
+    m: usize,
+    k: usize,
+    n: usize,
+    lp: u32,
+    hp_tokens: usize,
+    gran: Granularity,
+    wcfg: WeightQuantCfg,
+    seed: u64,
+}
+
+/// Satellite 1: `qgemm(quantize(x), qweight)` vs the QDQ oracle across
+/// randomized shapes, bits ∈ {4, 8}, mixed two-level allocations, and all
+/// three granularities on both operands.
+#[test]
+fn property_qgemm_matches_qdq_oracle() {
+    testkit::check(
+        "qgemm-vs-qdq-oracle",
+        16,
+        0x51A3,
+        |g| {
+            let m = g.usize_in(1, 48);
+            let k = g.usize_in(1, 96);
+            let n = g.usize_in(1, 40);
+            let lp = if g.usize_in(0, 1) == 0 { 4 } else { 8 };
+            let hp_tokens = g.usize_in(0, m);
+            let gran = granularity_from(g.usize_in(0, 2), g.pow2_in(4, 32));
+            let w_bits = if g.usize_in(0, 1) == 0 { 4 } else { 8 };
+            let w_block = if g.usize_in(0, 1) == 0 { None } else { Some(g.pow2_in(8, 32)) };
+            let seed = g.rng.next_u64();
+            GemmCase {
+                m,
+                k,
+                n,
+                lp,
+                hp_tokens,
+                gran,
+                wcfg: WeightQuantCfg { bits: w_bits, block: w_block },
+                seed,
+            }
+        },
+        |c| {
+            let x = Tensor::randn(&[c.m, c.k], c.seed);
+            // Weight in the model's [in, out] layout.
+            let w = Tensor::randn(&[c.k, c.n], c.seed ^ 0x5DEE_CE66);
+            let bits = BitAllocation::two_level(c.hp_tokens, 8, c.lp);
+            let got = qgemm(
+                &QTensor::quantize(&x, &bits, c.gran),
+                &quantize_weight_packed(&w, &c.wcfg),
+            );
+            // Oracle: simulated QDQ on both operands, f32 matmul.
+            let want = matmul_transb(
+                &quantize_dequantize_rows(&x, &bits, c.gran),
+                &quantize_weight(&w, &c.wcfg).transpose(),
+            );
+            let tol = 1e-3 * want.abs_max().max(1.0) as f64;
+            let diff = got.max_abs_diff(&want) as f64;
+            if diff > tol {
+                return Err(format!("diff {diff:.3e} > tol {tol:.3e}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[derive(Debug)]
+struct PackCase {
+    s: usize,
+    d: usize,
+    lp: u32,
+    hp: u32,
+    hp_tokens: usize,
+    gran: Granularity,
+    seed: u64,
+}
+
+/// Satellite 2: pack/unpack round-trip is *exact* — the packed
+/// `dequantize` equals the f32 QDQ bit-for-bit for every granularity and
+/// two-level bit mix (including sizes large enough to take the threaded
+/// packing path).
+#[test]
+fn property_packed_roundtrip_is_exact() {
+    testkit::check(
+        "packed-roundtrip-bitexact",
+        16,
+        0xB17E,
+        |g| {
+            let s = g.usize_in(1, 512);
+            let d = g.usize_in(1, 160);
+            let lp = if g.usize_in(0, 1) == 0 { 4 } else { 8 };
+            let hp = if g.usize_in(0, 1) == 0 { 4 } else { 8 };
+            let hp_tokens = g.usize_in(0, s);
+            let gran = granularity_from(g.usize_in(0, 2), g.pow2_in(4, 64));
+            let seed = g.rng.next_u64();
+            PackCase { s, d, lp, hp, hp_tokens, gran, seed }
+        },
+        |c| {
+            let x = Tensor::randn(&[c.s, c.d], c.seed);
+            let bits = BitAllocation::two_level(c.hp_tokens, c.hp, c.lp);
+            let packed = QTensor::quantize(&x, &bits, c.gran).dequantize();
+            let simulated = quantize_dequantize_rows(&x, &bits, c.gran);
+            if packed != simulated {
+                let diff = packed.max_abs_diff(&simulated);
+                return Err(format!("packed path diverged from QDQ (max |Δ| = {diff:.3e})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+fn packed_gpt_executor() -> (stamp::runtime::NativeExecutor, Arc<Gpt>) {
+    let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 17));
+    // Drive the stack assembly off the TOML config switch.
+    let cfg = RunConfig::from_toml_str(
+        "[quant]\nbaseline = \"rtn\"\nstamp = false\npacked = true\nact_bits = 4\nhp_tokens = 8\n",
+    )
+    .unwrap();
+    assert!(cfg.quant.packed, "config switch must parse");
+    let mut stack = QuantStack::build(
+        cfg.quant.baseline_kind().unwrap().unwrap(),
+        &HashMap::new(),
+        Some(cfg.quant.act_cfg()),
+        Some(cfg.quant.weight_cfg()),
+        None,
+        5,
+    );
+    if cfg.quant.packed {
+        stack = stack.with_packed();
+    }
+    let exec = stamp::runtime::NativeExecutor::new().with_gpt("gpt-packed", gpt.clone(), Some(stack));
+    (exec, gpt)
+}
+
+fn token_row(n: usize) -> Tensor {
+    let toks: Vec<f32> = (0..n).map(|i| ((i * 7 + 3) % 70) as f32).collect();
+    Tensor::from_vec(&[1, n], toks)
+}
+
+/// Satellite 3a: packed serving is byte-identical whether the kernels run
+/// serial (`STAMP_THREADS=1` semantics, forced via the kernel-serial flag)
+/// or fanned out across threads.
+#[test]
+fn packed_executor_thread_count_invariant() {
+    use stamp::coordinator::Executor;
+    let (exec, _gpt) = packed_gpt_executor();
+    let inputs: Vec<Tensor> = [8usize, 16, 24].iter().map(|&n| token_row(n)).collect();
+    for input in &inputs {
+        let threaded = exec.execute("gpt-packed", &[input]).unwrap().remove(0);
+        stamp::parallel::set_kernel_serial(true);
+        let serial = exec.execute("gpt-packed", &[input]).unwrap().remove(0);
+        stamp::parallel::set_kernel_serial(false);
+        assert!(threaded.all_finite());
+        assert_eq!(
+            threaded, serial,
+            "packed response differs between serial and threaded kernels"
+        );
+    }
+}
+
+/// Satellite 3b: the coordinator still batches the packed variant, and the
+/// served bytes equal the direct executor call (workers are kernel-serial,
+/// which by 3a equals the threaded result).
+#[test]
+fn serve_packed_deterministic() {
+    use stamp::coordinator::Executor;
+    let (exec, _gpt) = packed_gpt_executor();
+    let exec = Arc::new(exec);
+    let input = token_row(12);
+    let want = exec.execute("gpt-packed", &[&input]).unwrap().remove(0);
+
+    let spec = ServeSpec { workers: 3, max_batch: 4, max_wait_us: 500, queue_depth: 32 };
+    let server = Server::start(&spec, &["gpt-packed"], exec);
+    let handle = server.handle();
+    let rxs: Vec<_> =
+        (0..24).map(|_| handle.submit("gpt-packed", input.clone()).1).collect();
+    for rx in &rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        let out = resp.output.unwrap();
+        assert_eq!(out, want, "served packed response differs from inline execution");
+    }
+    let vm = handle.metrics.variant("gpt-packed");
+    assert!(vm.mean_batch_size() > 1.0, "batching never engaged");
+    server.shutdown();
+}
