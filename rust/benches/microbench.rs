@@ -1,14 +1,18 @@
 //! §Perf micro-benchmarks: the L3 hot paths in isolation — QDQ throughput,
 //! the packed integer path (quantize + qgemm vs QDQ + f32 matmul),
-//! sequence transforms, matmul, the coordinator's router/batcher, and the
-//! end-to-end serving loop. Baseline/after numbers recorded in
+//! sequence transforms, matmul, autoregressive decode through the KV
+//! cache (fp32 vs packed two-level), the coordinator's router/batcher,
+//! and the end-to-end serving loop. Baseline/after numbers recorded in
 //! EXPERIMENTS.md §Perf; results also land in `BENCH_microbench.json`
 //! (machine-readable; `STAMP_BENCH_QUICK=1` bounds the run for CI smoke).
 
 use stamp::baselines::{quantize_weight, quantize_weight_packed, WeightQuantCfg};
 use stamp::bench::Harness;
 use stamp::coordinator::{DynamicBatcher, Request};
+use stamp::kvcache::{KvCache, KvCacheConfig};
+use stamp::model::{FpHook, Gpt, GptConfig};
 use stamp::quant::{BitAllocation, Granularity, QuantScheme, Quantizer};
+use stamp::stamp::SeqTransformKind;
 use stamp::tensor::{matmul, matmul_transb, qgemm, Tensor};
 use stamp::transforms::{
     DctTransform, HaarDwt, HadamardFeature, SequenceTransform, WhtTransform,
@@ -96,6 +100,35 @@ fn main() {
         let st = h.bench(&format!("matmul_transb {n}x({n}x{n})"), || matmul_transb(&a, &bt));
         println!("    -> {:.2} GFLOP/s", st.throughput(flops) / 1e9);
     }
+
+    // Autoregressive decode through the KV-cache subsystem: tokens/sec
+    // with the fp32 reference cache vs the packed two-level cache (± DWT
+    // blocks). The 1-thread and N-thread rows of the EXPERIMENTS.md table
+    // come from running this binary under STAMP_THREADS=1 / default, like
+    // every other section.
+    Harness::header("autoregressive decode (tiny GPT, prefill 16 + 48 tokens)");
+    let gpt = Gpt::new(GptConfig::tiny(), 0xD3C0);
+    let prompt: Vec<u32> = (0..16).map(|i| ((i * 5) % 72) as u32).collect();
+    let n_new = 48usize;
+    let st = h.bench("decode 48 tok (fp32 cache)", || {
+        let mut cache = KvCache::fp32(gpt.cfg.n_layers);
+        gpt.generate_greedy(&FpHook, &prompt, n_new, &mut cache)
+    });
+    println!("    -> {:.0} tok/s", st.throughput(n_new as f64));
+    let st = h.bench("decode 48 tok (packed two-level kv)", || {
+        let mut cache =
+            KvCache::new(gpt.cfg.n_layers, KvCacheConfig::two_level(8, 8, 4, 16));
+        gpt.generate_greedy(&FpHook, &prompt, n_new, &mut cache)
+    });
+    println!("    -> {:.0} tok/s", st.throughput(n_new as f64));
+    let st = h.bench("decode 48 tok (packed kv + dwt blocks)", || {
+        let mut cache = KvCache::new(
+            gpt.cfg.n_layers,
+            KvCacheConfig::two_level(8, 8, 4, 16).with_transform(SeqTransformKind::HaarDwt),
+        );
+        gpt.generate_greedy(&FpHook, &prompt, n_new, &mut cache)
+    });
+    println!("    -> {:.0} tok/s", st.throughput(n_new as f64));
 
     Harness::header("coordinator hot path");
     let st = h.bench("batcher push+flush (batch 8)", || {

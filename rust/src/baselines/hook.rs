@@ -20,6 +20,10 @@
 //! [`crate::tensor::qgemm`], and scales fold on output. Configurations
 //! the packed lanes cannot express (non-4/8-bit widths, attention-sink
 //! exclusion, unquantized weights) fall back to the simulation per site.
+//!
+//! Weight caches are per-hook-instance by default; serving paths hoist
+//! them to per-variant via [`PreparedWeights`] so repeated executor calls
+//! (and every decode step) reuse the same quantized/packed weights.
 
 use super::{
     identity_for, quantize_weight, quantize_weight_packed, ActQuantCfg, QuantStack, WeightQuantCfg,
@@ -31,7 +35,8 @@ use crate::tensor::{matmul, qgemm, Tensor};
 use crate::transforms::FeatureTransform;
 use std::cell::RefCell;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 /// QuaRot's symmetric range clip, applied per token row: keep `keep` of
 /// each row's min-max range around its midpoint.
@@ -53,23 +58,87 @@ fn lanes_ok(bits: u32) -> bool {
     bits == 4 || bits == 8
 }
 
+/// Build-once weight caches shared across every forward of one model
+/// variant.
+///
+/// [`QuantHook`]'s own caches are per-instance interior state
+/// (`RefCell`), so a serving executor that builds a hook per batch used
+/// to re-quantize every weight per call. Preparing a variant hoists that
+/// cost to registration time: run one dummy forward through a fresh
+/// hook, freeze its caches here ([`QuantHook::into_prepared`]), and hand
+/// the result to every later hook ([`QuantHook::with_prepared`]) —
+/// weights then quantize exactly once per variant. The maps are
+/// read-only after the build, so the struct is `Send + Sync` and
+/// shareable across worker threads.
+pub struct PreparedWeights {
+    w: HashMap<String, Tensor>,
+    wq: HashMap<String, Arc<QTensor>>,
+    /// Per-call weight builds that bypassed this cache; stays 0 once the
+    /// preparation forward covered every quantized site (pinned by the
+    /// `runtime::native` tests).
+    misses: AtomicUsize,
+}
+
+impl PreparedWeights {
+    /// Sites with a cached simulated (fused/QDQ) weight.
+    pub fn simulated_sites(&self) -> usize {
+        self.w.len()
+    }
+
+    /// Sites with a cached bit-packed weight.
+    pub fn packed_sites(&self) -> usize {
+        self.wq.len()
+    }
+
+    /// Cache-bypassing weight builds observed since preparation.
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
 pub struct QuantHook<'a> {
     stack: &'a QuantStack,
+    /// Variant-lifetime weight caches built at registration (serving);
+    /// consulted before the per-instance caches below.
+    prepared: Option<&'a PreparedWeights>,
     /// Quantized (fused) weights, keyed by site.
     w_cache: RefCell<HashMap<String, Tensor>>,
     /// Bit-packed fused weights for the integer path, keyed by site.
-    wq_cache: RefCell<HashMap<String, Rc<QTensor>>>,
+    wq_cache: RefCell<HashMap<String, Arc<QTensor>>>,
     /// STaMP instances keyed by sequence length.
     stamp_cache: RefCell<HashMap<usize, Stamp>>,
 }
 
 impl<'a> QuantHook<'a> {
     pub fn new(stack: &'a QuantStack) -> Self {
+        Self::build(stack, None)
+    }
+
+    /// A hook that reads weights from a per-variant [`PreparedWeights`]
+    /// cache instead of rebuilding them per instance.
+    pub fn with_prepared(stack: &'a QuantStack, prepared: &'a PreparedWeights) -> Self {
+        Self::build(stack, Some(prepared))
+    }
+
+    fn build(stack: &'a QuantStack, prepared: Option<&'a PreparedWeights>) -> Self {
         QuantHook {
             stack,
+            prepared,
             w_cache: RefCell::new(HashMap::new()),
             wq_cache: RefCell::new(HashMap::new()),
             stamp_cache: RefCell::new(HashMap::new()),
+        }
+    }
+
+    /// Freeze this hook's weight caches into a shareable
+    /// [`PreparedWeights`] (run a representative forward first so every
+    /// site is populated — weight caches depend only on the weights, not
+    /// the sequence length).
+    pub fn into_prepared(self) -> PreparedWeights {
+        PreparedWeights {
+            w: self.w_cache.into_inner(),
+            wq: self.wq_cache.into_inner(),
+            misses: AtomicUsize::new(0),
         }
     }
 
@@ -151,9 +220,18 @@ impl<'a> QuantHook<'a> {
     /// weight matrix (model contract); the shape check guards against a
     /// site accidentally being reused across different weights.
     fn weight_for(&self, site: &str, w: &Tensor) -> Tensor {
+        if let Some(cached) = self.prepared.and_then(|p| p.w.get(site)) {
+            assert_eq!(cached.shape(), w.shape(), "site {site} reused for a different weight");
+            return cached.clone();
+        }
         if let Some(cached) = self.w_cache.borrow().get(site) {
             assert_eq!(cached.shape(), w.shape(), "site {site} reused for a different weight");
             return cached.clone();
+        }
+        if let Some(p) = self.prepared {
+            // A prepared variant should never rebuild weights per call;
+            // count the bypass so serving tests can pin "once per variant".
+            p.misses.fetch_add(1, Ordering::Relaxed);
         }
         let mut wt = self.fused_weight(site, w);
         if let Some(cfg) = &self.stack.weight {
@@ -165,7 +243,15 @@ impl<'a> QuantHook<'a> {
 
     /// Bit-packed fused weight for a site (cached), in the `[out, in]`
     /// layout `qgemm` consumes.
-    fn packed_weight_for(&self, site: &str, w: &Tensor, cfg: &WeightQuantCfg) -> Rc<QTensor> {
+    fn packed_weight_for(&self, site: &str, w: &Tensor, cfg: &WeightQuantCfg) -> Arc<QTensor> {
+        if let Some(cached) = self.prepared.and_then(|p| p.wq.get(site)) {
+            assert_eq!(
+                (cached.rows(), cached.cols()),
+                (w.cols(), w.rows()),
+                "site {site} reused for a different weight"
+            );
+            return cached.clone();
+        }
         if let Some(cached) = self.wq_cache.borrow().get(site) {
             assert_eq!(
                 (cached.rows(), cached.cols()),
@@ -174,7 +260,10 @@ impl<'a> QuantHook<'a> {
             );
             return cached.clone();
         }
-        let packed = Rc::new(quantize_weight_packed(&self.fused_weight(site, w), cfg));
+        if let Some(p) = self.prepared {
+            p.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        let packed = Arc::new(quantize_weight_packed(&self.fused_weight(site, w), cfg));
         self.wq_cache.borrow_mut().insert(site.to_string(), packed.clone());
         packed
     }
@@ -400,6 +489,35 @@ mod tests {
         let n2 = hook.w_cache.borrow().len();
         assert_eq!(n1, n2, "second pass must hit the cache");
         assert!(n1 >= 8);
+    }
+
+    #[test]
+    fn prepared_weights_reused_without_misses() {
+        let gpt = Gpt::new(GptConfig::tiny(), 10);
+        let act = ActQuantCfg { hp_tokens: 8, ..ActQuantCfg::w4a4_per_token() };
+        let stack = QuantStack::build(
+            BaselineKind::Rtn,
+            &HashMap::new(),
+            Some(act),
+            Some(WeightQuantCfg::w4_per_channel()),
+            None,
+            7,
+        )
+        .with_packed();
+        // Build the per-variant cache from one dummy forward.
+        let build = QuantHook::new(&stack);
+        let _ = gpt.logits_hooked(&build, &[0]);
+        let prepared = build.into_prepared();
+        assert!(prepared.packed_sites() >= 8, "dummy forward must cover all sites");
+        // Fresh hooks resolve every weight from the prepared cache…
+        let t = tokens(32);
+        let a = gpt.logits_hooked(&QuantHook::with_prepared(&stack, &prepared), &t);
+        let b = gpt.logits_hooked(&QuantHook::with_prepared(&stack, &prepared), &t);
+        assert_eq!(prepared.misses(), 0, "prepared variants must never rebuild weights");
+        assert_eq!(a, b);
+        // …and produce exactly what an unprepared hook computes.
+        let c = gpt.logits_hooked(&QuantHook::new(&stack), &t);
+        assert_eq!(a, c, "prepared and per-call weights must be identical");
     }
 
     #[test]

@@ -22,7 +22,7 @@ mod lowrank;
 mod weights;
 
 pub use calib::{CalibHook, SiteStats};
-pub use hook::QuantHook;
+pub use hook::{PreparedWeights, QuantHook};
 pub use lowrank::low_rank_factor;
 pub use weights::{quantize_weight, quantize_weight_packed, WeightQuantCfg};
 

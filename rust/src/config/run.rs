@@ -46,11 +46,58 @@ pub struct ServeSpec {
     pub queue_depth: usize,
 }
 
+/// Autoregressive generation settings (`[generate]` section): the greedy
+/// decode budget plus the KV-cache policy handed to
+/// [`crate::kvcache::KvCacheConfig`]. TOML keys mirror the field paths:
+/// `max_new_tokens`, `kv.hp_tokens`, `kv.hp_bits`, `kv.lp_bits`,
+/// `kv.block`, `kv.packed`, `kv.transform`.
+#[derive(Clone, Debug)]
+pub struct GenerateSpec {
+    /// Per-request cap on generated tokens.
+    pub max_new_tokens: usize,
+    /// Leading (attention-sink) positions stored at `kv_hp_bits`.
+    pub kv_hp_tokens: usize,
+    pub kv_hp_bits: u32,
+    pub kv_lp_bits: u32,
+    /// Tokens per packed cache block (and per block transform).
+    pub kv_block: usize,
+    /// `false` serves the fp32 reference cache.
+    pub kv_packed: bool,
+    /// identity|dwt|dct|wht — block-wise sequence transform.
+    pub kv_transform: String,
+}
+
+impl GenerateSpec {
+    /// Resolve into the kvcache subsystem's config.
+    pub fn kv_cfg(&self) -> crate::error::Result<crate::kvcache::KvCacheConfig> {
+        let transform = match self.kv_transform.as_str() {
+            "identity" => crate::stamp::SeqTransformKind::Identity,
+            "dwt" => crate::stamp::SeqTransformKind::HaarDwt,
+            "dct" => crate::stamp::SeqTransformKind::Dct,
+            "wht" => crate::stamp::SeqTransformKind::Wht,
+            other => crate::bail!("unknown kv.transform `{other}`"),
+        };
+        let cfg = crate::kvcache::KvCacheConfig {
+            hp_tokens: self.kv_hp_tokens,
+            hp_bits: self.kv_hp_bits,
+            lp_bits: self.kv_lp_bits,
+            block: self.kv_block,
+            packed: self.kv_packed,
+            transform,
+        };
+        // Same error surface as a bad kv.transform: invalid lanes/blocks
+        // fail here, recoverably, instead of panicking at registration.
+        cfg.check().map_err(crate::error::Error::msg)?;
+        Ok(cfg)
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub model: ModelSpec,
     pub quant: QuantSpec,
     pub serve: ServeSpec,
+    pub generate: GenerateSpec,
     /// Where AOT artifacts live.
     pub artifacts_dir: String,
 }
@@ -81,6 +128,15 @@ impl RunConfig {
                 max_batch: 8,
                 max_wait_us: 2000,
                 queue_depth: 256,
+            },
+            generate: GenerateSpec {
+                max_new_tokens: 64,
+                kv_hp_tokens: 64,
+                kv_hp_bits: 8,
+                kv_lp_bits: 4,
+                kv_block: 32,
+                kv_packed: true,
+                kv_transform: "identity".into(),
             },
             artifacts_dir: "artifacts".into(),
         }
@@ -115,6 +171,21 @@ impl RunConfig {
                 max_wait_us: doc.int_or("serve", "max_wait_us", d.serve.max_wait_us as i64) as u64,
                 queue_depth: doc.int_or("serve", "queue_depth", d.serve.queue_depth as i64)
                     as usize,
+            },
+            generate: GenerateSpec {
+                max_new_tokens: doc
+                    .int_or("generate", "max_new_tokens", d.generate.max_new_tokens as i64)
+                    as usize,
+                kv_hp_tokens: doc
+                    .int_or("generate", "kv.hp_tokens", d.generate.kv_hp_tokens as i64)
+                    as usize,
+                kv_hp_bits: doc.int_or("generate", "kv.hp_bits", d.generate.kv_hp_bits as i64)
+                    as u32,
+                kv_lp_bits: doc.int_or("generate", "kv.lp_bits", d.generate.kv_lp_bits as i64)
+                    as u32,
+                kv_block: doc.int_or("generate", "kv.block", d.generate.kv_block as i64) as usize,
+                kv_packed: doc.bool_or("generate", "kv.packed", d.generate.kv_packed),
+                kv_transform: doc.str_or("generate", "kv.transform", &d.generate.kv_transform),
             },
             artifacts_dir: doc.str_or("", "artifacts_dir", &d.artifacts_dir),
         })
@@ -203,6 +274,40 @@ mod tests {
         assert!(!RunConfig::defaults().quant.packed, "packed path is opt-in");
         let cfg = RunConfig::from_toml_str("[quant]\npacked = true\n").unwrap();
         assert!(cfg.quant.packed);
+    }
+
+    #[test]
+    fn generate_section_parses_with_dotted_kv_keys() {
+        let cfg = RunConfig::from_toml_str(
+            "[generate]\nmax_new_tokens = 16\nkv.hp_tokens = 8\nkv.hp_bits = 8\nkv.lp_bits = 4\nkv.block = 16\nkv.packed = true\nkv.transform = \"dwt\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.generate.max_new_tokens, 16);
+        let kv = cfg.generate.kv_cfg().unwrap();
+        assert_eq!((kv.hp_tokens, kv.hp_bits, kv.lp_bits, kv.block), (8, 8, 4, 16));
+        assert!(kv.packed);
+        assert_eq!(kv.transform, crate::stamp::SeqTransformKind::HaarDwt);
+    }
+
+    #[test]
+    fn generate_defaults_are_paper_kv_setting() {
+        let d = RunConfig::defaults();
+        assert_eq!(d.generate.kv_hp_tokens, 64);
+        assert_eq!(d.generate.kv_lp_bits, 4);
+        let kv = d.generate.kv_cfg().unwrap();
+        assert!(kv.packed);
+        assert_eq!(kv.transform, crate::stamp::SeqTransformKind::Identity);
+        let mut bad = d.generate.clone();
+        bad.kv_transform = "bogus".into();
+        assert!(bad.kv_cfg().is_err());
+        // Invalid lanes/blocks surface as the same recoverable error, not
+        // a later panic at variant registration.
+        let mut bad = d.generate.clone();
+        bad.kv_lp_bits = 6;
+        assert!(bad.kv_cfg().unwrap_err().to_string().contains("4- or 8-bit"));
+        let mut bad = d.generate.clone();
+        bad.kv_block = 0;
+        assert!(bad.kv_cfg().is_err());
     }
 
     #[test]

@@ -1,0 +1,590 @@
+//! STaMP-aware quantized KV cache — the sequence-incremental consumer of
+//! [`crate::quant::BitAllocation`] + [`crate::quant::QTensor`] that lets
+//! the paper's two-level mixed-precision policy (§3.3, Theorem 1) run
+//! where autoregressive serving actually spends its memory.
+//!
+//! ## Layout (DESIGN.md §11)
+//!
+//! Each transformer layer owns one [`KvStream`] per K/V tensor. A stream
+//! is a sequence of finalized packed blocks followed by an fp32 tail:
+//!
+//! ```text
+//! [ packed block 0 | packed block 1 | … | fp32 tail (< block tokens) ]
+//! ```
+//!
+//! * **Packed blocks** — `block` consecutive tokens, optionally passed
+//!   through a block-wise sequence transform (`L` over the block's rows),
+//!   quantized per token into a bit-packed [`QTensor`]. Bit widths follow
+//!   the global two-level policy: rows overlapping the first `hp_tokens`
+//!   (attention-sink) positions store at `hp_bits`, steady-state rows at
+//!   `lp_bits`. For transformed blocks the hp rows are the *leading*
+//!   coefficients — which every shipped transform orders by energy — so
+//!   the storage accounting is identical either way.
+//! * **fp32 tail** — the most recent `len mod block` tokens, kept exact
+//!   until a full block accumulates.
+//!
+//! ## The tail-window flush rule keeps block transforms causal
+//!
+//! A sequence transform mixes tokens, so applying it across the whole
+//! stream at every decode step would make a token's stored representation
+//! depend on *future* tokens. The flush rule restores causality: a token
+//! is re-represented exactly once — when its block completes — and the
+//! transform mixes only the tokens of that (entirely past) block.
+//! Appending token `t` therefore never alters any block that does not
+//! contain `t`, and attention at step `t` reads only data derived from
+//! tokens `≤ t`.
+//!
+//! With `packed = false` the stream stores plain fp32 rows and
+//! [`KvStream::gather`] returns exactly what was appended — the parity
+//! reference under which decode is bit-identical to the full-sequence
+//! forward at any thread count (`tests/decode.rs`).
+
+use crate::quant::{BitAllocation, Granularity, QTensor};
+use crate::stamp::SeqTransformKind;
+use crate::tensor::Tensor;
+use crate::transforms::{DctTransform, HaarDwt, SequenceTransform, WhtTransform};
+
+/// Two-level token policy + block layout for one KV cache
+/// (the `[generate]` config section's `kv.*` keys,
+/// [`crate::config::GenerateSpec`]).
+#[derive(Clone, Debug)]
+pub struct KvCacheConfig {
+    /// Leading (attention-sink) token positions stored at `hp_bits`.
+    pub hp_tokens: usize,
+    pub hp_bits: u32,
+    /// Steady-state width (the "KV4" of the tables).
+    pub lp_bits: u32,
+    /// Tokens per packed block — also the span of the block-wise sequence
+    /// transform. The fp32 tail holds at most `block − 1` tokens.
+    pub block: usize,
+    /// `false` keeps every token fp32 (the parity/reference cache); the
+    /// remaining fields are then ignored.
+    pub packed: bool,
+    /// Block-wise sequence transform applied before quantization
+    /// (`Identity` = plain two-level rows). 2-D kinds are rejected:
+    /// decode streams are 1-D.
+    pub transform: SeqTransformKind,
+}
+
+impl Default for KvCacheConfig {
+    /// The paper's main KV setting: 64 sink tokens at 8 bits, KV4
+    /// steady-state, 32-token blocks, no block transform.
+    fn default() -> Self {
+        KvCacheConfig {
+            hp_tokens: 64,
+            hp_bits: 8,
+            lp_bits: 4,
+            block: 32,
+            packed: true,
+            transform: SeqTransformKind::Identity,
+        }
+    }
+}
+
+impl KvCacheConfig {
+    /// The fp32 reference cache (no quantization at all).
+    pub fn fp32() -> Self {
+        KvCacheConfig { packed: false, ..Default::default() }
+    }
+
+    /// Packed two-level cache with the given allocation and block size.
+    pub fn two_level(hp_tokens: usize, hp_bits: u32, lp_bits: u32, block: usize) -> Self {
+        KvCacheConfig { hp_tokens, hp_bits, lp_bits, block, ..Default::default() }
+    }
+
+    /// Builder-style block transform selection.
+    pub fn with_transform(mut self, kind: SeqTransformKind) -> Self {
+        self.transform = kind;
+        self
+    }
+
+    /// Field-specific error when the packed lanes or block transforms
+    /// cannot express this configuration; always `Ok` for fp32 caches.
+    /// The config layer ([`crate::config::GenerateSpec::kv_cfg`]) surfaces
+    /// this as a recoverable parse-time error.
+    pub fn check(&self) -> Result<(), String> {
+        if !self.packed {
+            return Ok(());
+        }
+        if self.block == 0 {
+            return Err("kv.block must be ≥ 1".into());
+        }
+        if self.lp_bits != 4 && self.lp_bits != 8 {
+            return Err(format!("packed kv lanes are 4- or 8-bit, got lp_bits = {}", self.lp_bits));
+        }
+        if self.hp_tokens > 0 && self.hp_bits != 4 && self.hp_bits != 8 {
+            return Err(format!("packed kv lanes are 4- or 8-bit, got hp_bits = {}", self.hp_bits));
+        }
+        match self.transform {
+            SeqTransformKind::Identity | SeqTransformKind::Dct => Ok(()),
+            SeqTransformKind::HaarDwt if self.block % 2 != 0 => {
+                Err(format!("HaarDwt kv blocks need an even block size, got {}", self.block))
+            }
+            SeqTransformKind::Wht if !self.block.is_power_of_two() => {
+                Err(format!("WHT kv blocks need a power-of-two block size, got {}", self.block))
+            }
+            SeqTransformKind::HaarDwt2d { .. } => {
+                Err("2-D sequence transforms do not apply to 1-D decode streams".into())
+            }
+            _ => Ok(()),
+        }
+    }
+
+    /// Panicking form of [`KvCacheConfig::check`], for construction sites
+    /// where an invalid config is a programming error.
+    pub fn validate(&self) {
+        if let Err(e) = self.check() {
+            panic!("{e}");
+        }
+    }
+
+    /// The block-wise transform instance (`None` for identity / fp32).
+    fn block_transform(&self) -> Option<Box<dyn SequenceTransform>> {
+        if !self.packed {
+            return None;
+        }
+        match self.transform {
+            SeqTransformKind::Identity => None,
+            SeqTransformKind::HaarDwt => {
+                // Same depth policy as `Stamp`: up to the paper's 3 levels,
+                // bounded by the block's divisibility.
+                let levels = HaarDwt::max_levels(self.block).clamp(1, 3);
+                Some(Box::new(HaarDwt::new(self.block, levels)))
+            }
+            SeqTransformKind::Dct => Some(Box::new(DctTransform::new(self.block))),
+            SeqTransformKind::Wht => Some(Box::new(WhtTransform::new(self.block))),
+            SeqTransformKind::HaarDwt2d { .. } => {
+                panic!("2-D sequence transforms do not apply to 1-D decode streams")
+            }
+        }
+    }
+}
+
+/// One K or V token stream: finalized packed blocks + fp32 tail window.
+pub struct KvStream {
+    cfg: KvCacheConfig,
+    /// Built once per stream; every block shares it (blocks have one
+    /// fixed length, `cfg.block`).
+    transform: Option<Box<dyn SequenceTransform>>,
+    /// Finalized blocks, `cfg.block` tokens each, oldest first.
+    blocks: Vec<QTensor>,
+    /// Dequantized (+ inverse-transformed) fp32 view of the finalized
+    /// blocks, grown incrementally at flush time. Finalized blocks are
+    /// immutable, so decompressing once per flush instead of once per
+    /// [`KvStream::gather`] keeps the per-step decode cost O(copy) rather
+    /// than O(re-dequantize · history). Serving scratch only: the packed
+    /// blocks remain the stored representation and the sole input to
+    /// [`KvStream::storage_bits`].
+    decoded: Option<Tensor>,
+    /// Recent tokens not yet covering a full block (always `Some` with
+    /// ≥ 1 row when non-empty; `packed = false` keeps everything here).
+    tail: Option<Tensor>,
+    /// Feature width, fixed by the first append.
+    dim: Option<usize>,
+    /// Total tokens appended.
+    len: usize,
+}
+
+impl KvStream {
+    pub fn new(cfg: KvCacheConfig) -> Self {
+        cfg.validate();
+        let transform = cfg.block_transform();
+        KvStream { cfg, transform, blocks: Vec::new(), decoded: None, tail: None, dim: None, len: 0 }
+    }
+
+    /// Tokens appended so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Feature width (`None` until the first append).
+    pub fn dim(&self) -> Option<usize> {
+        self.dim
+    }
+
+    /// Finalized packed blocks.
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Tokens currently in the fp32 tail window.
+    pub fn tail_len(&self) -> usize {
+        self.tail.as_ref().map_or(0, Tensor::rows)
+    }
+
+    /// Append `m` new tokens (an `m×d` matrix, oldest first). Completed
+    /// blocks flush immediately; partial tokens wait in the fp32 tail.
+    pub fn append(&mut self, rows: &Tensor) {
+        assert_eq!(rows.ndim(), 2, "kv append expects a 2-D m×d tensor");
+        if rows.rows() == 0 {
+            return;
+        }
+        match self.dim {
+            Some(d) => assert_eq!(rows.cols(), d, "kv append feature width changed"),
+            None => self.dim = Some(rows.cols()),
+        }
+        self.tail = Some(match self.tail.take() {
+            Some(t) => t.vcat(rows),
+            None => rows.clone(),
+        });
+        self.len += rows.rows();
+        if self.cfg.packed {
+            while self.tail_len() >= self.cfg.block {
+                self.flush_block();
+            }
+        }
+    }
+
+    /// Quantize the oldest `block` tail tokens into a finalized packed
+    /// block. Only ever called with a full block accumulated — the flush
+    /// rule that keeps block-wise transforms causal (module docs).
+    fn flush_block(&mut self) {
+        let tail = self.tail.take().expect("flush with empty tail");
+        let b = self.cfg.block;
+        let block = tail.slice_rows(0, b);
+        self.tail = if tail.rows() > b { Some(tail.slice_rows(b, tail.rows())) } else { None };
+        // The block's absolute start position decides how many of its rows
+        // fall under the hp (sink) budget. Transforms concentrate the
+        // block's energy into the leading coefficients, so the hp rows are
+        // the leading ones in either domain and the accounting is
+        // position-equivalent.
+        let base = self.blocks.len() * b;
+        let hp_rows = self.cfg.hp_tokens.saturating_sub(base).min(b);
+        let bits = BitAllocation::two_level(hp_rows, self.cfg.hp_bits, self.cfg.lp_bits);
+        let coeffs = match &self.transform {
+            Some(t) => t.forward(&block),
+            None => block,
+        };
+        let q = QTensor::quantize(&coeffs, &bits, Granularity::PerToken);
+        // Decompress the (now immutable) block exactly once — what every
+        // later gather will read for these tokens.
+        let deq = q.dequantize();
+        let view = match &self.transform {
+            Some(t) => t.inverse(&deq),
+            None => deq,
+        };
+        self.decoded = Some(match self.decoded.take() {
+            Some(d) => d.vcat(&view),
+            None => view,
+        });
+        self.blocks.push(q);
+    }
+
+    /// Materialize the full stream as a `len×d` fp32 matrix for attention:
+    /// finalized blocks read from the flush-time decompressed view (each
+    /// block dequantized + inverse-transformed exactly once, at flush),
+    /// the fp32 tail copies through exactly.
+    pub fn gather(&self) -> Tensor {
+        let d = match self.dim {
+            Some(d) => d,
+            None => return Tensor::zeros(&[0, 0]),
+        };
+        let mut out = Tensor::zeros(&[self.len, d]);
+        let mut r = 0usize;
+        if let Some(dec) = &self.decoded {
+            out.data_mut()[..dec.len()].copy_from_slice(dec.data());
+            r += dec.rows();
+        }
+        if let Some(t) = &self.tail {
+            let start = r * d;
+            out.data_mut()[start..start + t.len()].copy_from_slice(t.data());
+            r += t.rows();
+        }
+        debug_assert_eq!(r, self.len);
+        out
+    }
+
+    /// Physical storage footprint in bits: the packed payload plus 16-bit
+    /// scale + 16-bit zero per group for finalized blocks (the Appendix-C
+    /// accounting, [`QTensor::storage_bits`]), and 32 bits/element for the
+    /// fp32 tail.
+    pub fn storage_bits(&self) -> usize {
+        let packed: usize = self.blocks.iter().map(QTensor::storage_bits).sum();
+        packed + self.tail.as_ref().map_or(0, |t| t.len() * 32)
+    }
+
+    /// [`KvStream::storage_bits`] per stored element (0 when empty).
+    pub fn average_storage_bits(&self) -> f64 {
+        match self.dim {
+            Some(d) if self.len > 0 => self.storage_bits() as f64 / (self.len * d) as f64,
+            _ => 0.0,
+        }
+    }
+}
+
+/// Per-layer K and V streams (what
+/// [`crate::model::attention::MultiHeadAttention::forward_decode`]
+/// consumes).
+pub struct KvLayer {
+    pub k: KvStream,
+    pub v: KvStream,
+}
+
+impl KvLayer {
+    pub fn new(cfg: KvCacheConfig) -> Self {
+        KvLayer { k: KvStream::new(cfg.clone()), v: KvStream::new(cfg) }
+    }
+
+    /// fp32 reference layer (parity path).
+    pub fn fp32() -> Self {
+        KvLayer::new(KvCacheConfig::fp32())
+    }
+}
+
+/// Whole-model cache: one [`KvLayer`] per transformer block, advancing in
+/// lock-step through [`crate::model::Gpt::prefill`] /
+/// [`crate::model::Gpt::decode_step`].
+pub struct KvCache {
+    layers: Vec<KvLayer>,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, cfg: KvCacheConfig) -> Self {
+        assert!(n_layers >= 1, "cache needs at least one layer");
+        let layers = (0..n_layers).map(|_| KvLayer::new(cfg.clone())).collect();
+        KvCache { layers }
+    }
+
+    /// fp32 reference cache (parity path).
+    pub fn fp32(n_layers: usize) -> Self {
+        KvCache::new(n_layers, KvCacheConfig::fp32())
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Tokens appended so far (layers advance in lock-step during a
+    /// forward, so layer 0's K stream is authoritative).
+    pub fn len(&self) -> usize {
+        self.layers[0].k.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn layer(&self, l: usize) -> &KvLayer {
+        &self.layers[l]
+    }
+
+    pub fn layer_mut(&mut self, l: usize) -> &mut KvLayer {
+        &mut self.layers[l]
+    }
+
+    /// Total footprint across all layers and both streams.
+    pub fn storage_bits(&self) -> usize {
+        self.layers.iter().map(|l| l.k.storage_bits() + l.v.storage_bits()).sum()
+    }
+
+    /// Mean bits per stored K/V element across the whole cache.
+    pub fn average_storage_bits(&self) -> f64 {
+        let elems: usize = self
+            .layers
+            .iter()
+            .map(|l| {
+                l.k.dim().map_or(0, |d| l.k.len() * d) + l.v.dim().map_or(0, |d| l.v.len() * d)
+            })
+            .sum();
+        if elems == 0 {
+            0.0
+        } else {
+            self.storage_bits() as f64 / elems as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quantize_dequantize_rows;
+    use crate::stats::sqnr;
+
+    fn cfg(hp: usize, hp_bits: u32, lp: u32, block: usize) -> KvCacheConfig {
+        KvCacheConfig::two_level(hp, hp_bits, lp, block)
+    }
+
+    #[test]
+    fn fp32_gather_is_exact() {
+        let mut st = KvStream::new(KvCacheConfig::fp32());
+        let a = Tensor::randn(&[5, 8], 1);
+        let b = Tensor::randn(&[3, 8], 2);
+        st.append(&a);
+        st.append(&b);
+        assert_eq!(st.len(), 8);
+        assert_eq!(st.n_blocks(), 0, "fp32 cache never flushes");
+        assert_eq!(st.gather(), a.vcat(&b), "fp32 gather must be bit-exact");
+        assert_eq!(st.storage_bits(), 8 * 8 * 32);
+    }
+
+    #[test]
+    fn flush_boundaries_and_tail_window() {
+        let mut st = KvStream::new(cfg(0, 8, 4, 8));
+        // 20 tokens in odd chunks: 2 full blocks + 4 tail tokens.
+        let x = Tensor::randn(&[20, 6], 3);
+        st.append(&x.slice_rows(0, 7));
+        assert_eq!((st.n_blocks(), st.tail_len()), (0, 7));
+        st.append(&x.slice_rows(7, 9));
+        assert_eq!((st.n_blocks(), st.tail_len()), (1, 1));
+        st.append(&x.slice_rows(9, 20));
+        assert_eq!((st.n_blocks(), st.tail_len()), (2, 4));
+        assert_eq!(st.len(), 20);
+        // Tail rows are exact fp32 copies.
+        let g = st.gather();
+        for i in 16..20 {
+            assert_eq!(g.row(i), x.row(i), "tail row {i} must be exact");
+        }
+    }
+
+    #[test]
+    fn identity_blocks_match_qdq_oracle_bit_for_bit() {
+        // Per-token QDQ is row-independent, so with an identity transform
+        // the flushed region must equal the one-shot simulated QDQ under
+        // the same positional two-level policy.
+        let (s, d, block, hp) = (37usize, 12usize, 8usize, 11usize);
+        let x = Tensor::randn(&[s, d], 5);
+        let mut st = KvStream::new(cfg(hp, 8, 4, block));
+        st.append(&x);
+        let g = st.gather();
+        let flushed = (s / block) * block;
+        let want = quantize_dequantize_rows(
+            &x.slice_rows(0, flushed),
+            &BitAllocation::two_level(hp, 8, 4),
+            Granularity::PerToken,
+        );
+        for i in 0..flushed {
+            assert_eq!(g.row(i), want.row(i), "flushed row {i}");
+        }
+        for i in flushed..s {
+            assert_eq!(g.row(i), x.row(i), "tail row {i}");
+        }
+    }
+
+    #[test]
+    fn transformed_blocks_roundtrip_closely() {
+        // 8-bit blocks through a Haar DWT: gather must reconstruct the
+        // input to 8-bit fidelity (transform is orthonormal; only the
+        // coefficient rounding remains), and the tail stays exact.
+        let (s, d, block) = (70usize, 16usize, 16usize);
+        let x = Tensor::randn(&[s, d], 7);
+        for kind in [SeqTransformKind::HaarDwt, SeqTransformKind::Dct, SeqTransformKind::Wht] {
+            let mut st = KvStream::new(cfg(0, 8, 8, block).with_transform(kind));
+            st.append(&x);
+            let g = st.gather();
+            let s_db = sqnr(&x, &g);
+            assert!(s_db > 35.0, "{kind:?}: round-trip SQNR {s_db} dB");
+            for i in (s / block) * block..s {
+                assert_eq!(g.row(i), x.row(i), "{kind:?} tail row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_append_equals_batch_append() {
+        let (s, d, block) = (41usize, 10usize, 8usize);
+        let x = Tensor::randn(&[s, d], 9);
+        let mk = || KvStream::new(cfg(6, 8, 4, block).with_transform(SeqTransformKind::HaarDwt));
+        let mut batch = mk();
+        batch.append(&x);
+        let mut inc = mk();
+        for i in 0..s {
+            inc.append(&x.slice_rows(i, i + 1));
+        }
+        assert_eq!(inc.gather(), batch.gather(), "append granularity must not matter");
+        assert_eq!(inc.storage_bits(), batch.storage_bits());
+        assert_eq!(inc.n_blocks(), batch.n_blocks());
+    }
+
+    #[test]
+    fn storage_accounting_two_level_across_block_boundary() {
+        // hp_tokens = 12 spans 1.5 blocks of 8: block 0 all-hp, block 1
+        // half-hp — Appendix-C accounting per row: payload bits·d + 32
+        // (fp16 scale + zero, per-token granularity).
+        let (s, d, block, hp) = (32usize, 16usize, 8usize, 12usize);
+        let x = Tensor::randn(&[s, d], 11);
+        let mut st = KvStream::new(cfg(hp, 8, 4, block));
+        st.append(&x);
+        let expect: usize =
+            (0..s).map(|i| if i < hp { 8 * d + 32 } else { 4 * d + 32 }).sum();
+        assert_eq!(st.storage_bits(), expect);
+        assert_eq!(st.n_blocks(), 4);
+    }
+
+    #[test]
+    fn append_and_gather_thread_count_invariant() {
+        // Blocks of 256×512 clear MIN_PARALLEL_ELEMS, so the flush-time
+        // packing + decompression fan out on multi-core hosts; a stream
+        // built with serial kernels must be byte-identical.
+        let x = Tensor::randn(&[512, 512], 13);
+        let mk = || KvStream::new(cfg(64, 8, 4, 256));
+        let mut threaded = mk();
+        threaded.append(&x);
+        let g_threaded = threaded.gather();
+        crate::parallel::set_kernel_serial(true);
+        let mut serial = mk();
+        serial.append(&x);
+        let g_serial = serial.gather();
+        crate::parallel::set_kernel_serial(false);
+        assert_eq!(g_threaded, g_serial, "cache must not depend on thread count");
+        assert_eq!(threaded.storage_bits(), serial.storage_bits());
+    }
+
+    #[test]
+    fn whole_cache_storage_and_average() {
+        let mut cache = KvCache::new(2, cfg(0, 8, 4, 16));
+        for _ in 0..32 {
+            let k = Tensor::randn(&[1, 8], 17);
+            let v = Tensor::randn(&[1, 8], 18);
+            for l in 0..2 {
+                cache.layer_mut(l).k.append(&k);
+                cache.layer_mut(l).v.append(&v);
+            }
+        }
+        assert_eq!(cache.len(), 32);
+        // All-lp, fully flushed: 4 payload + 32/8 param bits per element.
+        let avg = cache.average_storage_bits();
+        assert!((avg - 8.0).abs() < 1e-9, "avg {avg}");
+        assert_eq!(cache.storage_bits(), 2 * 2 * 32 * (4 * 8 + 32));
+    }
+
+    #[test]
+    #[should_panic(expected = "even block size")]
+    fn rejects_odd_block_for_dwt() {
+        let _ = KvStream::new(cfg(0, 8, 4, 7).with_transform(SeqTransformKind::HaarDwt));
+    }
+
+    #[test]
+    #[should_panic(expected = "4- or 8-bit")]
+    fn rejects_unpackable_lp_bits() {
+        let _ = KvStream::new(cfg(0, 8, 6, 8));
+    }
+
+    #[test]
+    #[should_panic(expected = "1-D decode streams")]
+    fn rejects_2d_transform() {
+        let _ = KvStream::new(
+            cfg(0, 8, 4, 16).with_transform(SeqTransformKind::HaarDwt2d { h: 4, w: 4 }),
+        );
+    }
+
+    #[test]
+    fn empty_and_width_guards() {
+        let mut st = KvStream::new(KvCacheConfig::default());
+        st.append(&Tensor::zeros(&[0, 4]));
+        assert!(st.is_empty());
+        assert_eq!(st.gather().shape(), &[0, 0]);
+        assert_eq!(st.average_storage_bits(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "feature width changed")]
+    fn rejects_width_change() {
+        let mut st = KvStream::new(KvCacheConfig::fp32());
+        st.append(&Tensor::zeros(&[1, 4]));
+        st.append(&Tensor::zeros(&[1, 5]));
+    }
+}

@@ -25,9 +25,11 @@
 //! * **Runtime** — [`runtime`] (the always-available pure-Rust
 //!   `NativeExecutor`, plus — behind the `pjrt` cargo feature — the PJRT
 //!   client that loads AOT-lowered HLO text produced by
-//!   `python/compile/aot.py`) and [`coordinator`] (request router, dynamic
-//!   batcher, worker pools, metrics) so quantized variants can be
-//!   *served*, not just evaluated.
+//!   `python/compile/aot.py`), [`kvcache`] (the STaMP-aware quantized KV
+//!   cache behind `Gpt::prefill`/`Gpt::decode_step` autoregressive
+//!   generation), and [`coordinator`] (request router, dynamic batcher,
+//!   worker pools, metrics) so quantized variants can be *served*, not
+//!   just evaluated.
 //!
 //! Python/JAX/Pallas exists only on the compile path (`python/compile/`);
 //! the request path is pure Rust (+ PJRT when the `pjrt` feature is on).
@@ -52,6 +54,7 @@ pub mod coordinator;
 pub mod data;
 pub mod error;
 pub mod eval;
+pub mod kvcache;
 pub mod linalg;
 pub mod model;
 pub mod parallel;
@@ -67,6 +70,7 @@ pub mod transforms;
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
+    pub use crate::kvcache::{KvCache, KvCacheConfig};
     pub use crate::quant::{BitAllocation, Granularity, QTensor, QuantScheme, Quantizer};
     pub use crate::stamp::{SeqTransformKind, Stamp, StampConfig};
     pub use crate::stats::sqnr;

@@ -65,6 +65,12 @@ impl MultiHeadAttention {
     }
 
     /// Core scaled-dot-product given packed q/k/v; returns (output, probs).
+    ///
+    /// Causal masking aligns the *last* query to the last key: with `s`
+    /// queries over `sk ≥ s` keys, query `i` attends keys `≤ i + (sk−s)`.
+    /// The full forward is the `s == sk` special case (offset 0, the
+    /// classic triangular mask); incremental decode passes the new tokens'
+    /// queries against the whole cached K/V stream.
     fn sdpa(&self, q: &Tensor, k: &Tensor, v: &Tensor) -> (Tensor, Vec<Tensor>) {
         let s = q.rows();
         let sk = k.rows();
@@ -77,9 +83,10 @@ impl MultiHeadAttention {
             let vh = self.head(v, h);
             let mut scores = matmul_transb(&qh, &kh).scale(scale);
             if self.causal {
-                debug_assert_eq!(s, sk);
+                debug_assert!(sk >= s, "causal sdpa needs key history ≥ query rows");
+                let offset = sk - s;
                 for i in 0..s {
-                    for j in (i + 1)..sk {
+                    for j in (i + offset + 1)..sk {
                         scores.set(i, j, f32::NEG_INFINITY);
                     }
                 }
@@ -114,6 +121,38 @@ impl MultiHeadAttention {
         let v = hook.linear(&format!("{site}.to_v"), x, &self.wv.w, self.wv.b.as_deref());
         let k = hook.kv(&format!("{site}.k"), &k);
         let v = hook.kv(&format!("{site}.v"), &v);
+        let (concat, _) = self.sdpa(&q, &k, &v);
+        hook.linear(&format!("{site}.to_out"), &concat, &self.wo.w, self.wo.b.as_deref())
+    }
+
+    /// Incremental decode forward (self-attention over the cached K/V
+    /// stream plus the new tokens). `x` holds the `m` newest tokens'
+    /// inputs; their K/V projections are appended to `cache`, then the
+    /// new queries attend over the *gathered* stream (finalized blocks
+    /// decompress once at flush; gather copies). Sites match
+    /// [`Self::forward_hooked`]; the
+    /// `.k`/`.v` hook sites are deliberately not applied — the cache's own
+    /// quantization policy replaces the hook-level KV QDQ.
+    ///
+    /// With an fp32 cache ([`crate::kvcache::KvCacheConfig::fp32`]) and
+    /// [`crate::model::FpHook`], every kernel here is row-wise identical
+    /// to the full-sequence path, so decode logits are bit-identical to
+    /// [`Self::forward_hooked`]'s corresponding rows at any thread count
+    /// (pinned by `tests/decode.rs`).
+    pub fn forward_decode(
+        &self,
+        hook: &dyn LinearHook,
+        site: &str,
+        x: &Tensor,
+        cache: &mut crate::kvcache::KvLayer,
+    ) -> Tensor {
+        let q = hook.linear(&format!("{site}.to_q"), x, &self.wq.w, self.wq.b.as_deref());
+        let k_new = hook.linear(&format!("{site}.to_k"), x, &self.wk.w, self.wk.b.as_deref());
+        let v_new = hook.linear(&format!("{site}.to_v"), x, &self.wv.w, self.wv.b.as_deref());
+        cache.k.append(&k_new);
+        cache.v.append(&v_new);
+        let k = cache.k.gather();
+        let v = cache.v.gather();
         let (concat, _) = self.sdpa(&q, &k, &v);
         hook.linear(&format!("{site}.to_out"), &concat, &self.wo.w, self.wo.b.as_deref())
     }
@@ -274,6 +313,39 @@ mod tests {
         let l0 = loss(&attn, &x);
         let num = (lp - l0) / eps as f64;
         assert!((num - ana).abs() < 0.1 * ana.abs().max(0.5), "dwq num {num} ana {ana}");
+    }
+
+    #[test]
+    fn decode_rows_bit_identical_to_full_forward() {
+        let mut rng = XorShiftRng::new(11);
+        let attn = MultiHeadAttention::new(16, 4, true, &mut rng);
+        let x = Tensor::randn(&[6, 16], 12);
+        let full = attn.forward_hooked(&FpHook, "layer0.attn1", &x);
+        let mut cache = crate::kvcache::KvLayer::fp32();
+        for t in 0..6 {
+            let row = x.slice_rows(t, t + 1);
+            let y = attn.forward_decode(&FpHook, "layer0.attn1", &row, &mut cache);
+            assert_eq!(y.row(0), full.row(t), "decode step {t} must be bit-identical");
+        }
+        assert_eq!(cache.k.len(), 6);
+    }
+
+    #[test]
+    fn decode_multi_token_chunk_matches() {
+        // Chunked prefill: 4 tokens at once, then 2 more.
+        let mut rng = XorShiftRng::new(13);
+        let attn = MultiHeadAttention::new(8, 2, true, &mut rng);
+        let x = Tensor::randn(&[6, 8], 14);
+        let full = attn.forward_hooked(&FpHook, "layer0.attn1", &x);
+        let mut cache = crate::kvcache::KvLayer::fp32();
+        let a = attn.forward_decode(&FpHook, "layer0.attn1", &x.slice_rows(0, 4), &mut cache);
+        let b = attn.forward_decode(&FpHook, "layer0.attn1", &x.slice_rows(4, 6), &mut cache);
+        for t in 0..4 {
+            assert_eq!(a.row(t), full.row(t), "chunk-1 row {t}");
+        }
+        for t in 0..2 {
+            assert_eq!(b.row(t), full.row(4 + t), "chunk-2 row {t}");
+        }
     }
 
     #[test]

@@ -64,6 +64,17 @@ fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
+/// First-maximum argmax over a logits row (deterministic tie-break).
+fn argmax_row(row: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
 fn silu_grad(x: f32) -> f32 {
     let s = 1.0 / (1.0 + (-x).exp());
     s * (1.0 + x * (1.0 - s))
@@ -98,11 +109,12 @@ impl Block {
         )
     }
 
-    fn forward_hooked(&self, hook: &dyn LinearHook, layer: usize, x: &Tensor) -> Tensor {
-        let (n1, _) = self.norm1.forward(x);
-        let a = self.attn.forward_hooked(hook, &format!("layer{layer}.attn1"), &n1);
-        let x_mid = x.add(&a);
-        let (n2, _) = self.norm2.forward(&x_mid);
+    /// Post-attention tail (norm2 → gated FFN → residual) shared by the
+    /// hooked full-sequence and decode forwards — one body, so the two
+    /// paths can never drift apart and break the fp32-cache bit-parity
+    /// invariant (`tests/decode.rs`). Row-wise throughout.
+    fn ffn_hooked(&self, hook: &dyn LinearHook, layer: usize, x_mid: &Tensor) -> Tensor {
+        let (n2, _) = self.norm2.forward(x_mid);
         let up_out =
             hook.linear(&format!("layer{layer}.ffn.up_proj"), &n2, &self.up.w, self.up.b.as_deref());
         let gate_out = hook.linear(
@@ -119,6 +131,29 @@ impl Block {
             self.down.b.as_deref(),
         );
         x_mid.add(&m)
+    }
+
+    fn forward_hooked(&self, hook: &dyn LinearHook, layer: usize, x: &Tensor) -> Tensor {
+        let (n1, _) = self.norm1.forward(x);
+        let a = self.attn.forward_hooked(hook, &format!("layer{layer}.attn1"), &n1);
+        let x_mid = x.add(&a);
+        self.ffn_hooked(hook, layer, &x_mid)
+    }
+
+    /// Incremental decode forward: like [`Block::forward_hooked`] but the
+    /// attention reads/extends the layer's KV cache; `x` holds only the
+    /// new tokens' hidden states.
+    fn forward_decode(
+        &self,
+        hook: &dyn LinearHook,
+        layer: usize,
+        x: &Tensor,
+        cache: &mut crate::kvcache::KvLayer,
+    ) -> Tensor {
+        let (n1, _) = self.norm1.forward(x);
+        let a = self.attn.forward_decode(hook, &format!("layer{layer}.attn1"), &n1, cache);
+        let x_mid = x.add(&a);
+        self.ffn_hooked(hook, layer, &x_mid)
     }
 
     fn backward(&mut self, cache: &BlockCache, dy: &Tensor) -> Tensor {
@@ -219,13 +254,20 @@ impl Gpt {
     }
 
     fn embed_tokens(&self, tokens: &[u32]) -> Tensor {
+        self.embed_tokens_at(tokens, 0)
+    }
+
+    /// Token + positional embedding with the positions offset by `pos0` —
+    /// the decode path embeds new tokens at their absolute positions.
+    fn embed_tokens_at(&self, tokens: &[u32], pos0: usize) -> Tensor {
         let d = self.cfg.d_model;
+        assert!(pos0 + tokens.len() <= self.cfg.max_seq, "positions exceed max_seq");
         let mut h = Tensor::zeros(&[tokens.len(), d]);
         for (i, &t) in tokens.iter().enumerate() {
             let t = t as usize;
             assert!(t < self.cfg.vocab_size, "token {t} out of vocab");
             for j in 0..d {
-                let v = self.embed.at(t, j) + self.pos.at(i, j);
+                let v = self.embed.at(t, j) + self.pos.at(pos0 + i, j);
                 h.set(i, j, v);
             }
         }
@@ -243,6 +285,69 @@ impl Gpt {
         // Tied embedding head — the `head` site (kept FP, like the paper
         // which only quantizes linears inside transformer blocks).
         crate::tensor::matmul_transb(&hn, &self.embed)
+    }
+
+    /// Incremental hooked forward: consume `tokens` starting at the
+    /// cache's current position, appending every new token's K/V to
+    /// `cache`, and return the logits rows for the new tokens only.
+    ///
+    /// Call once with the whole prompt (prefill), or repeatedly with
+    /// chunks — the split does not change the result. With an fp32 cache
+    /// and [`super::FpHook`] the returned rows are bit-identical to
+    /// [`Gpt::logits_hooked`] on the same prefix at any thread count
+    /// (every kernel on the path is row-wise; `tests/decode.rs` pins it).
+    pub fn prefill(
+        &self,
+        hook: &dyn LinearHook,
+        tokens: &[u32],
+        cache: &mut crate::kvcache::KvCache,
+    ) -> Tensor {
+        assert!(!tokens.is_empty(), "prefill needs at least one token");
+        assert_eq!(cache.n_layers(), self.cfg.n_layers, "cache layer count mismatch");
+        let pos0 = cache.len();
+        assert!(pos0 + tokens.len() <= self.cfg.max_seq, "sequence exceeds max_seq");
+        let mut h = self.embed_tokens_at(tokens, pos0);
+        for (l, b) in self.blocks.iter().enumerate() {
+            h = b.forward_decode(hook, l, &h, cache.layer_mut(l));
+        }
+        let (hn, _) = self.final_norm.forward(&h);
+        crate::tensor::matmul_transb(&hn, &self.embed)
+    }
+
+    /// One decode step: append a single token, return its `1×vocab`
+    /// logits row.
+    pub fn decode_step(
+        &self,
+        hook: &dyn LinearHook,
+        token: u32,
+        cache: &mut crate::kvcache::KvCache,
+    ) -> Tensor {
+        self.prefill(hook, &[token], cache)
+    }
+
+    /// Greedy autoregressive generation: prefill `prompt`, then decode
+    /// `n_new` tokens (argmax at every step), returning the generated ids.
+    /// `prompt.len() + n_new` must fit `max_seq`.
+    pub fn generate_greedy(
+        &self,
+        hook: &dyn LinearHook,
+        prompt: &[u32],
+        n_new: usize,
+        cache: &mut crate::kvcache::KvCache,
+    ) -> Vec<u32> {
+        let logits = self.prefill(hook, prompt, cache);
+        let mut out = Vec::with_capacity(n_new);
+        if n_new == 0 {
+            return out;
+        }
+        let mut next = argmax_row(logits.row(logits.rows() - 1));
+        out.push(next);
+        while out.len() < n_new {
+            let l = self.decode_step(hook, next, cache);
+            next = argmax_row(l.row(0));
+            out.push(next);
+        }
+        out
     }
 
     /// Training forward: returns (mean cross-entropy over next-token
@@ -490,6 +595,46 @@ mod tests {
         let median = sorted[sorted.len() / 2];
         let top = sorted[sorted.len() - 1];
         assert!(top > 10.0 * median, "no outliers: top {top} median {median}");
+    }
+
+    #[test]
+    fn prefill_rows_match_full_forward_bit_for_bit() {
+        let gpt = Gpt::new(GptConfig::tiny(), 7);
+        let tokens: Vec<u32> = (0..20).map(|i| ((i * 11 + 2) % 70) as u32).collect();
+        let full = gpt.logits_hooked(&FpHook, &tokens);
+        let mut cache = crate::kvcache::KvCache::fp32(gpt.cfg.n_layers);
+        let pre = gpt.prefill(&FpHook, &tokens, &mut cache);
+        assert_eq!(pre, full, "one-shot prefill must equal the full forward");
+        assert_eq!(cache.len(), 20);
+    }
+
+    #[test]
+    fn greedy_decode_matches_full_forward_greedy() {
+        // Greedy continuation via decode_step must pick exactly the tokens
+        // a repeated full-sequence forward would pick (fp32 cache parity).
+        let gpt = Gpt::new(GptConfig::tiny(), 8);
+        let prompt: Vec<u32> = vec![3, 17, 41, 5];
+        let n_new = 12;
+        let mut cache = crate::kvcache::KvCache::fp32(gpt.cfg.n_layers);
+        let got = gpt.generate_greedy(&FpHook, &prompt, n_new, &mut cache);
+        // Oracle: re-run the whole sequence through logits_hooked per step.
+        let mut seq = prompt.clone();
+        let mut want = Vec::new();
+        for _ in 0..n_new {
+            let logits = gpt.logits_hooked(&FpHook, &seq);
+            let row = logits.row(logits.rows() - 1);
+            let mut best = 0usize;
+            for (i, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = i;
+                }
+            }
+            want.push(best as u32);
+            seq.push(best as u32);
+        }
+        assert_eq!(got, want, "greedy decode must match the full-forward oracle");
+        // The final generated token is returned but never fed back.
+        assert_eq!(cache.len(), prompt.len() + n_new - 1);
     }
 
     #[test]

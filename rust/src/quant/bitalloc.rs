@@ -49,15 +49,24 @@ impl BitAllocation {
         (0..s).map(|i| self.bits_for(i, s)).collect()
     }
 
-    /// Average bits per token (excluding scale-parameter overhead).
+    /// Average bits per token (excluding scale-parameter overhead). An
+    /// empty sequence stores nothing, so `s == 0` yields 0.0 for the
+    /// sequence-dependent variants (`Uniform` is a per-token width and
+    /// stays `b` regardless).
     pub fn average_bits(&self, s: usize) -> f64 {
         match self {
             BitAllocation::Uniform(b) => *b as f64,
             BitAllocation::TwoLevel { hp_tokens, hp_bits, lp_bits } => {
+                if s == 0 {
+                    return 0.0;
+                }
                 let hp = (*hp_tokens).min(s) as f64;
                 (hp * *hp_bits as f64 + (s as f64 - hp) * *lp_bits as f64) / s as f64
             }
             BitAllocation::Explicit(v) => {
+                if v.is_empty() {
+                    return 0.0;
+                }
                 v.iter().map(|&b| b as f64).sum::<f64>() / v.len() as f64
             }
         }
@@ -170,6 +179,37 @@ mod tests {
         let a = BitAllocation::Explicit(vec![2, 4, 8]);
         assert_eq!(a.resolve(3), vec![2, 4, 8]);
         assert!((a.average_bits(3) - 14.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_level_boundary_hp_zero() {
+        // hp_tokens == 0: every token is steady-state.
+        let a = BitAllocation::two_level(0, 8, 4);
+        assert_eq!(a.resolve(6), vec![4; 6]);
+        assert!((a.average_bits(6) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn two_level_boundary_hp_saturates() {
+        // hp_tokens ≥ s: every token is high-precision; the average must
+        // clamp at hp_bits, not extrapolate past the sequence.
+        let a = BitAllocation::two_level(16, 8, 4);
+        assert_eq!(a.resolve(8), vec![8; 8]);
+        assert!((a.average_bits(8) - 8.0).abs() < 1e-12);
+        assert_eq!(a.bits_for(7, 8), 8);
+    }
+
+    #[test]
+    fn empty_sequence_boundary() {
+        // s == 0: nothing resolved, nothing stored (and no NaN from the
+        // 0/0 the naive average would compute).
+        let two = BitAllocation::two_level(4, 8, 4);
+        assert!(two.resolve(0).is_empty());
+        assert_eq!(two.average_bits(0), 0.0);
+        assert_eq!(BitAllocation::Explicit(Vec::new()).average_bits(0), 0.0);
+        assert!(BitAllocation::Explicit(Vec::new()).resolve(0).is_empty());
+        // Uniform is a per-token width, independent of s.
+        assert_eq!(BitAllocation::uniform(4).average_bits(0), 4.0);
     }
 
     #[test]

@@ -10,7 +10,14 @@
 //! its forwards through the packed integer path — activations stored as
 //! bit-packed [`crate::quant::QTensor`] codes, products computed by the
 //! i32-accumulating [`crate::tensor::qgemm`] — instead of the f32 QDQ
-//! simulation. One batch executes its requests sequentially on the calling
+//! simulation. Quantized/packed *weights* are built exactly once per
+//! variant at registration ([`crate::baselines::PreparedWeights`]) and
+//! shared across every execute call. GPT variants can additionally be
+//! registered for multi-token greedy generation
+//! ([`NativeExecutor::with_gpt_generate`]), which decodes through the
+//! [`crate::kvcache`] subsystem — per-request autoregressive loops served
+//! through the same coordinator batching as single forwards.
+//! One batch executes its requests sequentially on the calling
 //! worker thread — parallelism comes from
 //! [`crate::coordinator::WorkerPool`] at batch granularity (worker threads
 //! are kernel-serial, see [`crate::parallel`]); when the executor is
@@ -18,8 +25,9 @@
 //! instead. Either way every kernel is bit-identical at any thread count,
 //! so served responses never depend on `STAMP_THREADS`.
 
-use crate::baselines::{QuantHook, QuantStack};
+use crate::baselines::{PreparedWeights, QuantHook, QuantStack};
 use crate::coordinator::Executor;
+use crate::kvcache::{KvCache, KvCacheConfig};
 use crate::model::{Dit, FpHook, Gpt, LinearHook};
 use crate::tensor::Tensor;
 use std::collections::HashMap;
@@ -31,6 +39,12 @@ pub enum NativeModel {
     /// token ids encoded as f32 (the coordinator's tensor-only wire
     /// format); the response is the `s×vocab` logits matrix.
     Gpt(Arc<Gpt>),
+    /// Greedy autoregressive generation over a [`KvCache`]: the request
+    /// tensor is a `1×(1+s)` row `[n_new, prompt…]` (all values token-id
+    /// style f32 integers); the response is the `1×n_new` row of
+    /// generated ids. Each request decodes through the variant's KV-cache
+    /// policy; batching still happens at the coordinator level.
+    GptGenerate { model: Arc<Gpt>, kv: KvCacheConfig, max_new: usize },
     /// One denoising step at `t = 0` on a `seq×latent` latent under a fixed
     /// conditioning prompt; the response is the predicted residual.
     Dit { model: Arc<Dit>, prompt: String },
@@ -40,6 +54,46 @@ struct Variant {
     model: NativeModel,
     /// `None` serves the FP reference forward.
     stack: Option<QuantStack>,
+    /// Weight caches built once at registration (when `stack` is set) and
+    /// shared by every execute call — per-variant, not per-batch, so
+    /// decode steps never pay a repack (ROADMAP hoist item).
+    prepared: Option<PreparedWeights>,
+}
+
+/// Build a variant's weight caches by running one dummy forward: weight
+/// quantization depends only on the weights (never the sequence length),
+/// so a single-token / zero-latent pass covers every site the stack will
+/// ever quantize.
+fn prepare(model: &NativeModel, stack: &QuantStack) -> PreparedWeights {
+    let hook = QuantHook::new(stack);
+    match model {
+        NativeModel::Gpt(g) | NativeModel::GptGenerate { model: g, .. } => {
+            let _ = g.logits_hooked(&hook, &[0]);
+        }
+        NativeModel::Dit { model, prompt } => {
+            let z = Tensor::zeros(&[model.cfg.seq_len(), model.latent_dim]);
+            let _ = model.denoise_step(&hook, &z, prompt, 0);
+        }
+    }
+    hook.into_prepared()
+}
+
+/// Decode a strict token-id row: NaN / negative / fractional / oversized
+/// values are rejected rather than saturated (`as u32` would silently
+/// serve token 0 on corrupt input).
+fn parse_tokens(vals: &[f32], vocab: usize) -> Result<Vec<u32>, String> {
+    vals.iter()
+        .map(|&v| {
+            if !v.is_finite() || v < 0.0 || v.fract() != 0.0 {
+                return Err(format!("non-token value {v} in request tensor"));
+            }
+            let t = v as u32;
+            if t as usize >= vocab {
+                return Err(format!("token {t} out of vocab {vocab}"));
+            }
+            Ok(t)
+        })
+        .collect()
 }
 
 /// Registry of named native variants implementing [`Executor`].
@@ -53,9 +107,39 @@ impl NativeExecutor {
         NativeExecutor { variants: HashMap::new() }
     }
 
+    fn insert(&mut self, name: &str, model: NativeModel, stack: Option<QuantStack>) {
+        let prepared = stack.as_ref().map(|s| prepare(&model, s));
+        self.variants.insert(name.to_string(), Variant { model, stack, prepared });
+    }
+
     /// Register a GPT variant (builder-style).
     pub fn with_gpt(mut self, name: &str, model: Arc<Gpt>, stack: Option<QuantStack>) -> Self {
-        self.variants.insert(name.to_string(), Variant { model: NativeModel::Gpt(model), stack });
+        self.insert(name, NativeModel::Gpt(model), stack);
+        self
+    }
+
+    /// Register a greedy-generation GPT variant with the given KV-cache
+    /// policy and per-request new-token budget.
+    ///
+    /// `stack` quantizes the decode-path *linears* per call window, and
+    /// the hook's activation policies are window-relative: a 1-row decode
+    /// step is "token 0" of its own window, so with `hp_tokens > 0` the
+    /// activation side effectively runs at `hp_bits` during decode, and
+    /// STaMP sequence transforms degenerate over a 1-token window —
+    /// *sequence-side* mixed precision during decode is the job of the
+    /// KV-cache policy (`kv`), not the stack. Weight quantization applies
+    /// in full (from the per-variant prepared cache). Pass `None` for the
+    /// paper-shaped serving setup: FP linears + quantized cache.
+    pub fn with_gpt_generate(
+        mut self,
+        name: &str,
+        model: Arc<Gpt>,
+        stack: Option<QuantStack>,
+        kv: KvCacheConfig,
+        max_new: usize,
+    ) -> Self {
+        kv.validate();
+        self.insert(name, NativeModel::GptGenerate { model, kv, max_new }, stack);
         self
     }
 
@@ -67,10 +151,7 @@ impl NativeExecutor {
         prompt: &str,
         stack: Option<QuantStack>,
     ) -> Self {
-        self.variants.insert(
-            name.to_string(),
-            Variant { model: NativeModel::Dit { model, prompt: prompt.to_string() }, stack },
-        );
+        self.insert(name, NativeModel::Dit { model, prompt: prompt.to_string() }, stack);
         self
     }
 
@@ -81,32 +162,51 @@ impl NativeExecutor {
         v
     }
 
+    /// The per-variant prepared weight caches (`None` for FP variants) —
+    /// serving introspection; the tests pin `misses() == 0` across
+    /// repeated executes.
+    pub fn prepared(&self, variant: &str) -> Option<&PreparedWeights> {
+        self.variants.get(variant)?.prepared.as_ref()
+    }
+
     fn run_one(&self, variant: &Variant, hook: &dyn LinearHook, input: &Tensor) -> Result<Tensor, String> {
         match &variant.model {
             NativeModel::Gpt(gpt) => {
                 if input.ndim() != 2 || input.rows() != 1 {
                     return Err(format!("gpt variant expects a 1×s token row, got {:?}", input.shape()));
                 }
-                // Strict decode: `as u32` would saturate NaN/negatives to 0
-                // and silently serve logits for token 0 on corrupt input.
-                let tokens: Vec<u32> = input
-                    .data()
-                    .iter()
-                    .map(|&v| {
-                        if !v.is_finite() || v < 0.0 || v.fract() != 0.0 {
-                            return Err(format!("non-token value {v} in request tensor"));
-                        }
-                        let t = v as u32;
-                        if t as usize >= gpt.cfg.vocab_size {
-                            return Err(format!("token {t} out of vocab {}", gpt.cfg.vocab_size));
-                        }
-                        Ok(t)
-                    })
-                    .collect::<Result<_, String>>()?;
+                let tokens = parse_tokens(input.data(), gpt.cfg.vocab_size)?;
                 if tokens.len() > gpt.cfg.max_seq {
                     return Err(format!("sequence {} exceeds max_seq {}", tokens.len(), gpt.cfg.max_seq));
                 }
                 Ok(gpt.logits_hooked(hook, &tokens))
+            }
+            NativeModel::GptGenerate { model, kv, max_new } => {
+                if input.ndim() != 2 || input.rows() != 1 || input.cols() < 2 {
+                    return Err(format!(
+                        "generate variant expects a 1×(1+s) [n_new, prompt…] row, got {:?}",
+                        input.shape()
+                    ));
+                }
+                let head = input.data()[0];
+                if !head.is_finite() || head < 1.0 || head.fract() != 0.0 {
+                    return Err(format!("invalid n_new {head} in generate request"));
+                }
+                let n_new = head as usize;
+                if n_new > *max_new {
+                    return Err(format!("n_new {n_new} exceeds variant limit {max_new}"));
+                }
+                let prompt = parse_tokens(&input.data()[1..], model.cfg.vocab_size)?;
+                if prompt.len() + n_new > model.cfg.max_seq {
+                    return Err(format!(
+                        "prompt {} + n_new {n_new} exceeds max_seq {}",
+                        prompt.len(),
+                        model.cfg.max_seq
+                    ));
+                }
+                let mut cache = KvCache::new(model.cfg.n_layers, kv.clone());
+                let out = model.generate_greedy(hook, &prompt, n_new, &mut cache);
+                Ok(Tensor::from_vec(&[1, out.len()], out.iter().map(|&t| t as f32).collect()))
             }
             NativeModel::Dit { model, prompt } => {
                 if input.ndim() != 2
@@ -132,13 +232,18 @@ impl Executor for NativeExecutor {
             .variants
             .get(variant)
             .ok_or_else(|| format!("no native variant `{variant}`"))?;
-        // The QuantHook's weight/STaMP caches are per-call interior state
-        // (RefCell), so build one per batch — weights quantize once per
-        // batch, which is the same amortization the eval harnesses get.
+        // The QuantHook's STaMP caches are per-call interior state
+        // (RefCell), but its *weights* resolve from the per-variant
+        // [`PreparedWeights`] built once at registration — repeated
+        // executes (and every decode step inside a generate request)
+        // never re-quantize a weight.
         let mut out = Vec::with_capacity(inputs.len());
         match &v.stack {
             Some(stack) => {
-                let hook = QuantHook::new(stack);
+                let hook = match &v.prepared {
+                    Some(p) => QuantHook::with_prepared(stack, p),
+                    None => QuantHook::new(stack),
+                };
                 for x in inputs {
                     out.push(self.run_one(v, &hook, x)?);
                 }
@@ -261,6 +366,119 @@ mod tests {
         assert!(threaded.all_finite());
         let s = crate::stats::sqnr(&sim, &threaded);
         assert!(s > 35.0, "packed vs simulated served logits SQNR {s} dB");
+    }
+
+    #[test]
+    fn packed_weights_prepared_once_across_executes() {
+        let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 13));
+        let act = ActQuantCfg { hp_tokens: 8, ..ActQuantCfg::w4a4_per_token() };
+        let stack = QuantStack::build(
+            BaselineKind::Rtn,
+            &HashMap::new(),
+            Some(act),
+            Some(WeightQuantCfg::w4_per_channel()),
+            None,
+            1,
+        )
+        .with_packed();
+        let exec = NativeExecutor::new().with_gpt("packed", gpt, Some(stack));
+        // Registration already built the full per-variant cache…
+        let sites = exec.prepared("packed").unwrap().packed_sites();
+        assert!(sites >= 8, "registration must cover all linear sites, got {sites}");
+        // …and repeated executes must never rebuild a weight.
+        let input = token_row(16);
+        let a = exec.execute("packed", &[&input]).unwrap().remove(0);
+        let b = exec.execute("packed", &[&input]).unwrap().remove(0);
+        assert_eq!(a, b, "prepared weights must make serving deterministic");
+        let p = exec.prepared("packed").unwrap();
+        assert_eq!(p.misses(), 0, "packed weights must be constructed exactly once per variant");
+        assert_eq!(p.packed_sites(), sites);
+        // FP variants carry no prepared cache.
+        let exec_fp = NativeExecutor::new()
+            .with_gpt("fp", Arc::new(Gpt::new(GptConfig::tiny(), 13)), None);
+        assert!(exec_fp.prepared("fp").is_none());
+    }
+
+    #[test]
+    fn generate_variant_serves_greedy_decode() {
+        let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 5));
+        let exec = NativeExecutor::new().with_gpt_generate(
+            "gen",
+            gpt.clone(),
+            None,
+            crate::kvcache::KvCacheConfig::fp32(),
+            32,
+        );
+        // [n_new = 8, prompt 1 2 3]
+        let input = Tensor::from_vec(&[1, 4], vec![8.0, 1.0, 2.0, 3.0]);
+        let out = exec.execute("gen", &[&input]).unwrap().remove(0);
+        assert_eq!(out.shape(), &[1, 8]);
+        // Parity with a direct greedy decode.
+        let mut cache = crate::kvcache::KvCache::fp32(gpt.cfg.n_layers);
+        let want = gpt.generate_greedy(&FpHook, &[1, 2, 3], 8, &mut cache);
+        for (i, &w) in want.iter().enumerate() {
+            assert_eq!(out.at(0, i), w as f32, "generated token {i}");
+        }
+        // Malformed requests are rejected, not misinterpreted.
+        let zero = Tensor::from_vec(&[1, 2], vec![0.0, 1.0]);
+        assert!(exec.execute("gen", &[&zero]).unwrap_err().contains("invalid n_new"));
+        let over = Tensor::from_vec(&[1, 2], vec![99.0, 1.0]);
+        assert!(exec.execute("gen", &[&over]).unwrap_err().contains("exceeds variant limit"));
+        let short = Tensor::from_vec(&[1, 1], vec![4.0]);
+        assert!(exec.execute("gen", &[&short]).unwrap_err().contains("1×(1+s)"));
+    }
+
+    #[test]
+    fn generate_variant_with_packed_kv_is_deterministic() {
+        let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 6));
+        let kv = crate::kvcache::KvCacheConfig::two_level(4, 8, 4, 8)
+            .with_transform(crate::stamp::SeqTransformKind::HaarDwt);
+        let exec = NativeExecutor::new().with_gpt_generate("gen-kv4", gpt, None, kv, 32);
+        let input = Tensor::from_vec(&[1, 5], vec![12.0, 3.0, 17.0, 41.0, 5.0]);
+        let threaded = exec.execute("gen-kv4", &[&input]).unwrap().remove(0);
+        crate::parallel::set_kernel_serial(true);
+        let serial = exec.execute("gen-kv4", &[&input]).unwrap().remove(0);
+        crate::parallel::set_kernel_serial(false);
+        assert_eq!(threaded, serial, "packed-kv decode must not depend on thread count");
+        assert_eq!(threaded.shape(), &[1, 12]);
+        // All generated ids are valid vocab entries.
+        for &v in threaded.data() {
+            assert!(v >= 0.0 && (v as usize) < 72 && v.fract() == 0.0);
+        }
+    }
+
+    #[test]
+    fn generate_variant_with_quantized_stack_uses_prepared_weights() {
+        // A quantized stack on a generate variant: weight quantization
+        // applies in full (once, at registration); activation policies are
+        // window-relative per decode step (documented on
+        // `with_gpt_generate`). Pin that the path serves, stays
+        // deterministic, and never rebuilds a weight across the per-step
+        // forwards.
+        let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 21));
+        let act = ActQuantCfg { hp_tokens: 8, ..ActQuantCfg::w4a4_per_token() };
+        let stack = QuantStack::build(
+            BaselineKind::Rtn,
+            &HashMap::new(),
+            Some(act),
+            Some(WeightQuantCfg::w4_per_channel()),
+            None,
+            1,
+        )
+        .with_packed();
+        let kv = crate::kvcache::KvCacheConfig::two_level(4, 8, 4, 8);
+        let exec = NativeExecutor::new().with_gpt_generate("gen-q", gpt, Some(stack), kv, 32);
+        let input = Tensor::from_vec(&[1, 4], vec![16.0, 2.0, 9.0, 33.0]);
+        let a = exec.execute("gen-q", &[&input]).unwrap().remove(0);
+        let b = exec.execute("gen-q", &[&input]).unwrap().remove(0);
+        assert_eq!(a, b, "quantized-stack generation must be deterministic");
+        assert_eq!(a.shape(), &[1, 16]);
+        for &v in a.data() {
+            assert!(v.fract() == 0.0 && (v as usize) < 72, "token {v}");
+        }
+        let p = exec.prepared("gen-q").unwrap();
+        assert_eq!(p.misses(), 0, "decode steps must reuse the per-variant weights");
+        assert!(p.packed_sites() >= 8);
     }
 
     #[test]

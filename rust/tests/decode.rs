@@ -1,0 +1,297 @@
+//! Autoregressive decode subsystem integration: the parity harness, the
+//! KV-cache storage accounting, quantified drift, and coordinator-served
+//! generation.
+//!
+//! Three invariants anchor the subsystem:
+//!
+//! 1. **fp32-cache parity** — greedy decode with an unquantized cache is
+//!    *bit-identical* to `Gpt::logits_hooked` on the same token prefix at
+//!    any thread count (every kernel on the decode path is row-wise; CI
+//!    runs this file under both `STAMP_THREADS=1` and the default).
+//! 2. **Storage accounting** — `KvCache::storage_bits` reproduces the
+//!    Appendix-C accounting for the configured two-level allocation, and
+//!    the measured average sits within one bit of `lp_bits` once
+//!    `s ≫ hp_tokens`.
+//! 3. **Bounded drift** — quantizing the cache perturbs decode logits
+//!    measurably but boundedly (logit SQNR + next-token NLL drift are the
+//!    numbers a deployment trades against the memory win).
+
+use stamp::kvcache::{KvCache, KvCacheConfig, KvStream};
+use stamp::model::{softmax_rows, FpHook, Gpt, GptConfig};
+use stamp::quant::{quantize_dequantize_rows, BitAllocation, Granularity};
+use stamp::stamp::SeqTransformKind;
+use stamp::stats::sqnr;
+use stamp::tensor::Tensor;
+use stamp::testkit;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn prefix_tokens(n: usize) -> Vec<u32> {
+    (0..n).map(|i| ((i * 7 + 3) % 70) as u32).collect()
+}
+
+/// Step-by-step decode over `tokens` with an fp32 cache; every step's
+/// logits row must equal the full-sequence forward's row bit-for-bit.
+fn assert_parity(gpt: &Gpt, tokens: &[u32]) {
+    let full = gpt.logits_hooked(&FpHook, tokens);
+    let mut cache = KvCache::fp32(gpt.cfg.n_layers);
+    let first = gpt.prefill(&FpHook, &tokens[..1], &mut cache);
+    assert_eq!(first.row(0), full.row(0), "prefill row 0");
+    for (t, &tok) in tokens.iter().enumerate().skip(1) {
+        let l = gpt.decode_step(&FpHook, tok, &mut cache);
+        assert_eq!(l.row(0), full.row(t), "step {t} logits must be bit-identical");
+    }
+}
+
+#[test]
+fn decode_fp32_cache_parity_bit_identical() {
+    let gpt = Gpt::new(GptConfig::tiny(), 3);
+    let tokens = prefix_tokens(24);
+    assert_parity(&gpt, &tokens);
+    // Forced-serial kernels must reproduce the same rows — decode parity
+    // holds at any thread count (CI re-runs the whole file under
+    // STAMP_THREADS=1 as well).
+    stamp::parallel::set_kernel_serial(true);
+    assert_parity(&gpt, &tokens);
+    stamp::parallel::set_kernel_serial(false);
+}
+
+#[test]
+fn chunked_prefill_matches_one_shot() {
+    let gpt = Gpt::new(GptConfig::tiny(), 4);
+    let tokens = prefix_tokens(20);
+    let full = gpt.logits_hooked(&FpHook, &tokens);
+    let mut cache = KvCache::fp32(gpt.cfg.n_layers);
+    let a = gpt.prefill(&FpHook, &tokens[..13], &mut cache);
+    let b = gpt.prefill(&FpHook, &tokens[13..], &mut cache);
+    for t in 0..13 {
+        assert_eq!(a.row(t), full.row(t), "chunk-1 row {t}");
+    }
+    for t in 13..20 {
+        assert_eq!(b.row(t - 13), full.row(t), "chunk-2 row {t}");
+    }
+}
+
+#[test]
+fn packed_cache_storage_matches_appendix_c_accounting() {
+    // 512 tokens, 8 sink tokens, 16-token blocks: every token's cost is
+    // payload bits·d plus one fp16 scale + fp16 zero (32 bits) per row
+    // (per-token granularity) — the Appendix-C accounting.
+    let (s, d, block, hp) = (512usize, 64usize, 16usize, 8usize);
+    let mut st = KvStream::new(KvCacheConfig::two_level(hp, 8, 4, block));
+    st.append(&Tensor::randn(&[s, d], 7));
+    let flushed = (s / block) * block;
+    let expect: usize = (0..s)
+        .map(|i| {
+            if i < flushed {
+                let bits = if i < hp { 8 } else { 4 };
+                bits * d + 32
+            } else {
+                32 * d
+            }
+        })
+        .sum();
+    assert_eq!(st.storage_bits(), expect);
+    // s ≫ hp_tokens ⇒ measured average within one bit of lp_bits.
+    let avg = st.average_storage_bits();
+    assert!(avg <= 4.0 + 1.0, "avg bits {avg} must be ≤ lp_bits + 1");
+    assert!(avg > 4.0, "avg bits {avg} must include hp + parameter overhead");
+
+    // Whole-cache accounting matches the sum of its streams.
+    let gpt = Gpt::new(GptConfig::tiny(), 9);
+    let mut cache = KvCache::new(gpt.cfg.n_layers, KvCacheConfig::two_level(8, 8, 4, 16));
+    let _ = gpt.prefill(&FpHook, &prefix_tokens(64), &mut cache);
+    let per_layer: usize = (0..gpt.cfg.n_layers)
+        .map(|l| cache.layer(l).k.storage_bits() + cache.layer(l).v.storage_bits())
+        .sum();
+    assert_eq!(cache.storage_bits(), per_layer);
+    assert!(cache.average_storage_bits() < 32.0, "quantized cache must beat fp32");
+}
+
+/// Teacher-forced decode logits (the last prompt row + one row per
+/// continuation token) under a given cache policy.
+fn forced_logits(gpt: &Gpt, cfg: KvCacheConfig, prompt: &[u32], cont: &[u32]) -> Tensor {
+    let mut cache = KvCache::new(gpt.cfg.n_layers, cfg);
+    let pre = gpt.prefill(&FpHook, prompt, &mut cache);
+    let mut out = pre.slice_rows(pre.rows() - 1, pre.rows());
+    for &t in &cont[..cont.len() - 1] {
+        out = out.vcat(&gpt.decode_step(&FpHook, t, &mut cache));
+    }
+    out
+}
+
+/// Mean next-token negative log-likelihood of `cont` under those logits.
+fn mean_nll(logits: &Tensor, cont: &[u32]) -> f64 {
+    let mut probs = logits.clone();
+    softmax_rows(&mut probs);
+    let mut nll = 0.0f64;
+    for (i, &t) in cont.iter().enumerate() {
+        nll -= (probs.at(i, t as usize).max(1e-12) as f64).ln();
+    }
+    nll / cont.len() as f64
+}
+
+#[test]
+fn packed_cache_drift_is_measurable_and_bounded() {
+    let gpt = Gpt::new(GptConfig::tiny(), 5);
+    let prompt = prefix_tokens(16);
+    // Continuation chosen by the fp32 path, then teacher-forced through
+    // both cache policies so the comparison isolates pure cache error.
+    let mut c = KvCache::fp32(gpt.cfg.n_layers);
+    let cont = gpt.generate_greedy(&FpHook, &prompt, 24, &mut c);
+
+    let fp = forced_logits(&gpt, KvCacheConfig::fp32(), &prompt, &cont);
+    let kv4 = forced_logits(
+        &gpt,
+        KvCacheConfig::two_level(4, 8, 4, 8).with_transform(SeqTransformKind::HaarDwt),
+        &prompt,
+        &cont,
+    );
+    assert!(kv4.all_finite());
+    // Quantization must be visible…
+    assert!(kv4.max_abs_diff(&fp) > 1e-4, "packed cache must perturb logits");
+    // …but bounded: logit SQNR and next-token NLL drift stay sane.
+    let s = sqnr(&fp, &kv4);
+    assert!(s > 5.0, "decode logit SQNR {s} dB under packed KV4 cache");
+    let d_nll = (mean_nll(&kv4, &cont) - mean_nll(&fp, &cont)).abs();
+    assert!(d_nll < 1.0, "NLL drift {d_nll} nats under packed KV4 cache");
+    println!("decode drift: logit SQNR {s:.1} dB, |ΔNLL| {d_nll:.4} nats");
+
+    // An 8-bit cache must drift strictly less than the 4-bit one.
+    let kv8 = forced_logits(&gpt, KvCacheConfig::two_level(0, 8, 8, 8), &prompt, &cont);
+    assert!(sqnr(&fp, &kv8) > s, "KV8 must be closer to fp than KV4");
+}
+
+#[derive(Debug)]
+struct RoundtripCase {
+    s: usize,
+    d: usize,
+    block: usize,
+    split: usize,
+    seed: u64,
+}
+
+/// Satellite: append→gather round-trips bit-exactly against the one-shot
+/// QDQ oracle when `lp_bits == hp_bits == 8` (identity blocks; per-token
+/// QDQ is row-independent, so the incremental block partition must not
+/// change a single bit), with the tail exact by construction.
+#[test]
+fn property_kv_append_gather_roundtrip_8bit() {
+    testkit::check(
+        "kv-append-gather-8bit",
+        24,
+        0xCAC4E,
+        |g| RoundtripCase {
+            s: g.usize_in(1, 80),
+            d: g.usize_in(1, 24),
+            block: g.pow2_in(2, 16),
+            split: g.usize_in(0, 80),
+            seed: g.rng.next_u64(),
+        },
+        |c| {
+            let x = Tensor::randn(&[c.s, c.d], c.seed);
+            let mut st = KvStream::new(KvCacheConfig::two_level(0, 8, 8, c.block));
+            let split = c.split.min(c.s);
+            st.append(&x.slice_rows(0, split));
+            st.append(&x.slice_rows(split, c.s));
+            let g = st.gather();
+            let flushed = (c.s / c.block) * c.block;
+            let want = quantize_dequantize_rows(
+                &x,
+                &BitAllocation::uniform(8),
+                Granularity::PerToken,
+            );
+            for i in 0..c.s {
+                let expect = if i < flushed { want.row(i) } else { x.row(i) };
+                if g.row(i) != expect {
+                    return Err(format!("row {i} diverged (flushed < {flushed})"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[derive(Debug)]
+struct IncrementalCase {
+    s: usize,
+    d: usize,
+    block: usize,
+    hp: usize,
+    lp: u32,
+    transform: SeqTransformKind,
+    seed: u64,
+}
+
+/// Append granularity must never matter: token-by-token and one-shot
+/// appends produce bit-identical gathers and storage accounting, for
+/// every transform and bit mix.
+#[test]
+fn property_kv_incremental_equals_batch() {
+    testkit::check(
+        "kv-incremental-vs-batch",
+        16,
+        0xB10C,
+        |g| IncrementalCase {
+            s: g.usize_in(1, 60),
+            d: g.usize_in(1, 20),
+            block: g.pow2_in(2, 16),
+            hp: g.usize_in(0, 40),
+            lp: if g.usize_in(0, 1) == 0 { 4 } else { 8 },
+            transform: match g.usize_in(0, 2) {
+                0 => SeqTransformKind::Identity,
+                1 => SeqTransformKind::HaarDwt,
+                _ => SeqTransformKind::Dct,
+            },
+            seed: g.rng.next_u64(),
+        },
+        |c| {
+            let x = Tensor::randn(&[c.s, c.d], c.seed);
+            let mk = || {
+                KvStream::new(
+                    KvCacheConfig::two_level(c.hp, 8, c.lp, c.block)
+                        .with_transform(c.transform),
+                )
+            };
+            let mut batch = mk();
+            batch.append(&x);
+            let mut inc = mk();
+            for i in 0..c.s {
+                inc.append(&x.slice_rows(i, i + 1));
+            }
+            if inc.gather() != batch.gather() {
+                return Err("gather differs between append granularities".into());
+            }
+            if inc.storage_bits() != batch.storage_bits() {
+                return Err("storage_bits differs between append granularities".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn generate_serves_through_coordinator_with_packed_kv() {
+    use stamp::config::ServeSpec;
+    use stamp::coordinator::Server;
+    use stamp::runtime::NativeExecutor;
+
+    let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 11));
+    let kv = KvCacheConfig::two_level(4, 8, 4, 8).with_transform(SeqTransformKind::HaarDwt);
+    let exec = NativeExecutor::new().with_gpt_generate("gen-kv4", gpt.clone(), None, kv, 32);
+    let spec = ServeSpec { workers: 2, max_batch: 4, max_wait_us: 500, queue_depth: 16 };
+    let server = Server::start(&spec, &["gen-kv4"], Arc::new(exec));
+    let handle = server.handle();
+    // [n_new = 12, prompt…]
+    let input = Tensor::from_vec(&[1, 5], vec![12.0, 3.0, 17.0, 41.0, 5.0]);
+    let a = handle.call("gen-kv4", input.clone(), Duration::from_secs(30)).unwrap();
+    let a = a.output.unwrap();
+    assert_eq!(a.shape(), &[1, 12]);
+    for &v in a.data() {
+        assert!(v.fract() == 0.0 && (v as usize) < gpt.cfg.vocab_size, "token {v}");
+    }
+    // Generation is deterministic: the same request yields the same ids.
+    let b = handle.call("gen-kv4", input, Duration::from_secs(30)).unwrap();
+    assert_eq!(a, b.output.unwrap());
+    server.shutdown();
+}
