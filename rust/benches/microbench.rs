@@ -9,6 +9,7 @@
 use stamp::baselines::{quantize_weight, quantize_weight_packed, WeightQuantCfg};
 use stamp::bench::Harness;
 use stamp::coordinator::{DynamicBatcher, Request};
+use stamp::decode::{DecodeEngine, GenRequest, Sampling};
 use stamp::kvcache::{KvCache, KvCacheConfig};
 use stamp::model::{FpHook, Gpt, GptConfig};
 use stamp::quant::{BitAllocation, Granularity, QuantScheme, Quantizer};
@@ -129,6 +130,64 @@ fn main() {
         gpt.generate_greedy(&FpHook, &prompt, n_new, &mut cache)
     });
     println!("    -> {:.0} tok/s", st.throughput(n_new as f64));
+
+    // Batched decode: the step-synchronized engine fuses N concurrent
+    // streams into one GEMM per linear per step. Rows report aggregate
+    // tokens/sec and tokens/sec **per stream** — the acceptance metric is
+    // batch-8 per-stream throughput vs the serial per-request baseline
+    // above it (8 independent generate_greedy runs, the PR 3 serving
+    // behavior).
+    Harness::header("batched decode (tiny GPT, ragged prompts + 32 tokens/stream)");
+    let n_new_b = 32usize;
+    let prompts: Vec<Vec<u32>> = (0..8)
+        .map(|i| (0..(12 + 2 * i)).map(|j| ((j * 5 + i * 7) % 72) as u32).collect())
+        .collect();
+    let st = h.bench("serial decode x8 (fp32 kv, per-request)", || {
+        prompts
+            .iter()
+            .map(|p| {
+                let mut cache = KvCache::fp32(gpt.cfg.n_layers);
+                gpt.generate_greedy(&FpHook, p, n_new_b, &mut cache)
+            })
+            .collect::<Vec<_>>()
+    });
+    println!(
+        "    -> {:.0} tok/s aggregate, {:.0} tok/s/stream",
+        st.throughput((8 * n_new_b) as f64),
+        st.throughput((8 * n_new_b) as f64) / 8.0
+    );
+    for batch in [1usize, 4, 8] {
+        let reqs: Vec<GenRequest> = prompts[..batch]
+            .iter()
+            .map(|p| GenRequest { prompt: p.clone(), n_new: n_new_b })
+            .collect();
+        let engine = DecodeEngine::new(&gpt, KvCacheConfig::fp32(), Sampling::Greedy)
+            .with_decode_batch(batch);
+        let st = h.bench(&format!("batched decode b={batch} (fp32 kv)"), || {
+            engine.run_fp(&reqs).unwrap()
+        });
+        println!(
+            "    -> {:.0} tok/s aggregate, {:.0} tok/s/stream",
+            st.throughput((batch * n_new_b) as f64),
+            st.throughput((batch * n_new_b) as f64) / batch as f64
+        );
+    }
+    let reqs8: Vec<GenRequest> =
+        prompts.iter().map(|p| GenRequest { prompt: p.clone(), n_new: n_new_b }).collect();
+    let engine = DecodeEngine::new(
+        &gpt,
+        KvCacheConfig::two_level(8, 8, 4, 16),
+        Sampling::Greedy,
+    )
+    .with_decode_batch(8);
+    let st = h.bench("batched decode b=8 (packed two-level kv)", || {
+        engine.run_fp(&reqs8).unwrap()
+    });
+    println!(
+        "    -> {:.0} tok/s aggregate, {:.0} tok/s/stream",
+        st.throughput((8 * n_new_b) as f64),
+        st.throughput((8 * n_new_b) as f64) / 8.0
+    );
 
     Harness::header("coordinator hot path");
     let st = h.bench("batcher push+flush (batch 8)", || {

@@ -46,15 +46,28 @@ pub struct ServeSpec {
     pub queue_depth: usize,
 }
 
-/// Autoregressive generation settings (`[generate]` section): the greedy
-/// decode budget plus the KV-cache policy handed to
-/// [`crate::kvcache::KvCacheConfig`]. TOML keys mirror the field paths:
-/// `max_new_tokens`, `kv.hp_tokens`, `kv.hp_bits`, `kv.lp_bits`,
-/// `kv.block`, `kv.packed`, `kv.transform`.
+/// Autoregressive generation settings (`[generate]` section): the decode
+/// budget, the batched-engine and sampling knobs, and the KV-cache policy
+/// handed to [`crate::kvcache::KvCacheConfig`]. TOML keys mirror the
+/// field paths: `max_new_tokens`, `decode_batch`, `temperature`, `top_k`,
+/// `seed`, `kv.hp_tokens`, `kv.hp_bits`, `kv.lp_bits`, `kv.block`,
+/// `kv.packed`, `kv.transform`.
 #[derive(Clone, Debug)]
 pub struct GenerateSpec {
     /// Per-request cap on generated tokens.
     pub max_new_tokens: usize,
+    /// Max concurrent streams fused into one decode-step GEMM
+    /// ([`crate::decode::DecodeEngine`]); 1 degenerates to serial
+    /// per-request stepping.
+    pub decode_batch: usize,
+    /// Softmax temperature for sampling; `0` (the default) keeps greedy
+    /// argmax decoding.
+    pub temperature: f32,
+    /// Top-k cutoff when sampling (`0` = the full vocabulary).
+    pub top_k: usize,
+    /// Sampler seed — every stream draws from its own generator seeded
+    /// here, so batched runs stay deterministic.
+    pub seed: u64,
     /// Leading (attention-sink) positions stored at `kv_hp_bits`.
     pub kv_hp_tokens: usize,
     pub kv_hp_bits: u32,
@@ -84,11 +97,28 @@ impl GenerateSpec {
             block: self.kv_block,
             packed: self.kv_packed,
             transform,
+            // The serving layer bounds the cache to the model's `max_seq`
+            // at engine construction; the config itself stays model-free.
+            max_seq: None,
         };
         // Same error surface as a bad kv.transform: invalid lanes/blocks
         // fail here, recoverably, instead of panicking at registration.
         cfg.check().map_err(crate::error::Error::msg)?;
         Ok(cfg)
+    }
+
+    /// Resolve the sampling knobs into the decode engine's policy:
+    /// greedy unless a positive `temperature` is set.
+    pub fn sampling(&self) -> crate::decode::Sampling {
+        if self.temperature > 0.0 {
+            crate::decode::Sampling::TopK {
+                k: self.top_k,
+                temperature: self.temperature,
+                seed: self.seed,
+            }
+        } else {
+            crate::decode::Sampling::Greedy
+        }
     }
 }
 
@@ -131,6 +161,10 @@ impl RunConfig {
             },
             generate: GenerateSpec {
                 max_new_tokens: 64,
+                decode_batch: 8,
+                temperature: 0.0,
+                top_k: 0,
+                seed: 0x5EED,
                 kv_hp_tokens: 64,
                 kv_hp_bits: 8,
                 kv_lp_bits: 4,
@@ -176,6 +210,14 @@ impl RunConfig {
                 max_new_tokens: doc
                     .int_or("generate", "max_new_tokens", d.generate.max_new_tokens as i64)
                     as usize,
+                decode_batch: doc
+                    .int_or("generate", "decode_batch", d.generate.decode_batch as i64)
+                    .max(1) as usize,
+                temperature: doc
+                    .float_or("generate", "temperature", d.generate.temperature as f64)
+                    as f32,
+                top_k: doc.int_or("generate", "top_k", d.generate.top_k as i64) as usize,
+                seed: doc.int_or("generate", "seed", d.generate.seed as i64) as u64,
                 kv_hp_tokens: doc
                     .int_or("generate", "kv.hp_tokens", d.generate.kv_hp_tokens as i64)
                     as usize,
@@ -308,6 +350,27 @@ mod tests {
         let mut bad = d.generate.clone();
         bad.kv_block = 0;
         assert!(bad.kv_cfg().is_err());
+    }
+
+    #[test]
+    fn generate_decode_batch_and_sampling_parse() {
+        // Greedy stays the default; decode_batch defaults to the fused
+        // coordinator batch width.
+        let d = RunConfig::defaults();
+        assert_eq!(d.generate.decode_batch, 8);
+        assert_eq!(d.generate.sampling(), crate::decode::Sampling::Greedy);
+        let cfg = RunConfig::from_toml_str(
+            "[generate]\ndecode_batch = 4\ntemperature = 0.8\ntop_k = 16\nseed = 99\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.generate.decode_batch, 4);
+        assert_eq!(
+            cfg.generate.sampling(),
+            crate::decode::Sampling::TopK { k: 16, temperature: 0.8, seed: 99 }
+        );
+        // decode_batch is clamped to ≥ 1 rather than panicking later.
+        let cfg = RunConfig::from_toml_str("[generate]\ndecode_batch = 0\n").unwrap();
+        assert_eq!(cfg.generate.decode_batch, 1);
     }
 
     #[test]

@@ -2,6 +2,12 @@
 //! shape) up to `max_batch`, flushing early once the oldest request has
 //! waited `max_wait`. Pure logic — no threads — so invariants are directly
 //! property-testable.
+//!
+//! A formed batch is the executor's unit of fusion: for generate variants
+//! the whole batch is admitted into one [`crate::decode::DecodeEngine`]
+//! run (N concurrent streams, one GEMM per linear per step), so
+//! `max_batch` is also the natural upper bound for the engine's
+//! `decode_batch` knob.
 
 use super::Request;
 use std::collections::VecDeque;

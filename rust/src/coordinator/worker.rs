@@ -20,7 +20,10 @@ use std::time::Instant;
 /// What a worker runs on a batch of inputs (all same variant + shape).
 pub trait Executor: Send + Sync + 'static {
     /// Process each input; one output per input. An `Err` fails the whole
-    /// batch (each request receives the error).
+    /// batch (each request receives the error). The executor sees the
+    /// *whole* batch, so it can fuse it (the native executor admits a
+    /// batch of generate requests into one step-synchronized
+    /// [`crate::decode::DecodeEngine`] run) rather than loop per request.
     fn execute(&self, variant: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>, String>;
 }
 

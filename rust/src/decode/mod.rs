@@ -1,0 +1,412 @@
+//! Step-synchronized batched decode engine: many autoregressive streams,
+//! one fused GEMM per linear per step.
+//!
+//! PR 3's serving path batched *requests* at the coordinator but decoded
+//! them serially inside the executor — every layer ran a `[1 × d_model]`
+//! GEMV that re-streamed the full weight matrix per request per token.
+//! [`DecodeEngine`] owns a set of in-flight streams (each with its own
+//! [`KvCache`], position offset, sampler state, and remaining-token
+//! budget) and advances **all** active streams one token per step: the
+//! streams' current tokens are stacked into one `[n_active × d_model]`
+//! activation, every projection / FFN / logits-head linear runs as a
+//! single `matmul`/`qgemm` call, and attention scatters per stream over
+//! each stream's own cached K/V
+//! ([`crate::model::attention::MultiHeadAttention::forward_decode_batch`]).
+//! Arithmetic intensity on the weight-bound hot path rises by ~n_active —
+//! the continuous-batching insight of Orca/vLLM-style serving (PAPERS.md),
+//! here applied to the paper's low-bit serving setting.
+//!
+//! ## Ragged-batch slot lifecycle (DESIGN.md §12)
+//!
+//! * **Admission** — streams join with different prompt lengths; prefill
+//!   stays per-stream ([`crate::model::Gpt::prefill`] handles any number
+//!   of rows of *one* stream, which is a different shape of work than the
+//!   fused step).
+//! * **Stepping** — active slots advance in lock-step. The fused step is
+//!   chunked at `decode_batch` streams per GEMM so a huge admission wave
+//!   cannot blow up the working set; `decode_batch = 1` degenerates to
+//!   PR 3's serial per-request stepping, same results.
+//! * **Retirement** — a slot retires when its budget is exhausted, or —
+//!   with a `truncated` flag — when its capacity-bounded cache cannot take
+//!   another token ([`crate::kvcache::KvStream::try_append`] surfaces the
+//!   same condition recoverably). Retirement never stalls the remaining
+//!   streams: the slot simply leaves the stacked activation from the next
+//!   step on.
+//!
+//! ## Why batching preserves per-stream causality and bit-parity
+//!
+//! Streams share *weights*, never *state*: attention reads only the
+//! stream's own cache, and every fused kernel on the step (matmul,
+//! matmul_transb, qgemm, RMSNorm, SiLU gating) is row-wise — row `i` of
+//! the output depends only on row `i` of the input, with a reduction
+//! order independent of how many rows are present. So with an fp32 cache
+//! and [`FpHook`], each stream's batched output is **bit-identical** to
+//! PR 3's serial [`crate::model::Gpt::generate_greedy`] at any thread
+//! count and any batch composition (`tests/decode.rs` pins it, including
+//! mixed prompt lengths and mid-run retirement). A packed cache quantizes
+//! each stream's history independently, so the same argument makes
+//! batched packed decode bit-identical to serial packed decode; only the
+//! cache policy itself introduces drift (quantified in `tests/decode.rs`).
+//!
+//! One caveat for quantized *activation* stacks ([`crate::baselines::QuantHook`]):
+//! window-relative policies (e.g. `hp_tokens` treating row 0 of each call
+//! as "token 0") see one `[n_active × d]` window instead of n 1-row
+//! windows, so a stack's decode-time activation QDQ may differ between
+//! batched and serial stepping. That matches what a fused deployment
+//! kernel would see; the paper-shaped serving setup (FP linears +
+//! quantized KV cache, `stack = None`) is unaffected.
+
+use crate::kvcache::{KvCache, KvCacheConfig};
+use crate::model::gpt::argmax_row;
+use crate::model::{FpHook, Gpt, LinearHook};
+use crate::tensor::XorShiftRng;
+
+/// Token-selection policy, applied per stream per step.
+///
+/// `Greedy` is the default everywhere and keeps PR 3's deterministic
+/// argmax (first-maximum tie-break). `TopK` samples from the temperature-
+/// scaled softmax over the `k` highest logits via [`XorShiftRng`]; each
+/// stream draws from its own generator seeded with `seed`, so a stream's
+/// sampled continuation is a pure function of (weights, prompt, spec) —
+/// independent of batch composition, chunking, and retirement order —
+/// and batched runs stay exactly reproducible.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Sampling {
+    /// Deterministic argmax (the PR 3 behavior; the default).
+    Greedy,
+    /// Temperature + top-k sampling. `k = 0` means the full vocabulary;
+    /// `temperature` must be positive.
+    TopK { k: usize, temperature: f32, seed: u64 },
+}
+
+/// Per-stream sampler state (spec + that stream's own RNG).
+struct Sampler {
+    spec: Sampling,
+    rng: XorShiftRng,
+}
+
+impl Sampler {
+    fn new(spec: &Sampling) -> Self {
+        let seed = match spec {
+            Sampling::Greedy => 0,
+            Sampling::TopK { seed, .. } => *seed,
+        };
+        Sampler { spec: spec.clone(), rng: XorShiftRng::new(seed) }
+    }
+
+    /// Pick the next token from one logits row.
+    fn next(&mut self, row: &[f32]) -> u32 {
+        match self.spec {
+            Sampling::Greedy => argmax_row(row),
+            Sampling::TopK { k, temperature, .. } => {
+                let k = if k == 0 { row.len() } else { k.min(row.len()) };
+                // Candidates by (logit desc, index asc) — a total,
+                // deterministic order even under ties, so the top-k *set*
+                // is unique and select-then-sort equals sort-then-truncate
+                // while skipping the O(V log V) full-vocab sort on this
+                // per-token hot path.
+                let cmp = |a: &usize, b: &usize| {
+                    row[*b]
+                        .partial_cmp(&row[*a])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.cmp(b))
+                };
+                let mut idx: Vec<usize> = (0..row.len()).collect();
+                if k < idx.len() {
+                    idx.select_nth_unstable_by(k - 1, cmp);
+                    idx.truncate(k);
+                }
+                idx.sort_by(cmp);
+                // Softmax over the shortlist at temperature t, in f64 and
+                // in shortlist order — a fixed reduction order, so the
+                // draw is bit-reproducible.
+                let t = temperature.max(1e-6) as f64;
+                let top = row[idx[0]] as f64;
+                let weights: Vec<f64> =
+                    idx.iter().map(|&i| ((row[i] as f64 - top) / t).exp()).collect();
+                let total: f64 = weights.iter().sum();
+                let mut u = self.rng.next_f64() * total;
+                for (w, &i) in weights.iter().zip(&idx) {
+                    u -= w;
+                    if u <= 0.0 {
+                        return i as u32;
+                    }
+                }
+                // Float-tail fallback: the last (least likely) candidate.
+                idx[k - 1] as u32
+            }
+        }
+    }
+}
+
+/// One generation request: a prompt plus a new-token budget.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub prompt: Vec<u32>,
+    pub n_new: usize,
+}
+
+/// What a stream produced by the time it retired.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamResult {
+    /// Generated ids, in order (length ≤ the request's `n_new`).
+    pub tokens: Vec<u32>,
+    /// `true` when the stream hit its cache capacity before exhausting
+    /// its budget and was retired early instead of panicking the batch.
+    pub truncated: bool,
+}
+
+/// An in-flight stream between admission and retirement.
+struct Slot {
+    /// Index into the request (and result) vector.
+    idx: usize,
+    cache: KvCache,
+    sampler: Sampler,
+    /// Generated so far; the last entry is the token fed at the next step.
+    out: Vec<u32>,
+    n_new: usize,
+}
+
+/// Step-synchronized batched decode over a shared model (module docs).
+///
+/// The engine is reusable: [`DecodeEngine::run`] owns all per-run state,
+/// so one engine can serve successive coordinator batches.
+pub struct DecodeEngine<'m> {
+    gpt: &'m Gpt,
+    kv: KvCacheConfig,
+    sampling: Sampling,
+    decode_batch: usize,
+}
+
+/// Default cap on streams fused into one GEMM (the `[generate]`
+/// `decode_batch` TOML knob): matches the coordinator's default
+/// `max_batch`, so a full coordinator batch fuses into a single step.
+pub const DEFAULT_DECODE_BATCH: usize = 8;
+
+impl<'m> DecodeEngine<'m> {
+    /// Build an engine over `gpt` with a per-stream cache policy and a
+    /// sampling spec. The cache capacity is clamped to the model's
+    /// `max_seq` (tighter caller-supplied bounds are kept), so a stream
+    /// that outgrows the model retires with a truncation flag instead of
+    /// panicking mid-batch.
+    pub fn new(gpt: &'m Gpt, kv: KvCacheConfig, sampling: Sampling) -> Self {
+        let mut kv = kv;
+        let cap = kv.max_seq.map_or(gpt.cfg.max_seq, |m| m.min(gpt.cfg.max_seq));
+        kv.max_seq = Some(cap);
+        kv.validate();
+        DecodeEngine { gpt, kv, sampling, decode_batch: DEFAULT_DECODE_BATCH }
+    }
+
+    /// Cap on streams fused into one step GEMM (≥ 1; 1 = serial stepping).
+    pub fn with_decode_batch(mut self, decode_batch: usize) -> Self {
+        assert!(decode_batch >= 1, "decode_batch must be ≥ 1");
+        self.decode_batch = decode_batch;
+        self
+    }
+
+    /// Greedy fp32-linear convenience entry (the paper-shaped serving
+    /// setup quantizes only the KV cache).
+    pub fn run_fp(&self, reqs: &[GenRequest]) -> crate::error::Result<Vec<StreamResult>> {
+        self.run(&FpHook, reqs)
+    }
+
+    /// Admit every request, advance all active streams one token per
+    /// step, and return one [`StreamResult`] per request, in request
+    /// order. Errors (empty or out-of-vocab prompt, prompt longer than
+    /// the cache capacity) reject the whole run before any decoding.
+    pub fn run(
+        &self,
+        hook: &dyn LinearHook,
+        reqs: &[GenRequest],
+    ) -> crate::error::Result<Vec<StreamResult>> {
+        let vocab = self.gpt.cfg.vocab_size;
+        let cap = self.kv.max_seq.expect("engine kv config is always bounded");
+        for (i, r) in reqs.iter().enumerate() {
+            if r.prompt.is_empty() {
+                crate::bail!("stream {i}: prompt must be non-empty");
+            }
+            if let Some(&t) = r.prompt.iter().find(|&&t| t as usize >= vocab) {
+                crate::bail!("stream {i}: token {t} out of vocab {vocab}");
+            }
+            if r.prompt.len() > cap {
+                crate::bail!("stream {i}: prompt {} exceeds cache capacity {cap}", r.prompt.len());
+            }
+        }
+
+        let mut done: Vec<Option<StreamResult>> = reqs.iter().map(|_| None).collect();
+        let mut slots: Vec<Slot> = Vec::new();
+        // Admission: per-stream prefill (ragged prompt lengths), then the
+        // first sampled token.
+        for (i, r) in reqs.iter().enumerate() {
+            let mut cache = KvCache::new(self.gpt.cfg.n_layers, self.kv.clone());
+            let logits = self.gpt.prefill(hook, &r.prompt, &mut cache);
+            let mut sampler = Sampler::new(&self.sampling);
+            let mut out = Vec::with_capacity(r.n_new);
+            if r.n_new > 0 {
+                out.push(sampler.next(logits.row(logits.rows() - 1)));
+            }
+            if out.len() >= r.n_new {
+                done[i] = Some(StreamResult { tokens: out, truncated: false });
+            } else {
+                slots.push(Slot { idx: i, cache, sampler, out, n_new: r.n_new });
+            }
+        }
+
+        // Step loop: every iteration advances all still-active streams by
+        // exactly one token (step-synchronized), fused in decode_batch
+        // chunks.
+        while !slots.is_empty() {
+            // Retire streams whose cache cannot take the pending token —
+            // the recoverable per-stream form of the max_seq overflow.
+            let mut j = 0;
+            while j < slots.len() {
+                if matches!(slots[j].cache.remaining(), Some(0)) {
+                    let s = slots.swap_remove(j);
+                    done[s.idx] = Some(StreamResult { tokens: s.out, truncated: true });
+                } else {
+                    j += 1;
+                }
+            }
+            for chunk in slots.chunks_mut(self.decode_batch) {
+                let tokens: Vec<u32> =
+                    chunk.iter().map(|s| *s.out.last().expect("active slot has a token")).collect();
+                let mut caches: Vec<&mut KvCache> =
+                    chunk.iter_mut().map(|s| &mut s.cache).collect();
+                let logits = self.gpt.decode_step_batch(hook, &tokens, &mut caches);
+                drop(caches);
+                for (row, s) in chunk.iter_mut().enumerate() {
+                    let t = s.sampler.next(logits.row(row));
+                    s.out.push(t);
+                }
+            }
+            // Retire streams that reached their budget.
+            let mut j = 0;
+            while j < slots.len() {
+                if slots[j].out.len() >= slots[j].n_new {
+                    let s = slots.swap_remove(j);
+                    done[s.idx] = Some(StreamResult { tokens: s.out, truncated: false });
+                } else {
+                    j += 1;
+                }
+            }
+        }
+        Ok(done.into_iter().map(|o| o.expect("every stream resolved")).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::GptConfig;
+
+    fn prompt(n: usize, salt: usize) -> Vec<u32> {
+        (0..n).map(|i| ((i * 7 + salt * 11 + 3) % 70) as u32).collect()
+    }
+
+    #[test]
+    fn greedy_batch_matches_serial_generate_greedy() {
+        let gpt = Gpt::new(GptConfig::tiny(), 41);
+        let reqs = vec![
+            GenRequest { prompt: prompt(5, 0), n_new: 12 },
+            GenRequest { prompt: prompt(11, 1), n_new: 3 },
+            GenRequest { prompt: prompt(2, 2), n_new: 8 },
+        ];
+        let engine = DecodeEngine::new(&gpt, KvCacheConfig::fp32(), Sampling::Greedy)
+            .with_decode_batch(2);
+        let got = engine.run_fp(&reqs).unwrap();
+        for (i, r) in reqs.iter().enumerate() {
+            let mut cache = KvCache::fp32(gpt.cfg.n_layers);
+            let want = gpt.generate_greedy(&FpHook, &r.prompt, r.n_new, &mut cache);
+            assert_eq!(got[i].tokens, want, "stream {i}");
+            assert!(!got[i].truncated);
+        }
+    }
+
+    #[test]
+    fn zero_budget_and_bad_requests() {
+        let gpt = Gpt::new(GptConfig::tiny(), 42);
+        let engine = DecodeEngine::new(&gpt, KvCacheConfig::fp32(), Sampling::Greedy);
+        let got = engine
+            .run_fp(&[GenRequest { prompt: prompt(4, 0), n_new: 0 }])
+            .unwrap();
+        assert!(got[0].tokens.is_empty() && !got[0].truncated);
+        let err = engine.run_fp(&[GenRequest { prompt: vec![], n_new: 4 }]).unwrap_err();
+        assert!(err.to_string().contains("non-empty"), "{err}");
+        let err = engine.run_fp(&[GenRequest { prompt: vec![9999], n_new: 4 }]).unwrap_err();
+        assert!(err.to_string().contains("out of vocab"), "{err}");
+        let long = prompt(300, 0).iter().map(|&t| t % 70).collect::<Vec<u32>>();
+        let err = engine.run_fp(&[GenRequest { prompt: long, n_new: 1 }]).unwrap_err();
+        assert!(err.to_string().contains("exceeds cache capacity"), "{err}");
+    }
+
+    #[test]
+    fn truncation_retires_one_stream_without_stalling_the_rest() {
+        let gpt = Gpt::new(GptConfig::tiny(), 43);
+        // Tight engine-level bound: prefill 8 + 4 appends fill cap 12; the
+        // 5th generated token is sampled but the 6th needs a 13th slot.
+        let kv = KvCacheConfig::fp32().with_max_seq(12);
+        let reqs = vec![
+            GenRequest { prompt: prompt(8, 0), n_new: 20 },
+            GenRequest { prompt: prompt(2, 1), n_new: 6 },
+        ];
+        let engine = DecodeEngine::new(&gpt, kv, Sampling::Greedy);
+        let got = engine.run_fp(&reqs).unwrap();
+        assert!(got[0].truncated);
+        assert_eq!(got[0].tokens.len(), 5, "prefill 8 + 4 appends under cap 12 → 5 tokens");
+        assert!(!got[1].truncated);
+        assert_eq!(got[1].tokens.len(), 6);
+        // Each stream still matches its unbounded serial run (prefix-wise
+        // for the truncated one).
+        let mut c = KvCache::fp32(gpt.cfg.n_layers);
+        let serial0 = gpt.generate_greedy(&FpHook, &reqs[0].prompt, 20, &mut c);
+        assert_eq!(got[0].tokens[..], serial0[..5]);
+        let mut c = KvCache::fp32(gpt.cfg.n_layers);
+        let serial1 = gpt.generate_greedy(&FpHook, &reqs[1].prompt, 6, &mut c);
+        assert_eq!(got[1].tokens, serial1);
+    }
+
+    #[test]
+    fn topk_sampling_is_deterministic_and_batch_invariant() {
+        let gpt = Gpt::new(GptConfig::tiny(), 44);
+        let sampling = Sampling::TopK { k: 8, temperature: 0.9, seed: 0x5EED };
+        let reqs = vec![
+            GenRequest { prompt: prompt(6, 0), n_new: 10 },
+            GenRequest { prompt: prompt(3, 1), n_new: 10 },
+            GenRequest { prompt: prompt(9, 2), n_new: 4 },
+        ];
+        let engine = DecodeEngine::new(&gpt, KvCacheConfig::fp32(), sampling.clone());
+        let batched = engine.run_fp(&reqs).unwrap();
+        // Same spec, streams run one at a time: per-stream RNGs make the
+        // draws independent of batch composition.
+        for (i, r) in reqs.iter().enumerate() {
+            let solo = engine.run_fp(std::slice::from_ref(r)).unwrap();
+            assert_eq!(solo[0], batched[i], "stream {i} must not depend on batch-mates");
+        }
+        // And the run is reproducible wholesale.
+        assert_eq!(engine.run_fp(&reqs).unwrap(), batched);
+        for r in &batched {
+            for &t in &r.tokens {
+                assert!((t as usize) < gpt.cfg.vocab_size);
+            }
+        }
+        // Different seed, different continuation (overwhelmingly likely
+        // over 10 draws from a near-uniform untrained model).
+        let other = DecodeEngine::new(
+            &gpt,
+            KvCacheConfig::fp32(),
+            Sampling::TopK { k: 8, temperature: 0.9, seed: 0xBEEF },
+        );
+        let alt = other.run_fp(&reqs).unwrap();
+        assert_ne!(alt[0].tokens, batched[0].tokens, "seed must steer the draw");
+    }
+
+    #[test]
+    fn greedy_sampler_matches_argmax_and_topk1_collapses() {
+        // temperature>0 with k=1 must reproduce greedy's argmax choice.
+        let row = [0.1f32, 2.5, -1.0, 2.5, 0.3];
+        let mut g = Sampler::new(&Sampling::Greedy);
+        let mut k1 = Sampler::new(&Sampling::TopK { k: 1, temperature: 1.0, seed: 7 });
+        assert_eq!(g.next(&row), 1, "first maximum wins ties");
+        assert_eq!(k1.next(&row), 1, "top-1 sampling is argmax with the same tie-break");
+    }
+}

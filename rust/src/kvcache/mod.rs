@@ -64,6 +64,14 @@ pub struct KvCacheConfig {
     /// (`Identity` = plain two-level rows). 2-D kinds are rejected:
     /// decode streams are 1-D.
     pub transform: SeqTransformKind,
+    /// Optional token capacity. `None` (the default) keeps the pre-PR-4
+    /// behavior: the stream grows unboundedly and it is the *caller's* job
+    /// to respect the model's `max_seq`. With `Some(cap)`,
+    /// [`KvStream::try_append`] refuses — recoverably — to grow past `cap`
+    /// tokens, so a decode engine can retire the stream with a truncation
+    /// flag instead of panicking mid-batch (groundwork for the ROADMAP
+    /// sliding-window/eviction item, which stays out of scope here).
+    pub max_seq: Option<usize>,
 }
 
 impl Default for KvCacheConfig {
@@ -77,6 +85,7 @@ impl Default for KvCacheConfig {
             block: 32,
             packed: true,
             transform: SeqTransformKind::Identity,
+            max_seq: None,
         }
     }
 }
@@ -95,6 +104,12 @@ impl KvCacheConfig {
     /// Builder-style block transform selection.
     pub fn with_transform(mut self, kind: SeqTransformKind) -> Self {
         self.transform = kind;
+        self
+    }
+
+    /// Builder-style token capacity (see [`KvCacheConfig::max_seq`]).
+    pub fn with_max_seq(mut self, cap: usize) -> Self {
+        self.max_seq = Some(cap);
         self
     }
 
@@ -216,12 +231,42 @@ impl KvStream {
         self.tail.as_ref().map_or(0, Tensor::rows)
     }
 
+    /// Tokens still appendable before the [`KvCacheConfig::max_seq`] bound
+    /// (`None` = unbounded).
+    pub fn remaining(&self) -> Option<usize> {
+        self.cfg.max_seq.map(|cap| cap.saturating_sub(self.len))
+    }
+
     /// Append `m` new tokens (an `m×d` matrix, oldest first). Completed
     /// blocks flush immediately; partial tokens wait in the fp32 tail.
+    /// Panics when the stream is capacity-bounded and full — callers that
+    /// need to recover (the decode engine retiring a stream with a
+    /// truncation flag) use [`KvStream::try_append`] or check
+    /// [`KvStream::remaining`] first.
     pub fn append(&mut self, rows: &Tensor) {
+        if let Err(e) = self.try_append(rows) {
+            panic!("{e}");
+        }
+    }
+
+    /// [`KvStream::append`] with the capacity bound surfaced as a
+    /// recoverable [`crate::error::Error`] instead of a panic. Shape and
+    /// feature-width violations remain panics: those are programming
+    /// errors, while running out of sequence budget is a normal condition
+    /// under real traffic.
+    pub fn try_append(&mut self, rows: &Tensor) -> crate::error::Result<()> {
         assert_eq!(rows.ndim(), 2, "kv append expects a 2-D m×d tensor");
         if rows.rows() == 0 {
-            return;
+            return Ok(());
+        }
+        if let Some(cap) = self.cfg.max_seq {
+            if self.len + rows.rows() > cap {
+                crate::bail!(
+                    "kv stream at capacity: {} stored + {} new tokens exceeds max_seq {cap}",
+                    self.len,
+                    rows.rows()
+                );
+            }
         }
         match self.dim {
             Some(d) => assert_eq!(rows.cols(), d, "kv append feature width changed"),
@@ -237,6 +282,7 @@ impl KvStream {
                 self.flush_block();
             }
         }
+        Ok(())
     }
 
     /// Quantize the oldest `block` tail tokens into a finalized packed
@@ -366,6 +412,13 @@ impl KvCache {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Tokens still appendable before the configured capacity (`None` =
+    /// unbounded). Layers advance in lock-step, so layer 0's K stream is
+    /// authoritative here too.
+    pub fn remaining(&self) -> Option<usize> {
+        self.layers[0].k.remaining()
     }
 
     pub fn layer(&self, l: usize) -> &KvLayer {
@@ -578,6 +631,35 @@ mod tests {
         assert!(st.is_empty());
         assert_eq!(st.gather().shape(), &[0, 0]);
         assert_eq!(st.average_storage_bits(), 0.0);
+    }
+
+    #[test]
+    fn capacity_bound_is_recoverable() {
+        let mut st = KvStream::new(KvCacheConfig::fp32().with_max_seq(5));
+        assert_eq!(st.remaining(), Some(5));
+        st.append(&Tensor::randn(&[3, 4], 21));
+        assert_eq!(st.remaining(), Some(2));
+        // Overflow via try_append is a recoverable error that leaves the
+        // stream untouched…
+        let err = st.try_append(&Tensor::randn(&[3, 4], 22)).unwrap_err();
+        assert!(err.to_string().contains("at capacity"), "{err}");
+        assert_eq!(st.len(), 3);
+        // …and an exact fill is fine.
+        st.try_append(&Tensor::randn(&[2, 4], 23)).unwrap();
+        assert_eq!((st.len(), st.remaining()), (5, Some(0)));
+        // Unbounded streams report no capacity.
+        let un = KvStream::new(KvCacheConfig::fp32());
+        assert_eq!(un.remaining(), None);
+        // Whole-cache view mirrors layer 0.
+        let cache = KvCache::new(2, KvCacheConfig::fp32().with_max_seq(7));
+        assert_eq!(cache.remaining(), Some(7));
+    }
+
+    #[test]
+    #[should_panic(expected = "at capacity")]
+    fn bounded_append_panics_past_capacity() {
+        let mut st = KvStream::new(KvCacheConfig::fp32().with_max_seq(2));
+        st.append(&Tensor::randn(&[3, 4], 25));
     }
 
     #[test]

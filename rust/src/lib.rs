@@ -27,9 +27,11 @@
 //!   client that loads AOT-lowered HLO text produced by
 //!   `python/compile/aot.py`), [`kvcache`] (the STaMP-aware quantized KV
 //!   cache behind `Gpt::prefill`/`Gpt::decode_step` autoregressive
-//!   generation), and [`coordinator`] (request router, dynamic batcher,
-//!   worker pools, metrics) so quantized variants can be *served*, not
-//!   just evaluated.
+//!   generation), [`decode`] (the step-synchronized batched decode engine
+//!   that fuses concurrent generation streams into one GEMM per linear
+//!   per step, with greedy or temperature/top-k sampling), and
+//!   [`coordinator`] (request router, dynamic batcher, worker pools,
+//!   metrics) so quantized variants can be *served*, not just evaluated.
 //!
 //! Python/JAX/Pallas exists only on the compile path (`python/compile/`);
 //! the request path is pure Rust (+ PJRT when the `pjrt` feature is on).
@@ -52,6 +54,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod decode;
 pub mod error;
 pub mod eval;
 pub mod kvcache;
@@ -70,6 +73,7 @@ pub mod transforms;
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
+    pub use crate::decode::{DecodeEngine, GenRequest, Sampling, StreamResult};
     pub use crate::kvcache::{KvCache, KvCacheConfig};
     pub use crate::quant::{BitAllocation, Granularity, QTensor, QuantScheme, Quantizer};
     pub use crate::stamp::{SeqTransformKind, Stamp, StampConfig};

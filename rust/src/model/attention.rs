@@ -157,6 +157,45 @@ impl MultiHeadAttention {
         hook.linear(&format!("{site}.to_out"), &concat, &self.wo.w, self.wo.b.as_deref())
     }
 
+    /// One synchronized decode step across **independent streams**: row
+    /// `i` of `x` is the newest token of stream `i`, and `caches[i]` is
+    /// that stream's K/V layer. The q/k/v/out projections run as single
+    /// `[n_streams × d]` GEMMs — the fused hot path that raises the
+    /// arithmetic intensity of weight-bound decode by ~n — while attention
+    /// itself scatters per stream over each stream's own cached history
+    /// (streams never attend across each other; per-stream causality is
+    /// exactly the single-stream rule).
+    ///
+    /// Every kernel on the fused path is row-wise, so with [`crate::model::FpHook`]
+    /// row `i` is bit-identical to a serial [`Self::forward_decode`] call
+    /// on stream `i` alone, at any thread count and any batch composition
+    /// (`tests/decode.rs` pins it). `forward_decode` is the
+    /// `n_streams == 1` degenerate case, kept for chunked prefill (which
+    /// feeds multiple rows of *one* stream instead).
+    pub fn forward_decode_batch(
+        &self,
+        hook: &dyn LinearHook,
+        site: &str,
+        x: &Tensor,
+        caches: &mut [&mut crate::kvcache::KvLayer],
+    ) -> Tensor {
+        let m = x.rows();
+        assert_eq!(m, caches.len(), "one kv layer per stream row");
+        let q = hook.linear(&format!("{site}.to_q"), x, &self.wq.w, self.wq.b.as_deref());
+        let k_new = hook.linear(&format!("{site}.to_k"), x, &self.wk.w, self.wk.b.as_deref());
+        let v_new = hook.linear(&format!("{site}.to_v"), x, &self.wv.w, self.wv.b.as_deref());
+        let mut concat = Tensor::zeros(&[m, self.d_model]);
+        for (i, layer) in caches.iter_mut().enumerate() {
+            layer.k.append(&k_new.slice_rows(i, i + 1));
+            layer.v.append(&v_new.slice_rows(i, i + 1));
+            let k = layer.k.gather();
+            let v = layer.v.gather();
+            let (ci, _) = self.sdpa(&q.slice_rows(i, i + 1), &k, &v);
+            concat.row_mut(i).copy_from_slice(ci.row(0));
+        }
+        hook.linear(&format!("{site}.to_out"), &concat, &self.wo.w, self.wo.b.as_deref())
+    }
+
     /// Hooked cross-attention: queries from `x`, keys/values from `ctx`.
     /// Sites: `{site}.to_q` (query input) and `{site}.to_out` — matching
     /// the paper's attn2 naming; K/V projections from text context are
@@ -345,6 +384,42 @@ mod tests {
         }
         for t in 0..2 {
             assert_eq!(b.row(t), full.row(4 + t), "chunk-2 row {t}");
+        }
+    }
+
+    #[test]
+    fn batched_decode_rows_bit_identical_to_serial_streams() {
+        // Three independent streams with ragged histories: a fused step
+        // must reproduce each stream's serial forward_decode bit-for-bit.
+        let mut rng = XorShiftRng::new(17);
+        let attn = MultiHeadAttention::new(16, 4, true, &mut rng);
+        let hists = [3usize, 6, 1];
+        let mut serial: Vec<crate::kvcache::KvLayer> = Vec::new();
+        let mut batched: Vec<crate::kvcache::KvLayer> = Vec::new();
+        let mut want_rows: Vec<Vec<f32>> = Vec::new();
+        let mut step = Tensor::zeros(&[hists.len(), 16]);
+        for (i, &h) in hists.iter().enumerate() {
+            let past = Tensor::randn(&[h, 16], 100 + i as u64);
+            let mut sl = crate::kvcache::KvLayer::fp32();
+            let mut bl = crate::kvcache::KvLayer::fp32();
+            let _ = attn.forward_decode(&FpHook, "layer0.attn1", &past, &mut sl);
+            let _ = attn.forward_decode(&FpHook, "layer0.attn1", &past, &mut bl);
+            let new = Tensor::randn(&[1, 16], 200 + i as u64);
+            step.row_mut(i).copy_from_slice(new.row(0));
+            let y = attn.forward_decode(&FpHook, "layer0.attn1", &new, &mut sl);
+            want_rows.push(y.row(0).to_vec());
+            serial.push(sl);
+            batched.push(bl);
+        }
+        let mut refs: Vec<&mut crate::kvcache::KvLayer> = batched.iter_mut().collect();
+        let got = attn.forward_decode_batch(&FpHook, "layer0.attn1", &step, &mut refs);
+        for (i, want) in want_rows.iter().enumerate() {
+            assert_eq!(got.row(i), &want[..], "stream {i} fused row");
+        }
+        // Caches advanced identically too.
+        for (s, b) in serial.iter().zip(&batched) {
+            assert_eq!(s.k.gather(), b.k.gather());
+            assert_eq!(s.v.gather(), b.v.gather());
         }
     }
 

@@ -65,7 +65,9 @@ fn silu(x: f32) -> f32 {
 }
 
 /// First-maximum argmax over a logits row (deterministic tie-break).
-fn argmax_row(row: &[f32]) -> u32 {
+/// Shared with [`crate::decode`]'s greedy sampler so serial and batched
+/// decode can never disagree on tie-breaking.
+pub(crate) fn argmax_row(row: &[f32]) -> u32 {
     let mut best = 0usize;
     for (i, &v) in row.iter().enumerate() {
         if v > row[best] {
@@ -152,6 +154,25 @@ impl Block {
     ) -> Tensor {
         let (n1, _) = self.norm1.forward(x);
         let a = self.attn.forward_decode(hook, &format!("layer{layer}.attn1"), &n1, cache);
+        let x_mid = x.add(&a);
+        self.ffn_hooked(hook, layer, &x_mid)
+    }
+
+    /// One synchronized decode step over independent streams: row `i` of
+    /// `x` belongs to stream `i` / `caches[i]`. Attention fuses the
+    /// projections across streams ([`MultiHeadAttention::forward_decode_batch`]);
+    /// the FFN tail is the same shared `ffn_hooked` body, which is row-wise
+    /// for any `m` — so the fp32/FpHook bit-parity argument of
+    /// [`Block::forward_decode`] extends row-by-row to the batched step.
+    fn forward_decode_batch(
+        &self,
+        hook: &dyn LinearHook,
+        layer: usize,
+        x: &Tensor,
+        caches: &mut [&mut crate::kvcache::KvLayer],
+    ) -> Tensor {
+        let (n1, _) = self.norm1.forward(x);
+        let a = self.attn.forward_decode_batch(hook, &format!("layer{layer}.attn1"), &n1, caches);
         let x_mid = x.add(&a);
         self.ffn_hooked(hook, layer, &x_mid)
     }
@@ -323,6 +344,51 @@ impl Gpt {
         cache: &mut crate::kvcache::KvCache,
     ) -> Tensor {
         self.prefill(hook, &[token], cache)
+    }
+
+    /// One synchronized decode step across `tokens.len()` independent
+    /// streams: `tokens[i]` is appended to `caches[i]` at that stream's
+    /// own position, and row `i` of the returned `[n_streams × vocab]`
+    /// logits is stream `i`'s next-token distribution.
+    ///
+    /// This is the fused hot path of [`crate::decode::DecodeEngine`]:
+    /// every linear on the step — q/k/v/out projections, the gated FFN,
+    /// the tied-embedding head — runs once over the stacked
+    /// `[n_streams × d_model]` activation instead of once per stream,
+    /// while attention and the KV appends stay per-stream (each stream's
+    /// causal history is its own). Embeddings use per-row positions, so
+    /// streams may sit at arbitrary, different offsets. With an fp32
+    /// cache and [`super::FpHook`] each row is bit-identical to a serial
+    /// [`Gpt::decode_step`] on that stream alone (row-wise kernels;
+    /// `tests/decode.rs`).
+    pub fn decode_step_batch(
+        &self,
+        hook: &dyn LinearHook,
+        tokens: &[u32],
+        caches: &mut [&mut crate::kvcache::KvCache],
+    ) -> Tensor {
+        let n = tokens.len();
+        assert!(n >= 1, "batched decode step needs at least one stream");
+        assert_eq!(n, caches.len(), "one cache per stream");
+        let d = self.cfg.d_model;
+        let mut h = Tensor::zeros(&[n, d]);
+        for (i, &tok) in tokens.iter().enumerate() {
+            assert_eq!(caches[i].n_layers(), self.cfg.n_layers, "cache layer count mismatch");
+            let pos = caches[i].len();
+            assert!(pos < self.cfg.max_seq, "stream {i} position {pos} exceeds max_seq");
+            let t = tok as usize;
+            assert!(t < self.cfg.vocab_size, "token {t} out of vocab");
+            for j in 0..d {
+                h.set(i, j, self.embed.at(t, j) + self.pos.at(pos, j));
+            }
+        }
+        for (l, b) in self.blocks.iter().enumerate() {
+            let mut layers: Vec<&mut crate::kvcache::KvLayer> =
+                caches.iter_mut().map(|c| c.layer_mut(l)).collect();
+            h = b.forward_decode_batch(hook, l, &h, &mut layers);
+        }
+        let (hn, _) = self.final_norm.forward(&h);
+        crate::tensor::matmul_transb(&hn, &self.embed)
     }
 
     /// Greedy autoregressive generation: prefill `prompt`, then decode
@@ -635,6 +701,42 @@ mod tests {
         assert_eq!(got, want, "greedy decode must match the full-forward oracle");
         // The final generated token is returned but never fed back.
         assert_eq!(cache.len(), prompt.len() + n_new - 1);
+    }
+
+    #[test]
+    fn batched_decode_step_bit_identical_to_serial_steps() {
+        // Streams at ragged positions: one fused step equals each
+        // stream's own serial decode_step, bit for bit, and advances the
+        // caches identically.
+        let gpt = Gpt::new(GptConfig::tiny(), 12);
+        let prompts: [&[u32]; 3] = [&[3, 17, 41], &[9], &[5, 5, 60, 2, 31]];
+        let mut serial: Vec<crate::kvcache::KvCache> = Vec::new();
+        let mut batched: Vec<crate::kvcache::KvCache> = Vec::new();
+        let mut feed = Vec::new();
+        for p in prompts {
+            let mut sc = crate::kvcache::KvCache::fp32(gpt.cfg.n_layers);
+            let logits = gpt.prefill(&FpHook, p, &mut sc);
+            let mut bc = crate::kvcache::KvCache::fp32(gpt.cfg.n_layers);
+            let _ = gpt.prefill(&FpHook, p, &mut bc);
+            feed.push(argmax_row(logits.row(logits.rows() - 1)));
+            serial.push(sc);
+            batched.push(bc);
+        }
+        let mut refs: Vec<&mut crate::kvcache::KvCache> = batched.iter_mut().collect();
+        let fused = gpt.decode_step_batch(&FpHook, &feed, &mut refs);
+        assert_eq!(fused.shape(), &[3, gpt.cfg.vocab_size]);
+        for (i, sc) in serial.iter_mut().enumerate() {
+            let want = gpt.decode_step(&FpHook, feed[i], sc);
+            assert_eq!(fused.row(i), want.row(0), "stream {i}");
+        }
+        for (i, (s, b)) in serial.iter().zip(&batched).enumerate() {
+            assert_eq!(s.len(), b.len(), "stream {i} cache length");
+            assert_eq!(
+                s.layer(0).k.gather(),
+                b.layer(0).k.gather(),
+                "stream {i} cache content"
+            );
+        }
     }
 
     #[test]

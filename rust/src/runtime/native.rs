@@ -13,11 +13,15 @@
 //! simulation. Quantized/packed *weights* are built exactly once per
 //! variant at registration ([`crate::baselines::PreparedWeights`]) and
 //! shared across every execute call. GPT variants can additionally be
-//! registered for multi-token greedy generation
-//! ([`NativeExecutor::with_gpt_generate`]), which decodes through the
-//! [`crate::kvcache`] subsystem — per-request autoregressive loops served
-//! through the same coordinator batching as single forwards.
-//! One batch executes its requests sequentially on the calling
+//! registered for multi-token generation
+//! ([`NativeExecutor::with_gpt_generate`] /
+//! [`NativeExecutor::with_gpt_generate_cfg`]), which decodes through the
+//! [`crate::kvcache`] subsystem — and a whole coordinator batch of
+//! generate requests is admitted into **one**
+//! [`crate::decode::DecodeEngine`] run, so concurrent streams advance in
+//! lock-step with their per-step activations fused into shared GEMMs
+//! instead of N serial per-request loops.
+//! A *forward* batch executes its requests sequentially on the calling
 //! worker thread — parallelism comes from
 //! [`crate::coordinator::WorkerPool`] at batch granularity (worker threads
 //! are kernel-serial, see [`crate::parallel`]); when the executor is
@@ -27,7 +31,8 @@
 
 use crate::baselines::{PreparedWeights, QuantHook, QuantStack};
 use crate::coordinator::Executor;
-use crate::kvcache::{KvCache, KvCacheConfig};
+use crate::decode::{DecodeEngine, GenRequest, Sampling};
+use crate::kvcache::KvCacheConfig;
 use crate::model::{Dit, FpHook, Gpt, LinearHook};
 use crate::tensor::Tensor;
 use std::collections::HashMap;
@@ -39,12 +44,21 @@ pub enum NativeModel {
     /// token ids encoded as f32 (the coordinator's tensor-only wire
     /// format); the response is the `s×vocab` logits matrix.
     Gpt(Arc<Gpt>),
-    /// Greedy autoregressive generation over a [`KvCache`]: the request
-    /// tensor is a `1×(1+s)` row `[n_new, prompt…]` (all values token-id
-    /// style f32 integers); the response is the `1×n_new` row of
-    /// generated ids. Each request decodes through the variant's KV-cache
-    /// policy; batching still happens at the coordinator level.
-    GptGenerate { model: Arc<Gpt>, kv: KvCacheConfig, max_new: usize },
+    /// Autoregressive generation through the step-synchronized
+    /// [`DecodeEngine`]: the request tensor is a `1×(1+s)` row
+    /// `[n_new, prompt…]` (all values token-id style f32 integers); the
+    /// response is the `1×n_new` row of generated ids. A whole
+    /// coordinator batch of these requests is admitted into **one**
+    /// engine run — concurrent streams fuse into `[n_active × d_model]`
+    /// GEMMs per step (`decode_batch` caps the fusion width) instead of
+    /// decoding serially per request.
+    GptGenerate {
+        model: Arc<Gpt>,
+        kv: KvCacheConfig,
+        max_new: usize,
+        sampling: Sampling,
+        decode_batch: usize,
+    },
     /// One denoising step at `t = 0` on a `seq×latent` latent under a fixed
     /// conditioning prompt; the response is the predicted residual.
     Dit { model: Arc<Dit>, prompt: String },
@@ -76,6 +90,43 @@ fn prepare(model: &NativeModel, stack: &QuantStack) -> PreparedWeights {
         }
     }
     hook.into_prepared()
+}
+
+/// Decode one `[n_new, prompt…]` generate-request row into an engine
+/// [`GenRequest`], with the same strict validation the serial path had:
+/// malformed heads and token values are rejected, never reinterpreted.
+/// `cap` is the variant's effective cache capacity — the model's
+/// `max_seq`, or a tighter caller-supplied `kv.max_seq` — so a request
+/// the engine would have to *truncate* is rejected up front instead:
+/// the wire contract is exactly `n_new` generated ids per request.
+fn parse_generate(
+    input: &Tensor,
+    model: &Gpt,
+    max_new: usize,
+    cap: usize,
+) -> Result<GenRequest, String> {
+    if input.ndim() != 2 || input.rows() != 1 || input.cols() < 2 {
+        return Err(format!(
+            "generate variant expects a 1×(1+s) [n_new, prompt…] row, got {:?}",
+            input.shape()
+        ));
+    }
+    let head = input.data()[0];
+    if !head.is_finite() || head < 1.0 || head.fract() != 0.0 {
+        return Err(format!("invalid n_new {head} in generate request"));
+    }
+    let n_new = head as usize;
+    if n_new > max_new {
+        return Err(format!("n_new {n_new} exceeds variant limit {max_new}"));
+    }
+    let prompt = parse_tokens(&input.data()[1..], model.cfg.vocab_size)?;
+    if prompt.len() + n_new > cap {
+        return Err(format!(
+            "prompt {} + n_new {n_new} exceeds max_seq {cap}",
+            prompt.len()
+        ));
+    }
+    Ok(GenRequest { prompt, n_new })
 }
 
 /// Decode a strict token-id row: NaN / negative / fractional / oversized
@@ -119,27 +170,70 @@ impl NativeExecutor {
     }
 
     /// Register a greedy-generation GPT variant with the given KV-cache
-    /// policy and per-request new-token budget.
+    /// policy and per-request new-token budget (decode-engine defaults:
+    /// greedy sampling, [`crate::decode::DEFAULT_DECODE_BATCH`]-wide
+    /// fusion). See [`NativeExecutor::with_gpt_generate_cfg`] for the
+    /// sampling/fusion knobs.
     ///
     /// `stack` quantizes the decode-path *linears* per call window, and
-    /// the hook's activation policies are window-relative: a 1-row decode
-    /// step is "token 0" of its own window, so with `hp_tokens > 0` the
-    /// activation side effectively runs at `hp_bits` during decode, and
-    /// STaMP sequence transforms degenerate over a 1-token window —
+    /// the hook's activation policies are window-relative: during batched
+    /// decode a window is the fused `[n_active × d]` step (what a fused
+    /// deployment kernel would see), so with `hp_tokens > 0` the leading
+    /// *streams* of a step run at `hp_bits`, and STaMP sequence
+    /// transforms degenerate over the small step window —
     /// *sequence-side* mixed precision during decode is the job of the
     /// KV-cache policy (`kv`), not the stack. Weight quantization applies
     /// in full (from the per-variant prepared cache). Pass `None` for the
     /// paper-shaped serving setup: FP linears + quantized cache.
+    ///
+    /// Consequence of the fused window: with a window-relative stack a
+    /// request's output can depend on which requests the batcher
+    /// co-batched with it (its row index in the step window). If strict
+    /// per-request determinism matters more than fusion for a stacked
+    /// variant, register it via [`NativeExecutor::with_gpt_generate_cfg`]
+    /// with `decode_batch = 1` — streams still advance in lock-step but
+    /// every step window is one row, restoring PR 3's semantics. FP
+    /// variants (`stack = None`) are batch-invariant either way.
     pub fn with_gpt_generate(
-        mut self,
+        self,
         name: &str,
         model: Arc<Gpt>,
         stack: Option<QuantStack>,
         kv: KvCacheConfig,
         max_new: usize,
     ) -> Self {
+        self.with_gpt_generate_cfg(
+            name,
+            model,
+            stack,
+            kv,
+            max_new,
+            Sampling::Greedy,
+            crate::decode::DEFAULT_DECODE_BATCH,
+        )
+    }
+
+    /// [`NativeExecutor::with_gpt_generate`] with explicit sampling policy
+    /// and fused-step width (the `[generate]` config section's
+    /// `temperature`/`top_k`/`seed` and `decode_batch` knobs,
+    /// [`crate::config::GenerateSpec::sampling`]).
+    pub fn with_gpt_generate_cfg(
+        mut self,
+        name: &str,
+        model: Arc<Gpt>,
+        stack: Option<QuantStack>,
+        kv: KvCacheConfig,
+        max_new: usize,
+        sampling: Sampling,
+        decode_batch: usize,
+    ) -> Self {
         kv.validate();
-        self.insert(name, NativeModel::GptGenerate { model, kv, max_new }, stack);
+        assert!(decode_batch >= 1, "decode_batch must be ≥ 1");
+        self.insert(
+            name,
+            NativeModel::GptGenerate { model, kv, max_new, sampling, decode_batch },
+            stack,
+        );
         self
     }
 
@@ -169,6 +263,48 @@ impl NativeExecutor {
         self.variants.get(variant)?.prepared.as_ref()
     }
 
+    /// One coordinator batch of generate requests → one [`DecodeEngine`]
+    /// run: all streams admitted together, advanced in lock-step, their
+    /// per-step activations fused into shared GEMMs. Any malformed
+    /// request fails the whole batch, matching the per-forward semantics.
+    fn run_generate_batch(
+        &self,
+        variant: &Variant,
+        hook: &dyn LinearHook,
+        inputs: &[&Tensor],
+    ) -> Result<Vec<Tensor>, String> {
+        let NativeModel::GptGenerate { model, kv, max_new, sampling, decode_batch } =
+            &variant.model
+        else {
+            unreachable!("run_generate_batch called on a non-generate variant");
+        };
+        // Effective capacity: a tighter variant-level `kv.max_seq` bound
+        // wins over the model's. Requests are validated against it, so
+        // the engine never has to truncate a served stream (the wire
+        // contract is exactly `n_new` ids per request).
+        let cap = kv.max_seq.map_or(model.cfg.max_seq, |m| m.min(model.cfg.max_seq));
+        let reqs: Vec<GenRequest> = inputs
+            .iter()
+            .map(|x| parse_generate(x, model, *max_new, cap))
+            .collect::<Result<_, _>>()?;
+        let engine = DecodeEngine::new(model, kv.clone(), sampling.clone())
+            .with_decode_batch(*decode_batch);
+        let results = engine.run(hook, &reqs).map_err(|e| e.to_string())?;
+        debug_assert!(
+            results.iter().all(|r| !r.truncated),
+            "validated requests can never truncate"
+        );
+        Ok(results
+            .into_iter()
+            .map(|r| {
+                Tensor::from_vec(
+                    &[1, r.tokens.len()],
+                    r.tokens.iter().map(|&t| t as f32).collect(),
+                )
+            })
+            .collect())
+    }
+
     fn run_one(&self, variant: &Variant, hook: &dyn LinearHook, input: &Tensor) -> Result<Tensor, String> {
         match &variant.model {
             NativeModel::Gpt(gpt) => {
@@ -181,32 +317,8 @@ impl NativeExecutor {
                 }
                 Ok(gpt.logits_hooked(hook, &tokens))
             }
-            NativeModel::GptGenerate { model, kv, max_new } => {
-                if input.ndim() != 2 || input.rows() != 1 || input.cols() < 2 {
-                    return Err(format!(
-                        "generate variant expects a 1×(1+s) [n_new, prompt…] row, got {:?}",
-                        input.shape()
-                    ));
-                }
-                let head = input.data()[0];
-                if !head.is_finite() || head < 1.0 || head.fract() != 0.0 {
-                    return Err(format!("invalid n_new {head} in generate request"));
-                }
-                let n_new = head as usize;
-                if n_new > *max_new {
-                    return Err(format!("n_new {n_new} exceeds variant limit {max_new}"));
-                }
-                let prompt = parse_tokens(&input.data()[1..], model.cfg.vocab_size)?;
-                if prompt.len() + n_new > model.cfg.max_seq {
-                    return Err(format!(
-                        "prompt {} + n_new {n_new} exceeds max_seq {}",
-                        prompt.len(),
-                        model.cfg.max_seq
-                    ));
-                }
-                let mut cache = KvCache::new(model.cfg.n_layers, kv.clone());
-                let out = model.generate_greedy(hook, &prompt, n_new, &mut cache);
-                Ok(Tensor::from_vec(&[1, out.len()], out.iter().map(|&t| t as f32).collect()))
+            NativeModel::GptGenerate { .. } => {
+                unreachable!("generate batches route through run_generate_batch")
             }
             NativeModel::Dit { model, prompt } => {
                 if input.ndim() != 2
@@ -237,22 +349,35 @@ impl Executor for NativeExecutor {
         // [`PreparedWeights`] built once at registration — repeated
         // executes (and every decode step inside a generate request)
         // never re-quantize a weight.
-        let mut out = Vec::with_capacity(inputs.len());
         match &v.stack {
             Some(stack) => {
                 let hook = match &v.prepared {
                     Some(p) => QuantHook::with_prepared(stack, p),
                     None => QuantHook::new(stack),
                 };
-                for x in inputs {
-                    out.push(self.run_one(v, &hook, x)?);
-                }
+                self.run_batch(v, &hook, inputs)
             }
-            None => {
-                for x in inputs {
-                    out.push(self.run_one(v, &FpHook, x)?);
-                }
-            }
+            None => self.run_batch(v, &FpHook, inputs),
+        }
+    }
+}
+
+impl NativeExecutor {
+    /// Dispatch one formed batch: generate variants admit the whole batch
+    /// into a single fused [`DecodeEngine`] run; forward variants keep the
+    /// per-request loop (their batching win is worker-level parallelism).
+    fn run_batch(
+        &self,
+        v: &Variant,
+        hook: &dyn LinearHook,
+        inputs: &[&Tensor],
+    ) -> Result<Vec<Tensor>, String> {
+        if matches!(v.model, NativeModel::GptGenerate { .. }) {
+            return self.run_generate_batch(v, hook, inputs);
+        }
+        let mut out = Vec::with_capacity(inputs.len());
+        for x in inputs {
+            out.push(self.run_one(v, hook, x)?);
         }
         Ok(out)
     }
@@ -479,6 +604,104 @@ mod tests {
         let p = exec.prepared("gen-q").unwrap();
         assert_eq!(p.misses(), 0, "decode steps must reuse the per-variant weights");
         assert!(p.packed_sites() >= 8);
+    }
+
+    #[test]
+    fn generate_batch_is_one_fused_run_matching_serial_decode() {
+        // A batch of ragged generate requests must come back request-for-
+        // request identical to PR 3's serial greedy decode — the fused
+        // engine path is a pure perf change on the fp32/greedy setup.
+        let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 31));
+        let exec = NativeExecutor::new().with_gpt_generate(
+            "gen",
+            gpt.clone(),
+            None,
+            crate::kvcache::KvCacheConfig::fp32(),
+            32,
+        );
+        let mk = |n_new: f32, prompt: &[f32]| {
+            let mut v = vec![n_new];
+            v.extend_from_slice(prompt);
+            Tensor::from_vec(&[1, v.len()], v)
+        };
+        let inputs = [
+            mk(8.0, &[1.0, 2.0, 3.0]),
+            mk(3.0, &[44.0]),
+            mk(12.0, &[7.0, 7.0, 19.0, 2.0, 5.0]),
+        ];
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let out = exec.execute("gen", &refs).unwrap();
+        assert_eq!(out.len(), 3);
+        for (i, x) in inputs.iter().enumerate() {
+            let n_new = x.data()[0] as usize;
+            let prompt: Vec<u32> = x.data()[1..].iter().map(|&v| v as u32).collect();
+            let mut cache = crate::kvcache::KvCache::fp32(gpt.cfg.n_layers);
+            let want = gpt.generate_greedy(&FpHook, &prompt, n_new, &mut cache);
+            assert_eq!(out[i].shape(), &[1, n_new]);
+            for (j, &w) in want.iter().enumerate() {
+                assert_eq!(out[i].at(0, j), w as f32, "request {i} token {j}");
+            }
+        }
+        // One malformed request still fails the whole batch.
+        let bad = mk(0.0, &[1.0]);
+        let refs: Vec<&Tensor> = vec![&inputs[0], &bad];
+        assert!(exec.execute("gen", &refs).unwrap_err().contains("invalid n_new"));
+    }
+
+    #[test]
+    fn generate_rejects_requests_exceeding_variant_cache_capacity() {
+        // A variant-level kv.max_seq tighter than the model's bounds the
+        // admissible prompt + n_new: the request is rejected up front —
+        // never silently truncated to a shorter response row.
+        let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 37));
+        let kv = crate::kvcache::KvCacheConfig::fp32().with_max_seq(16);
+        let exec = NativeExecutor::new().with_gpt_generate("gen-capped", gpt, None, kv, 32);
+        // 8-token prompt + 20 new > 16 → rejected.
+        let mut row = vec![20.0];
+        row.extend((0..8).map(|i| i as f32));
+        let input = Tensor::from_vec(&[1, row.len()], row);
+        let err = exec.execute("gen-capped", &[&input]).unwrap_err();
+        assert!(err.contains("exceeds max_seq 16"), "{err}");
+        // A fitting request serves the full n_new.
+        let mut row = vec![8.0];
+        row.extend((0..8).map(|i| i as f32));
+        let input = Tensor::from_vec(&[1, row.len()], row);
+        let out = exec.execute("gen-capped", &[&input]).unwrap().remove(0);
+        assert_eq!(out.shape(), &[1, 8]);
+    }
+
+    #[test]
+    fn sampled_generate_variant_is_deterministic() {
+        let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 33));
+        let exec = NativeExecutor::new().with_gpt_generate_cfg(
+            "gen-sampled",
+            gpt.clone(),
+            None,
+            crate::kvcache::KvCacheConfig::fp32(),
+            32,
+            crate::decode::Sampling::TopK { k: 12, temperature: 0.8, seed: 0xA11CE },
+            4,
+        );
+        let input = Tensor::from_vec(&[1, 4], vec![16.0, 2.0, 9.0, 33.0]);
+        let a = exec.execute("gen-sampled", &[&input]).unwrap().remove(0);
+        let b = exec.execute("gen-sampled", &[&input]).unwrap().remove(0);
+        assert_eq!(a, b, "seeded sampling must reproduce exactly");
+        assert_eq!(a.shape(), &[1, 16]);
+        for &v in a.data() {
+            assert!(v.fract() == 0.0 && (v as usize) < 72, "token {v}");
+        }
+        // Sampling must actually leave the greedy path (an untrained
+        // model's near-uniform logits make 16 identical draws vanishingly
+        // unlikely).
+        let exec_g = NativeExecutor::new().with_gpt_generate(
+            "gen-greedy",
+            gpt,
+            None,
+            crate::kvcache::KvCacheConfig::fp32(),
+            32,
+        );
+        let g = exec_g.execute("gen-greedy", &[&input]).unwrap().remove(0);
+        assert_ne!(a, g, "temperature+top-k must diverge from greedy");
     }
 
     #[test]

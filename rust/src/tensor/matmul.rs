@@ -17,6 +17,29 @@ use crate::parallel;
 /// case, comfortably inside L2; typical d≤256 keeps it in L1.
 const KC: usize = 64;
 
+/// At or below this many output rows a GEMM stays on the caller's thread
+/// unless each row is itself heavy (see `gemm_small_m_serial`). Rows
+/// are the only split axis, so a decode-shaped product (a handful of
+/// token rows against a modest weight) would hand each worker a single
+/// tiny row while the spawn+join overhead (~10–40 µs per worker) dwarfs
+/// the per-row work — batched decode at 1–8 streams was paying the
+/// fan-out on every projection. Results are unchanged by construction:
+/// parallelism never alters the per-row reduction order, it only changes
+/// who computes a row.
+pub const GEMM_SERIAL_MAX_ROWS: usize = 8;
+
+/// Per-row multiply-add count above which even an `m ≤`
+/// [`GEMM_SERIAL_MAX_ROWS`] product forks anyway: one row per worker
+/// still amortizes the spawn cost once a row alone is ~100 µs of work
+/// (e.g. a big-vocab logits head at decode batch 8).
+const GEMM_SERIAL_MAX_ROW_WORK: usize = 1 << 18;
+
+/// The small-m serial gate shared by `matmul_into`, `matmul_transb`, and
+/// `qgemm`: few rows, each individually cheap.
+pub(super) fn gemm_small_m_serial(m: usize, k: usize, n: usize) -> bool {
+    m <= GEMM_SERIAL_MAX_ROWS && k.saturating_mul(n) < GEMM_SERIAL_MAX_ROW_WORK
+}
+
 /// `a (m×k) @ b (k×n) -> (m×n)`.
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let mut out = Tensor::zeros(&[a.rows(), b.cols()]);
@@ -36,6 +59,12 @@ pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
     let od = out.data_mut();
     od.fill(0.0);
 
+    // Small-m fast path: decode-shaped products skip the dispatch
+    // machinery entirely.
+    if gemm_small_m_serial(m, k, n) {
+        matmul_rows(ad, bd, od, 0, m, k, n);
+        return;
+    }
     // Gate on total multiply-adds (m·n·k), not output size: a product with
     // a tall inner dimension has little output but plenty of work. Rows
     // are the only split axis, so single-row products stay serial
@@ -80,6 +109,10 @@ pub fn matmul_transb(a: &Tensor, b: &Tensor) -> Tensor {
     let ad = a.data();
     let bd = b.data();
     let od = out.data_mut();
+    if gemm_small_m_serial(m, k, n) {
+        transb_rows(ad, bd, od, 0, m, k, n);
+        return out;
+    }
     parallel::for_row_chunks(od, m, n, m.saturating_mul(n).saturating_mul(k), |chunk, r0, r1| {
         transb_rows(ad, bd, chunk, r0, r1, k, n)
     });
@@ -160,6 +193,39 @@ mod tests {
         assert!(matmul(&a, &b).max_abs_diff(&naive(&a, &b)) < 1e-3);
         let bt = Tensor::randn(&[n, k], 23);
         assert!(matmul_transb(&a, &bt).max_abs_diff(&naive(&a, &bt.transpose())) < 1e-3);
+    }
+
+    #[test]
+    fn small_m_fast_path_is_bit_identical_across_threshold() {
+        // Wide k·n so the work gate alone would fork; the row gate keeps
+        // m ≤ GEMM_SERIAL_MAX_ROWS serial. A (threshold)×k product must be
+        // byte-identical to the same rows computed inside a larger (forked)
+        // product — row-wise kernels make this exact, not approximate.
+        let (k, n) = (128usize, 512usize);
+        let big = Tensor::randn(&[4 * super::GEMM_SERIAL_MAX_ROWS, k], 31);
+        let b = Tensor::randn(&[k, n], 32);
+        let full = matmul(&big, &b);
+        let small = big.slice_rows(0, super::GEMM_SERIAL_MAX_ROWS);
+        let fast = matmul(&small, &b);
+        for i in 0..super::GEMM_SERIAL_MAX_ROWS {
+            assert_eq!(fast.row(i), full.row(i), "row {i}");
+        }
+        let bt = Tensor::randn(&[n, k], 33);
+        let full_t = matmul_transb(&big, &bt);
+        let fast_t = matmul_transb(&small, &bt);
+        for i in 0..super::GEMM_SERIAL_MAX_ROWS {
+            assert_eq!(fast_t.row(i), full_t.row(i), "transb row {i}");
+        }
+        // The gate: few cheap rows stay serial, but a small-m product with
+        // heavy rows (big-vocab logits head shape) remains fork-eligible.
+        assert!(super::gemm_small_m_serial(super::GEMM_SERIAL_MAX_ROWS, k, n));
+        assert!(!super::gemm_small_m_serial(super::GEMM_SERIAL_MAX_ROWS, 4096, 4096));
+        assert!(!super::gemm_small_m_serial(super::GEMM_SERIAL_MAX_ROWS + 1, k, n));
+        // And a heavy small-m product through the parallel path still
+        // matches the naive reference.
+        let a = Tensor::randn(&[4, 600], 34);
+        let b = Tensor::randn(&[600, 600], 35);
+        assert!(matmul(&a, &b).max_abs_diff(&naive(&a, &b)) < 1e-3);
     }
 
     #[test]

@@ -13,7 +13,7 @@ mod matmul;
 mod qgemm;
 mod rng;
 
-pub use matmul::{matmul, matmul_into, matmul_transb};
+pub use matmul::{matmul, matmul_into, matmul_transb, GEMM_SERIAL_MAX_ROWS};
 pub use qgemm::qgemm;
 pub use rng::XorShiftRng;
 

@@ -109,7 +109,7 @@ pub fn qgemm(a: &QTensor, w: &QTensor) -> Tensor {
     }
 
     let od = out.data_mut();
-    parallel::for_row_chunks(od, m, n, m.saturating_mul(n).saturating_mul(k), |chunk, r0, r1| {
+    let row_kernel = |chunk: &mut [f32], r0: usize, r1: usize| {
         let mut arow = vec![0u8; k];
         let mut asums = vec![0i32; nseg];
         for i in r0..r1 {
@@ -138,7 +138,16 @@ pub fn qgemm(a: &QTensor, w: &QTensor) -> Tensor {
                 *o = acc as f32;
             }
         }
-    });
+    };
+    // Same small-m fast path as `matmul`: decode-shaped products (a few
+    // activation rows, each individually cheap) run the row loop on the
+    // caller's thread instead of paying one spawn per worker for one row
+    // per worker.
+    if super::matmul::gemm_small_m_serial(m, k, n) {
+        row_kernel(od, 0, m);
+    } else {
+        parallel::for_row_chunks(od, m, n, m.saturating_mul(n).saturating_mul(k), row_kernel);
+    }
     out
 }
 
@@ -225,6 +234,38 @@ mod tests {
         let serial = qgemm(&qa, &qw);
         crate::parallel::set_kernel_serial(false);
         assert_eq!(threaded, serial, "qgemm must not depend on thread count");
+    }
+
+    #[test]
+    fn small_m_fast_path_matches_oracle_and_larger_batch() {
+        // Decode-shaped: a handful of activation rows against a wide
+        // packed weight. The serial fast path must agree with the oracle
+        // and be row-for-row identical to the same rows inside a larger
+        // (dispatch-eligible) product.
+        let (k, n) = (96usize, 640usize);
+        let m_small = super::super::matmul::GEMM_SERIAL_MAX_ROWS;
+        let x = Tensor::randn(&[4 * m_small, k], 11);
+        let wt = Tensor::randn(&[n, k], 12);
+        let ab = BitAllocation::two_level(2, 8, 4);
+        let wb = BitAllocation::uniform(4);
+        let qa_big = QTensor::quantize(&x, &ab, Granularity::PerToken);
+        let qa_small =
+            QTensor::quantize(&x.slice_rows(0, m_small), &ab, Granularity::PerToken);
+        let qw = QTensor::quantize(&wt, &wb, Granularity::PerToken);
+        let big = qgemm(&qa_big, &qw);
+        let small = qgemm(&qa_small, &qw);
+        for i in 0..m_small {
+            assert_eq!(small.row(i), big.row(i), "row {i}");
+        }
+        let want = oracle(
+            &x.slice_rows(0, m_small),
+            &wt,
+            &ab,
+            Granularity::PerToken,
+            &wb,
+            Granularity::PerToken,
+        );
+        assert_close(&small, &want, "small-m");
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //!    measurably but boundedly (logit SQNR + next-token NLL drift are the
 //!    numbers a deployment trades against the memory win).
 
+use stamp::decode::{DecodeEngine, GenRequest, Sampling};
 use stamp::kvcache::{KvCache, KvCacheConfig, KvStream};
 use stamp::model::{softmax_rows, FpHook, Gpt, GptConfig};
 use stamp::quant::{quantize_dequantize_rows, BitAllocation, Granularity};
@@ -268,6 +269,197 @@ fn property_kv_incremental_equals_batch() {
             Ok(())
         },
     );
+}
+
+/// Serial oracle for the batched engine: PR 3's per-request greedy loop.
+fn serial_greedy(gpt: &Gpt, kv: &KvCacheConfig, prompt: &[u32], n_new: usize) -> Vec<u32> {
+    let mut cache = KvCache::new(gpt.cfg.n_layers, kv.clone());
+    gpt.generate_greedy(&FpHook, prompt, n_new, &mut cache)
+}
+
+#[test]
+fn batched_decode_bit_identical_to_serial_any_thread_count() {
+    // The tentpole invariant: with an fp32 cache, every stream of a fused
+    // batch reproduces its serial `generate_greedy` run bit-for-bit —
+    // mixed prompt lengths, mixed budgets (mid-run retirement), any
+    // decode_batch chunking, threaded and forced-serial kernels.
+    let gpt = Gpt::new(GptConfig::tiny(), 21);
+    let reqs = vec![
+        GenRequest { prompt: prefix_tokens(5), n_new: 20 },
+        GenRequest { prompt: prefix_tokens(11), n_new: 3 },
+        GenRequest { prompt: vec![7, 1, 42], n_new: 12 },
+        GenRequest { prompt: prefix_tokens(17), n_new: 1 },
+        GenRequest { prompt: prefix_tokens(2), n_new: 16 },
+    ];
+    let kv = KvCacheConfig::fp32();
+    for decode_batch in [1usize, 3, 8] {
+        let engine =
+            DecodeEngine::new(&gpt, kv.clone(), Sampling::Greedy).with_decode_batch(decode_batch);
+        let threaded = engine.run_fp(&reqs).unwrap();
+        stamp::parallel::set_kernel_serial(true);
+        let serial_kernels = engine.run_fp(&reqs).unwrap();
+        stamp::parallel::set_kernel_serial(false);
+        for (i, r) in reqs.iter().enumerate() {
+            let want = serial_greedy(&gpt, &kv, &r.prompt, r.n_new);
+            assert_eq!(threaded[i].tokens, want, "decode_batch {decode_batch} stream {i}");
+            assert!(!threaded[i].truncated);
+            assert_eq!(
+                serial_kernels[i], threaded[i],
+                "decode_batch {decode_batch} stream {i} thread-count invariance"
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_decode_with_packed_cache_matches_serial_packed_decode() {
+    // Streams never share cache state, and the fused linears are
+    // row-wise, so even a *quantized* per-stream cache keeps batched ==
+    // serial exactly; the cache policy's drift vs fp32 stays the
+    // separately-pinned envelope (`packed_cache_drift_is_measurable_and_bounded`).
+    let gpt = Gpt::new(GptConfig::tiny(), 23);
+    let kv = KvCacheConfig::two_level(4, 8, 4, 8).with_transform(SeqTransformKind::HaarDwt);
+    let reqs = vec![
+        GenRequest { prompt: prefix_tokens(9), n_new: 14 },
+        GenRequest { prompt: prefix_tokens(3), n_new: 6 },
+        GenRequest { prompt: prefix_tokens(13), n_new: 10 },
+    ];
+    let engine = DecodeEngine::new(&gpt, kv.clone(), Sampling::Greedy).with_decode_batch(2);
+    let got = engine.run_fp(&reqs).unwrap();
+    for (i, r) in reqs.iter().enumerate() {
+        let want = serial_greedy(&gpt, &kv, &r.prompt, r.n_new);
+        assert_eq!(got[i].tokens, want, "packed-cache stream {i}");
+    }
+}
+
+#[derive(Debug)]
+struct BatchCase {
+    n_streams: usize,
+    prompts: Vec<usize>,
+    budgets: Vec<usize>,
+    decode_batch: usize,
+    packed: bool,
+    seed: u64,
+}
+
+/// Satellite: batched-vs-serial parity as a property over random batch
+/// compositions — ragged prompts, ragged budgets (so slots retire at
+/// different steps), random fusion width, fp32 and packed caches.
+#[test]
+fn property_batched_decode_equals_serial_per_stream() {
+    let gpt = Gpt::new(GptConfig::tiny(), 25);
+    testkit::check(
+        "batched-vs-serial-decode",
+        10,
+        0xBA7C5,
+        |g| {
+            let n_streams = g.usize_in(1, 5);
+            BatchCase {
+                n_streams,
+                prompts: (0..n_streams).map(|_| g.usize_in(1, 24)).collect(),
+                budgets: (0..n_streams).map(|_| g.usize_in(0, 12)).collect(),
+                decode_batch: g.usize_in(1, 4),
+                packed: g.usize_in(0, 1) == 1,
+                seed: g.rng.next_u64(),
+            }
+        },
+        |c| {
+            let kv = if c.packed {
+                KvCacheConfig::two_level(4, 8, 4, 8)
+            } else {
+                KvCacheConfig::fp32()
+            };
+            let reqs: Vec<GenRequest> = (0..c.n_streams)
+                .map(|i| GenRequest {
+                    prompt: (0..c.prompts[i])
+                        .map(|j| ((c.seed as usize + i * 13 + j * 7) % 70) as u32)
+                        .collect(),
+                    n_new: c.budgets[i],
+                })
+                .collect();
+            let engine = DecodeEngine::new(&gpt, kv.clone(), Sampling::Greedy)
+                .with_decode_batch(c.decode_batch);
+            let got = engine.run_fp(&reqs).map_err(|e| e.to_string())?;
+            for (i, r) in reqs.iter().enumerate() {
+                let want = serial_greedy(&gpt, &kv, &r.prompt, r.n_new);
+                if got[i].tokens != want {
+                    return Err(format!("stream {i}: batched {:?} != serial {want:?}", got[i].tokens));
+                }
+                if got[i].truncated {
+                    return Err(format!("stream {i}: unexpected truncation"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn generate_batch_through_coordinator_matches_serial() {
+    use stamp::config::ServeSpec;
+    use stamp::coordinator::Server;
+    use stamp::runtime::NativeExecutor;
+
+    // End-to-end: concurrent generate calls batched by the coordinator
+    // are fused by the executor into one engine run — and still come back
+    // request-for-request identical to serial decode.
+    let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 27));
+    let exec = NativeExecutor::new().with_gpt_generate(
+        "gen-batched",
+        gpt.clone(),
+        None,
+        KvCacheConfig::fp32(),
+        32,
+    );
+    let spec = ServeSpec { workers: 1, max_batch: 4, max_wait_us: 20_000, queue_depth: 16 };
+    let server = Server::start(&spec, &["gen-batched"], Arc::new(exec));
+    let handle = server.handle();
+    let prompts: Vec<Vec<u32>> = vec![prefix_tokens(4), prefix_tokens(9), prefix_tokens(2)];
+    let n_new = [10usize, 5, 8];
+    // Submit all three before collecting, so the batcher can coalesce
+    // them into one fused engine run.
+    let mut pending = Vec::new();
+    for (p, &n) in prompts.iter().zip(&n_new) {
+        let mut row = vec![n as f32];
+        row.extend(p.iter().map(|&t| t as f32));
+        let input = Tensor::from_vec(&[1, row.len()], row);
+        let (_, rx) = handle.submit("gen-batched", input);
+        pending.push(rx);
+    }
+    for (i, rx) in pending.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        let out = resp.output.unwrap();
+        let want = serial_greedy(&gpt, &KvCacheConfig::fp32(), &prompts[i], n_new[i]);
+        assert_eq!(out.shape(), &[1, n_new[i]], "request {i}");
+        for (j, &w) in want.iter().enumerate() {
+            assert_eq!(out.at(0, j), w as f32, "request {i} token {j}");
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn engine_truncation_rides_the_kv_capacity_error() {
+    // The recoverable KvStream bound and the engine's truncation flag are
+    // two views of the same condition: a stream that outgrows its cache
+    // retires early with the generated prefix intact, and its batch-mates
+    // never notice.
+    let gpt = Gpt::new(GptConfig::tiny(), 29);
+    let kv = KvCacheConfig::fp32().with_max_seq(10);
+    let reqs = vec![
+        GenRequest { prompt: prefix_tokens(7), n_new: 24 },
+        GenRequest { prompt: prefix_tokens(3), n_new: 5 },
+    ];
+    let engine = DecodeEngine::new(&gpt, kv, Sampling::Greedy);
+    let got = engine.run_fp(&reqs).unwrap();
+    // Stream 0: prefill 7 + 3 appends reach cap 10 → 4 tokens out.
+    assert!(got[0].truncated);
+    assert_eq!(got[0].tokens.len(), 4);
+    let serial = serial_greedy(&gpt, &KvCacheConfig::fp32(), &reqs[0].prompt, 24);
+    assert_eq!(got[0].tokens[..], serial[..4], "truncated prefix still matches serial");
+    // Stream 1 is untouched by its neighbor's retirement.
+    assert!(!got[1].truncated);
+    assert_eq!(got[1].tokens, serial_greedy(&gpt, &KvCacheConfig::fp32(), &reqs[1].prompt, 5));
 }
 
 #[test]
