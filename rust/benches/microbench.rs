@@ -189,6 +189,42 @@ fn main() {
         st.throughput((8 * n_new_b) as f64) / 8.0
     );
 
+    // Sliding-window eviction: long-sequence decode at bounded residency.
+    // Same-length rows compare the window policy's overhead against the
+    // unbounded cache; the 4× max_seq row is the workload only the window
+    // policy can serve at all (the unbounded cache hits the positional
+    // table at 256). Resident storage_bits per row quantify the memory
+    // ceiling the policy pins.
+    Harness::header("windowed decode (tiny GPT, sink 16 + window 64 kv eviction)");
+    let kv_unbounded = KvCacheConfig::two_level(16, 8, 4, 16);
+    let kv_windowed = KvCacheConfig::two_level(16, 8, 4, 16).with_window(16, 64);
+    let n_mid = 192usize;
+    let n_long = 4 * gpt.cfg.max_seq;
+    // The bench closure stashes the run's resident footprint so the rows
+    // can report it without re-running the generation untimed.
+    let bits = std::cell::Cell::new(0usize);
+    let st = h.bench("windowed decode 192 tok (unbounded kv)", || {
+        let mut cache = KvCache::new(gpt.cfg.n_layers, kv_unbounded.clone());
+        let out = gpt.generate_greedy(&FpHook, &prompt, n_mid, &mut cache);
+        bits.set(cache.storage_bits());
+        out
+    });
+    println!("    -> {:.0} tok/s, resident {} bits", st.throughput(n_mid as f64), bits.get());
+    let st = h.bench("windowed decode 192 tok (sink 16 + window 64)", || {
+        let mut cache = KvCache::new(gpt.cfg.n_layers, kv_windowed.clone());
+        let out = gpt.generate_greedy(&FpHook, &prompt, n_mid, &mut cache);
+        bits.set(cache.storage_bits());
+        out
+    });
+    println!("    -> {:.0} tok/s, resident {} bits", st.throughput(n_mid as f64), bits.get());
+    let st = h.bench("windowed decode 1024 tok (4x max_seq)", || {
+        let mut cache = KvCache::new(gpt.cfg.n_layers, kv_windowed.clone());
+        let out = gpt.generate_greedy(&FpHook, &prompt, n_long, &mut cache);
+        bits.set(cache.storage_bits());
+        out
+    });
+    println!("    -> {:.0} tok/s, resident {} bits", st.throughput(n_long as f64), bits.get());
+
     Harness::header("coordinator hot path");
     let st = h.bench("batcher push+flush (batch 8)", || {
         let now = Instant::now();

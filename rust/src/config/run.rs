@@ -51,7 +51,7 @@ pub struct ServeSpec {
 /// handed to [`crate::kvcache::KvCacheConfig`]. TOML keys mirror the
 /// field paths: `max_new_tokens`, `decode_batch`, `temperature`, `top_k`,
 /// `seed`, `kv.hp_tokens`, `kv.hp_bits`, `kv.lp_bits`, `kv.block`,
-/// `kv.packed`, `kv.transform`.
+/// `kv.packed`, `kv.transform`, `kv.window`, `kv.sink_tokens`.
 #[derive(Clone, Debug)]
 pub struct GenerateSpec {
     /// Per-request cap on generated tokens.
@@ -78,6 +78,15 @@ pub struct GenerateSpec {
     pub kv_packed: bool,
     /// identity|dwt|dct|wht — block-wise sequence transform.
     pub kv_transform: String,
+    /// Sliding-window KV eviction: recent tokens kept resident behind the
+    /// retained sinks ([`crate::kvcache::EvictionPolicy::SlidingWindow`]).
+    /// `0` (the default) disables eviction — streams stay bounded by the
+    /// model's `max_seq` exactly as before.
+    pub kv_window: usize,
+    /// Leading positions permanently retained under a window policy
+    /// (block-rounded up; for packed caches they must be ≤ `kv_hp_tokens`
+    /// — the sinks are the hp tokens of the two-level policy).
+    pub kv_sink_tokens: usize,
 }
 
 impl GenerateSpec {
@@ -90,6 +99,14 @@ impl GenerateSpec {
             "wht" => crate::stamp::SeqTransformKind::Wht,
             other => crate::bail!("unknown kv.transform `{other}`"),
         };
+        let eviction = if self.kv_window > 0 {
+            crate::kvcache::EvictionPolicy::SlidingWindow {
+                sink_tokens: self.kv_sink_tokens,
+                window: self.kv_window,
+            }
+        } else {
+            crate::kvcache::EvictionPolicy::None
+        };
         let cfg = crate::kvcache::KvCacheConfig {
             hp_tokens: self.kv_hp_tokens,
             hp_bits: self.kv_hp_bits,
@@ -98,8 +115,11 @@ impl GenerateSpec {
             packed: self.kv_packed,
             transform,
             // The serving layer bounds the cache to the model's `max_seq`
-            // at engine construction; the config itself stays model-free.
+            // at engine construction (windowed caches stay unbounded and
+            // only their *residency* is checked against the model); the
+            // config itself stays model-free.
             max_seq: None,
+            eviction,
         };
         // Same error surface as a bad kv.transform: invalid lanes/blocks
         // fail here, recoverably, instead of panicking at registration.
@@ -171,6 +191,8 @@ impl RunConfig {
                 kv_block: 32,
                 kv_packed: true,
                 kv_transform: "identity".into(),
+                kv_window: 0,
+                kv_sink_tokens: 64,
             },
             artifacts_dir: "artifacts".into(),
         }
@@ -228,6 +250,11 @@ impl RunConfig {
                 kv_block: doc.int_or("generate", "kv.block", d.generate.kv_block as i64) as usize,
                 kv_packed: doc.bool_or("generate", "kv.packed", d.generate.kv_packed),
                 kv_transform: doc.str_or("generate", "kv.transform", &d.generate.kv_transform),
+                kv_window: doc.int_or("generate", "kv.window", d.generate.kv_window as i64)
+                    as usize,
+                kv_sink_tokens: doc
+                    .int_or("generate", "kv.sink_tokens", d.generate.kv_sink_tokens as i64)
+                    as usize,
             },
             artifacts_dir: doc.str_or("", "artifacts_dir", &d.artifacts_dir),
         })
@@ -350,6 +377,48 @@ mod tests {
         let mut bad = d.generate.clone();
         bad.kv_block = 0;
         assert!(bad.kv_cfg().is_err());
+    }
+
+    #[test]
+    fn generate_window_knobs_parse_and_validate_recoverably() {
+        // Off by default: no eviction, exactly the pre-window behavior.
+        let d = RunConfig::defaults();
+        assert_eq!(d.generate.kv_window, 0);
+        assert_eq!(
+            d.generate.kv_cfg().unwrap().eviction,
+            crate::kvcache::EvictionPolicy::None
+        );
+        // Dotted keys resolve into the sliding-window policy.
+        let cfg = RunConfig::from_toml_str(
+            "[generate]\nkv.block = 16\nkv.window = 96\nkv.sink_tokens = 32\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.generate.kv_window, 96);
+        assert_eq!(cfg.generate.kv_sink_tokens, 32);
+        let kv = cfg.generate.kv_cfg().unwrap();
+        assert_eq!(
+            kv.eviction,
+            crate::kvcache::EvictionPolicy::SlidingWindow { sink_tokens: 32, window: 96 }
+        );
+        assert_eq!(kv.resident_bound(), Some(32 + 96 + 16));
+        // Boundary rules surface as recoverable parse-time errors, not
+        // panics at variant registration: window < block…
+        let bad = RunConfig::from_toml_str("[generate]\nkv.block = 32\nkv.window = 8\n").unwrap();
+        let err = bad.generate.kv_cfg().unwrap_err().to_string();
+        assert!(err.contains("must be ≥ kv.block"), "{err}");
+        // …and sinks past the hp prefix on a packed cache.
+        let bad = RunConfig::from_toml_str(
+            "[generate]\nkv.window = 64\nkv.sink_tokens = 96\nkv.hp_tokens = 64\n",
+        )
+        .unwrap();
+        let err = bad.generate.kv_cfg().unwrap_err().to_string();
+        assert!(err.contains("≤ kv.hp_tokens"), "{err}");
+        // An fp32 windowed cache has no hp prefix to respect.
+        let ok = RunConfig::from_toml_str(
+            "[generate]\nkv.packed = false\nkv.window = 64\nkv.sink_tokens = 96\n",
+        )
+        .unwrap();
+        assert!(ok.generate.kv_cfg().is_ok());
     }
 
     #[test]

@@ -31,7 +31,12 @@
 //!   another token ([`crate::kvcache::KvStream::try_append`] surfaces the
 //!   same condition recoverably). Retirement never stalls the remaining
 //!   streams: the slot simply leaves the stacked activation from the next
-//!   step on.
+//!   step on. Under a sliding-window cache policy
+//!   ([`crate::kvcache::EvictionPolicy::SlidingWindow`]) streams are
+//!   unbounded instead: long prompts prefill in chunks, eviction keeps the
+//!   resident set (and the positional rank) below the model's `max_seq`,
+//!   and a stream decodes arbitrarily far past it — truncation then only
+//!   arises from an explicit caller-supplied logical cap (DESIGN.md §13).
 //!
 //! ## Why batching preserves per-stream causality and bit-parity
 //!
@@ -56,7 +61,7 @@
 //! kernel would see; the paper-shaped serving setup (FP linears +
 //! quantized KV cache, `stack = None`) is unaffected.
 
-use crate::kvcache::{KvCache, KvCacheConfig};
+use crate::kvcache::{EvictionPolicy, KvCache, KvCacheConfig};
 use crate::model::gpt::argmax_row;
 use crate::model::{FpHook, Gpt, LinearHook};
 use crate::tensor::XorShiftRng;
@@ -185,14 +190,34 @@ pub const DEFAULT_DECODE_BATCH: usize = 8;
 
 impl<'m> DecodeEngine<'m> {
     /// Build an engine over `gpt` with a per-stream cache policy and a
-    /// sampling spec. The cache capacity is clamped to the model's
-    /// `max_seq` (tighter caller-supplied bounds are kept), so a stream
-    /// that outgrows the model retires with a truncation flag instead of
-    /// panicking mid-batch.
+    /// sampling spec.
+    ///
+    /// Without an eviction policy the cache capacity is clamped to the
+    /// model's `max_seq` (tighter caller-supplied bounds are kept), so a
+    /// stream that outgrows the model retires with a truncation flag
+    /// instead of panicking mid-batch. With a sliding window the stream is
+    /// *unbounded*: only the resident set must fit the positional table
+    /// ([`KvCacheConfig::resident_bound`] ≤ model `max_seq`, asserted
+    /// here), prompts longer than `max_seq` prefill in chunks, and streams
+    /// decode indefinitely — truncation can then only arise from an
+    /// explicit caller-supplied `kv.max_seq` logical cap.
     pub fn new(gpt: &'m Gpt, kv: KvCacheConfig, sampling: Sampling) -> Self {
         let mut kv = kv;
-        let cap = kv.max_seq.map_or(gpt.cfg.max_seq, |m| m.min(gpt.cfg.max_seq));
-        kv.max_seq = Some(cap);
+        match kv.eviction {
+            EvictionPolicy::None => {
+                let cap = kv.max_seq.map_or(gpt.cfg.max_seq, |m| m.min(gpt.cfg.max_seq));
+                kv.max_seq = Some(cap);
+            }
+            EvictionPolicy::SlidingWindow { .. } => {
+                let bound = kv.resident_bound().expect("sliding window bounds residency");
+                assert!(
+                    bound <= gpt.cfg.max_seq,
+                    "kv window residency bound {bound} (block-rounded sinks + window + block) \
+                     exceeds model max_seq {}",
+                    gpt.cfg.max_seq
+                );
+            }
+        }
         kv.validate();
         DecodeEngine { gpt, kv, sampling, decode_batch: DEFAULT_DECODE_BATCH }
     }
@@ -212,15 +237,19 @@ impl<'m> DecodeEngine<'m> {
 
     /// Admit every request, advance all active streams one token per
     /// step, and return one [`StreamResult`] per request, in request
-    /// order. Errors (empty or out-of-vocab prompt, prompt longer than
-    /// the cache capacity) reject the whole run before any decoding.
+    /// order. Errors (empty or out-of-vocab prompt, prompt longer than a
+    /// *bounded* cache's capacity) reject the whole run before any
+    /// decoding; a windowed (unbounded) cache accepts prompts of any
+    /// length and prefills them in chunks.
     pub fn run(
         &self,
         hook: &dyn LinearHook,
         reqs: &[GenRequest],
     ) -> crate::error::Result<Vec<StreamResult>> {
         let vocab = self.gpt.cfg.vocab_size;
-        let cap = self.kv.max_seq.expect("engine kv config is always bounded");
+        // `Some` for bounded caches (always, without eviction); `None`
+        // when a sliding window keeps the stream unbounded.
+        let cap = self.kv.max_seq;
         for (i, r) in reqs.iter().enumerate() {
             if r.prompt.is_empty() {
                 crate::bail!("stream {i}: prompt must be non-empty");
@@ -228,18 +257,49 @@ impl<'m> DecodeEngine<'m> {
             if let Some(&t) = r.prompt.iter().find(|&&t| t as usize >= vocab) {
                 crate::bail!("stream {i}: token {t} out of vocab {vocab}");
             }
-            if r.prompt.len() > cap {
-                crate::bail!("stream {i}: prompt {} exceeds cache capacity {cap}", r.prompt.len());
+            if let Some(cap) = cap {
+                if r.prompt.len() > cap {
+                    crate::bail!(
+                        "stream {i}: prompt {} exceeds cache capacity {cap}",
+                        r.prompt.len()
+                    );
+                }
             }
         }
 
         let mut done: Vec<Option<StreamResult>> = reqs.iter().map(|_| None).collect();
         let mut slots: Vec<Slot> = Vec::new();
         // Admission: per-stream prefill (ragged prompt lengths), then the
-        // first sampled token.
+        // first sampled token. Prefill is chunked so each chunk starts at
+        // the cache's resident rank: for a bounded cache the whole
+        // (validated ≤ cap ≤ max_seq) prompt is one chunk — exactly the
+        // pre-eviction path — while a windowed cache admits prompts past
+        // `max_seq` because eviction between chunks keeps the rank low.
+        // Windowed chunks are additionally capped at `window` tokens: a
+        // chunk's K/V are appended (and evicted) *before* its attention
+        // runs, so a chunk wider than the window would let eviction drop
+        // its own middle mid-append — queries would attend only the sinks
+        // instead of their recency window. With `chunk ≤ window` a query's
+        // whole same-chunk prefix survives (its newest key is within
+        // `window` of the chunk end), so every query sees
+        // `[sinks ‖ chunk prefix ‖ most recent pre-chunk remainder]` — the
+        // same approximation class as windowed decode itself.
+        let chunk_cap = match self.kv.eviction {
+            EvictionPolicy::SlidingWindow { window, .. } => window,
+            EvictionPolicy::None => usize::MAX,
+        };
         for (i, r) in reqs.iter().enumerate() {
             let mut cache = KvCache::new(self.gpt.cfg.n_layers, self.kv.clone());
-            let logits = self.gpt.prefill(hook, &r.prompt, &mut cache);
+            let mut logits = None;
+            let mut off = 0usize;
+            while off < r.prompt.len() {
+                let take = (self.gpt.cfg.max_seq - cache.pos_next())
+                    .min(chunk_cap)
+                    .min(r.prompt.len() - off);
+                logits = Some(self.gpt.prefill(hook, &r.prompt[off..off + take], &mut cache));
+                off += take;
+            }
+            let logits = logits.expect("validated prompts are non-empty");
             let mut sampler = Sampler::new(&self.sampling);
             let mut out = Vec::with_capacity(r.n_new);
             if r.n_new > 0 {
@@ -363,6 +423,86 @@ mod tests {
         let mut c = KvCache::fp32(gpt.cfg.n_layers);
         let serial1 = gpt.generate_greedy(&FpHook, &reqs[1].prompt, 6, &mut c);
         assert_eq!(got[1].tokens, serial1);
+    }
+
+    #[test]
+    fn windowed_stream_decodes_past_max_seq_untruncated() {
+        // The headline of the eviction subsystem: with a window policy a
+        // stream's budget can exceed the model's positional table many
+        // times over and it still returns exactly n_new tokens, while an
+        // unwindowed batch-mate behaves as before.
+        let gpt = Gpt::new(GptConfig::tiny(), 45);
+        let kv = KvCacheConfig::two_level(16, 8, 4, 8).with_window(16, 48);
+        let n_long = 4 * gpt.cfg.max_seq; // 1024 ≫ max_seq = 256
+        let reqs = vec![
+            GenRequest { prompt: prompt(8, 0), n_new: n_long },
+            GenRequest { prompt: prompt(3, 1), n_new: 5 },
+        ];
+        let engine = DecodeEngine::new(&gpt, kv, Sampling::Greedy);
+        let got = engine.run_fp(&reqs).unwrap();
+        assert_eq!(got[0].tokens.len(), n_long);
+        assert!(!got[0].truncated, "windowed streams never truncate");
+        for &t in &got[0].tokens {
+            assert!((t as usize) < gpt.cfg.vocab_size);
+        }
+        assert_eq!(got[1].tokens.len(), 5);
+        assert!(!got[1].truncated);
+    }
+
+    #[test]
+    fn windowed_prompt_longer_than_max_seq_prefills_chunked() {
+        // A prompt past the positional table is admitted by chunked
+        // prefill under a window policy — and rejected, as before, by a
+        // bounded engine.
+        let gpt = Gpt::new(GptConfig::tiny(), 46);
+        let long: Vec<u32> = (0..300).map(|i| ((i * 3 + 1) % 70) as u32).collect();
+        let (window, n_new) = (48usize, 8usize);
+        let kv = KvCacheConfig::two_level(16, 8, 4, 8).with_window(16, window);
+        let engine = DecodeEngine::new(&gpt, kv.clone(), Sampling::Greedy);
+        let reqs = vec![GenRequest { prompt: long.clone(), n_new }];
+        let got = engine.run_fp(&reqs).unwrap();
+        assert_eq!(got[0].tokens.len(), n_new);
+        assert!(!got[0].truncated);
+        // Deterministic: the same long request reproduces exactly.
+        assert_eq!(engine.run_fp(&reqs).unwrap(), got);
+        // The chunk width is pinned to the *window* budget (a chunk's K/V
+        // append — and eviction — precedes its attention, so wider chunks
+        // would evict their own middle before it is ever attended): a
+        // manual window-sized chunked prefill + greedy loop reproduces
+        // the engine bit-for-bit.
+        let argmax = |row: &[f32]| {
+            row.iter().enumerate().fold(0usize, |b, (i, &v)| if v > row[b] { i } else { b }) as u32
+        };
+        let mut cache = KvCache::new(gpt.cfg.n_layers, kv);
+        let mut last = None;
+        let mut off = 0usize;
+        while off < long.len() {
+            let take = window.min(long.len() - off);
+            last = Some(gpt.prefill(&FpHook, &long[off..off + take], &mut cache));
+            off += take;
+        }
+        let logits = last.unwrap();
+        let mut want = Vec::with_capacity(n_new);
+        let mut next = argmax(logits.row(logits.rows() - 1));
+        want.push(next);
+        while want.len() < n_new {
+            let l = gpt.decode_step(&FpHook, next, &mut cache);
+            next = argmax(l.row(0));
+            want.push(next);
+        }
+        assert_eq!(got[0].tokens, want, "engine must chunk admission at the window budget");
+        let bounded = DecodeEngine::new(&gpt, KvCacheConfig::fp32(), Sampling::Greedy);
+        let err = bounded.run_fp(&reqs).unwrap_err();
+        assert!(err.to_string().contains("exceeds cache capacity"), "{err}");
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds model max_seq")]
+    fn rejects_window_residency_larger_than_positional_table() {
+        let gpt = Gpt::new(GptConfig::tiny(), 47);
+        // sinks 64 (block-rounded 64) + window 256 + block 32 > 256.
+        let kv = KvCacheConfig::default().with_window(64, 256);
+        let _ = DecodeEngine::new(&gpt, kv, Sampling::Greedy);
     }
 
     #[test]

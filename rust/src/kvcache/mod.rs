@@ -38,11 +38,49 @@
 //! [`KvStream::gather`] returns exactly what was appended — the parity
 //! reference under which decode is bit-identical to the full-sequence
 //! forward at any thread count (`tests/decode.rs`).
+//!
+//! ## Sliding-window eviction (DESIGN.md §13)
+//!
+//! An [`EvictionPolicy::SlidingWindow`] turns the stream into a bounded-
+//! residency window over an unbounded logical sequence: the first
+//! `sink_tokens` positions (rounded up to whole blocks — exactly the
+//! hp-tokens of the two-level policy) are retained permanently, and a
+//! finalized block is dropped from the front of the recent region once it
+//! has slid entirely out of the last `window` tokens. Only *finalized*
+//! blocks are ever evicted — the fp32 tail is always the newest `< block`
+//! tokens, strictly inside the window (`window ≥ block` is validated), so
+//! a token can never be evicted before it has been flushed. The resident
+//! set is therefore always `sinks ∪ last-window` at block granularity,
+//! the eviction gap is one contiguous run starting at the sink boundary,
+//! and [`KvStream::gather`] returns the `[sinks ‖ recent]` rows while
+//! [`KvStream::gap_row`] / [`KvStream::evicted`] recover every resident
+//! row's *absolute* position for causal masking
+//! ([`crate::model::attention::MultiHeadAttention::forward_decode`]).
+//! Because a block's quantized representation depends only on its
+//! absolute base position, evicting the past never re-represents what
+//! remains: resident rows stay bit-identical to an unevicted reference
+//! stream (`tests/eviction.rs` pins it property-style).
 
 use crate::quant::{BitAllocation, Granularity, QTensor};
 use crate::stamp::SeqTransformKind;
 use crate::tensor::Tensor;
 use crate::transforms::{DctTransform, HaarDwt, SequenceTransform, WhtTransform};
+
+/// When (and what) a stream evicts (module docs, DESIGN.md §13).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictionPolicy {
+    /// Never evict: the stream grows until [`KvCacheConfig::max_seq`]
+    /// (all pre-eviction behavior, and the default).
+    None,
+    /// Permanently retain the first `sink_tokens` positions (rounded up
+    /// to whole blocks) and keep at least the last `window` tokens
+    /// resident, evicting older finalized blocks from the front of the
+    /// recent region. Residency is bounded by
+    /// [`KvCacheConfig::resident_bound`] while the logical sequence grows
+    /// without limit — the attention-sink recipe (StreamingLLM, cf.
+    /// PAPERS.md) mapped onto the paper's two-level token policy.
+    SlidingWindow { sink_tokens: usize, window: usize },
+}
 
 /// Two-level token policy + block layout for one KV cache
 /// (the `[generate]` config section's `kv.*` keys,
@@ -69,9 +107,16 @@ pub struct KvCacheConfig {
     /// to respect the model's `max_seq`. With `Some(cap)`,
     /// [`KvStream::try_append`] refuses — recoverably — to grow past `cap`
     /// tokens, so a decode engine can retire the stream with a truncation
-    /// flag instead of panicking mid-batch (groundwork for the ROADMAP
-    /// sliding-window/eviction item, which stays out of scope here).
+    /// flag instead of panicking mid-batch. The cap bounds the *logical*
+    /// length: sequences that should outlive any cap use an
+    /// [`EvictionPolicy::SlidingWindow`] instead (which bounds residency,
+    /// not length — the serving layer then leaves this `None`).
     pub max_seq: Option<usize>,
+    /// Memory-management policy. [`EvictionPolicy::SlidingWindow`] keeps
+    /// residency bounded so streams can decode indefinitely past any
+    /// positional budget; [`EvictionPolicy::None`] (the default) keeps
+    /// every appended token.
+    pub eviction: EvictionPolicy,
 }
 
 impl Default for KvCacheConfig {
@@ -86,6 +131,7 @@ impl Default for KvCacheConfig {
             packed: true,
             transform: SeqTransformKind::Identity,
             max_seq: None,
+            eviction: EvictionPolicy::None,
         }
     }
 }
@@ -113,11 +159,51 @@ impl KvCacheConfig {
         self
     }
 
+    /// Builder-style sliding-window eviction policy (module docs).
+    pub fn with_window(mut self, sink_tokens: usize, window: usize) -> Self {
+        self.eviction = EvictionPolicy::SlidingWindow { sink_tokens, window };
+        self
+    }
+
+    /// Upper bound on tokens resident at any instant, `None` when nothing
+    /// evicts. Under a sliding window the resident set is the block-rounded
+    /// sink span plus fewer than `window + block` recent tokens, and the
+    /// *next* token joins at that rank — so a positional table of
+    /// `resident_bound()` entries always suffices
+    /// ([`crate::decode::DecodeEngine`] validates it against the model).
+    pub fn resident_bound(&self) -> Option<usize> {
+        match self.eviction {
+            EvictionPolicy::None => None,
+            EvictionPolicy::SlidingWindow { sink_tokens, window } => {
+                Some(sink_tokens.div_ceil(self.block) * self.block + window + self.block)
+            }
+        }
+    }
+
     /// Field-specific error when the packed lanes or block transforms
     /// cannot express this configuration; always `Ok` for fp32 caches.
     /// The config layer ([`crate::config::GenerateSpec::kv_cfg`]) surfaces
     /// this as a recoverable parse-time error.
     pub fn check(&self) -> Result<(), String> {
+        if let EvictionPolicy::SlidingWindow { sink_tokens, window } = self.eviction {
+            if self.block == 0 {
+                return Err("kv.block must be ≥ 1".into());
+            }
+            if window < self.block {
+                return Err(format!(
+                    "kv.window ({window}) must be ≥ kv.block ({}) so the fp32 tail and the \
+                     newest finalized block always stay resident",
+                    self.block
+                ));
+            }
+            if self.packed && sink_tokens > self.hp_tokens {
+                return Err(format!(
+                    "kv.sink_tokens ({sink_tokens}) must be ≤ kv.hp_tokens ({}) — the \
+                     permanently retained sinks are the hp tokens of the two-level policy",
+                    self.hp_tokens
+                ));
+            }
+        }
         if !self.packed {
             return Ok(());
         }
@@ -181,35 +267,93 @@ pub struct KvStream {
     /// Built once per stream; every block shares it (blocks have one
     /// fixed length, `cfg.block`).
     transform: Option<Box<dyn SequenceTransform>>,
-    /// Finalized blocks, `cfg.block` tokens each, oldest first.
+    /// *Resident* finalized blocks, `cfg.block` tokens each, oldest first
+    /// (evicted blocks are physically dropped — the front of the vector
+    /// is the retained sink span, then the recent region).
     blocks: Vec<QTensor>,
-    /// Dequantized (+ inverse-transformed) fp32 view of the finalized
-    /// blocks, grown incrementally at flush time. Finalized blocks are
-    /// immutable, so decompressing once per flush instead of once per
-    /// [`KvStream::gather`] keeps the per-step decode cost O(copy) rather
-    /// than O(re-dequantize · history). Serving scratch only: the packed
-    /// blocks remain the stored representation and the sole input to
-    /// [`KvStream::storage_bits`].
+    /// Dequantized (+ inverse-transformed) fp32 view of the resident
+    /// finalized blocks, grown incrementally at flush time and shrunk at
+    /// eviction. Finalized blocks are immutable, so decompressing once
+    /// per flush instead of once per [`KvStream::gather`] keeps the
+    /// per-step decode cost O(copy) rather than O(re-dequantize ·
+    /// history). For packed streams this is serving scratch only (the
+    /// packed blocks remain the stored representation); for *windowed
+    /// fp32* streams it IS the finalized storage, counted at 32
+    /// bits/element by [`KvStream::storage_bits`].
     decoded: Option<Tensor>,
     /// Recent tokens not yet covering a full block (always `Some` with
-    /// ≥ 1 row when non-empty; `packed = false` keeps everything here).
+    /// ≥ 1 row when non-empty; an unwindowed `packed = false` stream
+    /// keeps everything here).
     tail: Option<Tensor>,
     /// Feature width, fixed by the first append.
     dim: Option<usize>,
-    /// Total tokens appended.
+    /// Total tokens appended (the *logical* length — evicted tokens
+    /// still count, so absolute positions never regress).
     len: usize,
+    /// Tokens evicted from the front of the recent region. The evicted
+    /// absolute range is always the contiguous
+    /// `[sink_span, sink_span + evicted)`.
+    evicted: usize,
 }
 
 impl KvStream {
     pub fn new(cfg: KvCacheConfig) -> Self {
         cfg.validate();
         let transform = cfg.block_transform();
-        KvStream { cfg, transform, blocks: Vec::new(), decoded: None, tail: None, dim: None, len: 0 }
+        KvStream {
+            cfg,
+            transform,
+            blocks: Vec::new(),
+            decoded: None,
+            tail: None,
+            dim: None,
+            len: 0,
+            evicted: 0,
+        }
     }
 
-    /// Tokens appended so far.
+    /// Tokens appended so far — the *logical* sequence length; evicted
+    /// tokens still count so absolute positions never regress.
     pub fn len(&self) -> usize {
         self.len
+    }
+
+    /// Tokens evicted from the front of the recent region (0 without a
+    /// window policy). Non-decreasing over the stream's lifetime.
+    pub fn evicted(&self) -> usize {
+        self.evicted
+    }
+
+    /// Tokens currently resident — [`KvStream::gather`]'s row count:
+    /// `len() − evicted()`, bounded by
+    /// [`KvCacheConfig::resident_bound`] under a window policy.
+    pub fn resident_len(&self) -> usize {
+        self.len - self.evicted
+    }
+
+    /// Gathered row index where the eviction gap sits: gathered row `r`
+    /// holds absolute position `r` for `r < gap_row()`, and
+    /// `r + evicted()` past the gap. (With nothing evicted the mapping is
+    /// the identity either way.)
+    pub fn gap_row(&self) -> usize {
+        self.sink_span().min(self.resident_len())
+    }
+
+    /// The permanently retained sink prefix, rounded up to whole blocks
+    /// (0 without a window policy).
+    fn sink_span(&self) -> usize {
+        match self.cfg.eviction {
+            EvictionPolicy::SlidingWindow { sink_tokens, .. } => {
+                sink_tokens.div_ceil(self.cfg.block) * self.cfg.block
+            }
+            EvictionPolicy::None => 0,
+        }
+    }
+
+    /// Whether a sliding-window policy is active (windowed fp32 streams
+    /// finalize blocks too, so eviction has block granularity to work at).
+    fn windowed(&self) -> bool {
+        matches!(self.cfg.eviction, EvictionPolicy::SlidingWindow { .. })
     }
 
     pub fn is_empty(&self) -> bool {
@@ -221,7 +365,7 @@ impl KvStream {
         self.dim
     }
 
-    /// Finalized packed blocks.
+    /// *Resident* finalized packed blocks (evicted blocks are dropped).
     pub fn n_blocks(&self) -> usize {
         self.blocks.len()
     }
@@ -277,59 +421,102 @@ impl KvStream {
             None => rows.clone(),
         });
         self.len += rows.rows();
-        if self.cfg.packed {
+        if self.cfg.packed || self.windowed() {
             while self.tail_len() >= self.cfg.block {
                 self.flush_block();
             }
+            self.evict();
         }
         Ok(())
     }
 
-    /// Quantize the oldest `block` tail tokens into a finalized packed
-    /// block. Only ever called with a full block accumulated — the flush
+    /// Finalize the oldest `block` tail tokens: packed streams quantize
+    /// them into a packed block, windowed fp32 streams move the exact rows
+    /// into the decoded region (so eviction has block granularity to work
+    /// at). Only ever called with a full block accumulated — the flush
     /// rule that keeps block-wise transforms causal (module docs).
     fn flush_block(&mut self) {
         let tail = self.tail.take().expect("flush with empty tail");
         let b = self.cfg.block;
+        // The block's *absolute* start position — `len` minus whatever is
+        // still unfinalized — decides how many of its rows fall under the
+        // hp (sink) budget; computing it from `len` (not from the resident
+        // block count) keeps the representation eviction-independent.
+        // Transforms concentrate the block's energy into the leading
+        // coefficients, so the hp rows are the leading ones in either
+        // domain and the accounting is position-equivalent.
+        let base = self.len - tail.rows();
         let block = tail.slice_rows(0, b);
         self.tail = if tail.rows() > b { Some(tail.slice_rows(b, tail.rows())) } else { None };
-        // The block's absolute start position decides how many of its rows
-        // fall under the hp (sink) budget. Transforms concentrate the
-        // block's energy into the leading coefficients, so the hp rows are
-        // the leading ones in either domain and the accounting is
-        // position-equivalent.
-        let base = self.blocks.len() * b;
-        let hp_rows = self.cfg.hp_tokens.saturating_sub(base).min(b);
-        let bits = BitAllocation::two_level(hp_rows, self.cfg.hp_bits, self.cfg.lp_bits);
-        let coeffs = match &self.transform {
-            Some(t) => t.forward(&block),
-            None => block,
-        };
-        let q = QTensor::quantize(&coeffs, &bits, Granularity::PerToken);
-        // Decompress the (now immutable) block exactly once — what every
-        // later gather will read for these tokens.
-        let deq = q.dequantize();
-        let view = match &self.transform {
-            Some(t) => t.inverse(&deq),
-            None => deq,
+        let view = if self.cfg.packed {
+            let hp_rows = self.cfg.hp_tokens.saturating_sub(base).min(b);
+            let bits = BitAllocation::two_level(hp_rows, self.cfg.hp_bits, self.cfg.lp_bits);
+            let coeffs = match &self.transform {
+                Some(t) => t.forward(&block),
+                None => block,
+            };
+            let q = QTensor::quantize(&coeffs, &bits, Granularity::PerToken);
+            // Decompress the (now immutable) block exactly once — what
+            // every later gather will read for these tokens.
+            let deq = q.dequantize();
+            let view = match &self.transform {
+                Some(t) => t.inverse(&deq),
+                None => deq,
+            };
+            self.blocks.push(q);
+            view
+        } else {
+            block
         };
         self.decoded = Some(match self.decoded.take() {
             Some(d) => d.vcat(&view),
             None => view,
         });
-        self.blocks.push(q);
     }
 
-    /// Materialize the full stream as a `len×d` fp32 matrix for attention:
-    /// finalized blocks read from the flush-time decompressed view (each
-    /// block dequantized + inverse-transformed exactly once, at flush),
-    /// the fp32 tail copies through exactly.
+    /// Drop every finalized block that has slid entirely out of the
+    /// logical window `[sinks ‖ last-window]`. The candidate is always the
+    /// oldest non-sink resident block — absolute range
+    /// `[sink_span + evicted, sink_span + evicted + block)` — evictable
+    /// iff it is finalized (never the fp32 tail) and its newest token is
+    /// older than the last `window` positions.
+    fn evict(&mut self) {
+        let EvictionPolicy::SlidingWindow { window, .. } = self.cfg.eviction else {
+            return;
+        };
+        let b = self.cfg.block;
+        let sink_span = self.sink_span();
+        loop {
+            let start = sink_span + self.evicted;
+            let end = start + b;
+            let finalized = self.len - self.tail_len();
+            if end > finalized || end + window > self.len {
+                return;
+            }
+            let dec = self.decoded.take().expect("evictable block has a decoded view");
+            self.decoded = Some(
+                dec.slice_rows(0, sink_span).vcat(&dec.slice_rows(sink_span + b, dec.rows())),
+            );
+            if self.cfg.packed {
+                self.blocks.remove(sink_span / b);
+            }
+            self.evicted += b;
+        }
+    }
+
+    /// Materialize the *resident* stream as a `resident_len×d` fp32 matrix
+    /// for attention — the logical window `[sinks ‖ recent]`: finalized
+    /// blocks read from the flush-time decompressed view (each block
+    /// dequantized + inverse-transformed exactly once, at flush), the fp32
+    /// tail copies through exactly. Row `r`'s absolute position is
+    /// recovered by [`KvStream::gap_row`] / [`KvStream::evicted`]; without
+    /// eviction this is the whole `len×d` stream, unchanged.
     pub fn gather(&self) -> Tensor {
         let d = match self.dim {
             Some(d) => d,
             None => return Tensor::zeros(&[0, 0]),
         };
-        let mut out = Tensor::zeros(&[self.len, d]);
+        let mut out = Tensor::zeros(&[self.resident_len(), d]);
         let mut r = 0usize;
         if let Some(dec) = &self.decoded {
             out.data_mut()[..dec.len()].copy_from_slice(dec.data());
@@ -340,23 +527,33 @@ impl KvStream {
             out.data_mut()[start..start + t.len()].copy_from_slice(t.data());
             r += t.rows();
         }
-        debug_assert_eq!(r, self.len);
+        debug_assert_eq!(r, self.resident_len());
         out
     }
 
-    /// Physical storage footprint in bits: the packed payload plus 16-bit
-    /// scale + 16-bit zero per group for finalized blocks (the Appendix-C
-    /// accounting, [`QTensor::storage_bits`]), and 32 bits/element for the
-    /// fp32 tail.
+    /// *Resident* storage footprint in bits: the packed payload plus
+    /// 16-bit scale + 16-bit zero per group for resident finalized blocks
+    /// (the Appendix-C accounting, [`QTensor::storage_bits`]), and 32
+    /// bits/element for fp32 rows (the tail, plus the finalized region of
+    /// windowed fp32 streams). Evicted blocks cost nothing — under a
+    /// window policy this stays bounded by the sink + window budget while
+    /// `len` grows without limit (`tests/eviction.rs`).
     pub fn storage_bits(&self) -> usize {
         let packed: usize = self.blocks.iter().map(QTensor::storage_bits).sum();
-        packed + self.tail.as_ref().map_or(0, |t| t.len() * 32)
+        let fp_finalized = if self.cfg.packed {
+            0
+        } else {
+            self.decoded.as_ref().map_or(0, |t| t.len() * 32)
+        };
+        packed + fp_finalized + self.tail.as_ref().map_or(0, |t| t.len() * 32)
     }
 
-    /// [`KvStream::storage_bits`] per stored element (0 when empty).
+    /// [`KvStream::storage_bits`] per *resident* element (0 when empty).
     pub fn average_storage_bits(&self) -> f64 {
         match self.dim {
-            Some(d) if self.len > 0 => self.storage_bits() as f64 / (self.len * d) as f64,
+            Some(d) if self.resident_len() > 0 => {
+                self.storage_bits() as f64 / (self.resident_len() * d) as f64
+            }
             _ => 0.0,
         }
     }
@@ -421,6 +618,27 @@ impl KvCache {
         self.layers[0].k.remaining()
     }
 
+    /// Tokens evicted from every stream so far (lock-step; layer 0
+    /// authoritative).
+    pub fn evicted(&self) -> usize {
+        self.layers[0].k.evicted()
+    }
+
+    /// Tokens currently resident in each stream.
+    pub fn resident_len(&self) -> usize {
+        self.layers[0].k.resident_len()
+    }
+
+    /// Positional-embedding index for the next appended token: its rank
+    /// in the *resident* sequence. Without eviction this is exactly
+    /// [`KvCache::len`]; under a window policy it is bounded by
+    /// [`KvCacheConfig::resident_bound`], so a fixed positional table
+    /// serves an unbounded logical sequence
+    /// ([`crate::model::Gpt::prefill`] embeds from here).
+    pub fn pos_next(&self) -> usize {
+        self.resident_len()
+    }
+
     pub fn layer(&self, l: usize) -> &KvLayer {
         &self.layers[l]
     }
@@ -434,13 +652,14 @@ impl KvCache {
         self.layers.iter().map(|l| l.k.storage_bits() + l.v.storage_bits()).sum()
     }
 
-    /// Mean bits per stored K/V element across the whole cache.
+    /// Mean bits per *resident* K/V element across the whole cache.
     pub fn average_storage_bits(&self) -> f64 {
         let elems: usize = self
             .layers
             .iter()
             .map(|l| {
-                l.k.dim().map_or(0, |d| l.k.len() * d) + l.v.dim().map_or(0, |d| l.v.len() * d)
+                l.k.dim().map_or(0, |d| l.k.resident_len() * d)
+                    + l.v.dim().map_or(0, |d| l.v.resident_len() * d)
             })
             .sum();
         if elems == 0 {
@@ -653,6 +872,100 @@ mod tests {
         // Whole-cache view mirrors layer 0.
         let cache = KvCache::new(2, KvCacheConfig::fp32().with_max_seq(7));
         assert_eq!(cache.remaining(), Some(7));
+    }
+
+    #[test]
+    fn sliding_window_evicts_whole_blocks_and_keeps_sinks() {
+        // sinks 8 (= one block), window 16, block 8: after 64 tokens the
+        // resident set is positions 0..8 ∪ 40..64 (blocks 5/6 + 8-row
+        // window remainder — block granularity keeps [40,48) resident).
+        let x = Tensor::randn(&[64, 6], 31);
+        let mut st = KvStream::new(cfg(8, 8, 4, 8).with_window(8, 16));
+        let mut reference = KvStream::new(cfg(8, 8, 4, 8));
+        reference.append(&x);
+        for i in 0..64 {
+            st.append(&x.slice_rows(i, i + 1));
+        }
+        assert_eq!(st.len(), 64, "logical length counts evicted tokens");
+        // The oldest non-sink block [8,16) evicts at len 32 (end 16 +
+        // window 16 ≤ 32); by len 64 every block through [40,48) is out:
+        // resident = sinks [0,8) ∪ last-window [48,64).
+        assert_eq!(st.evicted(), 40);
+        assert_eq!(st.resident_len(), 24);
+        assert_eq!(st.gap_row(), 8);
+        assert_eq!(st.n_blocks(), 3, "1 sink + 2 recent resident blocks");
+        // Resident rows are bit-identical to the unevicted reference at
+        // their absolute positions.
+        let g = st.gather();
+        let r = reference.gather();
+        for row in 0..24 {
+            let abs = if row < st.gap_row() { row } else { row + st.evicted() };
+            assert_eq!(g.row(row), r.row(abs), "resident row {row} (abs {abs})");
+        }
+        // Storage counts resident blocks only: the all-hp sink block plus
+        // two lp recent blocks, no tail.
+        let expect: usize = (8 * (8 * 6 + 32)) + 2 * (8 * (4 * 6 + 32));
+        assert_eq!(st.storage_bits(), expect);
+    }
+
+    #[test]
+    fn windowed_fp32_stream_finalizes_and_evicts_exactly() {
+        // packed = false + window: finalization moves exact rows, eviction
+        // drops them at block granularity, tail rows stay bit-exact.
+        let x = Tensor::randn(&[23, 5], 33);
+        let mut st =
+            KvStream::new(KvCacheConfig { block: 4, ..KvCacheConfig::fp32() }.with_window(0, 4));
+        for i in 0..23 {
+            st.append(&x.slice_rows(i, i + 1));
+        }
+        // block 4, window 4, sinks 0: finalized 20, evictable end+4 ≤ 23
+        // → blocks [0,4),[4,8),[8,12),[12,16) gone; resident 16..23.
+        assert_eq!(st.evicted(), 16);
+        assert_eq!(st.resident_len(), 7);
+        assert_eq!(st.gap_row(), 0);
+        let g = st.gather();
+        for row in 0..7 {
+            assert_eq!(g.row(row), x.row(16 + row), "resident row {row} must be exact");
+        }
+        // All-resident fp32 rows at 32 bits.
+        assert_eq!(st.storage_bits(), 7 * 5 * 32);
+        assert!((st.average_storage_bits() - 32.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn window_covering_everything_is_a_noop() {
+        let x = Tensor::randn(&[40, 6], 35);
+        let mk_base = || KvStream::new(cfg(8, 8, 4, 8));
+        let mk_win = || KvStream::new(cfg(8, 8, 4, 8).with_window(8, 64));
+        let (mut base, mut win) = (mk_base(), mk_win());
+        base.append(&x);
+        win.append(&x);
+        assert_eq!(win.evicted(), 0);
+        assert_eq!(win.gather(), base.gather(), "window ≥ len must be bit-identical");
+        assert_eq!(win.storage_bits(), base.storage_bits());
+    }
+
+    #[test]
+    fn resident_bound_is_respected_under_any_schedule() {
+        let mut st = KvStream::new(cfg(4, 8, 4, 4).with_window(4, 8));
+        let bound = st.cfg.resident_bound().unwrap();
+        assert_eq!(bound, 4 + 8 + 4);
+        for i in 0..200 {
+            st.append(&Tensor::randn(&[1 + (i % 3), 4], 100 + i as u64));
+            assert!(st.resident_len() < bound, "resident {} ≥ bound {bound}", st.resident_len());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "must be ≥ kv.block")]
+    fn rejects_window_smaller_than_block() {
+        let _ = KvStream::new(cfg(0, 8, 4, 8).with_window(0, 4));
+    }
+
+    #[test]
+    #[should_panic(expected = "≤ kv.hp_tokens")]
+    fn rejects_sinks_past_hp_tokens_for_packed() {
+        let _ = KvStream::new(cfg(4, 8, 4, 8).with_window(16, 32));
     }
 
     #[test]

@@ -17,6 +17,33 @@ pub struct MultiHeadAttention {
     pub causal: bool,
 }
 
+/// Absolute-position layout of gathered K/V rows for causal masking under
+/// KV eviction ([`crate::kvcache::EvictionPolicy::SlidingWindow`]):
+/// gathered key row `r` holds absolute position `r` while `r < gap_row`,
+/// and `r + gap` once past the eviction gap; the first query row sits at
+/// absolute position `q_pos`. Contiguous (unevicted) keys are the
+/// `gap = 0` case, where the mask is bit-identical to the classic
+/// `sk − s` offset rule.
+struct KeyMap {
+    gap_row: usize,
+    gap: usize,
+    q_pos: usize,
+}
+
+impl KeyMap {
+    /// Contiguous keys: the full-sequence / unevicted special case.
+    fn contiguous(sk: usize, s: usize) -> Self {
+        debug_assert!(sk >= s, "causal sdpa needs key history ≥ query rows");
+        KeyMap { gap_row: sk, gap: 0, q_pos: sk - s }
+    }
+
+    /// Layout of one stream's gathered cache for `s` newest-token queries
+    /// (the stream has already absorbed their K/V appends).
+    fn for_stream(stream: &crate::kvcache::KvStream, s: usize) -> Self {
+        KeyMap { gap_row: stream.gap_row(), gap: stream.evicted(), q_pos: stream.len() - s }
+    }
+}
+
 /// Forward caches needed by backward.
 pub struct AttnCache {
     x: Tensor,
@@ -69,9 +96,28 @@ impl MultiHeadAttention {
     /// Causal masking aligns the *last* query to the last key: with `s`
     /// queries over `sk ≥ s` keys, query `i` attends keys `≤ i + (sk−s)`.
     /// The full forward is the `s == sk` special case (offset 0, the
-    /// classic triangular mask); incremental decode passes the new tokens'
-    /// queries against the whole cached K/V stream.
+    /// classic triangular mask); incremental decode over an evicting cache
+    /// passes an explicit [`KeyMap`] instead ([`Self::sdpa_mapped`]).
     fn sdpa(&self, q: &Tensor, k: &Tensor, v: &Tensor) -> (Tensor, Vec<Tensor>) {
+        // Non-causal attention (cross-attention can have sk < s) never
+        // reads the map, so only derive the offset when masking will.
+        let map = if self.causal {
+            KeyMap::contiguous(k.rows(), q.rows())
+        } else {
+            KeyMap { gap_row: 0, gap: 0, q_pos: 0 }
+        };
+        self.sdpa_mapped(q, k, v, &map)
+    }
+
+    /// [`Self::sdpa`] with causal masking over the *absolute* key
+    /// positions described by `map` (ignored for non-causal attention).
+    /// Query `i` (absolute position `q_pos + i`) attends exactly the keys
+    /// whose absolute position is ≤ its own; positions are strictly
+    /// increasing over gathered rows, so the visible set is a prefix —
+    /// `below` counts the pre-gap (sink) rows, `above` the post-gap rows.
+    /// With `gap = 0` the cut reduces to `i + (sk − s) + 1`, bit-for-bit
+    /// the classic offset rule.
+    fn sdpa_mapped(&self, q: &Tensor, k: &Tensor, v: &Tensor, map: &KeyMap) -> (Tensor, Vec<Tensor>) {
         let s = q.rows();
         let sk = k.rows();
         let scale = 1.0 / (self.dh() as f32).sqrt();
@@ -83,10 +129,12 @@ impl MultiHeadAttention {
             let vh = self.head(v, h);
             let mut scores = matmul_transb(&qh, &kh).scale(scale);
             if self.causal {
-                debug_assert!(sk >= s, "causal sdpa needs key history ≥ query rows");
-                let offset = sk - s;
                 for i in 0..s {
-                    for j in (i + offset + 1)..sk {
+                    let p = map.q_pos + i;
+                    let below = (p + 1).min(map.gap_row);
+                    let above = (p + 1).saturating_sub(map.gap_row + map.gap);
+                    let cut = (below + above).min(sk);
+                    for j in cut..sk {
                         scores.set(i, j, f32::NEG_INFINITY);
                     }
                 }
@@ -153,7 +201,11 @@ impl MultiHeadAttention {
         cache.v.append(&v_new);
         let k = cache.k.gather();
         let v = cache.v.gather();
-        let (concat, _) = self.sdpa(&q, &k, &v);
+        // Mask over *absolute* positions: an evicting cache gathers the
+        // non-contiguous `[sinks ‖ recent]` window, and every resident key
+        // is in the queries' past except newer same-chunk rows.
+        let map = KeyMap::for_stream(&cache.k, x.rows());
+        let (concat, _) = self.sdpa_mapped(&q, &k, &v, &map);
         hook.linear(&format!("{site}.to_out"), &concat, &self.wo.w, self.wo.b.as_deref())
     }
 
@@ -190,7 +242,8 @@ impl MultiHeadAttention {
             layer.v.append(&v_new.slice_rows(i, i + 1));
             let k = layer.k.gather();
             let v = layer.v.gather();
-            let (ci, _) = self.sdpa(&q.slice_rows(i, i + 1), &k, &v);
+            let map = KeyMap::for_stream(&layer.k, 1);
+            let (ci, _) = self.sdpa_mapped(&q.slice_rows(i, i + 1), &k, &v, &map);
             concat.row_mut(i).copy_from_slice(ci.row(0));
         }
         hook.linear(&format!("{site}.to_out"), &concat, &self.wo.w, self.wo.b.as_deref())
@@ -421,6 +474,42 @@ mod tests {
             assert_eq!(s.k.gather(), b.k.gather());
             assert_eq!(s.v.gather(), b.v.gather());
         }
+    }
+
+    #[test]
+    fn windowed_decode_chunk_matches_token_by_token() {
+        // With an eviction gap already in the cache, a multi-token decode
+        // chunk must reproduce the token-by-token path bit-for-bit — the
+        // absolute-position mask is what keeps same-chunk futures hidden
+        // while every resident (sink or recent) key stays visible.
+        let mut rng = XorShiftRng::new(19);
+        let attn = MultiHeadAttention::new(8, 2, true, &mut rng);
+        let cfg = crate::kvcache::KvCacheConfig { block: 4, ..crate::kvcache::KvCacheConfig::fp32() }
+            .with_window(4, 8);
+        let x = Tensor::randn(&[19, 8], 20);
+        let mk = || crate::kvcache::KvLayer::new(cfg.clone());
+        let mut one = mk();
+        let mut chunked = mk();
+        // Shared history: 16 tokens, driven identically on both caches.
+        for t in 0..16 {
+            let _ = attn.forward_decode(&FpHook, "layer0.attn1", &x.slice_rows(t, t + 1), &mut one);
+            let _ =
+                attn.forward_decode(&FpHook, "layer0.attn1", &x.slice_rows(t, t + 1), &mut chunked);
+        }
+        assert!(one.k.evicted() > 0, "history must already have evicted");
+        // 3 more tokens: no eviction fires before len 20, so both paths
+        // see identical resident sets and must agree exactly.
+        let mut want = Vec::new();
+        for t in 16..19 {
+            let y = attn.forward_decode(&FpHook, "layer0.attn1", &x.slice_rows(t, t + 1), &mut one);
+            want.push(y.row(0).to_vec());
+        }
+        let got = attn.forward_decode(&FpHook, "layer0.attn1", &x.slice_rows(16, 19), &mut chunked);
+        for (i, w) in want.iter().enumerate() {
+            assert_eq!(got.row(i), &w[..], "chunk row {i}");
+        }
+        assert_eq!(one.k.evicted(), chunked.k.evicted());
+        assert_eq!(one.k.gather(), chunked.k.gather());
     }
 
     #[test]

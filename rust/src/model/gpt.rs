@@ -317,6 +317,18 @@ impl Gpt {
     /// and [`super::FpHook`] the returned rows are bit-identical to
     /// [`Gpt::logits_hooked`] on the same prefix at any thread count
     /// (every kernel on the path is row-wise; `tests/decode.rs` pins it).
+    ///
+    /// Tokens embed at [`crate::kvcache::KvCache::pos_next`] — their rank
+    /// in the *resident* sequence. Without eviction that is exactly the
+    /// absolute position (the parity setting above); under a sliding
+    /// window it stays below [`crate::kvcache::KvCacheConfig::resident_bound`],
+    /// so the fixed `max_seq` positional table serves an unbounded logical
+    /// sequence as long as callers chunk their prompts to fit
+    /// (`pos_next + chunk ≤ max_seq`, as [`crate::decode::DecodeEngine`]
+    /// does at admission). Windowed callers should also keep each chunk
+    /// ≤ the window: a chunk's K/V append (and eviction) precedes its
+    /// attention, so a wider chunk would evict its own middle before any
+    /// query attends it — the engine caps admission chunks accordingly.
     pub fn prefill(
         &self,
         hook: &dyn LinearHook,
@@ -325,7 +337,7 @@ impl Gpt {
     ) -> Tensor {
         assert!(!tokens.is_empty(), "prefill needs at least one token");
         assert_eq!(cache.n_layers(), self.cfg.n_layers, "cache layer count mismatch");
-        let pos0 = cache.len();
+        let pos0 = cache.pos_next();
         assert!(pos0 + tokens.len() <= self.cfg.max_seq, "sequence exceeds max_seq");
         let mut h = self.embed_tokens_at(tokens, pos0);
         for (l, b) in self.blocks.iter().enumerate() {
@@ -374,7 +386,9 @@ impl Gpt {
         let mut h = Tensor::zeros(&[n, d]);
         for (i, &tok) in tokens.iter().enumerate() {
             assert_eq!(caches[i].n_layers(), self.cfg.n_layers, "cache layer count mismatch");
-            let pos = caches[i].len();
+            // Resident rank, like `prefill`: bounded under a window
+            // policy, the absolute position otherwise.
+            let pos = caches[i].pos_next();
             assert!(pos < self.cfg.max_seq, "stream {i} position {pos} exceeds max_seq");
             let t = tok as usize;
             assert!(t < self.cfg.vocab_size, "token {t} out of vocab");

@@ -99,11 +99,13 @@ fn prepare(model: &NativeModel, stack: &QuantStack) -> PreparedWeights {
 /// `max_seq`, or a tighter caller-supplied `kv.max_seq` — so a request
 /// the engine would have to *truncate* is rejected up front instead:
 /// the wire contract is exactly `n_new` generated ids per request.
+/// `None` means the variant's sliding-window policy makes its streams
+/// unbounded: any prompt + budget is admissible.
 fn parse_generate(
     input: &Tensor,
     model: &Gpt,
     max_new: usize,
-    cap: usize,
+    cap: Option<usize>,
 ) -> Result<GenRequest, String> {
     if input.ndim() != 2 || input.rows() != 1 || input.cols() < 2 {
         return Err(format!(
@@ -120,11 +122,13 @@ fn parse_generate(
         return Err(format!("n_new {n_new} exceeds variant limit {max_new}"));
     }
     let prompt = parse_tokens(&input.data()[1..], model.cfg.vocab_size)?;
-    if prompt.len() + n_new > cap {
-        return Err(format!(
-            "prompt {} + n_new {n_new} exceeds max_seq {cap}",
-            prompt.len()
-        ));
+    if let Some(cap) = cap {
+        if prompt.len() + n_new > cap {
+            return Err(format!(
+                "prompt {} + n_new {n_new} exceeds max_seq {cap}",
+                prompt.len()
+            ));
+        }
     }
     Ok(GenRequest { prompt, n_new })
 }
@@ -228,6 +232,15 @@ impl NativeExecutor {
         decode_batch: usize,
     ) -> Self {
         kv.validate();
+        // A windowed variant's residency must fit the positional table —
+        // same rule the engine asserts, surfaced at registration.
+        if let Some(bound) = kv.resident_bound() {
+            assert!(
+                bound <= model.cfg.max_seq,
+                "kv window residency bound {bound} exceeds model max_seq {}",
+                model.cfg.max_seq
+            );
+        }
         assert!(decode_batch >= 1, "decode_batch must be ≥ 1");
         self.insert(
             name,
@@ -281,8 +294,15 @@ impl NativeExecutor {
         // Effective capacity: a tighter variant-level `kv.max_seq` bound
         // wins over the model's. Requests are validated against it, so
         // the engine never has to truncate a served stream (the wire
-        // contract is exactly `n_new` ids per request).
-        let cap = kv.max_seq.map_or(model.cfg.max_seq, |m| m.min(model.cfg.max_seq));
+        // contract is exactly `n_new` ids per request). A sliding-window
+        // variant is unbounded (unless the caller set an explicit logical
+        // cap): long requests are admissible and decode past `max_seq`.
+        let cap = match kv.eviction {
+            crate::kvcache::EvictionPolicy::None => {
+                Some(kv.max_seq.map_or(model.cfg.max_seq, |m| m.min(model.cfg.max_seq)))
+            }
+            crate::kvcache::EvictionPolicy::SlidingWindow { .. } => kv.max_seq,
+        };
         let reqs: Vec<GenRequest> = inputs
             .iter()
             .map(|x| parse_generate(x, model, *max_new, cap))
@@ -668,6 +688,34 @@ mod tests {
         let input = Tensor::from_vec(&[1, row.len()], row);
         let out = exec.execute("gen-capped", &[&input]).unwrap().remove(0);
         assert_eq!(out.shape(), &[1, 8]);
+    }
+
+    #[test]
+    fn windowed_generate_variant_serves_requests_past_max_seq() {
+        let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 39));
+        let kv = crate::kvcache::KvCacheConfig::two_level(8, 8, 4, 8).with_window(8, 32);
+        let exec = NativeExecutor::new().with_gpt_generate("gen-win", gpt, None, kv, 512);
+        // prompt 8 + n_new 280 > max_seq 256: admissible under the window
+        // policy, and exactly n_new ids come back (never truncated).
+        let mut row = vec![280.0];
+        row.extend((0..8).map(|i| i as f32));
+        let input = Tensor::from_vec(&[1, row.len()], row);
+        let out = exec.execute("gen-win", &[&input]).unwrap().remove(0);
+        assert_eq!(out.shape(), &[1, 280]);
+        for &v in out.data() {
+            assert!(v.fract() == 0.0 && (v as usize) < 72, "token {v}");
+        }
+        // The same request on an unwindowed variant still rejects up
+        // front — the pre-eviction recoverable path is intact.
+        let exec_bounded = NativeExecutor::new().with_gpt_generate(
+            "gen",
+            Arc::new(Gpt::new(GptConfig::tiny(), 39)),
+            None,
+            crate::kvcache::KvCacheConfig::fp32(),
+            512,
+        );
+        let err = exec_bounded.execute("gen", &[&input]).unwrap_err();
+        assert!(err.contains("exceeds max_seq"), "{err}");
     }
 
     #[test]

@@ -278,6 +278,92 @@ fn serial_greedy(gpt: &Gpt, kv: &KvCacheConfig, prompt: &[u32], n_new: usize) ->
 }
 
 #[test]
+fn windowed_noop_decode_bit_identical_to_unwindowed() {
+    // window ≥ seq_len ⇒ eviction never fires: teacher-forced decode
+    // logits are bit-identical to the unwindowed decode paths, fp32 and
+    // packed caches, threaded and forced-serial kernels (CI re-runs this
+    // file under STAMP_THREADS=1 as well).
+    let gpt = Gpt::new(GptConfig::tiny(), 51);
+    let prompt = prefix_tokens(10);
+    let mut c = KvCache::fp32(gpt.cfg.n_layers);
+    let cont = gpt.generate_greedy(&FpHook, &prompt, 20, &mut c);
+    for packed in [false, true] {
+        let base =
+            if packed { KvCacheConfig::two_level(8, 8, 4, 8) } else { KvCacheConfig::fp32() };
+        let win = base.clone().with_window(8, 128);
+        let a = forced_logits(&gpt, base, &prompt, &cont);
+        let b = forced_logits(&gpt, win.clone(), &prompt, &cont);
+        assert_eq!(a, b, "packed={packed}: windowed no-op must be bit-identical");
+        stamp::parallel::set_kernel_serial(true);
+        let b_serial = forced_logits(&gpt, win, &prompt, &cont);
+        stamp::parallel::set_kernel_serial(false);
+        assert_eq!(a, b_serial, "packed={packed}: serial-kernel run diverged");
+    }
+}
+
+#[test]
+fn windowed_noop_engine_matches_unwindowed_serial_and_batched() {
+    // The same no-op guarantee through the engine: serial (decode_batch
+    // 1) and fused stepping under a window config reproduce the
+    // unwindowed serial oracle, fp32 and packed.
+    let gpt = Gpt::new(GptConfig::tiny(), 53);
+    let reqs = vec![
+        GenRequest { prompt: prefix_tokens(5), n_new: 14 },
+        GenRequest { prompt: prefix_tokens(12), n_new: 6 },
+        GenRequest { prompt: prefix_tokens(3), n_new: 10 },
+    ];
+    for packed in [false, true] {
+        let base =
+            if packed { KvCacheConfig::two_level(4, 8, 4, 8) } else { KvCacheConfig::fp32() };
+        let win = base.clone().with_window(4, 64);
+        for decode_batch in [1usize, 8] {
+            let engine = DecodeEngine::new(&gpt, win.clone(), Sampling::Greedy)
+                .with_decode_batch(decode_batch);
+            let got = engine.run_fp(&reqs).unwrap();
+            for (i, r) in reqs.iter().enumerate() {
+                let want = serial_greedy(&gpt, &base, &r.prompt, r.n_new);
+                assert_eq!(got[i].tokens, want, "packed={packed} b={decode_batch} stream {i}");
+                assert!(!got[i].truncated);
+            }
+        }
+    }
+}
+
+#[test]
+fn coordinator_serves_long_generate_past_max_seq_under_window_policy() {
+    use stamp::config::ServeSpec;
+    use stamp::coordinator::Server;
+    use stamp::runtime::NativeExecutor;
+
+    // Satellite: a generate request whose prompt + budget exceeds the
+    // model's max_seq completes un-truncated end to end once the variant
+    // carries a window policy — and the pre-eviction recoverable path
+    // still rejects the same request on a bounded variant.
+    let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 57));
+    let win = KvCacheConfig::two_level(8, 8, 4, 8).with_window(8, 48);
+    let exec = NativeExecutor::new()
+        .with_gpt_generate("gen-win", gpt.clone(), None, win, 400)
+        .with_gpt_generate("gen-bounded", gpt.clone(), None, KvCacheConfig::fp32(), 400);
+    let spec = ServeSpec { workers: 2, max_batch: 4, max_wait_us: 500, queue_depth: 16 };
+    let server = Server::start(&spec, &["gen-win", "gen-bounded"], Arc::new(exec));
+    let handle = server.handle();
+    // [n_new = 300, 8-token prompt]: 308 > max_seq 256.
+    let mut row = vec![300.0];
+    row.extend(prefix_tokens(8).iter().map(|&t| t as f32));
+    let input = Tensor::from_vec(&[1, row.len()], row);
+    let resp = handle.call("gen-win", input.clone(), Duration::from_secs(60)).unwrap();
+    let out = resp.output.unwrap();
+    assert_eq!(out.shape(), &[1, 300], "windowed variant serves the full budget");
+    for &v in out.data() {
+        assert!(v.fract() == 0.0 && (v as usize) < gpt.cfg.vocab_size, "token {v}");
+    }
+    let resp = handle.call("gen-bounded", input, Duration::from_secs(60)).unwrap();
+    let err = resp.output.unwrap_err();
+    assert!(err.contains("exceeds max_seq"), "{err}");
+    server.shutdown();
+}
+
+#[test]
 fn batched_decode_bit_identical_to_serial_any_thread_count() {
     // The tentpole invariant: with an fp32 cache, every stream of a fused
     // batch reproduces its serial `generate_greedy` run bit-for-bit —
@@ -339,12 +425,17 @@ struct BatchCase {
     budgets: Vec<usize>,
     decode_batch: usize,
     packed: bool,
+    /// Sliding-window config for this composition (0 = no eviction).
+    /// Generated ≥ any stream's prompt + budget, so eviction is a no-op
+    /// and the unwindowed serial oracle must still match bit-for-bit.
+    window: usize,
     seed: u64,
 }
 
 /// Satellite: batched-vs-serial parity as a property over random batch
 /// compositions — ragged prompts, ragged budgets (so slots retire at
-/// different steps), random fusion width, fp32 and packed caches.
+/// different steps), random fusion width, fp32 and packed caches, with
+/// and without a (no-op sized) per-composition window config.
 #[test]
 fn property_batched_decode_equals_serial_per_stream() {
     let gpt = Gpt::new(GptConfig::tiny(), 25);
@@ -360,15 +451,19 @@ fn property_batched_decode_equals_serial_per_stream() {
                 budgets: (0..n_streams).map(|_| g.usize_in(0, 12)).collect(),
                 decode_batch: g.usize_in(1, 4),
                 packed: g.usize_in(0, 1) == 1,
+                // prompts ≤ 24 and budgets ≤ 12 keep every logical length
+                // ≤ 36 < 40 ≤ window: eviction can never fire.
+                window: if g.usize_in(0, 2) == 0 { 0 } else { 40 + g.usize_in(0, 80) },
                 seed: g.rng.next_u64(),
             }
         },
         |c| {
-            let kv = if c.packed {
+            let base = if c.packed {
                 KvCacheConfig::two_level(4, 8, 4, 8)
             } else {
                 KvCacheConfig::fp32()
             };
+            let kv = if c.window > 0 { base.clone().with_window(4, c.window) } else { base.clone() };
             let reqs: Vec<GenRequest> = (0..c.n_streams)
                 .map(|i| GenRequest {
                     prompt: (0..c.prompts[i])
@@ -377,11 +472,13 @@ fn property_batched_decode_equals_serial_per_stream() {
                     n_new: c.budgets[i],
                 })
                 .collect();
-            let engine = DecodeEngine::new(&gpt, kv.clone(), Sampling::Greedy)
+            let engine = DecodeEngine::new(&gpt, kv, Sampling::Greedy)
                 .with_decode_batch(c.decode_batch);
             let got = engine.run_fp(&reqs).map_err(|e| e.to_string())?;
             for (i, r) in reqs.iter().enumerate() {
-                let want = serial_greedy(&gpt, &kv, &r.prompt, r.n_new);
+                // The oracle always runs *unwindowed*: a no-op-sized
+                // window must change nothing, bit for bit.
+                let want = serial_greedy(&gpt, &base, &r.prompt, r.n_new);
                 if got[i].tokens != want {
                     return Err(format!("stream {i}: batched {:?} != serial {want:?}", got[i].tokens));
                 }

@@ -1,0 +1,254 @@
+//! Sliding-window KV eviction: the property harness for the memory-
+//! management subsystem (DESIGN.md §13).
+//!
+//! Four invariants anchor eviction, each checked after *every* append of
+//! a randomized schedule:
+//!
+//! 1. **Resident set** — always `sinks ∪ last-window` at block
+//!    granularity, reconstructed here by an independent oracle.
+//! 2. **Bit-identity** — gather after eviction equals the gather of an
+//!    unevicted reference stream restricted to the resident set, bit for
+//!    bit (evicting the past never re-represents what remains).
+//! 3. **Bounded storage** — resident `storage_bits` never exceeds the
+//!    sink + window budget, no matter how long the logical sequence grows.
+//! 4. **Position bookkeeping** — `evicted()` is monotone and the
+//!    `gap_row()/evicted()` mapping recovers exactly the oracle's absolute
+//!    positions (absolute positions never regress).
+//!
+//! Plus the boundary cases the block math invites: non-block-aligned
+//! sinks (the straddling block must be retained whole) and an fp32 tail
+//! adjacent to the eviction frontier (a token can never be evicted before
+//! it has been flushed) — and the long-sequence acceptance run: a
+//! windowed stream decodes to 4× the model's `max_seq` untruncated with
+//! resident storage pinned under the budget.
+
+use stamp::kvcache::{EvictionPolicy, KvCache, KvCacheConfig, KvStream};
+use stamp::model::{FpHook, Gpt, GptConfig};
+use stamp::stamp::SeqTransformKind;
+use stamp::tensor::Tensor;
+use stamp::testkit;
+
+/// Independent oracle for the resident set: position `p` of a `len`-token
+/// stream survives iff its block holds a sink token, is not yet
+/// finalized (the fp32 tail), or still overlaps the last `window` tokens.
+fn expected_resident(len: usize, sink_tokens: usize, window: usize, block: usize) -> Vec<usize> {
+    let sink_span = sink_tokens.div_ceil(block) * block;
+    let finalized = (len / block) * block;
+    (0..len)
+        .filter(|&p| {
+            let b_start = (p / block) * block;
+            let b_end = b_start + block;
+            b_start < sink_span || b_end > finalized || b_end + window > len
+        })
+        .collect()
+}
+
+#[derive(Debug)]
+struct EvictCase {
+    d: usize,
+    block: usize,
+    sink: usize,
+    window: usize,
+    packed: bool,
+    lp: u32,
+    transform: SeqTransformKind,
+    chunks: Vec<usize>,
+    seed: u64,
+}
+
+#[test]
+fn property_resident_set_bit_identity_storage_and_positions() {
+    testkit::check(
+        "kv-eviction-invariants",
+        24,
+        0xE71C7,
+        |g| {
+            let block = g.pow2_in(2, 16);
+            let n_chunks = g.usize_in(1, 24);
+            EvictCase {
+                d: g.usize_in(1, 12),
+                block,
+                sink: g.usize_in(0, 2 * block + 3),
+                window: block + g.usize_in(0, 40),
+                packed: g.usize_in(0, 1) == 1,
+                lp: if g.usize_in(0, 1) == 0 { 4 } else { 8 },
+                transform: match g.usize_in(0, 2) {
+                    0 => SeqTransformKind::Identity,
+                    1 => SeqTransformKind::HaarDwt,
+                    _ => SeqTransformKind::Dct,
+                },
+                chunks: (0..n_chunks).map(|_| g.usize_in(1, 7)).collect(),
+                seed: g.rng.next_u64(),
+            }
+        },
+        |c| {
+            let cfg = if c.packed {
+                // sinks ≤ hp_tokens boundary rule: pin the hp prefix to
+                // the sink prefix, exactly the two-level mapping.
+                KvCacheConfig::two_level(c.sink, 8, c.lp, c.block).with_transform(c.transform)
+            } else {
+                KvCacheConfig { block: c.block, ..KvCacheConfig::fp32() }
+            };
+            let mut st = KvStream::new(cfg.clone().with_window(c.sink, c.window));
+            let mut reference = KvStream::new(cfg);
+            let total: usize = c.chunks.iter().sum();
+            let x = Tensor::randn(&[total, c.d], c.seed);
+            let sink_span = c.sink.div_ceil(c.block) * c.block;
+            let worst_row = if c.packed {
+                (8usize.max(c.lp as usize) * c.d + 32).max(32 * c.d)
+            } else {
+                32 * c.d
+            };
+            let budget = (sink_span + c.window + c.block) * worst_row;
+            let mut off = 0usize;
+            let mut prev_evicted = 0usize;
+            for &n in &c.chunks {
+                st.append(&x.slice_rows(off, off + n));
+                reference.append(&x.slice_rows(off, off + n));
+                off += n;
+                let expected = expected_resident(off, c.sink, c.window, c.block);
+                // (1) + (4): the gap mapping reproduces the oracle's
+                // absolute positions exactly.
+                if st.resident_len() != expected.len() {
+                    return Err(format!(
+                        "len {off}: resident {} != oracle {}",
+                        st.resident_len(),
+                        expected.len()
+                    ));
+                }
+                let mapped: Vec<usize> = (0..st.resident_len())
+                    .map(|r| if r < st.gap_row() { r } else { r + st.evicted() })
+                    .collect();
+                if mapped != expected {
+                    return Err(format!("len {off}: positions {mapped:?} != {expected:?}"));
+                }
+                if st.evicted() < prev_evicted {
+                    return Err(format!("len {off}: evicted() regressed"));
+                }
+                prev_evicted = st.evicted();
+                // (2): bit-identity against the unevicted reference,
+                // restricted to the resident set.
+                let g = st.gather();
+                let r = reference.gather();
+                for (row, &abs) in expected.iter().enumerate() {
+                    if g.row(row) != r.row(abs) {
+                        return Err(format!("len {off}: resident row {row} (abs {abs}) diverged"));
+                    }
+                }
+                // (3): resident residency + storage bounded by the
+                // sink + window budget at every instant.
+                if st.resident_len() >= sink_span + c.window + c.block {
+                    return Err(format!("len {off}: residency {} unbounded", st.resident_len()));
+                }
+                if st.storage_bits() > budget {
+                    return Err(format!(
+                        "len {off}: storage {} exceeds budget {budget}",
+                        st.storage_bits()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn non_block_aligned_sinks_retain_the_straddling_block_whole() {
+    // sink_tokens 12 over 8-token blocks: the sink span rounds up to 16 —
+    // the block holding tokens 12..16 straddles the boundary and must
+    // never be evicted, while block [16,24) evicts on schedule.
+    let (block, sink, window) = (8usize, 12usize, 8usize);
+    let x = Tensor::randn(&[96, 6], 41);
+    let mut st = KvStream::new(KvCacheConfig::two_level(12, 8, 4, block).with_window(sink, window));
+    let mut reference = KvStream::new(KvCacheConfig::two_level(12, 8, 4, block));
+    for i in 0..96 {
+        st.append(&x.slice_rows(i, i + 1));
+        reference.append(&x.slice_rows(i, i + 1));
+        // Tokens 0..16 stay resident at every length once appended.
+        let keep = 16.min(st.resident_len());
+        let g = st.gather();
+        let r = reference.gather();
+        for p in 0..keep.min(i + 1) {
+            assert_eq!(g.row(p), r.row(p), "len {}: sink-span row {p} must stay", i + 1);
+        }
+    }
+    assert_eq!(st.gap_row(), 16, "gap sits at the block-rounded sink span");
+    assert!(st.evicted() > 0);
+    // The straddle rows 12..16 are hp-boundary rows of a *retained* block:
+    // stored at lp (outside hp_tokens = 12) but never evicted.
+    let expected = expected_resident(96, sink, window, block);
+    assert_eq!(st.resident_len(), expected.len());
+    assert!(expected.contains(&12) && expected.contains(&15));
+}
+
+#[test]
+fn fp32_tail_is_never_evicted_before_flush() {
+    // window == block keeps the recency region minimal: the tail sits
+    // directly against the eviction frontier, and every tail row must
+    // still read back bit-exactly (only *finalized* blocks evict).
+    let (block, window) = (4usize, 4usize);
+    for packed in [false, true] {
+        let base = if packed {
+            KvCacheConfig::two_level(0, 8, 8, block)
+        } else {
+            KvCacheConfig { block, ..KvCacheConfig::fp32() }
+        };
+        let mut st = KvStream::new(base.with_window(0, window));
+        let x = Tensor::randn(&[43, 5], 43);
+        for i in 0..43 {
+            st.append(&x.slice_rows(i, i + 1));
+            let tail = (i + 1) % block;
+            let g = st.gather();
+            for t in 0..tail {
+                let row = g.rows() - tail + t;
+                let abs = i + 1 - tail + t;
+                assert_eq!(g.row(row), x.row(abs), "len {}: tail row {t} must be exact", i + 1);
+            }
+        }
+        // 43 = 10 blocks + 3 tail: blocks [0,36) are out (end + 4 ≤ 43
+        // holds through end 36 → eviction stops at block [36,40)).
+        assert_eq!(st.evicted(), 36, "packed={packed}");
+        assert_eq!(st.resident_len(), 7, "packed={packed}");
+    }
+}
+
+#[test]
+fn windowed_decode_reaches_4x_max_seq_with_bounded_resident_storage() {
+    // Acceptance: a windowed stream decodes to ≥ 4× the model's max_seq
+    // without truncation, and the resident cache footprint stays pinned
+    // under the sink + window budget the whole way.
+    let gpt = Gpt::new(GptConfig::tiny(), 61);
+    let kv = KvCacheConfig::two_level(16, 8, 4, 8).with_window(16, 48);
+    assert_eq!(kv.eviction, EvictionPolicy::SlidingWindow { sink_tokens: 16, window: 48 });
+    let bound = kv.resident_bound().unwrap();
+    assert!(bound <= gpt.cfg.max_seq);
+    let mut cache = KvCache::new(gpt.cfg.n_layers, kv);
+    let prompt: Vec<u32> = (0..8).map(|i| ((i * 11 + 2) % 70) as u32).collect();
+    let n_new = 4 * gpt.cfg.max_seq;
+    let out = gpt.generate_greedy(&FpHook, &prompt, n_new, &mut cache);
+    assert_eq!(out.len(), n_new);
+    assert!(cache.len() >= 4 * gpt.cfg.max_seq, "logical length passes 4× max_seq untruncated");
+    assert!(cache.resident_len() < bound);
+    // Budget: every resident row costs at most max(hp,lp)·d + 32 bits
+    // packed, or 32·d in the fp32 tail — per stream, 2 streams per layer.
+    let d = gpt.cfg.d_model;
+    let worst_row = (8 * d + 32).max(32 * d);
+    assert!(cache.storage_bits() <= gpt.cfg.n_layers * 2 * bound * worst_row);
+    // Steady state: decoding further cannot grow residency or storage
+    // past the same budget.
+    let mut next = *out.last().unwrap();
+    for _ in 0..64 {
+        let logits = gpt.decode_step(&FpHook, next, &mut cache);
+        next = logits.row(0).iter().enumerate().fold(0u32, |b, (i, &v)| {
+            if v > logits.at(0, b as usize) {
+                i as u32
+            } else {
+                b
+            }
+        });
+        assert!(cache.resident_len() < bound);
+        assert!(cache.storage_bits() <= gpt.cfg.n_layers * 2 * bound * worst_row);
+    }
+    // The quantized windowed cache still beats fp32 on resident bits.
+    assert!(cache.average_storage_bits() < 32.0);
+}
