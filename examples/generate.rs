@@ -14,6 +14,7 @@ use std::time::Instant;
 fn main() {
     // A briefly-trained tiny GPT (same builder the eval harnesses use).
     let (gpt, corpus) = stamp::train::build_trained_model("tiny", 40);
+    let gpt = std::sync::Arc::new(gpt);
     let seqs = corpus.sequences(32);
     let prompt: Vec<u32> = seqs[0][..16].to_vec();
     let n_new = 64usize;
@@ -80,7 +81,7 @@ fn main() {
         })
         .collect();
     let serial_dt = t0.elapsed();
-    let engine = DecodeEngine::new(&gpt, KvCacheConfig::fp32(), Sampling::Greedy);
+    let mut engine = DecodeEngine::new(gpt.clone(), KvCacheConfig::fp32(), Sampling::Greedy);
     let t0 = Instant::now();
     let batched = engine.run_fp(&reqs).expect("engine run");
     let batched_dt = t0.elapsed();

@@ -21,6 +21,14 @@ use stamp::transforms::{
 use stamp::transforms::FeatureTransform;
 use std::time::{Duration, Instant};
 
+/// 95th-percentile of a set of queue waits, in microseconds.
+fn p95_us(waits: &[Duration]) -> f64 {
+    let mut us: Vec<f64> = waits.iter().map(|d| d.as_secs_f64() * 1e6).collect();
+    us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((us.len() as f64 * 0.95).ceil() as usize).max(1) - 1;
+    us[idx.min(us.len() - 1)]
+}
+
 fn main() {
     let mut h = Harness::from_env();
     println!(
@@ -108,7 +116,7 @@ fn main() {
     // come from running this binary under STAMP_THREADS=1 / default, like
     // every other section.
     Harness::header("autoregressive decode (tiny GPT, prefill 16 + 48 tokens)");
-    let gpt = Gpt::new(GptConfig::tiny(), 0xD3C0);
+    let gpt = std::sync::Arc::new(Gpt::new(GptConfig::tiny(), 0xD3C0));
     let prompt: Vec<u32> = (0..16).map(|i| ((i * 5) % 72) as u32).collect();
     let n_new = 48usize;
     let st = h.bench("decode 48 tok (fp32 cache)", || {
@@ -161,7 +169,7 @@ fn main() {
             .iter()
             .map(|p| GenRequest { prompt: p.clone(), n_new: n_new_b })
             .collect();
-        let engine = DecodeEngine::new(&gpt, KvCacheConfig::fp32(), Sampling::Greedy)
+        let mut engine = DecodeEngine::new(gpt.clone(), KvCacheConfig::fp32(), Sampling::Greedy)
             .with_decode_batch(batch);
         let st = h.bench(&format!("batched decode b={batch} (fp32 kv)"), || {
             engine.run_fp(&reqs).unwrap()
@@ -174,8 +182,8 @@ fn main() {
     }
     let reqs8: Vec<GenRequest> =
         prompts.iter().map(|p| GenRequest { prompt: p.clone(), n_new: n_new_b }).collect();
-    let engine = DecodeEngine::new(
-        &gpt,
+    let mut engine = DecodeEngine::new(
+        gpt.clone(),
         KvCacheConfig::two_level(8, 8, 4, 16),
         Sampling::Greedy,
     )
@@ -224,6 +232,64 @@ fn main() {
         out
     });
     println!("    -> {:.0} tok/s, resident {} bits", st.throughput(n_long as f64), bits.get());
+
+    // Continuous decode (PR 6): eight ragged streams contending for four
+    // engine slots. "One-shot waves" is the PR 4 serving behavior — a
+    // full wave of 4 runs to completion before the next wave is seated,
+    // so every wave is dominated by its slowest stream and wave 2 queues
+    // behind the whole of wave 1. "In-flight admission" refills a slot
+    // the moment a stream retires. Same total work, so in-flight must
+    // come out ≥ one-shot on aggregate tokens/sec (CI asserts the rows
+    // exist; EXPERIMENTS.md records the ratio), and p95 queue wait — the
+    // admission latency of the 95th-percentile request — drops from
+    // "an entire wave" to "one retirement".
+    Harness::header("continuous decode (tiny GPT, 8 ragged streams, 4 slots)");
+    let budgets: Vec<usize> = (0..8).map(|i| 8 + 4 * i).collect();
+    let creqs: Vec<GenRequest> = prompts
+        .iter()
+        .zip(&budgets)
+        .map(|(p, &n)| GenRequest { prompt: p.clone(), n_new: n })
+        .collect();
+    let total_tokens: usize = budgets.iter().sum();
+    let waits = std::cell::RefCell::new(Vec::new());
+    let mut engine = DecodeEngine::new(gpt.clone(), KvCacheConfig::fp32(), Sampling::Greedy)
+        .with_max_inflight(4);
+    let st = h.bench("one-shot waves of 4 (fp32 kv)", || {
+        let t0 = Instant::now();
+        let mut w = vec![Duration::ZERO; 4];
+        let a = engine.run_fp(&creqs[..4]).unwrap();
+        w.resize(8, t0.elapsed());
+        let b = engine.run_fp(&creqs[4..]).unwrap();
+        *waits.borrow_mut() = w;
+        (a, b)
+    });
+    println!(
+        "    -> {:.0} tok/s aggregate, p95 queue wait {:.0} us",
+        st.throughput(total_tokens as f64),
+        p95_us(&waits.borrow())
+    );
+    let st = h.bench("in-flight admission (fp32 kv)", || {
+        let t0 = Instant::now();
+        let mut w = vec![Duration::ZERO; creqs.len()];
+        let mut next = 0usize;
+        let mut out = Vec::new();
+        while next < creqs.len() || engine.has_work() {
+            while next < creqs.len() && engine.free_slots() > 0 {
+                w[next] = t0.elapsed();
+                engine.admit(creqs[next].clone()).unwrap();
+                next += 1;
+            }
+            engine.step(&FpHook);
+            out.extend(engine.drain());
+        }
+        *waits.borrow_mut() = w;
+        out
+    });
+    println!(
+        "    -> {:.0} tok/s aggregate, p95 queue wait {:.0} us",
+        st.throughput(total_tokens as f64),
+        p95_us(&waits.borrow())
+    );
 
     Harness::header("coordinator hot path");
     let st = h.bench("batcher push+flush (batch 8)", || {

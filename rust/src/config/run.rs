@@ -50,8 +50,9 @@ pub struct ServeSpec {
 /// budget, the batched-engine and sampling knobs, and the KV-cache policy
 /// handed to [`crate::kvcache::KvCacheConfig`]. TOML keys mirror the
 /// field paths: `max_new_tokens`, `decode_batch`, `temperature`, `top_k`,
-/// `seed`, `kv.hp_tokens`, `kv.hp_bits`, `kv.lp_bits`, `kv.block`,
-/// `kv.packed`, `kv.transform`, `kv.window`, `kv.sink_tokens`.
+/// `seed`, `max_inflight`, `admit_deadline_ms`, `kv.hp_tokens`,
+/// `kv.hp_bits`, `kv.lp_bits`, `kv.block`, `kv.packed`, `kv.transform`,
+/// `kv.window`, `kv.sink_tokens`.
 #[derive(Clone, Debug)]
 pub struct GenerateSpec {
     /// Per-request cap on generated tokens.
@@ -68,6 +69,15 @@ pub struct GenerateSpec {
     /// Sampler seed — every stream draws from its own generator seeded
     /// here, so batched runs stay deterministic.
     pub seed: u64,
+    /// Slots in the variant's resident [`crate::decode::DecodeEngine`]:
+    /// the most streams that can be in flight at once under continuous
+    /// admission (and the most a one-shot batch can seat in one wave).
+    pub max_inflight: usize,
+    /// Continuous-admission deadline: a request still waiting for a free
+    /// engine slot after this many milliseconds is shed with an error
+    /// instead of queueing indefinitely. `0` (the default) disables the
+    /// deadline.
+    pub admit_deadline_ms: u64,
     /// Leading (attention-sink) positions stored at `kv_hp_bits`.
     pub kv_hp_tokens: usize,
     pub kv_hp_bits: u32,
@@ -125,6 +135,16 @@ impl GenerateSpec {
         // fail here, recoverably, instead of panicking at registration.
         cfg.check().map_err(crate::error::Error::msg)?;
         Ok(cfg)
+    }
+
+    /// The admission deadline as the scheduler consumes it: `None` when
+    /// disabled (`admit_deadline_ms = 0`).
+    pub fn admit_deadline(&self) -> Option<std::time::Duration> {
+        if self.admit_deadline_ms == 0 {
+            None
+        } else {
+            Some(std::time::Duration::from_millis(self.admit_deadline_ms))
+        }
     }
 
     /// Resolve the sampling knobs into the decode engine's policy:
@@ -185,6 +205,8 @@ impl RunConfig {
                 temperature: 0.0,
                 top_k: 0,
                 seed: 0x5EED,
+                max_inflight: 8,
+                admit_deadline_ms: 0,
                 kv_hp_tokens: 64,
                 kv_hp_bits: 8,
                 kv_lp_bits: 4,
@@ -240,6 +262,12 @@ impl RunConfig {
                     as f32,
                 top_k: doc.int_or("generate", "top_k", d.generate.top_k as i64) as usize,
                 seed: doc.int_or("generate", "seed", d.generate.seed as i64) as u64,
+                max_inflight: doc
+                    .int_or("generate", "max_inflight", d.generate.max_inflight as i64)
+                    .max(1) as usize,
+                admit_deadline_ms: doc
+                    .int_or("generate", "admit_deadline_ms", d.generate.admit_deadline_ms as i64)
+                    .max(0) as u64,
                 kv_hp_tokens: doc
                     .int_or("generate", "kv.hp_tokens", d.generate.kv_hp_tokens as i64)
                     as usize,
@@ -440,6 +468,28 @@ mod tests {
         // decode_batch is clamped to ≥ 1 rather than panicking later.
         let cfg = RunConfig::from_toml_str("[generate]\ndecode_batch = 0\n").unwrap();
         assert_eq!(cfg.generate.decode_batch, 1);
+    }
+
+    #[test]
+    fn generate_admission_knobs_parse() {
+        // Defaults: 8 engine slots, no admission deadline.
+        let d = RunConfig::defaults();
+        assert_eq!(d.generate.max_inflight, 8);
+        assert_eq!(d.generate.admit_deadline_ms, 0);
+        assert_eq!(d.generate.admit_deadline(), None);
+        let cfg = RunConfig::from_toml_str(
+            "[generate]\nmax_inflight = 3\nadmit_deadline_ms = 250\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.generate.max_inflight, 3);
+        assert_eq!(
+            cfg.generate.admit_deadline(),
+            Some(std::time::Duration::from_millis(250))
+        );
+        // max_inflight is clamped to ≥ 1 rather than panicking at
+        // registration.
+        let cfg = RunConfig::from_toml_str("[generate]\nmax_inflight = 0\n").unwrap();
+        assert_eq!(cfg.generate.max_inflight, 1);
     }
 
     #[test]

@@ -48,14 +48,21 @@ impl DynamicBatcher {
         self.pending.len()
     }
 
-    /// Add a request; returns a full batch if `max_batch` was reached.
+    /// Add a request; returns a full batch if `max_batch` was reached —
+    /// or a partial one if the *oldest* pending request's flush deadline
+    /// has already passed. The deadline check makes a push count as a
+    /// clock tick: the router only polls deadlines on ingest timeouts, so
+    /// without it a request arriving exactly at (or after) the oldest
+    /// entry's deadline would ride along silently and the batch would
+    /// wait up to a full extra `max_wait` for the next quiet period
+    /// (pinned by `push_at_deadline_flushes_immediately`).
     pub fn push(&mut self, req: Request, now: Instant) -> Option<Batch> {
         debug_assert_eq!(req.variant, self.variant);
         self.pending.push_back(req);
         if self.pending.len() >= self.max_batch {
             return self.flush(now);
         }
-        None
+        self.poll(now)
     }
 
     /// Time-based flush: emit the partial batch if the oldest entry has
@@ -82,6 +89,80 @@ impl DynamicBatcher {
     /// Deadline for the next time-based flush (router sleep hint).
     pub fn next_deadline(&self) -> Option<Instant> {
         self.pending.front().map(|r| r.submitted + self.max_wait)
+    }
+}
+
+/// FIFO admission queue feeding a continuous-batching stream worker
+/// (PR 6): requests wait here until the decode engine has a free slot,
+/// in strict arrival order, bounded by `max_pending` (backpressure — a
+/// push past the bound is rejected back to the caller to shed) and an
+/// optional per-request admission deadline (a request that cannot be
+/// seated in time is expired out rather than served arbitrarily late).
+///
+/// Pure logic — no threads, no engine handle — so fairness and bound
+/// invariants are directly property-testable; the generic payload keeps
+/// the tests free of coordinator plumbing.
+pub struct AdmissionQueue<T> {
+    max_pending: usize,
+    admit_deadline: Option<Duration>,
+    pending: VecDeque<(T, Instant)>,
+}
+
+impl<T> AdmissionQueue<T> {
+    /// `admit_deadline = None` disables expiry (requests wait as long as
+    /// it takes); `max_pending` is the backpressure bound (≥ 1).
+    pub fn new(max_pending: usize, admit_deadline: Option<Duration>) -> Self {
+        assert!(max_pending >= 1, "max_pending must be ≥ 1");
+        AdmissionQueue { max_pending, admit_deadline, pending: VecDeque::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Enqueue in arrival order; returns the item back when the queue is
+    /// at its backpressure bound (the caller sheds it with an error).
+    pub fn push(&mut self, item: T, now: Instant) -> Result<(), T> {
+        if self.pending.len() >= self.max_pending {
+            return Err(item);
+        }
+        self.pending.push_back((item, now));
+        Ok(())
+    }
+
+    /// Dequeue up to `free_slots` items, strictly FIFO — a younger
+    /// request can never jump an older one, regardless of how slots free
+    /// up (arrival-order fairness).
+    pub fn pop_ready(&mut self, free_slots: usize) -> Vec<(T, Instant)> {
+        let take = free_slots.min(self.pending.len());
+        self.pending.drain(..take).collect()
+    }
+
+    /// Remove and return every entry whose admission deadline has passed
+    /// (the caller sheds them). FIFO arrival means the front is always
+    /// the earliest deadline, so expiry only ever pops from the front.
+    pub fn expire(&mut self, now: Instant) -> Vec<(T, Instant)> {
+        let Some(d) = self.admit_deadline else { return Vec::new() };
+        let mut out = Vec::new();
+        while let Some((_, submitted)) = self.pending.front() {
+            if now.duration_since(*submitted) >= d {
+                out.push(self.pending.pop_front().expect("front exists"));
+            } else {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Earliest pending expiry (stream-worker sleep hint); `None` without
+    /// a deadline or pending work.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        let d = self.admit_deadline?;
+        self.pending.front().map(|(_, submitted)| *submitted + d)
     }
 }
 
@@ -119,6 +200,29 @@ mod tests {
         let later = t0 + Duration::from_millis(11);
         let batch = b.poll(later).expect("deadline passed");
         assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn push_at_deadline_flushes_immediately() {
+        // Regression (PR 6): the router polls deadlines only on ingest
+        // *timeouts*, so under continuous arrivals a push landing exactly
+        // at — or after — the oldest request's flush deadline used to
+        // ride along silently and wait up to a full extra max_wait. A
+        // push must count as a clock tick.
+        let t0 = Instant::now();
+        let max_wait = Duration::from_millis(5);
+        let mut b = DynamicBatcher::new("v", 8, max_wait);
+        assert!(b.push(req(1, "v", t0), t0).is_none());
+        // Exactly at the oldest entry's deadline…
+        let batch = b.push(req(2, "v", t0 + max_wait), t0 + max_wait).expect("deadline flush");
+        assert_eq!(batch.len(), 2, "both the old and the arriving request flush together");
+        assert_eq!(b.pending(), 0);
+        // …and past it.
+        let t1 = t0 + Duration::from_millis(100);
+        assert!(b.push(req(3, "v", t1), t1).is_none(), "a fresh request alone must wait");
+        let late = t1 + max_wait + Duration::from_millis(3);
+        let batch = b.push(req(4, "v", late), late).expect("past-deadline flush");
+        assert_eq!(batch.len(), 2);
     }
 
     #[test]
@@ -184,6 +288,114 @@ mod tests {
                         b.pending(),
                         next_id
                     ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    // ---- AdmissionQueue ----------------------------------------------
+
+    #[test]
+    fn admission_queue_is_fifo_and_bounded() {
+        let t0 = Instant::now();
+        let mut q: AdmissionQueue<u64> = AdmissionQueue::new(3, None);
+        assert!(q.push(1, t0).is_ok());
+        assert!(q.push(2, t0).is_ok());
+        assert!(q.push(3, t0).is_ok());
+        // Backpressure: the bound rejects, returning the item to shed.
+        assert_eq!(q.push(4, t0), Err(4));
+        // Strict FIFO, capped by free slots.
+        let got: Vec<u64> = q.pop_ready(2).into_iter().map(|(v, _)| v).collect();
+        assert_eq!(got, vec![1, 2]);
+        assert_eq!(q.len(), 1);
+        // A freed entry makes room again.
+        assert!(q.push(5, t0).is_ok());
+        let got: Vec<u64> = q.pop_ready(10).into_iter().map(|(v, _)| v).collect();
+        assert_eq!(got, vec![3, 5]);
+        assert!(q.is_empty());
+        assert!(q.pop_ready(4).is_empty());
+    }
+
+    #[test]
+    fn admission_queue_expires_only_past_deadline() {
+        let t0 = Instant::now();
+        let d = Duration::from_millis(10);
+        let mut q: AdmissionQueue<u64> = AdmissionQueue::new(8, Some(d));
+        q.push(1, t0).unwrap();
+        q.push(2, t0 + Duration::from_millis(6)).unwrap();
+        assert_eq!(q.next_deadline(), Some(t0 + d));
+        assert!(q.expire(t0 + Duration::from_millis(9)).is_empty(), "nothing due yet");
+        // At t0+10 only the first entry is due; the second still has 6ms.
+        let shed: Vec<u64> = q.expire(t0 + d).into_iter().map(|(v, _)| v).collect();
+        assert_eq!(shed, vec![1]);
+        assert_eq!(q.len(), 1);
+        let shed: Vec<u64> = q.expire(t0 + Duration::from_millis(30)).into_iter().map(|(v, _)| v).collect();
+        assert_eq!(shed, vec![2]);
+        // No deadline → never expires.
+        let mut q: AdmissionQueue<u64> = AdmissionQueue::new(8, None);
+        q.push(9, t0).unwrap();
+        assert!(q.expire(t0 + Duration::from_secs(3600)).is_empty());
+        assert_eq!(q.next_deadline(), None);
+    }
+
+    #[test]
+    fn property_admission_queue_invariants() {
+        // Under random push/pop/expire interleavings:
+        //   (1) queue length never exceeds max_pending;
+        //   (2) admitted order is strictly FIFO (ids increasing);
+        //   (3) nothing lost: admitted + expired + rejected + pending ==
+        //       pushed (every request is accounted for exactly once).
+        crate::testkit::check(
+            "admission-queue-invariants",
+            50,
+            0xAD417,
+            |g| {
+                let max_pending = g.usize_in(1, 6);
+                let deadline_ms = g.usize_in(0, 8); // 0 = no deadline
+                let ops: Vec<(u8, usize)> = (0..g.usize_in(1, 60))
+                    .map(|_| ((g.usize_in(0, 3)) as u8, g.usize_in(0, 3)))
+                    .collect();
+                (max_pending, deadline_ms, ops)
+            },
+            |(max_pending, deadline_ms, ops)| {
+                let t0 = Instant::now();
+                let deadline = (*deadline_ms > 0)
+                    .then(|| Duration::from_millis(*deadline_ms as u64));
+                let mut q: AdmissionQueue<u64> = AdmissionQueue::new(*max_pending, deadline);
+                let mut clock = t0;
+                let (mut pushed, mut admitted, mut expired, mut rejected) = (0u64, 0u64, 0u64, 0u64);
+                let mut last_admitted: Option<u64> = None;
+                for (op, arg) in ops {
+                    clock += Duration::from_millis(2);
+                    match op {
+                        0 | 1 => {
+                            pushed += 1;
+                            match q.push(pushed, clock) {
+                                Ok(()) => {}
+                                Err(_) => rejected += 1,
+                            }
+                        }
+                        2 => {
+                            for (id, _) in q.pop_ready(*arg) {
+                                if let Some(prev) = last_admitted {
+                                    if id <= prev {
+                                        return Err(format!("FIFO violated: {id} after {prev}"));
+                                    }
+                                }
+                                last_admitted = Some(id);
+                                admitted += 1;
+                            }
+                        }
+                        _ => expired += q.expire(clock).len() as u64,
+                    }
+                    if q.len() > *max_pending {
+                        return Err(format!("bound violated: {} > {max_pending}", q.len()));
+                    }
+                }
+                let accounted = admitted + expired + rejected + q.len() as u64;
+                if accounted != pushed {
+                    return Err(format!("lost requests: {accounted} accounted != {pushed} pushed"));
                 }
                 Ok(())
             },

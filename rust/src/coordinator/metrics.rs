@@ -14,6 +14,17 @@ pub struct VariantMetrics {
     pub service_us_total: AtomicU64,
     pub batch_size_total: AtomicU64,
     pub queue_depth: AtomicU64,
+    /// Streams seated into a decode-engine slot by the continuous-batching
+    /// scheduler (PR 6). Monotone counter.
+    pub admitted: AtomicU64,
+    /// Requests shed by backpressure (admission queue full) or an expired
+    /// admission deadline. Monotone counter — it only ever grows, so a
+    /// dashboard delta is always the shed *rate*.
+    pub shed: AtomicU64,
+    /// Streams currently in flight inside the engine (gauge).
+    pub inflight: AtomicU64,
+    /// Total µs admitted streams spent waiting in the admission queue.
+    pub admit_wait_us_total: AtomicU64,
 }
 
 impl VariantMetrics {
@@ -23,6 +34,26 @@ impl VariantMetrics {
         self.batch_size_total.fetch_add(batch_size as u64, Ordering::Relaxed);
         self.queued_us_total.fetch_add(queued_us * batch_size as u64, Ordering::Relaxed);
         self.service_us_total.fetch_add(service_us * batch_size as u64, Ordering::Relaxed);
+    }
+
+    /// One stream seated into an engine slot after `wait_us` in the
+    /// admission queue.
+    pub fn record_admit(&self, wait_us: u64) {
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        self.admit_wait_us_total.fetch_add(wait_us, Ordering::Relaxed);
+    }
+
+    /// One request shed (backpressure bound or admission deadline).
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn mean_admit_wait_us(&self) -> f64 {
+        let a = self.admitted.load(Ordering::Relaxed);
+        if a == 0 {
+            return 0.0;
+        }
+        self.admit_wait_us_total.load(Ordering::Relaxed) as f64 / a as f64
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -78,7 +109,7 @@ impl Metrics {
         for n in names {
             let m = &r[n];
             out.push_str(&format!(
-                "{n}: reqs={} batches={} errs={} mean_batch={:.2} queue={:.0}µs service={:.0}µs depth={}\n",
+                "{n}: reqs={} batches={} errs={} mean_batch={:.2} queue={:.0}µs service={:.0}µs depth={} admitted={} shed={} inflight={} admit_wait={:.0}µs\n",
                 m.requests.load(Ordering::Relaxed),
                 m.batches.load(Ordering::Relaxed),
                 m.errors.load(Ordering::Relaxed),
@@ -86,6 +117,10 @@ impl Metrics {
                 m.mean_queued_us(),
                 m.mean_service_us(),
                 m.queue_depth.load(Ordering::Relaxed),
+                m.admitted.load(Ordering::Relaxed),
+                m.shed.load(Ordering::Relaxed),
+                m.inflight.load(Ordering::Relaxed),
+                m.mean_admit_wait_us(),
             ));
         }
         out
@@ -117,6 +152,55 @@ mod tests {
         let b = m.variant("x");
         a.requests.fetch_add(1, Ordering::Relaxed);
         assert_eq!(b.requests.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn admission_counters_record_and_average() {
+        let m = Metrics::new();
+        let v = m.variant("gen");
+        v.record_admit(100);
+        v.record_admit(50);
+        v.record_shed();
+        assert_eq!(v.admitted.load(Ordering::Relaxed), 2);
+        assert_eq!(v.shed.load(Ordering::Relaxed), 1);
+        assert!((v.mean_admit_wait_us() - 75.0).abs() < 1e-9);
+        let snap = m.snapshot();
+        assert!(snap.contains("admitted=2") && snap.contains("shed=1"), "{snap}");
+    }
+
+    #[test]
+    fn shed_counter_is_monotone_under_concurrency() {
+        // The backpressure counter is cumulative: observed values from any
+        // thread form a non-decreasing sequence, and the final total is
+        // exact (no lost increments).
+        let m = std::sync::Arc::new(Metrics::new());
+        let writers: Vec<_> = (0..4)
+            .map(|_| {
+                let mc = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..500 {
+                        mc.variant("gen").record_shed();
+                    }
+                })
+            })
+            .collect();
+        let reader = {
+            let mc = m.clone();
+            std::thread::spawn(move || {
+                let v = mc.variant("gen");
+                let mut last = 0u64;
+                for _ in 0..2000 {
+                    let s = v.shed.load(Ordering::Relaxed);
+                    assert!(s >= last, "shed counter went backwards: {s} < {last}");
+                    last = s;
+                }
+            })
+        };
+        for h in writers {
+            h.join().unwrap();
+        }
+        reader.join().unwrap();
+        assert_eq!(m.variant("gen").shed.load(Ordering::Relaxed), 2000);
     }
 
     #[test]

@@ -15,6 +15,12 @@
 //!
 //! The [`Executor`] trait abstracts what a worker runs: the PJRT engine
 //! (AOT artifacts), the Rust-native quantized model, or a mock (tests).
+//!
+//! Generate variants can opt into a second, continuous path (PR 6): the
+//! router forwards their requests to a per-variant [`StreamWorker`] that
+//! feeds a *running* decode engine through a bounded [`AdmissionQueue`] —
+//! streams are admitted as slots free up and retire independently instead
+//! of travelling as a fixed batch (see [`StreamExecutor`]).
 
 mod batcher;
 mod metrics;
@@ -22,11 +28,11 @@ mod router;
 mod server;
 mod worker;
 
-pub use batcher::{Batch, DynamicBatcher};
+pub use batcher::{AdmissionQueue, Batch, DynamicBatcher};
 pub use metrics::{Metrics, VariantMetrics};
 pub use router::Router;
 pub use server::{Server, ServerHandle};
-pub use worker::{Executor, WorkerPool};
+pub use worker::{Executor, StreamExecutor, StreamIngest, StreamWorker, WorkerPool};
 
 use crate::tensor::Tensor;
 use std::sync::mpsc;

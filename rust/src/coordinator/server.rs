@@ -1,9 +1,13 @@
 //! Server: glues ingest → router → worker pool behind one thread, giving
 //! clients a simple blocking/async-ish `submit` + response channel API.
 
-use super::{Executor, Metrics, Request, Response, Router, WorkerPool};
+use super::{
+    Executor, Metrics, Request, Response, Router, StreamExecutor, StreamIngest, StreamWorker,
+    WorkerPool,
+};
 use crate::config::ServeSpec;
 use crate::tensor::Tensor;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -49,16 +53,52 @@ pub struct Server {
     handle: Arc<ServerHandle>,
     router_thread: std::thread::JoinHandle<()>,
     pool: Option<WorkerPool>,
+    stream_workers: Vec<StreamWorker>,
     shutdown_tx: Sender<Ingest>,
 }
 
 impl Server {
     pub fn start(spec: &ServeSpec, variants: &[&str], executor: Arc<dyn Executor>) -> Server {
+        Server::start_streaming(spec, variants, &[], executor, None, None)
+    }
+
+    /// Start with a continuous-batching path (PR 6): requests for a
+    /// variant in `stream_variants` bypass the batcher and go to a
+    /// dedicated [`StreamWorker`] that admits them into the running
+    /// decode engine behind `stream_executor` as slots free up. All other
+    /// variants take the classic batch → worker-pool path. The admission
+    /// queue bound is `spec.queue_depth`; `admit_deadline` (from
+    /// `[generate] admit_deadline_ms`) sheds requests that can't be
+    /// seated in time.
+    pub fn start_streaming(
+        spec: &ServeSpec,
+        variants: &[&str],
+        stream_variants: &[&str],
+        executor: Arc<dyn Executor>,
+        stream_executor: Option<Arc<dyn StreamExecutor>>,
+        admit_deadline: Option<Duration>,
+    ) -> Server {
+        assert!(
+            stream_variants.is_empty() || stream_executor.is_some(),
+            "stream variants require a StreamExecutor"
+        );
         let metrics = Arc::new(Metrics::new());
         let pool = WorkerPool::new(spec.workers, spec.queue_depth, executor, metrics.clone());
         let (tx, rx) = channel::<Ingest>();
-        let handle =
-            Arc::new(ServerHandle { tx: tx.clone(), next_id: AtomicU64::new(1), metrics });
+        let handle = Arc::new(ServerHandle {
+            tx: tx.clone(),
+            next_id: AtomicU64::new(1),
+            metrics: metrics.clone(),
+        });
+
+        let mut stream_workers = Vec::new();
+        let mut stream_tx: HashMap<String, Sender<StreamIngest>> = HashMap::new();
+        for v in stream_variants {
+            let sx = stream_executor.clone().expect("checked above");
+            let w = StreamWorker::new(v, sx, metrics.clone(), spec.queue_depth, admit_deadline);
+            stream_tx.insert(v.to_string(), w.clone_sender());
+            stream_workers.push(w);
+        }
 
         let mut router =
             Router::new(variants, spec.max_batch, Duration::from_micros(spec.max_wait_us));
@@ -66,23 +106,27 @@ impl Server {
         let router_thread = std::thread::Builder::new()
             .name("stamp-router".into())
             .spawn(move || {
-                router_loop(rx, &mut router, move |batch| {
+                router_loop(rx, &mut router, stream_tx, move |batch| {
                     let _ = pool_tx.send(batch);
                 })
             })
             .expect("spawn router");
 
-        Server { handle, router_thread, pool: Some(pool), shutdown_tx: tx }
+        Server { handle, router_thread, pool: Some(pool), stream_workers, shutdown_tx: tx }
     }
 
     pub fn handle(&self) -> Arc<ServerHandle> {
         self.handle.clone()
     }
 
-    /// Graceful shutdown: flush batchers, drain workers.
+    /// Graceful shutdown: flush batchers, drain stream workers (every
+    /// queued/in-flight stream finishes), drain pool workers.
     pub fn shutdown(mut self) {
         let _ = self.shutdown_tx.send(Ingest::Shutdown);
         self.router_thread.join().expect("router panicked");
+        for w in self.stream_workers.drain(..) {
+            w.shutdown();
+        }
         if let Some(pool) = self.pool.take() {
             pool.shutdown();
         }
@@ -92,6 +136,7 @@ impl Server {
 fn router_loop(
     rx: Receiver<Ingest>,
     router: &mut Router,
+    stream_tx: HashMap<String, Sender<StreamIngest>>,
     dispatch: impl Fn(super::Batch),
 ) {
     loop {
@@ -102,6 +147,11 @@ fn router_loop(
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
             Ok(Ingest::Req(req)) => {
+                // Streaming variants bypass the batcher entirely.
+                if let Some(stx) = stream_tx.get(&req.variant) {
+                    let _ = stx.send(StreamIngest::Req(req));
+                    continue;
+                }
                 let now = Instant::now();
                 match router.route(req, now) {
                     Ok(Some(batch)) => dispatch(batch),
@@ -195,6 +245,84 @@ mod tests {
         assert!(resp.output.is_ok());
         assert!(t0.elapsed() < Duration::from_secs(1));
         server.shutdown();
+    }
+
+    /// Two-slot streaming engine: ×3, finishes every in-flight stream on
+    /// each step.
+    #[derive(Default)]
+    struct TripleStream {
+        state: std::sync::Mutex<(u64, Vec<(u64, Tensor)>)>,
+    }
+
+    impl StreamExecutor for TripleStream {
+        fn free_slots(&self, _v: &str) -> usize {
+            2 - self.state.lock().unwrap().1.len()
+        }
+
+        fn admit(&self, _v: &str, input: &Tensor) -> Result<u64, String> {
+            let mut st = self.state.lock().unwrap();
+            if st.1.len() >= 2 {
+                return Err("no free slot".into());
+            }
+            let id = st.0;
+            st.0 += 1;
+            st.1.push((id, input.clone()));
+            Ok(id)
+        }
+
+        fn step(&self, _v: &str) -> Vec<(u64, Result<Tensor, String>)> {
+            let mut st = self.state.lock().unwrap();
+            st.1.drain(..).map(|(id, t)| (id, Ok(t.scale(3.0)))).collect()
+        }
+
+        fn has_work(&self, _v: &str) -> bool {
+            !self.state.lock().unwrap().1.is_empty()
+        }
+    }
+
+    #[test]
+    fn streaming_variant_serves_alongside_batch_variants() {
+        let server = Server::start_streaming(
+            &spec(),
+            &["fp"],
+            &["gen"],
+            doubling_executor(),
+            Some(Arc::new(TripleStream::default())),
+            None,
+        );
+        let h = server.handle();
+        let rxs: Vec<_> =
+            (0..6).map(|i| h.submit("gen", Tensor::full(&[1, 1], i as f32)).1).collect();
+        // Batch path still works while streams are in flight.
+        let fp = h.call("fp", Tensor::full(&[1, 1], 2.0), Duration::from_secs(5)).unwrap();
+        assert_eq!(fp.output.unwrap().at(0, 0), 4.0);
+        for (i, rx) in rxs.iter().enumerate() {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.output.unwrap().at(0, 0), 3.0 * i as f32);
+            assert_eq!(resp.batch_size, 1, "streams retire independently");
+        }
+        assert_eq!(h.metrics.variant("gen").admitted.load(Ordering::Relaxed), 6);
+        server.shutdown();
+    }
+
+    #[test]
+    fn streaming_shutdown_drains_pending_streams() {
+        let server = Server::start_streaming(
+            &spec(),
+            &["fp"],
+            &["gen"],
+            doubling_executor(),
+            Some(Arc::new(TripleStream::default())),
+            None,
+        );
+        let h = server.handle();
+        let rxs: Vec<_> =
+            (0..4).map(|i| h.submit("gen", Tensor::full(&[1, 1], i as f32)).1).collect();
+        server.shutdown();
+        for (i, rx) in rxs.iter().enumerate() {
+            let resp = rx.recv_timeout(Duration::from_secs(1)).unwrap();
+            assert_eq!(resp.output.unwrap().at(0, 0), 3.0 * i as f32);
+        }
     }
 
     #[test]

@@ -9,13 +9,18 @@
 //! run on that worker's thread alone, so batch-level and kernel-level
 //! parallelism never multiply into oversubscription.
 
-use super::{Batch, Metrics, Response};
+use super::batcher::AdmissionQueue;
+use super::{Batch, Metrics, Request, Response};
 use crate::tensor::Tensor;
+use std::collections::HashMap;
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
+    TrySendError,
+};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// What a worker runs on a batch of inputs (all same variant + shape).
 pub trait Executor: Send + Sync + 'static {
@@ -163,6 +168,230 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Batch>>>, executor: Arc<dyn Executor>, met
     }
 }
 
+/// The continuous-batching counterpart of [`Executor`] (PR 6): instead of
+/// one blocking call per formed batch, the executor exposes a *running*
+/// decode engine — streams are seated one at a time as slots free up,
+/// advanced collectively one step at a time, and handed back as each one
+/// finishes. [`crate::runtime::NativeExecutor`] implements this over its
+/// per-variant resident [`crate::decode::DecodeEngine`].
+///
+/// All methods take `&self`: implementations guard their engine with
+/// interior locking, and one [`StreamWorker`] thread drives one variant.
+pub trait StreamExecutor: Send + Sync + 'static {
+    /// Engine slots free for `variant` right now (0 for unknown /
+    /// non-streaming variants — nothing will ever be admitted).
+    fn free_slots(&self, variant: &str) -> usize;
+    /// Seat one request in a free slot; returns the engine-assigned
+    /// stream id. `Err` rejects just this request (malformed input, no
+    /// free slot) — in-flight streams are unaffected.
+    fn admit(&self, variant: &str, input: &Tensor) -> Result<u64, String>;
+    /// Advance every in-flight stream by one unit of work and return the
+    /// streams that finished, as (stream id, output).
+    fn step(&self, variant: &str) -> Vec<(u64, Result<Tensor, String>)>;
+    /// `true` while any stream is in flight for `variant`.
+    fn has_work(&self, variant: &str) -> bool;
+}
+
+/// Ingest message for a [`StreamWorker`].
+pub enum StreamIngest {
+    Req(Request),
+    Shutdown,
+}
+
+/// One thread continuously feeding one variant's decode engine
+/// (module-level scheduler of the PR 6 continuous-batching path):
+///
+/// ```text
+/// ingest ──► AdmissionQueue (FIFO, max_pending bound, admit deadline)
+///               │ pop_ready(free_slots)          │ expire(now)
+///               ▼                                ▼
+///        StreamExecutor::admit            shed (error response)
+///               │
+///        StreamExecutor::step ──► finished streams ──► responses
+/// ```
+///
+/// Scheduling policy: arrival-order fairness (strict FIFO admission),
+/// backpressure by shedding pushes past `max_pending`, and optional
+/// per-request admission deadlines. Every decision is surfaced through
+/// [`super::VariantMetrics`]: `admitted`/`admit_wait_us_total` per seated
+/// stream, `shed` (monotone) per rejected/expired request, `inflight` as
+/// the live gauge, and each completed stream records a size-1 batch with
+/// its true queued/service split. On shutdown the worker stops accepting
+/// work but keeps stepping until the queue and engine are empty — no
+/// stream is lost or double-retired (pinned by the drain test).
+pub struct StreamWorker {
+    tx: Sender<StreamIngest>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl StreamWorker {
+    pub fn new(
+        variant: &str,
+        executor: Arc<dyn StreamExecutor>,
+        metrics: Arc<Metrics>,
+        max_pending: usize,
+        admit_deadline: Option<Duration>,
+    ) -> Self {
+        let (tx, rx) = channel::<StreamIngest>();
+        let variant = variant.to_string();
+        let handle = std::thread::Builder::new()
+            .name(format!("stamp-stream-{variant}"))
+            .spawn(move || {
+                stream_worker_loop(rx, variant, executor, metrics, max_pending, admit_deadline)
+            })
+            .expect("spawn stream worker");
+        StreamWorker { tx, handle: Some(handle) }
+    }
+
+    /// Submit one request (never blocks; backpressure is applied by the
+    /// worker shedding past its queue bound).
+    pub fn submit(&self, req: Request) {
+        self.tx.send(StreamIngest::Req(req)).expect("stream worker shut down");
+    }
+
+    /// Clone the ingest sender (for the server's router thread).
+    pub fn clone_sender(&self) -> Sender<StreamIngest> {
+        self.tx.clone()
+    }
+
+    /// Stop accepting work, finish every queued and in-flight stream,
+    /// then join the worker thread.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(StreamIngest::Shutdown);
+        if let Some(h) = self.handle.take() {
+            h.join().expect("stream worker panicked");
+        }
+    }
+}
+
+fn stream_worker_loop(
+    rx: Receiver<StreamIngest>,
+    variant: String,
+    executor: Arc<dyn StreamExecutor>,
+    metrics: Arc<Metrics>,
+    max_pending: usize,
+    admit_deadline: Option<Duration>,
+) {
+    // Like pool workers: the thread owns its core at stream granularity;
+    // kernels it calls run serially (no inter-op × intra-op blowup).
+    crate::parallel::set_kernel_serial(true);
+    let vm = metrics.variant(&variant);
+    let mut queue: AdmissionQueue<Request> = AdmissionQueue::new(max_pending, admit_deadline);
+    // Stream id → (request, admitted-at), for routing finished streams
+    // back to their response channels. One entry per admission; removed
+    // exactly once on completion.
+    let mut inflight: HashMap<u64, (Request, Instant)> = HashMap::new();
+    let mut open = true;
+
+    let shed = |req: Request, msg: String| {
+        vm.record_shed();
+        vm.errors.fetch_add(1, Ordering::Relaxed);
+        let _ = req.respond.send(Response {
+            id: req.id,
+            variant: variant.clone(),
+            output: Err(msg),
+            queued_us: 0,
+            service_us: 0,
+            batch_size: 0,
+        });
+    };
+
+    loop {
+        // (1) Ingest. Block only when fully idle (nothing queued, nothing
+        // in flight); under load, drain whatever is waiting and keep
+        // stepping.
+        if open && queue.is_empty() && inflight.is_empty() {
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(StreamIngest::Req(r)) => {
+                    if let Err(r) = queue.push(r, Instant::now()) {
+                        shed(r, format!("admission queue full ({max_pending} pending): request shed"));
+                    }
+                }
+                Ok(StreamIngest::Shutdown) | Err(RecvTimeoutError::Disconnected) => open = false,
+                Err(RecvTimeoutError::Timeout) => {}
+            }
+        }
+        while open {
+            match rx.try_recv() {
+                Ok(StreamIngest::Req(r)) => {
+                    if let Err(r) = queue.push(r, Instant::now()) {
+                        shed(r, format!("admission queue full ({max_pending} pending): request shed"));
+                    }
+                }
+                Ok(StreamIngest::Shutdown) | Err(TryRecvError::Disconnected) => {
+                    open = false;
+                }
+                Err(TryRecvError::Empty) => break,
+            }
+        }
+
+        // (2) Shed requests whose admission deadline expired while they
+        // waited for a slot.
+        let now = Instant::now();
+        for (req, submitted) in queue.expire(now) {
+            let waited_us = now.duration_since(submitted).as_micros();
+            shed(req, format!("admission deadline exceeded after {waited_us}µs in queue"));
+        }
+
+        // (3) Admit in arrival order while the engine has free slots.
+        for (req, _submitted) in queue.pop_ready(executor.free_slots(&variant)) {
+            let now = Instant::now();
+            let wait_us = now.duration_since(req.submitted).as_micros() as u64;
+            match executor.admit(&variant, &req.input) {
+                Ok(sid) => {
+                    vm.record_admit(wait_us);
+                    vm.inflight.fetch_add(1, Ordering::Relaxed);
+                    inflight.insert(sid, (req, now));
+                }
+                Err(msg) => {
+                    vm.errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.respond.send(Response {
+                        id: req.id,
+                        variant: variant.clone(),
+                        output: Err(msg),
+                        queued_us: wait_us,
+                        service_us: 0,
+                        batch_size: 0,
+                    });
+                }
+            }
+        }
+
+        // (4) One engine step; deliver every stream that finished. Also
+        // step when *our* queue is blocked behind someone else's in-flight
+        // streams (the engine is shared state) — advancing them frees
+        // slots.
+        if !inflight.is_empty() || (!queue.is_empty() && executor.has_work(&variant)) {
+            for (sid, out) in executor.step(&variant) {
+                if let Some((req, admitted_at)) = inflight.remove(&sid) {
+                    vm.inflight.fetch_sub(1, Ordering::Relaxed);
+                    let done = Instant::now();
+                    let queued_us = admitted_at.duration_since(req.submitted).as_micros() as u64;
+                    let service_us = done.duration_since(admitted_at).as_micros() as u64;
+                    vm.record_batch(1, queued_us, service_us);
+                    if out.is_err() {
+                        vm.errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let _ = req.respond.send(Response {
+                        id: req.id,
+                        variant: variant.clone(),
+                        output: out,
+                        queued_us,
+                        service_us,
+                        batch_size: 1,
+                    });
+                }
+            }
+        }
+
+        // (5) Drain-on-shutdown: exit only once every accepted request has
+        // been answered.
+        if !open && queue.is_empty() && inflight.is_empty() {
+            return;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -247,6 +476,198 @@ mod tests {
             rx.recv_timeout(Duration::from_secs(5)).unwrap().output.unwrap();
         }
         pool.shutdown();
+    }
+
+    // ---- StreamWorker -------------------------------------------------
+
+    /// Deterministic fake engine: `slots` seats, each stream finishes
+    /// after `steps_to_finish` steps (optionally sleeping per step to
+    /// make queueing observable), output = input × 2.
+    struct MockStream {
+        slots: usize,
+        steps_to_finish: usize,
+        step_sleep: Duration,
+        state: Mutex<MockState>,
+    }
+
+    #[derive(Default)]
+    struct MockState {
+        next_id: u64,
+        inflight: Vec<(u64, Tensor, usize)>,
+        peak: usize,
+        admitted_inputs: Vec<f32>,
+    }
+
+    impl MockStream {
+        fn new(slots: usize, steps_to_finish: usize, step_sleep: Duration) -> Self {
+            MockStream { slots, steps_to_finish, step_sleep, state: Mutex::new(MockState::default()) }
+        }
+    }
+
+    impl StreamExecutor for MockStream {
+        fn free_slots(&self, _v: &str) -> usize {
+            self.slots - self.state.lock().unwrap().inflight.len()
+        }
+
+        fn admit(&self, _v: &str, input: &Tensor) -> Result<u64, String> {
+            let mut st = self.state.lock().unwrap();
+            if st.inflight.len() >= self.slots {
+                return Err("no free slot".into());
+            }
+            let id = st.next_id;
+            st.next_id += 1;
+            st.inflight.push((id, input.clone(), self.steps_to_finish));
+            st.admitted_inputs.push(input.at(0, 0));
+            let n = st.inflight.len();
+            st.peak = st.peak.max(n);
+            Ok(id)
+        }
+
+        fn step(&self, _v: &str) -> Vec<(u64, Result<Tensor, String>)> {
+            if !self.step_sleep.is_zero() {
+                std::thread::sleep(self.step_sleep);
+            }
+            let mut st = self.state.lock().unwrap();
+            let mut done = Vec::new();
+            st.inflight.retain_mut(|(id, input, left)| {
+                *left -= 1;
+                if *left == 0 {
+                    done.push((*id, Ok(input.scale(2.0))));
+                    false
+                } else {
+                    true
+                }
+            });
+            done
+        }
+
+        fn has_work(&self, _v: &str) -> bool {
+            !self.state.lock().unwrap().inflight.is_empty()
+        }
+    }
+
+    /// All requests share one response channel, so recv order IS the
+    /// completion order.
+    fn stream_reqs(n: usize) -> (Vec<Request>, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        let reqs = (0..n)
+            .map(|i| Request {
+                id: i as u64,
+                variant: "gen".into(),
+                input: Tensor::full(&[1, 1], i as f32),
+                submitted: Instant::now(),
+                respond: tx.clone(),
+            })
+            .collect();
+        (reqs, rx)
+    }
+
+    #[test]
+    fn stream_worker_is_fifo_and_never_exceeds_slot_cap() {
+        let metrics = Arc::new(Metrics::new());
+        let mock = Arc::new(MockStream::new(2, 2, Duration::ZERO));
+        let w = StreamWorker::new("gen", mock.clone(), metrics.clone(), 64, None);
+        let (reqs, rx) = stream_reqs(6);
+        for r in reqs {
+            w.submit(r);
+        }
+        let mut order = Vec::new();
+        for _ in 0..6 {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.output.unwrap().at(0, 0), 2.0 * resp.id as f32);
+            assert_eq!(resp.batch_size, 1);
+            order.push(resp.id);
+        }
+        w.shutdown();
+        // Arrival-order fairness under equal deadlines: equal-length
+        // streams admitted FIFO finish FIFO — nobody jumps the queue.
+        let sorted: Vec<u64> = (0..6).collect();
+        assert_eq!(order, sorted, "completion order must match arrival order");
+        let st = mock.state.lock().unwrap();
+        assert_eq!(st.admitted_inputs, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0], "admission is FIFO");
+        assert!(st.peak <= 2, "admitted past max_inflight: peak {}", st.peak);
+        let vm = metrics.variant("gen");
+        assert_eq!(vm.admitted.load(Ordering::Relaxed), 6);
+        assert_eq!(vm.inflight.load(Ordering::Relaxed), 0, "gauge returns to zero");
+        assert_eq!(vm.shed.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn stream_worker_sheds_past_queue_bound_without_losing_requests() {
+        let metrics = Arc::new(Metrics::new());
+        // One slot, slow steps, queue bound 1: a fast burst must shed.
+        let mock = Arc::new(MockStream::new(1, 20, Duration::from_millis(1)));
+        let w = StreamWorker::new("gen", mock, metrics.clone(), 1, None);
+        let (reqs, rx) = stream_reqs(8);
+        for r in reqs {
+            w.submit(r);
+        }
+        let mut served = 0;
+        let mut shed = 0;
+        for _ in 0..8 {
+            let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            match resp.output {
+                Ok(_) => served += 1,
+                Err(msg) => {
+                    assert!(msg.contains("admission queue full"), "{msg}");
+                    shed += 1;
+                }
+            }
+        }
+        w.shutdown();
+        // Every request is answered exactly once: served + shed == sent.
+        assert_eq!(served + shed, 8);
+        assert!(shed > 0, "bounded admission queue must shed under burst");
+        let vm = metrics.variant("gen");
+        assert_eq!(vm.shed.load(Ordering::Relaxed), shed as u64);
+        assert_eq!(vm.admitted.load(Ordering::Relaxed), served as u64);
+    }
+
+    #[test]
+    fn stream_worker_sheds_on_admission_deadline() {
+        let metrics = Arc::new(Metrics::new());
+        // One busy slot (~40ms of stepping) and a 5ms admission deadline:
+        // the queued request must expire, not wait for the slot.
+        let mock = Arc::new(MockStream::new(1, 40, Duration::from_millis(1)));
+        let w = StreamWorker::new("gen", mock, metrics.clone(), 8, Some(Duration::from_millis(5)));
+        let (reqs, rx) = stream_reqs(2);
+        for r in reqs {
+            w.submit(r);
+        }
+        let mut outcomes: Vec<(u64, Result<Tensor, String>)> = (0..2)
+            .map(|_| rx.recv_timeout(Duration::from_secs(10)).unwrap())
+            .map(|r| (r.id, r.output))
+            .collect();
+        w.shutdown();
+        outcomes.sort_by_key(|(id, _)| *id);
+        assert!(outcomes[0].1.is_ok(), "first request holds the slot and completes");
+        let err = outcomes[1].1.as_ref().unwrap_err();
+        assert!(err.contains("admission deadline exceeded"), "{err}");
+        assert_eq!(metrics.variant("gen").shed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn stream_worker_drains_on_shutdown_exactly_once() {
+        let metrics = Arc::new(Metrics::new());
+        let mock = Arc::new(MockStream::new(2, 3, Duration::ZERO));
+        let w = StreamWorker::new("gen", mock, metrics.clone(), 64, None);
+        let (reqs, rx) = stream_reqs(5);
+        for r in reqs {
+            w.submit(r);
+        }
+        // Shutdown races the first step: accepted work must still finish.
+        w.shutdown();
+        let responses: Vec<Response> = rx.try_iter().collect();
+        assert_eq!(responses.len(), 5, "no stream lost or double-retired on shutdown");
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4], "each stream answered exactly once");
+        for r in responses {
+            assert_eq!(r.output.unwrap().at(0, 0), 2.0 * r.id as f32);
+        }
+        let vm = metrics.variant("gen");
+        assert_eq!(vm.admitted.load(Ordering::Relaxed), 5);
+        assert_eq!(vm.inflight.load(Ordering::Relaxed), 0);
     }
 
     #[test]

@@ -1,57 +1,75 @@
-//! Step-synchronized batched decode engine: many autoregressive streams,
-//! one fused GEMM per linear per step.
+//! Step-synchronized batched decode engine with **in-flight admission**:
+//! many autoregressive streams, one fused GEMM per linear per step, and
+//! streams that join a *running* engine as slots free up.
 //!
 //! PR 3's serving path batched *requests* at the coordinator but decoded
 //! them serially inside the executor — every layer ran a `[1 × d_model]`
 //! GEMV that re-streamed the full weight matrix per request per token.
-//! [`DecodeEngine`] owns a set of in-flight streams (each with its own
-//! [`KvCache`], position offset, sampler state, and remaining-token
-//! budget) and advances **all** active streams one token per step: the
-//! streams' current tokens are stacked into one `[n_active × d_model]`
-//! activation, every projection / FFN / logits-head linear runs as a
-//! single `matmul`/`qgemm` call, and attention scatters per stream over
-//! each stream's own cached K/V
+//! PR 4's [`DecodeEngine`] fused a fixed batch: the streams' current
+//! tokens are stacked into one `[n_active × d_model]` activation, every
+//! projection / FFN / logits-head linear runs as a single
+//! `matmul`/`qgemm` call, and attention scatters per stream over each
+//! stream's own cached K/V
 //! ([`crate::model::attention::MultiHeadAttention::forward_decode_batch`]).
 //! Arithmetic intensity on the weight-bound hot path rises by ~n_active —
 //! the continuous-batching insight of Orca/vLLM-style serving (PAPERS.md),
 //! here applied to the paper's low-bit serving setting.
 //!
-//! ## Ragged-batch slot lifecycle (DESIGN.md §12)
+//! This PR removes the last batch boundary: the engine is now a
+//! *long-lived* object with a fixed slot array and a free-slot list.
+//! [`DecodeEngine::admit`] seats a request in a free slot at any time —
+//! including while other streams are mid-decode — [`DecodeEngine::step`]
+//! advances every in-flight stream by one unit of work, and
+//! [`DecodeEngine::drain`] hands back finished streams. Short requests no
+//! longer wait for the longest batch-mate (the head-of-line blocking the
+//! ROADMAP names as the wall in one-shot batching); a retiring stream's
+//! slot is refilled on the very next scheduler tick.
 //!
-//! * **Admission** — streams join with different prompt lengths; prefill
-//!   stays per-stream ([`crate::model::Gpt::prefill`] handles any number
-//!   of rows of *one* stream, which is a different shape of work than the
-//!   fused step).
-//! * **Stepping** — active slots advance in lock-step. The fused step is
-//!   chunked at `decode_batch` streams per GEMM so a huge admission wave
-//!   cannot blow up the working set; `decode_batch = 1` degenerates to
-//!   PR 3's serial per-request stepping, same results.
+//! ## Slot lifecycle (DESIGN.md §14)
+//!
+//! * **Admission** — [`DecodeEngine::admit`] validates the request,
+//!   pops a slot index off the free list, and seats the stream in the
+//!   `Prefill` phase. No model work happens at admission (the hook is a
+//!   `step` parameter, not engine state).
+//! * **Prefill** — each [`DecodeEngine::step`] runs **one** prefill chunk
+//!   per prefilling slot, after the fused decode of the already-active
+//!   streams. Chunking follows the PR 5 rule: a chunk never exceeds the
+//!   positional headroom (`max_seq − pos_next`) and, under a sliding
+//!   window, never exceeds `window` tokens (a wider chunk would evict its
+//!   own middle before attending it — DESIGN.md §13). When the prompt is
+//!   exhausted the slot samples its first token from the final chunk's
+//!   logits and enters `Decode` the *next* step, so every decoding stream
+//!   gains exactly one token per step (step-synchronization is preserved).
+//! * **Stepping** — active `Decode` slots advance in lock-step, fused in
+//!   `decode_batch`-sized chunks so a huge admission wave cannot blow up
+//!   the working set; `decode_batch = 1` degenerates to PR 3's serial
+//!   per-request stepping, same results.
 //! * **Retirement** — a slot retires when its budget is exhausted, or —
 //!   with a `truncated` flag — when its capacity-bounded cache cannot take
-//!   another token ([`crate::kvcache::KvStream::try_append`] surfaces the
-//!   same condition recoverably). Retirement never stalls the remaining
-//!   streams: the slot simply leaves the stacked activation from the next
-//!   step on. Under a sliding-window cache policy
+//!   another token. The slot index returns to the free list and the
+//!   result queues for [`DecodeEngine::drain`]; remaining streams never
+//!   stall. Under a sliding-window cache policy
 //!   ([`crate::kvcache::EvictionPolicy::SlidingWindow`]) streams are
 //!   unbounded instead: long prompts prefill in chunks, eviction keeps the
 //!   resident set (and the positional rank) below the model's `max_seq`,
-//!   and a stream decodes arbitrarily far past it — truncation then only
-//!   arises from an explicit caller-supplied logical cap (DESIGN.md §13).
+//!   and a stream decodes arbitrarily far past it (DESIGN.md §13).
 //!
-//! ## Why batching preserves per-stream causality and bit-parity
+//! ## Why admission order preserves per-stream bit-parity
 //!
 //! Streams share *weights*, never *state*: attention reads only the
 //! stream's own cache, and every fused kernel on the step (matmul,
 //! matmul_transb, qgemm, RMSNorm, SiLU gating) is row-wise — row `i` of
 //! the output depends only on row `i` of the input, with a reduction
-//! order independent of how many rows are present. So with an fp32 cache
-//! and [`FpHook`], each stream's batched output is **bit-identical** to
-//! PR 3's serial [`crate::model::Gpt::generate_greedy`] at any thread
-//! count and any batch composition (`tests/decode.rs` pins it, including
-//! mixed prompt lengths and mid-run retirement). A packed cache quantizes
-//! each stream's history independently, so the same argument makes
-//! batched packed decode bit-identical to serial packed decode; only the
-//! cache policy itself introduces drift (quantified in `tests/decode.rs`).
+//! order independent of how many rows are present. A stream's chunk
+//! sequence is likewise a pure function of its *own* cache state, and its
+//! sampler is seeded per stream. So a stream's output is a pure function
+//! of (weights, prompt, budget, kv config, sampling spec) — independent
+//! of **when** it was admitted, which streams it shared steps with, and
+//! the thread count. With an fp32 cache and [`FpHook`] each stream is
+//! **bit-identical** to serial [`crate::model::Gpt::generate_greedy`];
+//! with a packed cache it is bit-identical to its own serial packed run
+//! (`tests/decode.rs` and `tests/continuous.rs` pin both, across random
+//! admission schedules).
 //!
 //! One caveat for quantized *activation* stacks ([`crate::baselines::QuantHook`]):
 //! window-relative policies (e.g. `hp_tokens` treating row 0 of each call
@@ -65,6 +83,8 @@ use crate::kvcache::{EvictionPolicy, KvCache, KvCacheConfig};
 use crate::model::gpt::argmax_row;
 use crate::model::{FpHook, Gpt, LinearHook};
 use crate::tensor::XorShiftRng;
+use std::collections::VecDeque;
+use std::sync::Arc;
 
 /// Token-selection policy, applied per stream per step.
 ///
@@ -73,8 +93,8 @@ use crate::tensor::XorShiftRng;
 /// scaled softmax over the `k` highest logits via [`XorShiftRng`]; each
 /// stream draws from its own generator seeded with `seed`, so a stream's
 /// sampled continuation is a pure function of (weights, prompt, spec) —
-/// independent of batch composition, chunking, and retirement order —
-/// and batched runs stay exactly reproducible.
+/// independent of batch composition, chunking, admission time, and
+/// retirement order — and batched runs stay exactly reproducible.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Sampling {
     /// Deterministic argmax (the PR 3 behavior; the default).
@@ -161,26 +181,50 @@ pub struct StreamResult {
     pub truncated: bool,
 }
 
+/// Engine-assigned identity of an admitted stream, monotonically
+/// increasing in admission order (so it doubles as an arrival stamp).
+pub type StreamId = u64;
+
+/// Where a slot is in its lifecycle (module docs).
+enum Phase {
+    /// Prompt ingestion: one chunk per step; `off` tokens already cached.
+    Prefill { prompt: Vec<u32>, off: usize },
+    /// One fused token per step.
+    Decode,
+}
+
 /// An in-flight stream between admission and retirement.
 struct Slot {
-    /// Index into the request (and result) vector.
-    idx: usize,
+    id: StreamId,
     cache: KvCache,
     sampler: Sampler,
     /// Generated so far; the last entry is the token fed at the next step.
     out: Vec<u32>,
     n_new: usize,
+    phase: Phase,
 }
 
-/// Step-synchronized batched decode over a shared model (module docs).
+/// Long-lived decode engine with in-flight admission (module docs).
 ///
-/// The engine is reusable: [`DecodeEngine::run`] owns all per-run state,
-/// so one engine can serve successive coordinator batches.
-pub struct DecodeEngine<'m> {
-    gpt: &'m Gpt,
+/// The engine owns a fixed array of `max_inflight` slots and a free-slot
+/// list. [`DecodeEngine::admit`] / [`DecodeEngine::step`] /
+/// [`DecodeEngine::drain`] are the continuous-serving surface; the
+/// one-shot [`DecodeEngine::run`] wrapper (admit everything, step until
+/// done) remains for batch callers and is what PR 4 callers see.
+pub struct DecodeEngine {
+    gpt: Arc<Gpt>,
     kv: KvCacheConfig,
     sampling: Sampling,
     decode_batch: usize,
+    /// Fixed slot array; `None` = free.
+    slots: Vec<Option<Slot>>,
+    /// Indices of free entries in `slots` (LIFO; order is irrelevant to
+    /// results — per-stream parity is slot-position independent).
+    free: Vec<usize>,
+    next_stream: StreamId,
+    /// Finished streams awaiting [`DecodeEngine::drain`], in retirement
+    /// order.
+    retired: VecDeque<(StreamId, StreamResult)>,
 }
 
 /// Default cap on streams fused into one GEMM (the `[generate]`
@@ -188,7 +232,12 @@ pub struct DecodeEngine<'m> {
 /// `max_batch`, so a full coordinator batch fuses into a single step.
 pub const DEFAULT_DECODE_BATCH: usize = 8;
 
-impl<'m> DecodeEngine<'m> {
+/// Default slot count (the `[generate]` `max_inflight` TOML knob):
+/// matches [`DEFAULT_DECODE_BATCH`], so by default one admission wave
+/// fills exactly one fused step.
+pub const DEFAULT_MAX_INFLIGHT: usize = 8;
+
+impl DecodeEngine {
     /// Build an engine over `gpt` with a per-stream cache policy and a
     /// sampling spec.
     ///
@@ -201,7 +250,7 @@ impl<'m> DecodeEngine<'m> {
     /// here), prompts longer than `max_seq` prefill in chunks, and streams
     /// decode indefinitely — truncation can then only arise from an
     /// explicit caller-supplied `kv.max_seq` logical cap.
-    pub fn new(gpt: &'m Gpt, kv: KvCacheConfig, sampling: Sampling) -> Self {
+    pub fn new(gpt: Arc<Gpt>, kv: KvCacheConfig, sampling: Sampling) -> Self {
         let mut kv = kv;
         match kv.eviction {
             EvictionPolicy::None => {
@@ -219,7 +268,17 @@ impl<'m> DecodeEngine<'m> {
             }
         }
         kv.validate();
-        DecodeEngine { gpt, kv, sampling, decode_batch: DEFAULT_DECODE_BATCH }
+        let max_inflight = DEFAULT_MAX_INFLIGHT;
+        DecodeEngine {
+            gpt,
+            kv,
+            sampling,
+            decode_batch: DEFAULT_DECODE_BATCH,
+            slots: (0..max_inflight).map(|_| None).collect(),
+            free: (0..max_inflight).rev().collect(),
+            next_stream: 0,
+            retired: VecDeque::new(),
+        }
     }
 
     /// Cap on streams fused into one step GEMM (≥ 1; 1 = serial stepping).
@@ -229,128 +288,278 @@ impl<'m> DecodeEngine<'m> {
         self
     }
 
-    /// Greedy fp32-linear convenience entry (the paper-shaped serving
-    /// setup quantizes only the KV cache).
-    pub fn run_fp(&self, reqs: &[GenRequest]) -> crate::error::Result<Vec<StreamResult>> {
-        self.run(&FpHook, reqs)
+    /// Slot-array size: the hard cap on concurrently in-flight streams
+    /// (≥ 1). Must be set before any stream is admitted.
+    pub fn with_max_inflight(mut self, max_inflight: usize) -> Self {
+        assert!(max_inflight >= 1, "max_inflight must be ≥ 1");
+        assert!(
+            self.slots.iter().all(|s| s.is_none()) && self.retired.is_empty(),
+            "max_inflight must be set on an idle engine"
+        );
+        self.slots = (0..max_inflight).map(|_| None).collect();
+        self.free = (0..max_inflight).rev().collect();
+        self
     }
 
-    /// Admit every request, advance all active streams one token per
-    /// step, and return one [`StreamResult`] per request, in request
-    /// order. Errors (empty or out-of-vocab prompt, prompt longer than a
-    /// *bounded* cache's capacity) reject the whole run before any
-    /// decoding; a windowed (unbounded) cache accepts prompts of any
-    /// length and prefills them in chunks.
-    pub fn run(
-        &self,
-        hook: &dyn LinearHook,
-        reqs: &[GenRequest],
-    ) -> crate::error::Result<Vec<StreamResult>> {
+    /// Hard cap on concurrently in-flight streams (the slot-array size).
+    pub fn max_inflight(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Streams currently seated in a slot (prefilling or decoding).
+    pub fn n_inflight(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    /// Slots available to [`DecodeEngine::admit`] right now.
+    pub fn free_slots(&self) -> usize {
+        self.free.len()
+    }
+
+    /// `true` while any stream is in flight (a [`DecodeEngine::step`]
+    /// would do model work).
+    pub fn has_work(&self) -> bool {
+        self.n_inflight() > 0
+    }
+
+    /// Finished streams waiting to be [`DecodeEngine::drain`]ed.
+    pub fn n_retired(&self) -> usize {
+        self.retired.len()
+    }
+
+    /// The engine's (normalized) per-stream cache policy.
+    pub fn kv(&self) -> &KvCacheConfig {
+        &self.kv
+    }
+
+    /// Check a request against the engine's vocab and cache policy.
+    /// Returns the bare failure message (callers add stream context).
+    fn validate(&self, r: &GenRequest) -> std::result::Result<(), String> {
         let vocab = self.gpt.cfg.vocab_size;
+        if r.prompt.is_empty() {
+            return Err("prompt must be non-empty".into());
+        }
+        if let Some(&t) = r.prompt.iter().find(|&&t| t as usize >= vocab) {
+            return Err(format!("token {t} out of vocab {vocab}"));
+        }
         // `Some` for bounded caches (always, without eviction); `None`
         // when a sliding window keeps the stream unbounded.
-        let cap = self.kv.max_seq;
-        for (i, r) in reqs.iter().enumerate() {
-            if r.prompt.is_empty() {
-                crate::bail!("stream {i}: prompt must be non-empty");
-            }
-            if let Some(&t) = r.prompt.iter().find(|&&t| t as usize >= vocab) {
-                crate::bail!("stream {i}: token {t} out of vocab {vocab}");
-            }
-            if let Some(cap) = cap {
-                if r.prompt.len() > cap {
-                    crate::bail!(
-                        "stream {i}: prompt {} exceeds cache capacity {cap}",
-                        r.prompt.len()
-                    );
-                }
+        if let Some(cap) = self.kv.max_seq {
+            if r.prompt.len() > cap {
+                return Err(format!("prompt {} exceeds cache capacity {cap}", r.prompt.len()));
             }
         }
+        Ok(())
+    }
 
-        let mut done: Vec<Option<StreamResult>> = reqs.iter().map(|_| None).collect();
-        let mut slots: Vec<Slot> = Vec::new();
-        // Admission: per-stream prefill (ragged prompt lengths), then the
-        // first sampled token. Prefill is chunked so each chunk starts at
-        // the cache's resident rank: for a bounded cache the whole
-        // (validated ≤ cap ≤ max_seq) prompt is one chunk — exactly the
-        // pre-eviction path — while a windowed cache admits prompts past
-        // `max_seq` because eviction between chunks keeps the rank low.
-        // Windowed chunks are additionally capped at `window` tokens: a
-        // chunk's K/V are appended (and evicted) *before* its attention
-        // runs, so a chunk wider than the window would let eviction drop
-        // its own middle mid-append — queries would attend only the sinks
-        // instead of their recency window. With `chunk ≤ window` a query's
-        // whole same-chunk prefix survives (its newest key is within
-        // `window` of the chunk end), so every query sees
-        // `[sinks ‖ chunk prefix ‖ most recent pre-chunk remainder]` — the
-        // same approximation class as windowed decode itself.
-        let chunk_cap = match self.kv.eviction {
+    /// Per-step prefill chunk bound (PR 5 rule): windowed caches chunk at
+    /// the window budget — a chunk's K/V are appended (and evicted)
+    /// *before* its attention runs, so a chunk wider than the window would
+    /// let eviction drop its own middle mid-append — queries would attend
+    /// only the sinks instead of their recency window. With
+    /// `chunk ≤ window` a query's whole same-chunk prefix survives (its
+    /// newest key is within `window` of the chunk end), so every query
+    /// sees `[sinks ‖ chunk prefix ‖ most recent pre-chunk remainder]` —
+    /// the same approximation class as windowed decode itself. Bounded
+    /// caches (validated prompt ≤ cap ≤ max_seq) take the whole prompt in
+    /// one chunk, exactly the pre-eviction path.
+    fn chunk_cap(&self) -> usize {
+        match self.kv.eviction {
             EvictionPolicy::SlidingWindow { window, .. } => window,
             EvictionPolicy::None => usize::MAX,
+        }
+    }
+
+    /// Seat a request in a free slot of the (possibly running) engine.
+    ///
+    /// Errors — without touching engine state — when the request is
+    /// invalid (empty or out-of-vocab prompt, prompt longer than a
+    /// *bounded* cache's capacity) or when no slot is free; a windowed
+    /// (unbounded) cache accepts prompts of any length and prefills them
+    /// in chunks across subsequent [`DecodeEngine::step`]s. Returns the
+    /// stream's id, unique per engine and increasing in admission order.
+    pub fn admit(&mut self, req: GenRequest) -> crate::error::Result<StreamId> {
+        if let Err(msg) = self.validate(&req) {
+            crate::bail!("{msg}");
+        }
+        let Some(i) = self.free.pop() else {
+            crate::bail!(
+                "no free slot: {} streams in flight (max_inflight {})",
+                self.n_inflight(),
+                self.max_inflight()
+            );
         };
-        for (i, r) in reqs.iter().enumerate() {
-            let mut cache = KvCache::new(self.gpt.cfg.n_layers, self.kv.clone());
-            let mut logits = None;
-            let mut off = 0usize;
-            while off < r.prompt.len() {
-                let take = (self.gpt.cfg.max_seq - cache.pos_next())
-                    .min(chunk_cap)
-                    .min(r.prompt.len() - off);
-                logits = Some(self.gpt.prefill(hook, &r.prompt[off..off + take], &mut cache));
-                off += take;
-            }
-            let logits = logits.expect("validated prompts are non-empty");
-            let mut sampler = Sampler::new(&self.sampling);
-            let mut out = Vec::with_capacity(r.n_new);
-            if r.n_new > 0 {
-                out.push(sampler.next(logits.row(logits.rows() - 1)));
-            }
-            if out.len() >= r.n_new {
-                done[i] = Some(StreamResult { tokens: out, truncated: false });
-            } else {
-                slots.push(Slot { idx: i, cache, sampler, out, n_new: r.n_new });
+        let id = self.next_stream;
+        self.next_stream += 1;
+        self.slots[i] = Some(Slot {
+            id,
+            cache: KvCache::new(self.gpt.cfg.n_layers, self.kv.clone()),
+            sampler: Sampler::new(&self.sampling),
+            out: Vec::with_capacity(req.n_new),
+            n_new: req.n_new,
+            phase: Phase::Prefill { prompt: req.prompt, off: 0 },
+        });
+        Ok(id)
+    }
+
+    /// Move slot `i`'s stream to the retired queue and free the slot.
+    fn retire_slot(&mut self, i: usize, truncated: bool) {
+        let s = self.slots[i].take().expect("retiring an occupied slot");
+        self.free.push(i);
+        self.retired.push_back((s.id, StreamResult { tokens: s.out, truncated }));
+    }
+
+    /// Advance every in-flight stream by one unit of work:
+    ///
+    /// 1. retire decoding streams whose bounded cache cannot take the
+    ///    pending token (the recoverable per-stream form of the max_seq
+    ///    overflow), flagged `truncated`;
+    /// 2. fused decode — all decoding slots advance one token, chunked at
+    ///    `decode_batch` streams per GEMM;
+    /// 3. retire streams that reached their budget;
+    /// 4. one prefill chunk per prefilling slot; a slot whose prompt
+    ///    completes samples its first token from the chunk's logits and
+    ///    joins the fused decode from the *next* step (or retires at once
+    ///    when the budget is already met).
+    ///
+    /// A no-op on an idle engine.
+    pub fn step(&mut self, hook: &dyn LinearHook) {
+        // (1) Capacity retirement, before any model work this step.
+        for i in 0..self.slots.len() {
+            let full = matches!(
+                &self.slots[i],
+                Some(s) if matches!(s.phase, Phase::Decode)
+                    && matches!(s.cache.remaining(), Some(0))
+            );
+            if full {
+                self.retire_slot(i, true);
             }
         }
 
-        // Step loop: every iteration advances all still-active streams by
-        // exactly one token (step-synchronized), fused in decode_batch
-        // chunks.
-        while !slots.is_empty() {
-            // Retire streams whose cache cannot take the pending token —
-            // the recoverable per-stream form of the max_seq overflow.
-            let mut j = 0;
-            while j < slots.len() {
-                if matches!(slots[j].cache.remaining(), Some(0)) {
-                    let s = slots.swap_remove(j);
-                    done[s.idx] = Some(StreamResult { tokens: s.out, truncated: true });
-                } else {
-                    j += 1;
-                }
-            }
-            for chunk in slots.chunks_mut(self.decode_batch) {
+        // (2) Fused decode over the active decoding slots, in slot order.
+        {
+            let gpt = &self.gpt;
+            let mut active: Vec<&mut Slot> = self
+                .slots
+                .iter_mut()
+                .filter_map(|o| o.as_mut())
+                .filter(|s| matches!(s.phase, Phase::Decode))
+                .collect();
+            for chunk in active.chunks_mut(self.decode_batch) {
                 let tokens: Vec<u32> =
-                    chunk.iter().map(|s| *s.out.last().expect("active slot has a token")).collect();
+                    chunk.iter().map(|s| *s.out.last().expect("decoding slot has a token")).collect();
                 let mut caches: Vec<&mut KvCache> =
                     chunk.iter_mut().map(|s| &mut s.cache).collect();
-                let logits = self.gpt.decode_step_batch(hook, &tokens, &mut caches);
+                let logits = gpt.decode_step_batch(hook, &tokens, &mut caches);
                 drop(caches);
                 for (row, s) in chunk.iter_mut().enumerate() {
                     let t = s.sampler.next(logits.row(row));
                     s.out.push(t);
                 }
             }
-            // Retire streams that reached their budget.
-            let mut j = 0;
-            while j < slots.len() {
-                if slots[j].out.len() >= slots[j].n_new {
-                    let s = slots.swap_remove(j);
-                    done[s.idx] = Some(StreamResult { tokens: s.out, truncated: false });
+        }
+
+        // (3) Budget retirement.
+        for i in 0..self.slots.len() {
+            let done = matches!(
+                &self.slots[i],
+                Some(s) if matches!(s.phase, Phase::Decode) && s.out.len() >= s.n_new
+            );
+            if done {
+                self.retire_slot(i, false);
+            }
+        }
+
+        // (4) Prefill: one chunk per prefilling slot, interleaved with the
+        // ongoing decode above. The chunk sequence is a pure function of
+        // the stream's own cache state, so spreading it over steps cannot
+        // change the stream's output (module docs).
+        let chunk_cap = self.chunk_cap();
+        for i in 0..self.slots.len() {
+            let mut retire_now = false;
+            {
+                let gpt = &self.gpt;
+                let Some(s) = self.slots[i].as_mut() else { continue };
+                let mut finished = false;
+                if let Phase::Prefill { prompt, off } = &mut s.phase {
+                    let take = (gpt.cfg.max_seq - s.cache.pos_next())
+                        .min(chunk_cap)
+                        .min(prompt.len() - *off);
+                    let logits = gpt.prefill(hook, &prompt[*off..*off + take], &mut s.cache);
+                    *off += take;
+                    if *off == prompt.len() {
+                        finished = true;
+                        if s.n_new > 0 {
+                            s.out.push(s.sampler.next(logits.row(logits.rows() - 1)));
+                        }
+                    }
                 } else {
-                    j += 1;
+                    continue;
+                }
+                if finished {
+                    s.phase = Phase::Decode;
+                    retire_now = s.out.len() >= s.n_new;
+                }
+            }
+            if retire_now {
+                self.retire_slot(i, false);
+            }
+        }
+    }
+
+    /// Take every finished stream (id, result), in retirement order. The
+    /// engine keeps no record of drained streams.
+    pub fn drain(&mut self) -> Vec<(StreamId, StreamResult)> {
+        self.retired.drain(..).collect()
+    }
+
+    /// Greedy fp32-linear convenience entry (the paper-shaped serving
+    /// setup quantizes only the KV cache).
+    pub fn run_fp(&mut self, reqs: &[GenRequest]) -> crate::error::Result<Vec<StreamResult>> {
+        self.run(&FpHook, reqs)
+    }
+
+    /// One-shot wrapper over the continuous surface: admit every request
+    /// (in waves, as slots free up, when `reqs` outnumber `max_inflight`
+    /// or the engine already holds streams), step until all of them
+    /// retire, and return one [`StreamResult`] per request, in request
+    /// order. Errors (empty or out-of-vocab prompt, prompt longer than a
+    /// *bounded* cache's capacity) reject the whole run before any
+    /// decoding; a windowed (unbounded) cache accepts prompts of any
+    /// length. Streams admitted by other callers keep advancing and their
+    /// results stay queued for that caller's [`DecodeEngine::drain`].
+    pub fn run(
+        &mut self,
+        hook: &dyn LinearHook,
+        reqs: &[GenRequest],
+    ) -> crate::error::Result<Vec<StreamResult>> {
+        for (i, r) in reqs.iter().enumerate() {
+            if let Err(msg) = self.validate(r) {
+                crate::bail!("stream {i}: {msg}");
+            }
+        }
+        let mut results: Vec<Option<StreamResult>> = reqs.iter().map(|_| None).collect();
+        let mut own: std::collections::HashMap<StreamId, usize> = std::collections::HashMap::new();
+        let mut next = 0usize;
+        while next < reqs.len() || !own.is_empty() {
+            while next < reqs.len() && self.free_slots() > 0 {
+                let id = self
+                    .admit(reqs[next].clone())
+                    .expect("validated request admits into a free slot");
+                own.insert(id, next);
+                next += 1;
+            }
+            self.step(hook);
+            // Claim this run's retirees; foreign streams (admitted through
+            // the continuous surface) go back to the queue untouched.
+            for (id, res) in self.drain() {
+                match own.remove(&id) {
+                    Some(idx) => results[idx] = Some(res),
+                    None => self.retired.push_back((id, res)),
                 }
             }
         }
-        Ok(done.into_iter().map(|o| o.expect("every stream resolved")).collect())
+        Ok(results.into_iter().map(|o| o.expect("every admitted stream retires")).collect())
     }
 }
 
@@ -363,15 +572,19 @@ mod tests {
         (0..n).map(|i| ((i * 7 + salt * 11 + 3) % 70) as u32).collect()
     }
 
+    fn tiny(seed: u64) -> Arc<Gpt> {
+        Arc::new(Gpt::new(GptConfig::tiny(), seed))
+    }
+
     #[test]
     fn greedy_batch_matches_serial_generate_greedy() {
-        let gpt = Gpt::new(GptConfig::tiny(), 41);
+        let gpt = tiny(41);
         let reqs = vec![
             GenRequest { prompt: prompt(5, 0), n_new: 12 },
             GenRequest { prompt: prompt(11, 1), n_new: 3 },
             GenRequest { prompt: prompt(2, 2), n_new: 8 },
         ];
-        let engine = DecodeEngine::new(&gpt, KvCacheConfig::fp32(), Sampling::Greedy)
+        let mut engine = DecodeEngine::new(gpt.clone(), KvCacheConfig::fp32(), Sampling::Greedy)
             .with_decode_batch(2);
         let got = engine.run_fp(&reqs).unwrap();
         for (i, r) in reqs.iter().enumerate() {
@@ -384,8 +597,8 @@ mod tests {
 
     #[test]
     fn zero_budget_and_bad_requests() {
-        let gpt = Gpt::new(GptConfig::tiny(), 42);
-        let engine = DecodeEngine::new(&gpt, KvCacheConfig::fp32(), Sampling::Greedy);
+        let gpt = tiny(42);
+        let mut engine = DecodeEngine::new(gpt, KvCacheConfig::fp32(), Sampling::Greedy);
         let got = engine
             .run_fp(&[GenRequest { prompt: prompt(4, 0), n_new: 0 }])
             .unwrap();
@@ -397,11 +610,15 @@ mod tests {
         let long = prompt(300, 0).iter().map(|&t| t % 70).collect::<Vec<u32>>();
         let err = engine.run_fp(&[GenRequest { prompt: long, n_new: 1 }]).unwrap_err();
         assert!(err.to_string().contains("exceeds cache capacity"), "{err}");
+        // A rejected run leaves the engine clean: nothing in flight,
+        // nothing queued.
+        assert_eq!(engine.n_inflight(), 0);
+        assert_eq!(engine.n_retired(), 0);
     }
 
     #[test]
     fn truncation_retires_one_stream_without_stalling_the_rest() {
-        let gpt = Gpt::new(GptConfig::tiny(), 43);
+        let gpt = tiny(43);
         // Tight engine-level bound: prefill 8 + 4 appends fill cap 12; the
         // 5th generated token is sampled but the 6th needs a 13th slot.
         let kv = KvCacheConfig::fp32().with_max_seq(12);
@@ -409,7 +626,7 @@ mod tests {
             GenRequest { prompt: prompt(8, 0), n_new: 20 },
             GenRequest { prompt: prompt(2, 1), n_new: 6 },
         ];
-        let engine = DecodeEngine::new(&gpt, kv, Sampling::Greedy);
+        let mut engine = DecodeEngine::new(gpt.clone(), kv, Sampling::Greedy);
         let got = engine.run_fp(&reqs).unwrap();
         assert!(got[0].truncated);
         assert_eq!(got[0].tokens.len(), 5, "prefill 8 + 4 appends under cap 12 → 5 tokens");
@@ -431,14 +648,14 @@ mod tests {
         // stream's budget can exceed the model's positional table many
         // times over and it still returns exactly n_new tokens, while an
         // unwindowed batch-mate behaves as before.
-        let gpt = Gpt::new(GptConfig::tiny(), 45);
+        let gpt = tiny(45);
         let kv = KvCacheConfig::two_level(16, 8, 4, 8).with_window(16, 48);
         let n_long = 4 * gpt.cfg.max_seq; // 1024 ≫ max_seq = 256
         let reqs = vec![
             GenRequest { prompt: prompt(8, 0), n_new: n_long },
             GenRequest { prompt: prompt(3, 1), n_new: 5 },
         ];
-        let engine = DecodeEngine::new(&gpt, kv, Sampling::Greedy);
+        let mut engine = DecodeEngine::new(gpt.clone(), kv, Sampling::Greedy);
         let got = engine.run_fp(&reqs).unwrap();
         assert_eq!(got[0].tokens.len(), n_long);
         assert!(!got[0].truncated, "windowed streams never truncate");
@@ -454,11 +671,11 @@ mod tests {
         // A prompt past the positional table is admitted by chunked
         // prefill under a window policy — and rejected, as before, by a
         // bounded engine.
-        let gpt = Gpt::new(GptConfig::tiny(), 46);
+        let gpt = tiny(46);
         let long: Vec<u32> = (0..300).map(|i| ((i * 3 + 1) % 70) as u32).collect();
         let (window, n_new) = (48usize, 8usize);
         let kv = KvCacheConfig::two_level(16, 8, 4, 8).with_window(16, window);
-        let engine = DecodeEngine::new(&gpt, kv.clone(), Sampling::Greedy);
+        let mut engine = DecodeEngine::new(gpt.clone(), kv.clone(), Sampling::Greedy);
         let reqs = vec![GenRequest { prompt: long.clone(), n_new }];
         let got = engine.run_fp(&reqs).unwrap();
         assert_eq!(got[0].tokens.len(), n_new);
@@ -491,7 +708,7 @@ mod tests {
             want.push(next);
         }
         assert_eq!(got[0].tokens, want, "engine must chunk admission at the window budget");
-        let bounded = DecodeEngine::new(&gpt, KvCacheConfig::fp32(), Sampling::Greedy);
+        let mut bounded = DecodeEngine::new(gpt, KvCacheConfig::fp32(), Sampling::Greedy);
         let err = bounded.run_fp(&reqs).unwrap_err();
         assert!(err.to_string().contains("exceeds cache capacity"), "{err}");
     }
@@ -499,22 +716,22 @@ mod tests {
     #[test]
     #[should_panic(expected = "exceeds model max_seq")]
     fn rejects_window_residency_larger_than_positional_table() {
-        let gpt = Gpt::new(GptConfig::tiny(), 47);
+        let gpt = tiny(47);
         // sinks 64 (block-rounded 64) + window 256 + block 32 > 256.
         let kv = KvCacheConfig::default().with_window(64, 256);
-        let _ = DecodeEngine::new(&gpt, kv, Sampling::Greedy);
+        let _ = DecodeEngine::new(gpt, kv, Sampling::Greedy);
     }
 
     #[test]
     fn topk_sampling_is_deterministic_and_batch_invariant() {
-        let gpt = Gpt::new(GptConfig::tiny(), 44);
+        let gpt = tiny(44);
         let sampling = Sampling::TopK { k: 8, temperature: 0.9, seed: 0x5EED };
         let reqs = vec![
             GenRequest { prompt: prompt(6, 0), n_new: 10 },
             GenRequest { prompt: prompt(3, 1), n_new: 10 },
             GenRequest { prompt: prompt(9, 2), n_new: 4 },
         ];
-        let engine = DecodeEngine::new(&gpt, KvCacheConfig::fp32(), sampling.clone());
+        let mut engine = DecodeEngine::new(gpt.clone(), KvCacheConfig::fp32(), sampling.clone());
         let batched = engine.run_fp(&reqs).unwrap();
         // Same spec, streams run one at a time: per-stream RNGs make the
         // draws independent of batch composition.
@@ -531,8 +748,8 @@ mod tests {
         }
         // Different seed, different continuation (overwhelmingly likely
         // over 10 draws from a near-uniform untrained model).
-        let other = DecodeEngine::new(
-            &gpt,
+        let mut other = DecodeEngine::new(
+            gpt,
             KvCacheConfig::fp32(),
             Sampling::TopK { k: 8, temperature: 0.9, seed: 0xBEEF },
         );
@@ -548,5 +765,104 @@ mod tests {
         let mut k1 = Sampler::new(&Sampling::TopK { k: 1, temperature: 1.0, seed: 7 });
         assert_eq!(g.next(&row), 1, "first maximum wins ties");
         assert_eq!(k1.next(&row), 1, "top-1 sampling is argmax with the same tie-break");
+    }
+
+    // ---- continuous surface: admit / step / drain --------------------
+
+    #[test]
+    fn inflight_admission_is_bit_identical_to_serial_decode() {
+        // The tentpole invariant at its smallest: stream B joins while A
+        // is mid-decode, and both match their serial runs exactly.
+        let gpt = tiny(48);
+        let mut engine = DecodeEngine::new(gpt.clone(), KvCacheConfig::fp32(), Sampling::Greedy);
+        let a = GenRequest { prompt: prompt(6, 0), n_new: 10 };
+        let b = GenRequest { prompt: prompt(9, 1), n_new: 4 };
+        let id_a = engine.admit(a.clone()).unwrap();
+        for _ in 0..4 {
+            engine.step(&FpHook); // A prefills, then decodes alone
+        }
+        assert!(engine.has_work());
+        let id_b = engine.admit(b.clone()).unwrap();
+        assert!(id_b > id_a, "stream ids increase in admission order");
+        let mut got: Vec<(StreamId, StreamResult)> = Vec::new();
+        while engine.has_work() {
+            engine.step(&FpHook);
+            got.extend(engine.drain());
+        }
+        assert_eq!(got.len(), 2);
+        assert_eq!(engine.free_slots(), engine.max_inflight());
+        for (req, id) in [(&a, id_a), (&b, id_b)] {
+            let res = &got.iter().find(|(i, _)| *i == id).unwrap().1;
+            let mut c = KvCache::fp32(gpt.cfg.n_layers);
+            let want = gpt.generate_greedy(&FpHook, &req.prompt, req.n_new, &mut c);
+            assert_eq!(res.tokens, want, "admission time must not change stream {id}");
+            assert!(!res.truncated);
+        }
+    }
+
+    #[test]
+    fn admit_rejects_when_no_slot_is_free_and_recovers_after_retirement() {
+        let gpt = tiny(49);
+        let mut engine = DecodeEngine::new(gpt, KvCacheConfig::fp32(), Sampling::Greedy)
+            .with_max_inflight(1);
+        engine.admit(GenRequest { prompt: prompt(3, 0), n_new: 2 }).unwrap();
+        assert_eq!(engine.free_slots(), 0);
+        let err = engine.admit(GenRequest { prompt: prompt(3, 1), n_new: 2 }).unwrap_err();
+        assert!(err.to_string().contains("no free slot"), "{err}");
+        // Invalid requests are rejected before slot accounting is touched.
+        let err = engine.admit(GenRequest { prompt: vec![], n_new: 1 }).unwrap_err();
+        assert!(err.to_string().contains("non-empty"), "{err}");
+        while engine.has_work() {
+            engine.step(&FpHook);
+        }
+        assert_eq!(engine.free_slots(), 1, "retirement returns the slot to the free list");
+        engine.admit(GenRequest { prompt: prompt(3, 1), n_new: 2 }).unwrap();
+        while engine.has_work() {
+            engine.step(&FpHook);
+        }
+        assert_eq!(engine.drain().len(), 2, "each stream retires exactly once");
+        assert_eq!(engine.drain().len(), 0, "drain empties the queue");
+    }
+
+    #[test]
+    fn run_on_a_busy_engine_leaves_foreign_streams_queued() {
+        // `run` claims only its own streams; a stream admitted through the
+        // continuous surface retires into the queue for its own caller.
+        let gpt = tiny(50);
+        let mut engine = DecodeEngine::new(gpt.clone(), KvCacheConfig::fp32(), Sampling::Greedy);
+        let fg = GenRequest { prompt: prompt(4, 3), n_new: 3 };
+        let id_fg = engine.admit(fg.clone()).unwrap();
+        let reqs = vec![
+            GenRequest { prompt: prompt(5, 0), n_new: 12 },
+            GenRequest { prompt: prompt(11, 1), n_new: 3 },
+        ];
+        let got = engine.run_fp(&reqs).unwrap();
+        for (i, r) in reqs.iter().enumerate() {
+            let mut c = KvCache::fp32(gpt.cfg.n_layers);
+            let want = gpt.generate_greedy(&FpHook, &r.prompt, r.n_new, &mut c);
+            assert_eq!(got[i].tokens, want, "stream {i}");
+        }
+        let foreign = engine.drain();
+        assert_eq!(foreign.len(), 1, "foreign stream stays queued for its own caller");
+        assert_eq!(foreign[0].0, id_fg);
+        let mut c = KvCache::fp32(gpt.cfg.n_layers);
+        let want = gpt.generate_greedy(&FpHook, &fg.prompt, fg.n_new, &mut c);
+        assert_eq!(foreign[0].1.tokens, want, "sharing steps with a run() batch is invisible");
+    }
+
+    #[test]
+    fn run_admits_in_waves_when_requests_outnumber_slots() {
+        let gpt = tiny(51);
+        let reqs: Vec<GenRequest> = (0..5)
+            .map(|i| GenRequest { prompt: prompt(3 + i, i), n_new: 2 + i })
+            .collect();
+        let mut waves = DecodeEngine::new(gpt.clone(), KvCacheConfig::fp32(), Sampling::Greedy)
+            .with_max_inflight(2);
+        let got = waves.run_fp(&reqs).unwrap();
+        for (i, r) in reqs.iter().enumerate() {
+            let mut c = KvCache::fp32(gpt.cfg.n_layers);
+            let want = gpt.generate_greedy(&FpHook, &r.prompt, r.n_new, &mut c);
+            assert_eq!(got[i].tokens, want, "wave admission must not change stream {i}");
+        }
     }
 }

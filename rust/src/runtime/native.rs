@@ -30,13 +30,13 @@
 //! so served responses never depend on `STAMP_THREADS`.
 
 use crate::baselines::{PreparedWeights, QuantHook, QuantStack};
-use crate::coordinator::Executor;
+use crate::coordinator::{Executor, StreamExecutor};
 use crate::decode::{DecodeEngine, GenRequest, Sampling};
 use crate::kvcache::KvCacheConfig;
 use crate::model::{Dit, FpHook, Gpt, LinearHook};
 use crate::tensor::Tensor;
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// What a native variant runs.
 pub enum NativeModel {
@@ -58,6 +58,7 @@ pub enum NativeModel {
         max_new: usize,
         sampling: Sampling,
         decode_batch: usize,
+        max_inflight: usize,
     },
     /// One denoising step at `t = 0` on a `seq×latent` latent under a fixed
     /// conditioning prompt; the response is the predicted residual.
@@ -72,6 +73,12 @@ struct Variant {
     /// shared by every execute call — per-variant, not per-batch, so
     /// decode steps never pay a repack (ROADMAP hoist item).
     prepared: Option<PreparedWeights>,
+    /// Generate variants keep ONE resident [`DecodeEngine`] for the life
+    /// of the variant (PR 6) instead of building one per batch: the batch
+    /// path runs on it, and the continuous-batching path
+    /// ([`StreamExecutor`]) admits/steps it in place. Guarded by a mutex
+    /// because [`Executor`]/[`StreamExecutor`] take `&self`.
+    engine: Option<Mutex<DecodeEngine>>,
 }
 
 /// Build a variant's weight caches by running one dummy forward: weight
@@ -133,6 +140,38 @@ fn parse_generate(
     Ok(GenRequest { prompt, n_new })
 }
 
+/// A generate variant's effective cache capacity: a tighter variant-level
+/// `kv.max_seq` bound wins over the model's. Requests are validated
+/// against it, so the engine never has to truncate a served stream (the
+/// wire contract is exactly `n_new` ids per request). A sliding-window
+/// variant is unbounded (`None`) unless the caller set an explicit
+/// logical cap: long requests are admissible and decode past `max_seq`.
+fn effective_cap(kv: &KvCacheConfig, model: &Gpt) -> Option<usize> {
+    match kv.eviction {
+        crate::kvcache::EvictionPolicy::None => {
+            Some(kv.max_seq.map_or(model.cfg.max_seq, |m| m.min(model.cfg.max_seq)))
+        }
+        crate::kvcache::EvictionPolicy::SlidingWindow { .. } => kv.max_seq,
+    }
+}
+
+/// Run `f` with the variant's serving hook: the prepared [`QuantHook`]
+/// for stacked variants, [`FpHook`] otherwise. Factored out so the batch
+/// [`Executor`] path and the per-step [`StreamExecutor`] path build their
+/// hooks identically.
+fn with_hook<R>(v: &Variant, f: impl FnOnce(&dyn LinearHook) -> R) -> R {
+    match &v.stack {
+        Some(stack) => {
+            let hook = match &v.prepared {
+                Some(p) => QuantHook::with_prepared(stack, p),
+                None => QuantHook::new(stack),
+            };
+            f(&hook)
+        }
+        None => f(&FpHook),
+    }
+}
+
 /// Decode a strict token-id row: NaN / negative / fractional / oversized
 /// values are rejected rather than saturated (`as u32` would silently
 /// serve token 0 on corrupt input).
@@ -164,7 +203,20 @@ impl NativeExecutor {
 
     fn insert(&mut self, name: &str, model: NativeModel, stack: Option<QuantStack>) {
         let prepared = stack.as_ref().map(|s| prepare(&model, s));
-        self.variants.insert(name.to_string(), Variant { model, stack, prepared });
+        // Generate variants get their resident engine here, once — not
+        // per batch: the engine (slot table, free list) lives as long as
+        // the variant, so streams can join it while others are mid-decode.
+        let engine = match &model {
+            NativeModel::GptGenerate { model: g, kv, sampling, decode_batch, max_inflight, .. } => {
+                Some(Mutex::new(
+                    DecodeEngine::new(g.clone(), kv.clone(), sampling.clone())
+                        .with_decode_batch(*decode_batch)
+                        .with_max_inflight(*max_inflight),
+                ))
+            }
+            _ => None,
+        };
+        self.variants.insert(name.to_string(), Variant { model, stack, prepared, engine });
     }
 
     /// Register a GPT variant (builder-style).
@@ -214,13 +266,18 @@ impl NativeExecutor {
             max_new,
             Sampling::Greedy,
             crate::decode::DEFAULT_DECODE_BATCH,
+            crate::decode::DEFAULT_MAX_INFLIGHT,
         )
     }
 
-    /// [`NativeExecutor::with_gpt_generate`] with explicit sampling policy
-    /// and fused-step width (the `[generate]` config section's
-    /// `temperature`/`top_k`/`seed` and `decode_batch` knobs,
-    /// [`crate::config::GenerateSpec::sampling`]).
+    /// [`NativeExecutor::with_gpt_generate`] with explicit sampling policy,
+    /// fused-step width, and engine slot count (the `[generate]` config
+    /// section's `temperature`/`top_k`/`seed`, `decode_batch`, and
+    /// `max_inflight` knobs, [`crate::config::GenerateSpec::sampling`]).
+    /// `max_inflight` bounds how many streams the variant's resident
+    /// engine seats at once — both the batch path and the continuous
+    /// admission path share those slots.
+    #[allow(clippy::too_many_arguments)]
     pub fn with_gpt_generate_cfg(
         mut self,
         name: &str,
@@ -230,6 +287,7 @@ impl NativeExecutor {
         max_new: usize,
         sampling: Sampling,
         decode_batch: usize,
+        max_inflight: usize,
     ) -> Self {
         kv.validate();
         // A windowed variant's residency must fit the positional table —
@@ -242,9 +300,10 @@ impl NativeExecutor {
             );
         }
         assert!(decode_batch >= 1, "decode_batch must be ≥ 1");
+        assert!(max_inflight >= 1, "max_inflight must be ≥ 1");
         self.insert(
             name,
-            NativeModel::GptGenerate { model, kv, max_new, sampling, decode_batch },
+            NativeModel::GptGenerate { model, kv, max_new, sampling, decode_batch, max_inflight },
             stack,
         );
         self
@@ -286,29 +345,23 @@ impl NativeExecutor {
         hook: &dyn LinearHook,
         inputs: &[&Tensor],
     ) -> Result<Vec<Tensor>, String> {
-        let NativeModel::GptGenerate { model, kv, max_new, sampling, decode_batch } =
-            &variant.model
-        else {
+        let NativeModel::GptGenerate { model, kv, max_new, .. } = &variant.model else {
             unreachable!("run_generate_batch called on a non-generate variant");
         };
-        // Effective capacity: a tighter variant-level `kv.max_seq` bound
-        // wins over the model's. Requests are validated against it, so
-        // the engine never has to truncate a served stream (the wire
-        // contract is exactly `n_new` ids per request). A sliding-window
-        // variant is unbounded (unless the caller set an explicit logical
-        // cap): long requests are admissible and decode past `max_seq`.
-        let cap = match kv.eviction {
-            crate::kvcache::EvictionPolicy::None => {
-                Some(kv.max_seq.map_or(model.cfg.max_seq, |m| m.min(model.cfg.max_seq)))
-            }
-            crate::kvcache::EvictionPolicy::SlidingWindow { .. } => kv.max_seq,
-        };
+        let cap = effective_cap(kv, model);
         let reqs: Vec<GenRequest> = inputs
             .iter()
             .map(|x| parse_generate(x, model, *max_new, cap))
             .collect::<Result<_, _>>()?;
-        let engine = DecodeEngine::new(model, kv.clone(), sampling.clone())
-            .with_decode_batch(*decode_batch);
+        // The variant's ONE resident engine (built at registration), not a
+        // fresh one per batch: `run` claims only this batch's streams, so
+        // it composes with streams admitted through [`StreamExecutor`].
+        let mut engine = variant
+            .engine
+            .as_ref()
+            .expect("generate variants have a resident engine")
+            .lock()
+            .unwrap();
         let results = engine.run(hook, &reqs).map_err(|e| e.to_string())?;
         debug_assert!(
             results.iter().all(|r| !r.truncated),
@@ -369,16 +422,57 @@ impl Executor for NativeExecutor {
         // [`PreparedWeights`] built once at registration — repeated
         // executes (and every decode step inside a generate request)
         // never re-quantize a weight.
-        match &v.stack {
-            Some(stack) => {
-                let hook = match &v.prepared {
-                    Some(p) => QuantHook::with_prepared(stack, p),
-                    None => QuantHook::new(stack),
-                };
-                self.run_batch(v, &hook, inputs)
-            }
-            None => self.run_batch(v, &FpHook, inputs),
-        }
+        with_hook(v, |hook| self.run_batch(v, hook, inputs))
+    }
+}
+
+/// The continuous-batching face of the executor (PR 6): a
+/// [`crate::coordinator::StreamWorker`] admits generate requests into the
+/// variant's resident [`DecodeEngine`] one at a time and advances all
+/// in-flight streams one fused token-step per `step` call. Non-generate
+/// variants report zero free slots and are never admitted.
+impl StreamExecutor for NativeExecutor {
+    fn free_slots(&self, variant: &str) -> usize {
+        self.variants
+            .get(variant)
+            .and_then(|v| v.engine.as_ref())
+            .map_or(0, |e| e.lock().unwrap().free_slots())
+    }
+
+    fn admit(&self, variant: &str, input: &Tensor) -> Result<u64, String> {
+        let v = self
+            .variants
+            .get(variant)
+            .ok_or_else(|| format!("no native variant `{variant}`"))?;
+        let NativeModel::GptGenerate { model, kv, max_new, .. } = &v.model else {
+            return Err(format!("variant `{variant}` does not stream (not a generate variant)"));
+        };
+        let req = parse_generate(input, model, *max_new, effective_cap(kv, model))?;
+        let engine = v.engine.as_ref().expect("generate variants have a resident engine");
+        engine.lock().unwrap().admit(req).map_err(|e| e.to_string())
+    }
+
+    fn step(&self, variant: &str) -> Vec<(u64, Result<Tensor, String>)> {
+        let Some(v) = self.variants.get(variant) else { return Vec::new() };
+        let Some(engine) = v.engine.as_ref() else { return Vec::new() };
+        let mut engine = engine.lock().unwrap();
+        with_hook(v, |hook| engine.step(hook));
+        engine
+            .drain()
+            .into_iter()
+            .map(|(sid, r)| {
+                debug_assert!(!r.truncated, "validated requests can never truncate");
+                let row: Vec<f32> = r.tokens.iter().map(|&t| t as f32).collect();
+                (sid, Ok(Tensor::from_vec(&[1, row.len()], row)))
+            })
+            .collect()
+    }
+
+    fn has_work(&self, variant: &str) -> bool {
+        self.variants
+            .get(variant)
+            .and_then(|v| v.engine.as_ref())
+            .is_some_and(|e| e.lock().unwrap().has_work())
     }
 }
 
@@ -729,6 +823,7 @@ mod tests {
             32,
             crate::decode::Sampling::TopK { k: 12, temperature: 0.8, seed: 0xA11CE },
             4,
+            8,
         );
         let input = Tensor::from_vec(&[1, 4], vec![16.0, 2.0, 9.0, 33.0]);
         let a = exec.execute("gen-sampled", &[&input]).unwrap().remove(0);
@@ -750,6 +845,133 @@ mod tests {
         );
         let g = exec_g.execute("gen-greedy", &[&input]).unwrap().remove(0);
         assert_ne!(a, g, "temperature+top-k must diverge from greedy");
+    }
+
+    #[test]
+    fn stream_admission_matches_serial_decode_exactly() {
+        // Drive the StreamExecutor surface by hand: admit ragged requests
+        // at different times into the resident engine, step to completion,
+        // and compare every stream with PR 3's serial greedy decode.
+        let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 41));
+        let exec = NativeExecutor::new().with_gpt_generate(
+            "gen",
+            gpt.clone(),
+            None,
+            crate::kvcache::KvCacheConfig::fp32(),
+            32,
+        );
+        let mk = |n_new: f32, prompt: &[f32]| {
+            let mut v = vec![n_new];
+            v.extend_from_slice(prompt);
+            Tensor::from_vec(&[1, v.len()], v)
+        };
+        let inputs =
+            [mk(6.0, &[1.0, 2.0, 3.0]), mk(9.0, &[44.0]), mk(4.0, &[7.0, 19.0, 2.0, 5.0, 11.0])];
+        // Admit the first two, step twice, then admit the third mid-run.
+        let a = exec.admit("gen", &inputs[0]).unwrap();
+        let b = exec.admit("gen", &inputs[1]).unwrap();
+        let mut done: HashMap<u64, Tensor> = HashMap::new();
+        for _ in 0..2 {
+            for (sid, out) in exec.step("gen") {
+                done.insert(sid, out.unwrap());
+            }
+        }
+        let c = exec.admit("gen", &inputs[2]).unwrap();
+        while exec.has_work("gen") {
+            for (sid, out) in exec.step("gen") {
+                done.insert(sid, out.unwrap());
+            }
+        }
+        assert_eq!(done.len(), 3);
+        assert_eq!(exec.free_slots("gen"), crate::decode::DEFAULT_MAX_INFLIGHT);
+        for (sid, input) in [(a, &inputs[0]), (b, &inputs[1]), (c, &inputs[2])] {
+            let n_new = input.data()[0] as usize;
+            let prompt: Vec<u32> = input.data()[1..].iter().map(|&v| v as u32).collect();
+            let mut cache = crate::kvcache::KvCache::fp32(gpt.cfg.n_layers);
+            let want = gpt.generate_greedy(&FpHook, &prompt, n_new, &mut cache);
+            let got = &done[&sid];
+            assert_eq!(got.shape(), &[1, n_new]);
+            for (j, &w) in want.iter().enumerate() {
+                assert_eq!(got.at(0, j), w as f32, "stream {sid} token {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn stream_admission_respects_max_inflight_and_rejects_non_streams() {
+        let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 43));
+        let exec = NativeExecutor::new()
+            .with_gpt("fp", gpt.clone(), None)
+            .with_gpt_generate_cfg(
+                "gen",
+                gpt,
+                None,
+                crate::kvcache::KvCacheConfig::fp32(),
+                32,
+                Sampling::Greedy,
+                crate::decode::DEFAULT_DECODE_BATCH,
+                2,
+            );
+        let input = Tensor::from_vec(&[1, 2], vec![4.0, 3.0]);
+        assert_eq!(exec.free_slots("gen"), 2);
+        exec.admit("gen", &input).unwrap();
+        exec.admit("gen", &input).unwrap();
+        assert_eq!(exec.free_slots("gen"), 0);
+        let err = exec.admit("gen", &input).unwrap_err();
+        assert!(err.contains("no free slot"), "{err}");
+        // Slots come back as streams retire, and admission works again.
+        while exec.has_work("gen") {
+            exec.step("gen");
+        }
+        assert_eq!(exec.free_slots("gen"), 2);
+        exec.admit("gen", &input).unwrap();
+        // Forward variants never stream.
+        assert_eq!(exec.free_slots("fp"), 0);
+        assert!(!exec.has_work("fp"));
+        assert!(exec.admit("fp", &input).unwrap_err().contains("does not stream"));
+        assert!(exec.step("fp").is_empty());
+        assert!(exec.admit("nope", &input).unwrap_err().contains("no native variant"));
+        // Malformed requests are rejected at the admission boundary.
+        let bad = Tensor::from_vec(&[1, 2], vec![0.0, 1.0]);
+        assert!(exec.admit("gen", &bad).unwrap_err().contains("invalid n_new"));
+    }
+
+    #[test]
+    fn batch_and_stream_paths_share_the_resident_engine() {
+        // A one-shot batch run on a busy engine must leave the previously
+        // admitted stream in flight and untouched.
+        let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 47));
+        let exec = NativeExecutor::new().with_gpt_generate(
+            "gen",
+            gpt.clone(),
+            None,
+            crate::kvcache::KvCacheConfig::fp32(),
+            32,
+        );
+        let streamed = Tensor::from_vec(&[1, 3], vec![10.0, 5.0, 9.0]);
+        let sid = exec.admit("gen", &streamed).unwrap();
+        let free_before = exec.free_slots("gen");
+        let batched = Tensor::from_vec(&[1, 4], vec![6.0, 1.0, 2.0, 3.0]);
+        let out = exec.execute("gen", &[&batched]).unwrap().remove(0);
+        assert_eq!(out.shape(), &[1, 6]);
+        // The streamed request survived the batch run and still completes
+        // with serial-parity output.
+        assert_eq!(exec.free_slots("gen"), free_before, "batch run must release its own slots");
+        let mut done = None;
+        while exec.has_work("gen") || done.is_none() {
+            for (id, o) in exec.step("gen") {
+                if id == sid {
+                    done = Some(o.unwrap());
+                }
+            }
+        }
+        let got = done.unwrap();
+        let mut cache = crate::kvcache::KvCache::fp32(gpt.cfg.n_layers);
+        let want = gpt.generate_greedy(&FpHook, &[5, 9], 10, &mut cache);
+        assert_eq!(got.shape(), &[1, 10]);
+        for (j, &w) in want.iter().enumerate() {
+            assert_eq!(got.at(0, j), w as f32, "token {j}");
+        }
     }
 
     #[test]

@@ -1,0 +1,247 @@
+//! Continuous-batching admission-interleaving parity harness (PR 6).
+//!
+//! The in-flight admission invariant: a stream's token output is a pure
+//! function of (model, kv config, sampling spec, its own prompt and
+//! budget) — *when* it was admitted, which streams it shared steps with,
+//! how wide the fused chunks were, and how many kernel threads ran are
+//! all invisible, bit for bit. The suite drives random workloads (ragged
+//! prompts, budgets, arrival steps, windowed/bounded kv, fp32 + packed
+//! caches) through a seeded scheduler trace and checks every stream
+//! against the serial PR 3 oracle, threaded and forced-serial (CI also
+//! re-runs the whole file under `STAMP_THREADS=1`).
+
+use stamp::decode::{DecodeEngine, GenRequest, Sampling, StreamId, StreamResult};
+use stamp::kvcache::{KvCache, KvCacheConfig};
+use stamp::model::{FpHook, Gpt, GptConfig};
+use stamp::testkit;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Serial oracle: PR 3's per-request greedy loop, one private cache.
+fn serial_greedy(gpt: &Gpt, kv: &KvCacheConfig, prompt: &[u32], n_new: usize) -> Vec<u32> {
+    let mut cache = KvCache::new(gpt.cfg.n_layers, kv.clone());
+    gpt.generate_greedy(&FpHook, prompt, n_new, &mut cache)
+}
+
+/// Drive an engine against an admission schedule: stream `i` becomes
+/// available at engine step `arrivals[i]` and is seated in arrival order
+/// as slots free up; the engine keeps stepping whatever is already in
+/// flight in the meantime — the continuous-batching loop.
+fn drive(
+    engine: &mut DecodeEngine,
+    reqs: &[GenRequest],
+    arrivals: &[usize],
+) -> Vec<StreamResult> {
+    let mut order: Vec<usize> = (0..reqs.len()).collect();
+    order.sort_by_key(|&i| arrivals[i]);
+    let mut ids: HashMap<StreamId, usize> = HashMap::new();
+    let mut done: Vec<Option<StreamResult>> = (0..reqs.len()).map(|_| None).collect();
+    let (mut next, mut step) = (0usize, 0usize);
+    while next < order.len() || engine.has_work() {
+        // FIFO seating: a stream never jumps an earlier arrival that is
+        // still waiting for a slot.
+        while next < order.len() && arrivals[order[next]] <= step && engine.free_slots() > 0 {
+            let i = order[next];
+            ids.insert(engine.admit(reqs[i].clone()).expect("admit"), i);
+            next += 1;
+        }
+        engine.step(&FpHook);
+        for (sid, res) in engine.drain() {
+            done[ids[&sid]] = Some(res);
+        }
+        step += 1;
+        assert!(step < 100_000, "admission driver failed to converge");
+    }
+    done.into_iter().map(|r| r.expect("every admitted stream must retire")).collect()
+}
+
+#[derive(Debug)]
+struct Workload {
+    prompts: Vec<usize>,
+    budgets: Vec<usize>,
+    /// Engine step at which each stream arrives (the scheduler trace).
+    arrivals: Vec<usize>,
+    decode_batch: usize,
+    max_inflight: usize,
+    packed: bool,
+    /// Sliding-window size (0 = bounded, no eviction policy). Generated
+    /// ≥ any stream's prompt + budget so eviction is a no-op and the
+    /// unwindowed serial oracle must still match bit-for-bit.
+    window: usize,
+    seed: u64,
+}
+
+impl Workload {
+    fn base_kv(&self) -> KvCacheConfig {
+        if self.packed { KvCacheConfig::two_level(4, 8, 4, 8) } else { KvCacheConfig::fp32() }
+    }
+
+    fn kv(&self) -> KvCacheConfig {
+        let base = self.base_kv();
+        if self.window > 0 { base.with_window(4, self.window) } else { base }
+    }
+
+    fn reqs(&self) -> Vec<GenRequest> {
+        (0..self.prompts.len())
+            .map(|i| GenRequest {
+                prompt: (0..self.prompts[i])
+                    .map(|j| ((self.seed as usize + i * 13 + j * 7) % 70) as u32)
+                    .collect(),
+                n_new: self.budgets[i],
+            })
+            .collect()
+    }
+}
+
+fn gen_workload(g: &mut testkit::Gen) -> Workload {
+    let n = g.usize_in(1, 6);
+    Workload {
+        prompts: (0..n).map(|_| g.usize_in(1, 24)).collect(),
+        budgets: (0..n).map(|_| g.usize_in(0, 12)).collect(),
+        arrivals: (0..n).map(|_| g.usize_in(0, 20)).collect(),
+        decode_batch: g.usize_in(1, 4),
+        max_inflight: g.usize_in(1, 4),
+        packed: g.usize_in(0, 1) == 1,
+        // prompts ≤ 24 and budgets ≤ 12 keep every logical length
+        // ≤ 36 < 40 ≤ window: eviction can never fire.
+        window: if g.usize_in(0, 2) == 0 { 0 } else { 40 + g.usize_in(0, 80) },
+        seed: g.rng.next_u64(),
+    }
+}
+
+/// Tentpole satellite: greedy in-flight admission equals serial decode
+/// for every stream of every random workload, regardless of when the
+/// stream was admitted — threaded and forced-serial kernels.
+#[test]
+fn property_inflight_admission_equals_serial_decode() {
+    let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 31));
+    testkit::check(
+        "continuous-admission-vs-serial",
+        8,
+        0xC0117,
+        gen_workload,
+        |w| {
+            let reqs = w.reqs();
+            let mut engine = DecodeEngine::new(gpt.clone(), w.kv(), Sampling::Greedy)
+                .with_decode_batch(w.decode_batch)
+                .with_max_inflight(w.max_inflight);
+            let threaded = drive(&mut engine, &reqs, &w.arrivals);
+            // The same (reusable) engine, forced-serial kernels: the
+            // fused path must be thread-count invariant.
+            stamp::parallel::set_kernel_serial(true);
+            let serial_kernels = drive(&mut engine, &reqs, &w.arrivals);
+            stamp::parallel::set_kernel_serial(false);
+            for (i, r) in reqs.iter().enumerate() {
+                // The oracle always runs unwindowed: the no-op-sized
+                // window must change nothing.
+                let want = serial_greedy(&gpt, &w.base_kv(), &r.prompt, r.n_new);
+                if threaded[i].tokens != want {
+                    return Err(format!(
+                        "stream {i} (arrival {}): in-flight {:?} != serial {want:?}",
+                        w.arrivals[i], threaded[i].tokens
+                    ));
+                }
+                if threaded[i].truncated {
+                    return Err(format!("stream {i}: unexpected truncation"));
+                }
+                if serial_kernels[i] != threaded[i] {
+                    return Err(format!("stream {i}: thread-count variance"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Sampled streams carry their own seeded RNG, so even temperature/top-k
+/// decoding is admission-schedule invariant: a staggered-arrival run and
+/// a fresh one-shot `run_fp` over the same requests must agree token for
+/// token.
+#[test]
+fn property_sampled_streams_ignore_admission_schedule() {
+    let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 33));
+    testkit::check(
+        "continuous-admission-invariance-topk",
+        8,
+        0x70B5,
+        gen_workload,
+        |w| {
+            let sampling =
+                Sampling::TopK { k: 8, temperature: 0.9, seed: w.seed ^ 0x5EED };
+            let reqs = w.reqs();
+            let mut staggered = DecodeEngine::new(gpt.clone(), w.kv(), sampling.clone())
+                .with_decode_batch(w.decode_batch)
+                .with_max_inflight(w.max_inflight);
+            let got = drive(&mut staggered, &reqs, &w.arrivals);
+            let mut oneshot = DecodeEngine::new(gpt.clone(), w.kv(), sampling)
+                .with_decode_batch(w.decode_batch)
+                .with_max_inflight(w.max_inflight);
+            let want = oneshot.run_fp(&reqs).map_err(|e| e.to_string())?;
+            for i in 0..reqs.len() {
+                if got[i] != want[i] {
+                    return Err(format!(
+                        "stream {i} (arrival {}): staggered {:?} != one-shot {:?}",
+                        w.arrivals[i], got[i].tokens, want[i].tokens
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// End to end: five generate calls through the streaming server path
+/// (`Server::start_streaming` → `StreamWorker` → the variant's resident
+/// engine) with only two engine slots, so admission necessarily happens
+/// in flight — every response still matches serial decode exactly and
+/// the admission metrics balance.
+#[test]
+fn streaming_server_admits_in_flight_and_matches_serial_decode() {
+    use stamp::config::ServeSpec;
+    use stamp::coordinator::Server;
+    use stamp::runtime::NativeExecutor;
+    use stamp::tensor::Tensor;
+    use std::sync::atomic::Ordering;
+    use std::time::Duration;
+
+    let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 61));
+    let exec = Arc::new(NativeExecutor::new().with_gpt_generate_cfg(
+        "gen",
+        gpt.clone(),
+        None,
+        KvCacheConfig::fp32(),
+        64,
+        Sampling::Greedy,
+        4,
+        2, // two slots: five requests force in-flight admission
+    ));
+    let spec = ServeSpec { workers: 1, max_batch: 4, max_wait_us: 500, queue_depth: 16 };
+    let server =
+        Server::start_streaming(&spec, &[], &["gen"], exec.clone(), Some(exec.clone()), None);
+    let handle = server.handle();
+    let prompts = [3usize, 11, 7, 1, 16];
+    let budgets = [12usize, 4, 9, 6, 2];
+    let mut pending = Vec::new();
+    for (i, (&p, &n)) in prompts.iter().zip(&budgets).enumerate() {
+        let prompt: Vec<u32> = (0..p).map(|j| ((i * 13 + j * 7 + 3) % 70) as u32).collect();
+        let mut row = vec![n as f32];
+        row.extend(prompt.iter().map(|&t| t as f32));
+        let rx = handle.submit("gen", Tensor::from_vec(&[1, row.len()], row)).1;
+        pending.push((prompt, n, rx));
+    }
+    for (i, (prompt, n, rx)) in pending.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(60)).expect("stream response");
+        let out = resp.output.unwrap();
+        let want = serial_greedy(&gpt, &KvCacheConfig::fp32(), &prompt, n);
+        assert_eq!(out.shape(), &[1, n], "request {i}");
+        for (j, &w) in want.iter().enumerate() {
+            assert_eq!(out.at(0, j), w as f32, "request {i} token {j}");
+        }
+        assert_eq!(resp.batch_size, 1, "streams retire independently");
+    }
+    let vm = handle.metrics.variant("gen");
+    assert_eq!(vm.admitted.load(Ordering::Relaxed), 5, "all five requests seated");
+    assert_eq!(vm.shed.load(Ordering::Relaxed), 0, "nothing shed");
+    assert_eq!(vm.inflight.load(Ordering::Relaxed), 0, "inflight gauge back to zero");
+    server.shutdown();
+}

@@ -306,7 +306,7 @@ fn windowed_noop_engine_matches_unwindowed_serial_and_batched() {
     // The same no-op guarantee through the engine: serial (decode_batch
     // 1) and fused stepping under a window config reproduce the
     // unwindowed serial oracle, fp32 and packed.
-    let gpt = Gpt::new(GptConfig::tiny(), 53);
+    let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 53));
     let reqs = vec![
         GenRequest { prompt: prefix_tokens(5), n_new: 14 },
         GenRequest { prompt: prefix_tokens(12), n_new: 6 },
@@ -317,7 +317,7 @@ fn windowed_noop_engine_matches_unwindowed_serial_and_batched() {
             if packed { KvCacheConfig::two_level(4, 8, 4, 8) } else { KvCacheConfig::fp32() };
         let win = base.clone().with_window(4, 64);
         for decode_batch in [1usize, 8] {
-            let engine = DecodeEngine::new(&gpt, win.clone(), Sampling::Greedy)
+            let mut engine = DecodeEngine::new(gpt.clone(), win.clone(), Sampling::Greedy)
                 .with_decode_batch(decode_batch);
             let got = engine.run_fp(&reqs).unwrap();
             for (i, r) in reqs.iter().enumerate() {
@@ -369,7 +369,7 @@ fn batched_decode_bit_identical_to_serial_any_thread_count() {
     // batch reproduces its serial `generate_greedy` run bit-for-bit —
     // mixed prompt lengths, mixed budgets (mid-run retirement), any
     // decode_batch chunking, threaded and forced-serial kernels.
-    let gpt = Gpt::new(GptConfig::tiny(), 21);
+    let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 21));
     let reqs = vec![
         GenRequest { prompt: prefix_tokens(5), n_new: 20 },
         GenRequest { prompt: prefix_tokens(11), n_new: 3 },
@@ -379,8 +379,8 @@ fn batched_decode_bit_identical_to_serial_any_thread_count() {
     ];
     let kv = KvCacheConfig::fp32();
     for decode_batch in [1usize, 3, 8] {
-        let engine =
-            DecodeEngine::new(&gpt, kv.clone(), Sampling::Greedy).with_decode_batch(decode_batch);
+        let mut engine = DecodeEngine::new(gpt.clone(), kv.clone(), Sampling::Greedy)
+            .with_decode_batch(decode_batch);
         let threaded = engine.run_fp(&reqs).unwrap();
         stamp::parallel::set_kernel_serial(true);
         let serial_kernels = engine.run_fp(&reqs).unwrap();
@@ -403,14 +403,15 @@ fn batched_decode_with_packed_cache_matches_serial_packed_decode() {
     // row-wise, so even a *quantized* per-stream cache keeps batched ==
     // serial exactly; the cache policy's drift vs fp32 stays the
     // separately-pinned envelope (`packed_cache_drift_is_measurable_and_bounded`).
-    let gpt = Gpt::new(GptConfig::tiny(), 23);
+    let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 23));
     let kv = KvCacheConfig::two_level(4, 8, 4, 8).with_transform(SeqTransformKind::HaarDwt);
     let reqs = vec![
         GenRequest { prompt: prefix_tokens(9), n_new: 14 },
         GenRequest { prompt: prefix_tokens(3), n_new: 6 },
         GenRequest { prompt: prefix_tokens(13), n_new: 10 },
     ];
-    let engine = DecodeEngine::new(&gpt, kv.clone(), Sampling::Greedy).with_decode_batch(2);
+    let mut engine =
+        DecodeEngine::new(gpt.clone(), kv.clone(), Sampling::Greedy).with_decode_batch(2);
     let got = engine.run_fp(&reqs).unwrap();
     for (i, r) in reqs.iter().enumerate() {
         let want = serial_greedy(&gpt, &kv, &r.prompt, r.n_new);
@@ -438,7 +439,7 @@ struct BatchCase {
 /// and without a (no-op sized) per-composition window config.
 #[test]
 fn property_batched_decode_equals_serial_per_stream() {
-    let gpt = Gpt::new(GptConfig::tiny(), 25);
+    let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 25));
     testkit::check(
         "batched-vs-serial-decode",
         10,
@@ -472,7 +473,7 @@ fn property_batched_decode_equals_serial_per_stream() {
                     n_new: c.budgets[i],
                 })
                 .collect();
-            let engine = DecodeEngine::new(&gpt, kv, Sampling::Greedy)
+            let mut engine = DecodeEngine::new(gpt.clone(), kv, Sampling::Greedy)
                 .with_decode_batch(c.decode_batch);
             let got = engine.run_fp(&reqs).map_err(|e| e.to_string())?;
             for (i, r) in reqs.iter().enumerate() {
@@ -541,13 +542,13 @@ fn engine_truncation_rides_the_kv_capacity_error() {
     // two views of the same condition: a stream that outgrows its cache
     // retires early with the generated prefix intact, and its batch-mates
     // never notice.
-    let gpt = Gpt::new(GptConfig::tiny(), 29);
+    let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 29));
     let kv = KvCacheConfig::fp32().with_max_seq(10);
     let reqs = vec![
         GenRequest { prompt: prefix_tokens(7), n_new: 24 },
         GenRequest { prompt: prefix_tokens(3), n_new: 5 },
     ];
-    let engine = DecodeEngine::new(&gpt, kv, Sampling::Greedy);
+    let mut engine = DecodeEngine::new(gpt.clone(), kv, Sampling::Greedy);
     let got = engine.run_fp(&reqs).unwrap();
     // Stream 0: prefill 7 + 3 appends reach cap 10 → 4 tokens out.
     assert!(got[0].truncated);
