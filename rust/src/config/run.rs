@@ -52,7 +52,7 @@ pub struct ServeSpec {
 /// field paths: `max_new_tokens`, `decode_batch`, `temperature`, `top_k`,
 /// `seed`, `max_inflight`, `admit_deadline_ms`, `kv.hp_tokens`,
 /// `kv.hp_bits`, `kv.lp_bits`, `kv.block`, `kv.packed`, `kv.transform`,
-/// `kv.window`, `kv.sink_tokens`.
+/// `kv.window`, `kv.sink_tokens`, `kv.prefix_cache`.
 #[derive(Clone, Debug)]
 pub struct GenerateSpec {
     /// Per-request cap on generated tokens.
@@ -64,7 +64,10 @@ pub struct GenerateSpec {
     /// Softmax temperature for sampling; `0` (the default) keeps greedy
     /// argmax decoding.
     pub temperature: f32,
-    /// Top-k cutoff when sampling (`0` = the full vocabulary).
+    /// Top-k cutoff when sampling. The engine accepts `0` as "full
+    /// vocabulary", but the config layer requires an explicit `≥ 1`
+    /// whenever `temperature > 0` ([`GenerateSpec::check`]) so a
+    /// sampled run never inherits the shortlist by omission.
     pub top_k: usize,
     /// Sampler seed — every stream draws from its own generator seeded
     /// here, so batched runs stay deterministic.
@@ -97,6 +100,12 @@ pub struct GenerateSpec {
     /// (block-rounded up; for packed caches they must be ≤ `kv_hp_tokens`
     /// — the sinks are the hp tokens of the two-level policy).
     pub kv_sink_tokens: usize,
+    /// Prompt-prefix sharing through the paged block pool
+    /// ([`crate::kvcache::BlockPool`], PR 7): streams whose prompt prefix
+    /// is already pooled are seated on the shared blocks copy-on-write
+    /// instead of re-running prefill for the span. `false` (the default)
+    /// keeps every stream's cache fully private.
+    pub kv_prefix_cache: bool,
 }
 
 impl GenerateSpec {
@@ -130,11 +139,36 @@ impl GenerateSpec {
             // config itself stays model-free.
             max_seq: None,
             eviction,
+            prefix_cache: self.kv_prefix_cache,
         };
         // Same error surface as a bad kv.transform: invalid lanes/blocks
         // fail here, recoverably, instead of panicking at registration.
         cfg.check().map_err(crate::error::Error::msg)?;
         Ok(cfg)
+    }
+
+    /// Validate the sampling knobs, recoverably, at config-parse time.
+    /// The sampler's own API doc says "temperature must be positive" but
+    /// its runtime guard is a silent `.max(1e-6)` clamp — without this
+    /// check a misconfigured `temperature = -0.5` would quietly serve
+    /// near-argmax draws instead of failing. `temperature = 0` stays
+    /// valid (greedy decoding, the default); a positive temperature
+    /// requires a usable shortlist (`top_k ≥ 1`). The clamp itself is
+    /// kept as defense-in-depth for engines built directly.
+    pub fn check(&self) -> crate::error::Result<()> {
+        if !self.temperature.is_finite() || self.temperature < 0.0 {
+            crate::bail!(
+                "generate.temperature must be ≥ 0 (0 = greedy, > 0 = sampled), got {}",
+                self.temperature
+            );
+        }
+        if self.temperature > 0.0 && self.top_k < 1 {
+            crate::bail!(
+                "generate.top_k must be ≥ 1 when generate.temperature > 0, got {}",
+                self.top_k
+            );
+        }
+        Ok(())
     }
 
     /// The admission deadline as the scheduler consumes it: `None` when
@@ -215,6 +249,7 @@ impl RunConfig {
                 kv_transform: "identity".into(),
                 kv_window: 0,
                 kv_sink_tokens: 64,
+                kv_prefix_cache: false,
             },
             artifacts_dir: "artifacts".into(),
         }
@@ -223,7 +258,7 @@ impl RunConfig {
     pub fn from_toml_str(text: &str) -> crate::error::Result<Self> {
         let doc = Toml::parse(text).map_err(crate::error::Error::msg)?;
         let d = Self::defaults();
-        Ok(RunConfig {
+        let cfg = RunConfig {
             model: ModelSpec {
                 kind: doc.str_or("model", "kind", &d.model.kind),
                 variant: doc.str_or("model", "variant", &d.model.variant),
@@ -283,9 +318,15 @@ impl RunConfig {
                 kv_sink_tokens: doc
                     .int_or("generate", "kv.sink_tokens", d.generate.kv_sink_tokens as i64)
                     as usize,
+                kv_prefix_cache: doc
+                    .bool_or("generate", "kv.prefix_cache", d.generate.kv_prefix_cache),
             },
             artifacts_dir: doc.str_or("", "artifacts_dir", &d.artifacts_dir),
-        })
+        };
+        // Sampling knobs fail here, recoverably, instead of being silently
+        // clamped at sample time (see [`GenerateSpec::check`]).
+        cfg.generate.check()?;
+        Ok(cfg)
     }
 
     pub fn from_file(path: &str) -> crate::error::Result<Self> {
@@ -490,6 +531,38 @@ mod tests {
         // registration.
         let cfg = RunConfig::from_toml_str("[generate]\nmax_inflight = 0\n").unwrap();
         assert_eq!(cfg.generate.max_inflight, 1);
+    }
+
+    #[test]
+    fn generate_prefix_cache_knob_parses_and_is_off_by_default() {
+        let d = RunConfig::defaults();
+        assert!(!d.generate.kv_prefix_cache, "prefix sharing is opt-in");
+        assert!(!d.generate.kv_cfg().unwrap().prefix_cache);
+        let cfg = RunConfig::from_toml_str("[generate]\nkv.prefix_cache = true\n").unwrap();
+        assert!(cfg.generate.kv_prefix_cache);
+        assert!(cfg.generate.kv_cfg().unwrap().prefix_cache);
+    }
+
+    #[test]
+    fn generate_sampling_knobs_validate_recoverably_at_parse() {
+        // Regression (PR 7): a negative temperature used to be silently
+        // clamped to 1e-6 at sample time (near-argmax draws) — it must be
+        // a recoverable parse error instead.
+        let err = RunConfig::from_toml_str("[generate]\ntemperature = -0.5\n").unwrap_err();
+        assert!(err.to_string().contains("temperature"), "{err}");
+        // Sampling with an empty shortlist is equally misconfigured.
+        let err = RunConfig::from_toml_str("[generate]\ntemperature = 0.7\n").unwrap_err();
+        assert!(err.to_string().contains("top_k"), "{err}");
+        // A coherent sampled config and the greedy default both pass.
+        let cfg =
+            RunConfig::from_toml_str("[generate]\ntemperature = 0.7\ntop_k = 16\n").unwrap();
+        assert_eq!(
+            cfg.generate.sampling(),
+            crate::decode::Sampling::TopK { k: 16, temperature: 0.7, seed: 0x5EED }
+        );
+        RunConfig::defaults().generate.check().unwrap();
+        // top_k without sampling stays valid: greedy ignores it.
+        RunConfig::from_toml_str("[generate]\ntop_k = 4\n").unwrap();
     }
 
     #[test]

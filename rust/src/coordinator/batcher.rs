@@ -108,6 +108,17 @@ pub struct AdmissionQueue<T> {
     pending: VecDeque<(T, Instant)>,
 }
 
+/// Result of [`AdmissionQueue::pop_ready`]: requests to seat now and
+/// requests whose admission deadline elapsed at (or before) the pop
+/// instant, which the caller must shed and count. Each entry carries its
+/// submission [`Instant`].
+pub struct Popped<T> {
+    /// Seatable requests, strictly FIFO, at most `free_slots` of them.
+    pub ready: Vec<(T, Instant)>,
+    /// Requests expired at the pop instant (deadline boundary inclusive).
+    pub expired: Vec<(T, Instant)>,
+}
+
 impl<T> AdmissionQueue<T> {
     /// `admit_deadline = None` disables expiry (requests wait as long as
     /// it takes); `max_pending` is the backpressure bound (≥ 1).
@@ -134,12 +145,30 @@ impl<T> AdmissionQueue<T> {
         Ok(())
     }
 
-    /// Dequeue up to `free_slots` items, strictly FIFO — a younger
-    /// request can never jump an older one, regardless of how slots free
-    /// up (arrival-order fairness).
-    pub fn pop_ready(&mut self, free_slots: usize) -> Vec<(T, Instant)> {
-        let take = free_slots.min(self.pending.len());
-        self.pending.drain(..take).collect()
+    /// Dequeue up to `free_slots` seatable items, strictly FIFO — a
+    /// younger request can never jump an older one, regardless of how
+    /// slots free up (arrival-order fairness).
+    ///
+    /// Expiry is checked *at the pop instant*: a request whose admission
+    /// deadline has elapsed — including one elapsing exactly at `now` —
+    /// is returned in [`Popped::expired`] for the caller to shed, and
+    /// does not consume a free slot. This mirrors the PR 6
+    /// [`DynamicBatcher`] boundary fix: before it, `pop_ready` was
+    /// deadline-blind, so a request expiring in the gap between the
+    /// caller's `expire()` poll and the pop would be seated late instead
+    /// of shed (pinned by
+    /// `pop_ready_sheds_request_expiring_exactly_at_the_pop_instant`).
+    pub fn pop_ready(&mut self, free_slots: usize, now: Instant) -> Popped<T> {
+        let mut popped = Popped { ready: Vec::new(), expired: Vec::new() };
+        while popped.ready.len() < free_slots {
+            let Some((_, submitted)) = self.pending.front() else { break };
+            if self.admit_deadline.is_some_and(|d| now.duration_since(*submitted) >= d) {
+                popped.expired.push(self.pending.pop_front().expect("front exists"));
+            } else {
+                popped.ready.push(self.pending.pop_front().expect("front exists"));
+            }
+        }
+        popped
     }
 
     /// Remove and return every entry whose admission deadline has passed
@@ -305,16 +334,19 @@ mod tests {
         assert!(q.push(3, t0).is_ok());
         // Backpressure: the bound rejects, returning the item to shed.
         assert_eq!(q.push(4, t0), Err(4));
-        // Strict FIFO, capped by free slots.
-        let got: Vec<u64> = q.pop_ready(2).into_iter().map(|(v, _)| v).collect();
+        // Strict FIFO, capped by free slots; no deadline → nothing expires.
+        let popped = q.pop_ready(2, t0);
+        assert!(popped.expired.is_empty());
+        let got: Vec<u64> = popped.ready.into_iter().map(|(v, _)| v).collect();
         assert_eq!(got, vec![1, 2]);
         assert_eq!(q.len(), 1);
         // A freed entry makes room again.
         assert!(q.push(5, t0).is_ok());
-        let got: Vec<u64> = q.pop_ready(10).into_iter().map(|(v, _)| v).collect();
+        let got: Vec<u64> = q.pop_ready(10, t0).ready.into_iter().map(|(v, _)| v).collect();
         assert_eq!(got, vec![3, 5]);
         assert!(q.is_empty());
-        assert!(q.pop_ready(4).is_empty());
+        let popped = q.pop_ready(4, t0);
+        assert!(popped.ready.is_empty() && popped.expired.is_empty());
     }
 
     #[test]
@@ -337,6 +369,40 @@ mod tests {
         q.push(9, t0).unwrap();
         assert!(q.expire(t0 + Duration::from_secs(3600)).is_empty());
         assert_eq!(q.next_deadline(), None);
+    }
+
+    #[test]
+    fn pop_ready_sheds_request_expiring_exactly_at_the_pop_instant() {
+        // Regression (PR 7, mirroring the PR 6 DynamicBatcher boundary
+        // fix): pop_ready used to be deadline-blind, so a request whose
+        // admit deadline elapsed in the gap between the caller's
+        // expire() poll and the pop — including exactly at the pop
+        // instant — was seated late instead of shed.
+        let t0 = Instant::now();
+        let d = Duration::from_millis(10);
+        let mut q: AdmissionQueue<u64> = AdmissionQueue::new(8, Some(d));
+        q.push(1, t0).unwrap();
+        q.push(2, t0 + Duration::from_millis(6)).unwrap();
+        // Exactly at request 1's deadline: it must come back as expired —
+        // not seated — and must not consume the free slot, which request 2
+        // (4ms of budget left) takes instead.
+        let popped = q.pop_ready(1, t0 + d);
+        let expired: Vec<u64> = popped.expired.into_iter().map(|(v, _)| v).collect();
+        let ready: Vec<u64> = popped.ready.into_iter().map(|(v, _)| v).collect();
+        assert_eq!(expired, vec![1], "boundary expiry must shed, not seat");
+        assert_eq!(ready, vec![2], "unexpired successor takes the slot");
+        assert!(q.is_empty(), "nothing silently retained for the next poll");
+        // Past the deadline behaves the same.
+        q.push(3, t0).unwrap();
+        let popped = q.pop_ready(1, t0 + Duration::from_millis(30));
+        assert_eq!(popped.expired.len(), 1);
+        assert!(popped.ready.is_empty());
+        // Without a deadline, pop_ready never expires anything.
+        let mut q: AdmissionQueue<u64> = AdmissionQueue::new(8, None);
+        q.push(9, t0).unwrap();
+        let popped = q.pop_ready(1, t0 + Duration::from_secs(3600));
+        assert!(popped.expired.is_empty());
+        assert_eq!(popped.ready.len(), 1);
     }
 
     #[test]
@@ -377,7 +443,9 @@ mod tests {
                             }
                         }
                         2 => {
-                            for (id, _) in q.pop_ready(*arg) {
+                            let popped = q.pop_ready(*arg, clock);
+                            expired += popped.expired.len() as u64;
+                            for (id, _) in popped.ready {
                                 if let Some(prev) = last_admitted {
                                     if id <= prev {
                                         return Err(format!("FIFO violated: {id} after {prev}"));

@@ -25,6 +25,10 @@ pub struct VariantMetrics {
     pub inflight: AtomicU64,
     /// Total µs admitted streams spent waiting in the admission queue.
     pub admit_wait_us_total: AtomicU64,
+    /// Admitted streams seated on a pooled prompt prefix instead of
+    /// re-running prefill for the shared span (PR 7; mirrors
+    /// [`crate::decode::DecodeEngine::prefix_hits`]). Monotone counter.
+    pub prefix_hits: AtomicU64,
 }
 
 impl VariantMetrics {
@@ -100,7 +104,11 @@ impl Metrics {
         w.entry(name.to_string()).or_default().clone()
     }
 
-    /// Text snapshot for the CLI / logs.
+    /// Text snapshot for the CLI / logs. Lines are sorted by variant name:
+    /// the backing registry is a `HashMap` whose iteration order varies
+    /// run to run (and even snapshot to snapshot), and diff-based log
+    /// tooling treats a reordered line as churn — the sort pins the order
+    /// (regression: `snapshot_orders_variants_by_name_deterministically`).
     pub fn snapshot(&self) -> String {
         let r = self.inner.read().unwrap();
         let mut names: Vec<&String> = r.keys().collect();
@@ -109,7 +117,7 @@ impl Metrics {
         for n in names {
             let m = &r[n];
             out.push_str(&format!(
-                "{n}: reqs={} batches={} errs={} mean_batch={:.2} queue={:.0}µs service={:.0}µs depth={} admitted={} shed={} inflight={} admit_wait={:.0}µs\n",
+                "{n}: reqs={} batches={} errs={} mean_batch={:.2} queue={:.0}µs service={:.0}µs depth={} admitted={} shed={} inflight={} admit_wait={:.0}µs prefix_hits={}\n",
                 m.requests.load(Ordering::Relaxed),
                 m.batches.load(Ordering::Relaxed),
                 m.errors.load(Ordering::Relaxed),
@@ -121,6 +129,7 @@ impl Metrics {
                 m.shed.load(Ordering::Relaxed),
                 m.inflight.load(Ordering::Relaxed),
                 m.mean_admit_wait_us(),
+                m.prefix_hits.load(Ordering::Relaxed),
             ));
         }
         out
@@ -166,6 +175,26 @@ mod tests {
         assert!((v.mean_admit_wait_us() - 75.0).abs() < 1e-9);
         let snap = m.snapshot();
         assert!(snap.contains("admitted=2") && snap.contains("shed=1"), "{snap}");
+    }
+
+    #[test]
+    fn snapshot_orders_variants_by_name_deterministically() {
+        // Regression (PR 7): the registry is a HashMap, whose iteration
+        // order is nondeterministic — unsorted, successive snapshots could
+        // reorder lines and diff-based log tooling saw spurious churn.
+        // Lines must come out sorted by variant name, stably across
+        // repeated snapshots.
+        let m = Metrics::new();
+        m.variant("zeta").record_batch(1, 10, 20);
+        m.variant("alpha").record_shed();
+        let snap = m.snapshot();
+        let lines: Vec<&str> = snap.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("alpha:"), "first line must be alpha: {snap}");
+        assert!(lines[1].starts_with("zeta:"), "second line must be zeta: {snap}");
+        for _ in 0..10 {
+            assert_eq!(m.snapshot(), snap, "snapshot order must be stable");
+        }
     }
 
     #[test]

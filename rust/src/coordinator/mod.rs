@@ -28,7 +28,7 @@ mod router;
 mod server;
 mod worker;
 
-pub use batcher::{AdmissionQueue, Batch, DynamicBatcher};
+pub use batcher::{AdmissionQueue, Batch, DynamicBatcher, Popped};
 pub use metrics::{Metrics, VariantMetrics};
 pub use router::Router;
 pub use server::{Server, ServerHandle};

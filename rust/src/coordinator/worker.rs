@@ -190,6 +190,13 @@ pub trait StreamExecutor: Send + Sync + 'static {
     fn step(&self, variant: &str) -> Vec<(u64, Result<Tensor, String>)>;
     /// `true` while any stream is in flight for `variant`.
     fn has_work(&self, variant: &str) -> bool;
+    /// Cumulative prompt-prefix cache hits for `variant`'s engine (see
+    /// [`crate::decode::DecodeEngine::prefix_hits`]). The default keeps
+    /// executors without a prefix cache — and test mocks — trivially
+    /// conforming at 0.
+    fn prefix_hits(&self, _variant: &str) -> u64 {
+        0
+    }
 }
 
 /// Ingest message for a [`StreamWorker`].
@@ -203,9 +210,10 @@ pub enum StreamIngest {
 ///
 /// ```text
 /// ingest ──► AdmissionQueue (FIFO, max_pending bound, admit deadline)
-///               │ pop_ready(free_slots)          │ expire(now)
-///               ▼                                ▼
-///        StreamExecutor::admit            shed (error response)
+///               │ pop_ready(free_slots, now)     │ expire(now)
+///               │ ready        └─ expired ──┐    ▼
+///               ▼                           └► shed (error response)
+///        StreamExecutor::admit
 ///               │
 ///        StreamExecutor::step ──► finished streams ──► responses
 /// ```
@@ -334,7 +342,17 @@ fn stream_worker_loop(
         }
 
         // (3) Admit in arrival order while the engine has free slots.
-        for (req, _submitted) in queue.pop_ready(executor.free_slots(&variant)) {
+        // pop_ready re-checks deadlines at the pop instant (boundary
+        // inclusive), so a request expiring in the gap since (2) is shed
+        // here, never seated late.
+        let now = Instant::now();
+        let popped = queue.pop_ready(executor.free_slots(&variant), now);
+        for (req, submitted) in popped.expired {
+            let waited_us = now.duration_since(submitted).as_micros();
+            shed(req, format!("admission deadline exceeded after {waited_us}µs in queue"));
+        }
+        let mut admitted_any = false;
+        for (req, _submitted) in popped.ready {
             let now = Instant::now();
             let wait_us = now.duration_since(req.submitted).as_micros() as u64;
             match executor.admit(&variant, &req.input) {
@@ -342,6 +360,7 @@ fn stream_worker_loop(
                     vm.record_admit(wait_us);
                     vm.inflight.fetch_add(1, Ordering::Relaxed);
                     inflight.insert(sid, (req, now));
+                    admitted_any = true;
                 }
                 Err(msg) => {
                     vm.errors.fetch_add(1, Ordering::Relaxed);
@@ -355,6 +374,11 @@ fn stream_worker_loop(
                     });
                 }
             }
+        }
+        if admitted_any {
+            // Mirror the engine's cumulative prefix-cache hit counter into
+            // the variant metrics; only admissions can change it.
+            vm.prefix_hits.store(executor.prefix_hits(&variant), Ordering::Relaxed);
         }
 
         // (4) One engine step; deliver every stream that finished. Also

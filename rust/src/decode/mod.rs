@@ -78,8 +78,25 @@
 //! batched and serial stepping. That matches what a fused deployment
 //! kernel would see; the paper-shaped serving setup (FP linears +
 //! quantized KV cache, `stack = None`) is unaffected.
+//!
+//! ## Prompt-prefix sharing (DESIGN.md §15)
+//!
+//! Every engine owns one [`BlockPool`]; every admitted stream's cache
+//! allocates its finalized blocks there. With
+//! [`KvCacheConfig::prefix_cache`] set, [`DecodeEngine::admit`] looks the
+//! prompt up in the pool's token-ID prefix index and, on a hit, seeds the
+//! new cache from the pooled blocks ([`KvCache::seed_prefix`]) so prefill
+//! starts at the divergence point — the shared span is neither
+//! re-computed nor re-stored. When a prompt finishes prefilling (and
+//! nothing was evicted), the engine registers every block-aligned prefix
+//! of it, so later prompts sharing any aligned prefix can seat against
+//! it. Sharing preserves the bit-parity argument above: a block's
+//! representation depends only on its absolute base position and the
+//! engine-wide cache config, so a seeded stream's gather — and therefore
+//! its logits and tokens — is bit-identical to an unshared run
+//! (`tests/prefix.rs` pins it, fp32 and packed, at any thread count).
 
-use crate::kvcache::{EvictionPolicy, KvCache, KvCacheConfig};
+use crate::kvcache::{BlockPool, EvictionPolicy, KvCache, KvCacheConfig};
 use crate::model::gpt::argmax_row;
 use crate::model::{FpHook, Gpt, LinearHook};
 use crate::tensor::XorShiftRng;
@@ -144,7 +161,10 @@ impl Sampler {
                 idx.sort_by(cmp);
                 // Softmax over the shortlist at temperature t, in f64 and
                 // in shortlist order — a fixed reduction order, so the
-                // draw is bit-reproducible.
+                // draw is bit-reproducible. The config layer rejects
+                // non-positive temperatures at parse time
+                // ([`crate::config::GenerateSpec::check`]); the clamp
+                // stays as defense-in-depth for engines built directly.
                 let t = temperature.max(1e-6) as f64;
                 let top = row[idx[0]] as f64;
                 let weights: Vec<f64> =
@@ -225,6 +245,14 @@ pub struct DecodeEngine {
     /// Finished streams awaiting [`DecodeEngine::drain`], in retirement
     /// order.
     retired: VecDeque<(StreamId, StreamResult)>,
+    /// Shared block pool: every admitted stream's cache allocates its
+    /// finalized blocks here, and the prefix index lives here too (one
+    /// pool per engine — and therefore one per generate variant).
+    pool: Arc<BlockPool>,
+    /// Admissions seated against a pooled prefix (engine lifetime).
+    prefix_hits: u64,
+    /// Prompt tokens whose prefill was skipped via prefix hits.
+    prefix_tokens_reused: u64,
 }
 
 /// Default cap on streams fused into one GEMM (the `[generate]`
@@ -278,6 +306,9 @@ impl DecodeEngine {
             free: (0..max_inflight).rev().collect(),
             next_stream: 0,
             retired: VecDeque::new(),
+            pool: BlockPool::new(),
+            prefix_hits: 0,
+            prefix_tokens_reused: 0,
         }
     }
 
@@ -330,6 +361,42 @@ impl DecodeEngine {
     /// The engine's (normalized) per-stream cache policy.
     pub fn kv(&self) -> &KvCacheConfig {
         &self.kv
+    }
+
+    /// The engine's shared block pool (prefix index + physical blocks;
+    /// [`BlockPool::resident_bits`] is the physical footprint with every
+    /// shared block counted once).
+    pub fn pool(&self) -> &Arc<BlockPool> {
+        &self.pool
+    }
+
+    /// Admissions whose prompt prefix was found pooled, over the
+    /// engine's lifetime (0 unless [`KvCacheConfig::prefix_cache`] is
+    /// set — surfaced per variant by the coordinator's metrics).
+    pub fn prefix_hits(&self) -> u64 {
+        self.prefix_hits
+    }
+
+    /// Prompt tokens whose prefill was skipped via prefix hits, over the
+    /// engine's lifetime.
+    pub fn prefix_tokens_reused(&self) -> u64 {
+        self.prefix_tokens_reused
+    }
+
+    /// Sum of the in-flight streams' *per-stream* cache footprints
+    /// ([`KvCache::storage_bits`] — a shared block counts once per
+    /// stream). Compare with [`BlockPool::resident_bits`] plus
+    /// [`DecodeEngine::inflight_tail_bits`] (the physical total) to see
+    /// the prefix-reuse saving.
+    pub fn inflight_storage_bits(&self) -> usize {
+        self.slots.iter().flatten().map(|s| s.cache.storage_bits()).sum()
+    }
+
+    /// Sum of the in-flight streams' private fp32 tail bits (never
+    /// pooled); `pool().resident_bits() + inflight_tail_bits()` is the
+    /// engine's whole physical KV footprint.
+    pub fn inflight_tail_bits(&self) -> usize {
+        self.slots.iter().flatten().map(|s| s.cache.tail_bits()).sum()
     }
 
     /// Check a request against the engine's vocab and cache policy.
@@ -391,13 +458,28 @@ impl DecodeEngine {
         };
         let id = self.next_stream;
         self.next_stream += 1;
+        let mut cache = KvCache::with_pool(self.gpt.cfg.n_layers, self.kv.clone(), self.pool.clone());
+        let mut off = 0usize;
+        if self.kv.prefix_cache {
+            // Longest pooled block-aligned strict prefix of the prompt
+            // (never the whole prompt: the final token must prefill so
+            // its logits can sample the first generated token). On a hit
+            // the cache forks copy-on-write from the pooled blocks and
+            // prefill starts at the divergence point.
+            if let Some(hit) = self.pool.lookup_prefix(&req.prompt, self.kv.block) {
+                off = hit.span;
+                self.prefix_hits += 1;
+                self.prefix_tokens_reused += hit.span as u64;
+                cache.seed_prefix(hit);
+            }
+        }
         self.slots[i] = Some(Slot {
             id,
-            cache: KvCache::new(self.gpt.cfg.n_layers, self.kv.clone()),
+            cache,
             sampler: Sampler::new(&self.sampling),
             out: Vec::with_capacity(req.n_new),
             n_new: req.n_new,
-            phase: Phase::Prefill { prompt: req.prompt, off: 0 },
+            phase: Phase::Prefill { prompt: req.prompt, off },
         });
         Ok(id)
     }
@@ -481,6 +563,7 @@ impl DecodeEngine {
                 let gpt = &self.gpt;
                 let Some(s) = self.slots[i].as_mut() else { continue };
                 let mut finished = false;
+                let mut register: Option<Vec<u32>> = None;
                 if let Phase::Prefill { prompt, off } = &mut s.phase {
                     let take = (gpt.cfg.max_seq - s.cache.pos_next())
                         .min(chunk_cap)
@@ -492,11 +575,32 @@ impl DecodeEngine {
                         if s.n_new > 0 {
                             s.out.push(s.sampler.next(logits.row(logits.rows() - 1)));
                         }
+                        if self.kv.prefix_cache {
+                            let aligned = (prompt.len() / self.kv.block) * self.kv.block;
+                            if aligned > 0 {
+                                register = Some(prompt[..aligned].to_vec());
+                            }
+                        }
                     }
                 } else {
                     continue;
                 }
                 if finished {
+                    // The prompt is fully cached and nothing past it yet:
+                    // register every block-aligned prefix, so later
+                    // prompts sharing *any* aligned prefix can seat
+                    // against the pooled blocks. `prefix_entry` declines
+                    // (returns None) when eviction already dropped part
+                    // of the run — a windowed stream only registers what
+                    // it can still vouch for.
+                    if let Some(tokens) = register {
+                        let b = self.kv.block;
+                        for nb in 1..=tokens.len() / b {
+                            if let Some(entry) = s.cache.prefix_entry(&tokens[..nb * b]) {
+                                self.pool.register_prefix(entry);
+                            }
+                        }
+                    }
                     s.phase = Phase::Decode;
                     retire_now = s.out.len() >= s.n_new;
                 }

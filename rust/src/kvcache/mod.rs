@@ -60,11 +60,30 @@
 //! absolute base position, evicting the past never re-represents what
 //! remains: resident rows stay bit-identical to an unevicted reference
 //! stream (`tests/eviction.rs` pins it property-style).
+//!
+//! ## Paged block pool and prefix sharing (DESIGN.md §15)
+//!
+//! Finalized blocks are immutable and position-determined, so they are
+//! owned by a refcounted [`BlockPool`] and streams hold [`BlockHandle`]s
+//! instead of block payloads. Streams of one decode engine share one
+//! pool: N streams with a common prompt prefix reference the *same*
+//! physical prefix blocks (found through the pool's token-ID prefix
+//! index) and fork copy-on-write at the divergence point — the fp32
+//! tail is always private, and divergence only ever appends new private
+//! blocks. Eviction composes with sharing because dropping a handle
+//! releases a reference; the pool frees a block only when no stream
+//! (and no prefix-index entry) still holds it. See [`pool`] for the
+//! layout and [`KvCache::seed_prefix`] for the fork entry point.
 
 use crate::quant::{BitAllocation, Granularity, QTensor};
 use crate::stamp::SeqTransformKind;
 use crate::tensor::Tensor;
 use crate::transforms::{DctTransform, HaarDwt, SequenceTransform, WhtTransform};
+use std::sync::Arc;
+
+pub mod pool;
+
+pub use pool::{BlockData, BlockHandle, BlockPool, LayerHandles, PrefixEntry, PrefixHit};
 
 /// When (and what) a stream evicts (module docs, DESIGN.md §13).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -117,6 +136,14 @@ pub struct KvCacheConfig {
     /// positional budget; [`EvictionPolicy::None`] (the default) keeps
     /// every appended token.
     pub eviction: EvictionPolicy,
+    /// Opt into prompt-prefix sharing (the `[generate] kv.prefix_cache`
+    /// knob). When set, the decode engine looks completed prompts up in
+    /// its [`BlockPool`] prefix index at admission and seeds new streams
+    /// from pooled blocks instead of re-running prefill over the shared
+    /// span. Also forces *fp32* streams to finalize full blocks (exact
+    /// rows move into immutable block views — lossless) so an fp32
+    /// cache has shareable block granularity too. Default `false`.
+    pub prefix_cache: bool,
 }
 
 impl Default for KvCacheConfig {
@@ -132,6 +159,7 @@ impl Default for KvCacheConfig {
             transform: SeqTransformKind::Identity,
             max_seq: None,
             eviction: EvictionPolicy::None,
+            prefix_cache: false,
         }
     }
 }
@@ -162,6 +190,13 @@ impl KvCacheConfig {
     /// Builder-style sliding-window eviction policy (module docs).
     pub fn with_window(mut self, sink_tokens: usize, window: usize) -> Self {
         self.eviction = EvictionPolicy::SlidingWindow { sink_tokens, window };
+        self
+    }
+
+    /// Builder-style prompt-prefix sharing
+    /// (see [`KvCacheConfig::prefix_cache`]).
+    pub fn with_prefix_cache(mut self) -> Self {
+        self.prefix_cache = true;
         self
     }
 
@@ -261,29 +296,33 @@ impl KvCacheConfig {
     }
 }
 
-/// One K or V token stream: finalized packed blocks + fp32 tail window.
+/// One K or V token stream: finalized pooled blocks + fp32 tail window.
 pub struct KvStream {
     cfg: KvCacheConfig,
     /// Built once per stream; every block shares it (blocks have one
     /// fixed length, `cfg.block`).
     transform: Option<Box<dyn SequenceTransform>>,
-    /// *Resident* finalized blocks, `cfg.block` tokens each, oldest first
-    /// (evicted blocks are physically dropped — the front of the vector
-    /// is the retained sink span, then the recent region).
-    blocks: Vec<QTensor>,
-    /// Dequantized (+ inverse-transformed) fp32 view of the resident
-    /// finalized blocks, grown incrementally at flush time and shrunk at
-    /// eviction. Finalized blocks are immutable, so decompressing once
-    /// per flush instead of once per [`KvStream::gather`] keeps the
-    /// per-step decode cost O(copy) rather than O(re-dequantize ·
-    /// history). For packed streams this is serving scratch only (the
-    /// packed blocks remain the stored representation); for *windowed
-    /// fp32* streams it IS the finalized storage, counted at 32
-    /// bits/element by [`KvStream::storage_bits`].
-    decoded: Option<Tensor>,
+    /// Owner of this stream's finalized blocks. Private by default
+    /// ([`KvStream::new`]); streams of one decode engine share the
+    /// engine's pool ([`KvStream::with_pool`]) so common prompt prefixes
+    /// are stored once.
+    pool: Arc<BlockPool>,
+    /// Handles to the *resident* finalized blocks, `cfg.block` tokens
+    /// each, oldest first (the front of the vector is the retained sink
+    /// span, then the recent region). Each handle carries the flush-time
+    /// dequantized (+ inverse-transformed) fp32 view every gather reads
+    /// — blocks are immutable, so decompressing once per flush instead
+    /// of once per [`KvStream::gather`] keeps the per-step decode cost
+    /// O(copy) — plus, for packed streams, the bit-packed [`QTensor`]
+    /// that remains the stored representation. Evicting drops the
+    /// *handle*; the pool frees the block only when no other stream (or
+    /// prefix-index entry) still references it.
+    blocks: Vec<BlockHandle>,
     /// Recent tokens not yet covering a full block (always `Some` with
     /// ≥ 1 row when non-empty; an unwindowed `packed = false` stream
-    /// keeps everything here).
+    /// without [`KvCacheConfig::prefix_cache`] keeps everything here).
+    /// Always private to this stream — the copy-on-write divergence
+    /// point of prefix sharing.
     tail: Option<Tensor>,
     /// Feature width, fixed by the first append.
     dim: Option<usize>,
@@ -297,14 +336,22 @@ pub struct KvStream {
 }
 
 impl KvStream {
+    /// Stream with a private block pool (no cross-stream sharing).
     pub fn new(cfg: KvCacheConfig) -> Self {
+        let pool = BlockPool::new();
+        KvStream::with_pool(cfg, pool)
+    }
+
+    /// Stream allocating its finalized blocks from a shared `pool` —
+    /// how a decode engine makes its streams prefix-shareable.
+    pub fn with_pool(cfg: KvCacheConfig, pool: Arc<BlockPool>) -> Self {
         cfg.validate();
         let transform = cfg.block_transform();
         KvStream {
             cfg,
             transform,
+            pool,
             blocks: Vec::new(),
-            decoded: None,
             tail: None,
             dim: None,
             len: 0,
@@ -365,9 +412,22 @@ impl KvStream {
         self.dim
     }
 
-    /// *Resident* finalized packed blocks (evicted blocks are dropped).
+    /// *Resident* finalized blocks (evicted handles are dropped). Packed
+    /// streams finalize every full block; fp32 streams finalize under a
+    /// window policy or with [`KvCacheConfig::prefix_cache`] set.
     pub fn n_blocks(&self) -> usize {
         self.blocks.len()
+    }
+
+    /// This stream's block pool.
+    pub fn pool(&self) -> &Arc<BlockPool> {
+        &self.pool
+    }
+
+    /// The stream's configuration (shared-config equality is what makes
+    /// pooled blocks bit-exact across streams).
+    pub fn config(&self) -> &KvCacheConfig {
+        &self.cfg
     }
 
     /// Tokens currently in the fp32 tail window.
@@ -421,7 +481,7 @@ impl KvStream {
             None => rows.clone(),
         });
         self.len += rows.rows();
-        if self.cfg.packed || self.windowed() {
+        if self.cfg.packed || self.windowed() || self.cfg.prefix_cache {
             while self.tail_len() >= self.cfg.block {
                 self.flush_block();
             }
@@ -430,11 +490,13 @@ impl KvStream {
         Ok(())
     }
 
-    /// Finalize the oldest `block` tail tokens: packed streams quantize
-    /// them into a packed block, windowed fp32 streams move the exact rows
-    /// into the decoded region (so eviction has block granularity to work
-    /// at). Only ever called with a full block accumulated — the flush
-    /// rule that keeps block-wise transforms causal (module docs).
+    /// Finalize the oldest `block` tail tokens into a pooled block:
+    /// packed streams quantize them (handle carries both the packed
+    /// payload and its decompressed view), fp32 streams move the exact
+    /// rows into an immutable block view (so eviction and prefix sharing
+    /// have block granularity to work at). Only ever called with a full
+    /// block accumulated — the flush rule that keeps block-wise
+    /// transforms causal (module docs).
     fn flush_block(&mut self) {
         let tail = self.tail.take().expect("flush with empty tail");
         let b = self.cfg.block;
@@ -448,7 +510,7 @@ impl KvStream {
         let base = self.len - tail.rows();
         let block = tail.slice_rows(0, b);
         self.tail = if tail.rows() > b { Some(tail.slice_rows(b, tail.rows())) } else { None };
-        let view = if self.cfg.packed {
+        let handle = if self.cfg.packed {
             let hp_rows = self.cfg.hp_tokens.saturating_sub(base).min(b);
             let bits = BitAllocation::two_level(hp_rows, self.cfg.hp_bits, self.cfg.lp_bits);
             let coeffs = match &self.transform {
@@ -463,15 +525,11 @@ impl KvStream {
                 Some(t) => t.inverse(&deq),
                 None => deq,
             };
-            self.blocks.push(q);
-            view
+            self.pool.insert(view, Some(q))
         } else {
-            block
+            self.pool.insert(block, None)
         };
-        self.decoded = Some(match self.decoded.take() {
-            Some(d) => d.vcat(&view),
-            None => view,
-        });
+        self.blocks.push(handle);
     }
 
     /// Drop every finalized block that has slid entirely out of the
@@ -493,13 +551,11 @@ impl KvStream {
             if end > finalized || end + window > self.len {
                 return;
             }
-            let dec = self.decoded.take().expect("evictable block has a decoded view");
-            self.decoded = Some(
-                dec.slice_rows(0, sink_span).vcat(&dec.slice_rows(sink_span + b, dec.rows())),
-            );
-            if self.cfg.packed {
-                self.blocks.remove(sink_span / b);
-            }
+            // Dropping the handle releases this stream's reference only —
+            // the pool frees the physical block when (and only when) no
+            // other stream or prefix-index entry still holds it, so
+            // evicting here can never invalidate a sharer's view.
+            drop(self.blocks.remove(sink_span / b));
             self.evicted += b;
         }
     }
@@ -518,9 +574,11 @@ impl KvStream {
         };
         let mut out = Tensor::zeros(&[self.resident_len(), d]);
         let mut r = 0usize;
-        if let Some(dec) = &self.decoded {
-            out.data_mut()[..dec.len()].copy_from_slice(dec.data());
-            r += dec.rows();
+        for h in &self.blocks {
+            let v = h.view();
+            let start = r * d;
+            out.data_mut()[start..start + v.len()].copy_from_slice(v.data());
+            r += v.rows();
         }
         if let Some(t) = &self.tail {
             let start = r * d;
@@ -539,13 +597,28 @@ impl KvStream {
     /// window policy this stays bounded by the sink + window budget while
     /// `len` grows without limit (`tests/eviction.rs`).
     pub fn storage_bits(&self) -> usize {
-        let packed: usize = self.blocks.iter().map(QTensor::storage_bits).sum();
-        let fp_finalized = if self.cfg.packed {
-            0
-        } else {
-            self.decoded.as_ref().map_or(0, |t| t.len() * 32)
-        };
-        packed + fp_finalized + self.tail.as_ref().map_or(0, |t| t.len() * 32)
+        let finalized: usize = self.blocks.iter().map(BlockHandle::bits).sum();
+        finalized + self.tail_bits()
+    }
+
+    /// The fp32 tail's footprint — always private to this stream (the
+    /// copy-on-write divergence point; never pooled).
+    pub fn tail_bits(&self) -> usize {
+        self.tail.as_ref().map_or(0, |t| t.len() * 32)
+    }
+
+    /// The part of [`KvStream::storage_bits`] stored in pool blocks that
+    /// another holder (stream or prefix-index entry) also references —
+    /// physically stored once, counted once per sharing stream here.
+    pub fn shared_bits(&self) -> usize {
+        self.blocks.iter().filter(|h| h.is_shared()).map(BlockHandle::bits).sum()
+    }
+
+    /// The part of [`KvStream::storage_bits`] only this stream holds:
+    /// sole-reference blocks plus the fp32 tail. Always
+    /// `storage_bits() == shared_bits() + private_bits()`.
+    pub fn private_bits(&self) -> usize {
+        self.storage_bits() - self.shared_bits()
     }
 
     /// [`KvStream::storage_bits`] per *resident* element (0 when empty).
@@ -556,6 +629,38 @@ impl KvStream {
             }
             _ => 0.0,
         }
+    }
+
+    /// Retained handles to the first `n_blocks` resident finalized blocks
+    /// (panics past the resident run) — what prefix registration records.
+    pub fn block_handles(&self, n_blocks: usize) -> Vec<BlockHandle> {
+        self.blocks[..n_blocks].to_vec()
+    }
+
+    /// Seed an empty stream from pooled prefix blocks: the copy-on-write
+    /// fork. The stream starts as if `span = handles·block` tokens had
+    /// been appended and finalized — subsequent appends go to the private
+    /// fp32 tail and flush new private blocks, never touching the shared
+    /// prefix. Under a window policy the seed is immediately normalized
+    /// by eviction (out-of-window handles released). Because a block's
+    /// representation depends only on its absolute base position and the
+    /// config — identical across streams of one engine — a seeded stream
+    /// gathers bit-identically to one that re-ran prefill.
+    pub fn seed(&mut self, handles: Vec<BlockHandle>, span: usize) {
+        assert!(self.is_empty(), "seed requires an empty stream");
+        assert!(span > 0 && span % self.cfg.block == 0, "seed span must be whole blocks");
+        assert_eq!(
+            handles.len() * self.cfg.block,
+            span,
+            "seed handles must cover the span exactly"
+        );
+        if let Some(cap) = self.cfg.max_seq {
+            assert!(span <= cap, "seed span {span} exceeds max_seq {cap}");
+        }
+        self.dim = Some(handles[0].view().cols());
+        self.blocks = handles;
+        self.len = span;
+        self.evict();
     }
 }
 
@@ -569,7 +674,16 @@ pub struct KvLayer {
 
 impl KvLayer {
     pub fn new(cfg: KvCacheConfig) -> Self {
-        KvLayer { k: KvStream::new(cfg.clone()), v: KvStream::new(cfg) }
+        let pool = BlockPool::new();
+        KvLayer::with_pool(cfg, pool)
+    }
+
+    /// Layer whose K and V streams allocate from a shared `pool`.
+    pub fn with_pool(cfg: KvCacheConfig, pool: Arc<BlockPool>) -> Self {
+        KvLayer {
+            k: KvStream::with_pool(cfg.clone(), pool.clone()),
+            v: KvStream::with_pool(cfg, pool),
+        }
     }
 
     /// fp32 reference layer (parity path).
@@ -587,8 +701,16 @@ pub struct KvCache {
 
 impl KvCache {
     pub fn new(n_layers: usize, cfg: KvCacheConfig) -> Self {
+        let pool = BlockPool::new();
+        KvCache::with_pool(n_layers, cfg, pool)
+    }
+
+    /// Cache whose streams (all layers, K and V) allocate from one shared
+    /// `pool` — what [`crate::decode::DecodeEngine::admit`] builds so
+    /// every stream of an engine can share prefix blocks.
+    pub fn with_pool(n_layers: usize, cfg: KvCacheConfig, pool: Arc<BlockPool>) -> Self {
         assert!(n_layers >= 1, "cache needs at least one layer");
-        let layers = (0..n_layers).map(|_| KvLayer::new(cfg.clone())).collect();
+        let layers = (0..n_layers).map(|_| KvLayer::with_pool(cfg.clone(), pool.clone())).collect();
         KvCache { layers }
     }
 
@@ -650,6 +772,65 @@ impl KvCache {
     /// Total footprint across all layers and both streams.
     pub fn storage_bits(&self) -> usize {
         self.layers.iter().map(|l| l.k.storage_bits() + l.v.storage_bits()).sum()
+    }
+
+    /// The pool this cache's streams allocate from (layers share one;
+    /// layer 0's K stream is authoritative).
+    pub fn pool(&self) -> &Arc<BlockPool> {
+        self.layers[0].k.pool()
+    }
+
+    /// [`KvStream::shared_bits`] summed over all layers and both streams.
+    pub fn shared_bits(&self) -> usize {
+        self.layers.iter().map(|l| l.k.shared_bits() + l.v.shared_bits()).sum()
+    }
+
+    /// [`KvStream::private_bits`] summed over all layers and both
+    /// streams. `storage_bits() == shared_bits() + private_bits()`.
+    pub fn private_bits(&self) -> usize {
+        self.layers.iter().map(|l| l.k.private_bits() + l.v.private_bits()).sum()
+    }
+
+    /// [`KvStream::tail_bits`] summed over all layers and both streams —
+    /// with the pool's physical bits, the whole-system footprint of N
+    /// shared-prefix streams is `pool.resident_bits() + Σ tail_bits()`.
+    pub fn tail_bits(&self) -> usize {
+        self.layers.iter().map(|l| l.k.tail_bits() + l.v.tail_bits()).sum()
+    }
+
+    /// Copy-on-write fork from a pool prefix hit
+    /// ([`BlockPool::lookup_prefix`]): seed every layer's K and V stream
+    /// from the hit's handles, as if the first `hit.span` tokens had
+    /// already been appended. The engine then prefills only from the
+    /// divergence point. Panics unless the cache is empty and the hit's
+    /// layer count matches.
+    pub fn seed_prefix(&mut self, hit: PrefixHit) {
+        assert!(self.is_empty(), "seed_prefix requires an empty cache");
+        assert_eq!(hit.layers.len(), self.layers.len(), "prefix hit layer count mismatch");
+        for (layer, (k, v)) in self.layers.iter_mut().zip(hit.layers) {
+            layer.k.seed(k, hit.span);
+            layer.v.seed(v, hit.span);
+        }
+    }
+
+    /// Build a [`PrefixEntry`] recording the first `tokens.len()` cached
+    /// positions for registration in the pool's prefix index, or `None`
+    /// when the cache cannot vouch for them (unaligned length, eviction
+    /// already dropped part of the run, or the blocks are not finalized
+    /// yet). `tokens` must be the prompt token IDs those positions hold.
+    pub fn prefix_entry(&self, tokens: &[u32]) -> Option<PrefixEntry> {
+        let block = self.layers[0].k.config().block;
+        if block == 0 || tokens.is_empty() || tokens.len() % block != 0 || self.evicted() > 0 {
+            return None;
+        }
+        let n = tokens.len() / block;
+        for l in &self.layers {
+            if l.k.n_blocks() < n || l.v.n_blocks() < n {
+                return None;
+            }
+        }
+        let layers = self.layers.iter().map(|l| (l.k.block_handles(n), l.v.block_handles(n)));
+        Some(PrefixEntry::new(tokens.to_vec(), layers.collect()))
     }
 
     /// Mean bits per *resident* K/V element across the whole cache.
@@ -981,5 +1162,92 @@ mod tests {
         let mut st = KvStream::new(KvCacheConfig::fp32());
         st.append(&Tensor::zeros(&[1, 4]));
         st.append(&Tensor::zeros(&[1, 5]));
+    }
+
+    #[test]
+    fn prefix_cache_fp32_finalization_is_lossless() {
+        // With prefix_cache set, an *unwindowed fp32* stream finalizes
+        // full blocks into immutable pool views — exact rows move, so
+        // gather stays bit-identical to the plain fp32 reference.
+        let x = Tensor::randn(&[19, 6], 41);
+        let mut plain = KvStream::new(KvCacheConfig::fp32());
+        let mut pooled = KvStream::new(
+            KvCacheConfig { block: 4, ..KvCacheConfig::fp32() }.with_prefix_cache(),
+        );
+        plain.append(&x);
+        for i in 0..19 {
+            pooled.append(&x.slice_rows(i, i + 1));
+        }
+        assert_eq!(pooled.n_blocks(), 4, "prefix_cache forces fp32 finalization");
+        assert_eq!(pooled.gather(), plain.gather(), "finalization must be lossless");
+        assert_eq!(pooled.storage_bits(), plain.storage_bits(), "all rows still fp32");
+    }
+
+    #[test]
+    fn seeded_stream_gathers_bit_identically_and_forks_cow() {
+        // Stream A appends 3 blocks + tail into a shared pool; stream B
+        // seeds from A's first 2 blocks and re-appends the rest itself.
+        // B must gather bit-identically to A, and the seeded blocks stay
+        // physically shared while post-divergence blocks stay private.
+        let (block, d) = (8usize, 6usize);
+        let x = Tensor::randn(&[29, d], 43);
+        let pool = BlockPool::new();
+        let mut a = KvStream::with_pool(cfg(6, 8, 4, block), pool.clone());
+        a.append(&x);
+        let mut b = KvStream::with_pool(cfg(6, 8, 4, block), pool.clone());
+        b.seed(a.block_handles(2), 2 * block);
+        assert_eq!(b.len(), 16);
+        b.append(&x.slice_rows(16, 29));
+        assert_eq!(b.gather(), a.gather(), "seeded stream must be bit-identical");
+        // Shared/private split: 2 prefix blocks shared by both streams,
+        // the 3rd block + tail private to each (B's 3rd block is a fresh
+        // quantization of the same rows — bit-identical data, but a
+        // separate pool block: copy-on-write, not aliasing).
+        assert_eq!(a.shared_bits(), b.shared_bits());
+        let prefix_bits: usize = a.block_handles(2).iter().map(BlockHandle::bits).sum();
+        assert_eq!(a.shared_bits(), prefix_bits);
+        assert_eq!(a.storage_bits(), a.shared_bits() + a.private_bits());
+        // The pool stores the prefix once: physical bits = one stream's
+        // full footprint plus only the *private* part of the other.
+        let physical = pool.resident_bits() + a.tail_bits() + b.tail_bits();
+        assert_eq!(physical, a.storage_bits() + b.private_bits());
+    }
+
+    #[test]
+    fn eviction_of_a_shared_block_never_frees_it_under_the_sharer() {
+        // A windowed stream evicts a block another stream still holds:
+        // the handle drop must only release a reference, and the sharer's
+        // gather must stay byte-identical afterwards.
+        let (block, d) = (8usize, 6usize);
+        let x = Tensor::randn(&[64, d], 47);
+        let pool = BlockPool::new();
+        let mut holder = KvStream::with_pool(cfg(8, 8, 4, block), pool.clone());
+        holder.append(&x.slice_rows(0, 16));
+        let before = holder.gather();
+        let mut win = KvStream::with_pool(cfg(8, 8, 4, block).with_window(8, 16), pool.clone());
+        win.seed(holder.block_handles(2), 16);
+        // Probe handle on the block the window will evict ([8, 16)):
+        // refs = holder + win + probe.
+        let probe = holder.block_handles(2).remove(1);
+        assert_eq!(probe.refs(), 3);
+        for i in 16..64 {
+            win.append(&x.slice_rows(i, i + 1));
+        }
+        assert_eq!(win.evicted(), 40, "window evicted the non-sink prefix block");
+        assert_eq!(holder.gather(), before, "sharer's rows survive the eviction");
+        assert_eq!(holder.n_blocks(), 2);
+        // Eviction released win's reference only — holder + probe remain.
+        assert_eq!(probe.refs(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "requires an empty stream")]
+    fn seed_rejects_nonempty_streams() {
+        let pool = BlockPool::new();
+        let mut a = KvStream::with_pool(cfg(0, 8, 4, 4), pool.clone());
+        a.append(&Tensor::randn(&[8, 4], 51));
+        let mut b = KvStream::with_pool(cfg(0, 8, 4, 4), pool.clone());
+        b.append(&Tensor::randn(&[1, 4], 52));
+        b.seed(a.block_handles(1), 4);
     }
 }

@@ -1,0 +1,523 @@
+//! Paged KV block pool — reference-counted, immutable finalized blocks
+//! shared across streams, plus the token-ID prefix index that lets the
+//! decode engine skip prefill over a pooled prompt prefix (DESIGN.md §15).
+//!
+//! ## Why a pool
+//!
+//! STaMP's cache already stores history as *immutable* finalized blocks
+//! (the flush rule re-represents a token exactly once, and a block's
+//! representation depends only on its absolute base position and the
+//! cache config — see [`super::KvStream`]). That is precisely the
+//! representation paged attention wants: under production traffic, N
+//! concurrent streams overwhelmingly share a common prompt prefix
+//! (system prompts, few-shot templates), so the prefix blocks can be
+//! stored *once* and every stream can hold a cheap handle. Streams fork
+//! copy-on-write at the divergence point: the fp32 tail window is always
+//! private to its stream, and a stream never mutates a finalized block —
+//! divergence simply appends new private tail rows and flushes new
+//! private blocks, while the shared prefix handles stay untouched.
+//!
+//! ## Refcounts vs. eviction
+//!
+//! Handles are explicit refcounts on pool slots: [`BlockHandle::clone`]
+//! retains, dropping releases, and the pool frees the slot only at zero.
+//! Sliding-window eviction ([`super::EvictionPolicy::SlidingWindow`])
+//! drops a *handle* from one stream's resident window — the physical
+//! block survives as long as any other stream (or the prefix index)
+//! still references it, so eviction can never free memory another
+//! stream is reading.
+//!
+//! ## The prefix index
+//!
+//! [`BlockPool::register_prefix`] records, for a block-aligned run of
+//! prompt token IDs, the per-layer K/V block handles that store it.
+//! [`BlockPool::lookup_prefix`] hashes block-aligned prefixes of a new
+//! prompt from the longest candidate down and — after an exact token
+//! comparison, so hash collisions are harmless — returns freshly
+//! retained handles for the longest hit. The candidate span is capped at
+//! `prompt.len() − 1` rounded down to a block: the final prompt token is
+//! always prefilled by the engine so it produces the logits that sample
+//! the first generated token. Registered entries are owned by the pool
+//! and hold one reference per block, pinning the prefix resident for the
+//! pool's lifetime (an engine-owned pool lives as long as its variant).
+
+use crate::quant::QTensor;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError, Weak};
+
+/// One (K, V) pair of block-handle runs per model layer — the payload of
+/// a [`PrefixEntry`] / [`PrefixHit`], outer index = layer.
+pub type LayerHandles = Vec<(Vec<BlockHandle>, Vec<BlockHandle>)>;
+
+/// The immutable payload of one finalized block: the flush-time fp32
+/// view every gather reads, plus the bit-packed representation for
+/// packed streams (`None` for finalized fp32 blocks).
+pub struct BlockData {
+    view: Tensor,
+    packed: Option<QTensor>,
+}
+
+impl BlockData {
+    /// Flush-time dequantized (+ inverse-transformed) fp32 view — what
+    /// [`super::KvStream::gather`] copies for these tokens.
+    pub fn view(&self) -> &Tensor {
+        &self.view
+    }
+
+    /// Bit-packed representation (`None` for finalized fp32 blocks).
+    pub fn packed(&self) -> Option<&QTensor> {
+        self.packed.as_ref()
+    }
+
+    /// Stored footprint in bits: the packed payload + per-group params
+    /// when packed ([`QTensor::storage_bits`]), else 32 bits/element of
+    /// the fp32 view. Matches the per-stream accounting of
+    /// [`super::KvStream::storage_bits`] exactly, so shared/private
+    /// splits stay additive.
+    pub fn bits(&self) -> usize {
+        match &self.packed {
+            Some(q) => q.storage_bits(),
+            None => self.view.len() * 32,
+        }
+    }
+}
+
+/// A refcounted reference to one pooled block. Cloning retains the pool
+/// slot, dropping releases it; the payload is reachable lock-free via
+/// [`BlockHandle::data`] so the decode hot path (gather) never touches
+/// the pool mutex.
+pub struct BlockHandle {
+    /// Weak so pool-owned prefix entries (which hold handles) do not form
+    /// a strong cycle; a handle outliving its pool degrades to a plain
+    /// owner of the payload `Arc`.
+    pool: Weak<BlockPool>,
+    idx: usize,
+    data: Arc<BlockData>,
+}
+
+impl BlockHandle {
+    pub fn data(&self) -> &BlockData {
+        &self.data
+    }
+
+    /// Shorthand for [`BlockData::view`].
+    pub fn view(&self) -> &Tensor {
+        &self.data.view
+    }
+
+    /// Shorthand for [`BlockData::bits`].
+    pub fn bits(&self) -> usize {
+        self.data.bits()
+    }
+
+    /// The pool slot index this handle retains (stable for the block's
+    /// lifetime; slots are recycled only after the refcount hits zero).
+    pub fn slot(&self) -> usize {
+        self.idx
+    }
+
+    /// Current pool refcount of the underlying block — ≥ 1 while this
+    /// handle is alive (0 only if the owning pool itself is gone). A
+    /// block with `refs() ≥ 2` is physically shared.
+    pub fn refs(&self) -> usize {
+        match self.pool.upgrade() {
+            Some(pool) => {
+                let inner = pool.lock();
+                inner.slots[self.idx].as_ref().map_or(0, |e| e.refs)
+            }
+            None => 0,
+        }
+    }
+
+    /// Whether another handle (a different stream, or the prefix index)
+    /// currently references the same physical block.
+    pub fn is_shared(&self) -> bool {
+        self.refs() >= 2
+    }
+}
+
+impl Clone for BlockHandle {
+    fn clone(&self) -> Self {
+        if let Some(pool) = self.pool.upgrade() {
+            let mut inner = pool.lock();
+            if let Some(e) = inner.slots[self.idx].as_mut() {
+                e.refs += 1;
+            }
+        }
+        BlockHandle { pool: self.pool.clone(), idx: self.idx, data: self.data.clone() }
+    }
+}
+
+impl Drop for BlockHandle {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.upgrade() {
+            let mut inner = pool.lock();
+            if let Some(e) = inner.slots[self.idx].as_mut() {
+                assert!(e.refs > 0, "kv block pool refcount underflow (slot {})", self.idx);
+                e.refs -= 1;
+                if e.refs == 0 {
+                    inner.slots[self.idx] = None;
+                    inner.free.push(self.idx);
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for BlockHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BlockHandle")
+            .field("slot", &self.idx)
+            .field("rows", &self.data.view.rows())
+            .field("bits", &self.data.bits())
+            .finish()
+    }
+}
+
+/// One registered prompt prefix: the exact token IDs (compared verbatim
+/// at lookup, so the hash index can never alias two prompts) and the
+/// per-layer K/V handles storing them. Owned by the pool once
+/// registered; holds one reference per block.
+pub struct PrefixEntry {
+    tokens: Vec<u32>,
+    layers: LayerHandles,
+}
+
+impl PrefixEntry {
+    /// `tokens` must be the block-aligned prompt prefix the handles
+    /// store; every layer must contribute the same number of K and V
+    /// blocks. (The pool does not know the block size — entries whose
+    /// length is not a multiple of the lookup block simply never match.)
+    pub fn new(tokens: Vec<u32>, layers: LayerHandles) -> Self {
+        assert!(!tokens.is_empty(), "prefix entries need at least one token");
+        assert!(!layers.is_empty(), "prefix entries need at least one layer");
+        let n = layers[0].0.len();
+        assert!(n >= 1, "prefix entries need at least one block per stream");
+        for (k, v) in &layers {
+            assert_eq!(k.len(), n, "ragged K handle runs in prefix entry");
+            assert_eq!(v.len(), n, "ragged V handle runs in prefix entry");
+        }
+        PrefixEntry { tokens, layers }
+    }
+
+    pub fn tokens(&self) -> &[u32] {
+        &self.tokens
+    }
+}
+
+/// A successful [`BlockPool::lookup_prefix`]: freshly retained handles
+/// covering the first `span` prompt tokens, ready to seed a new cache
+/// via [`super::KvCache::seed_prefix`].
+pub struct PrefixHit {
+    /// Shared tokens (block-aligned, always < the prompt length).
+    pub span: usize,
+    /// Per-layer (K, V) handle runs covering `span` tokens.
+    pub layers: LayerHandles,
+}
+
+struct PoolEntry {
+    refs: usize,
+    data: Arc<BlockData>,
+}
+
+struct PoolInner {
+    /// Slot-indexed block table; `None` = free slot awaiting reuse.
+    slots: Vec<Option<PoolEntry>>,
+    free: Vec<usize>,
+    /// Prefix index: token-hash → entries (exact tokens disambiguate).
+    prefix: HashMap<u64, Vec<PrefixEntry>>,
+}
+
+/// The process-wide paged block pool (module docs). One pool per decode
+/// engine — and therefore one per generate variant — so every stream of
+/// a variant allocates its finalized blocks here and common prompt
+/// prefixes are stored once.
+pub struct BlockPool {
+    /// Self-reference so `&self` methods can mint handles
+    /// (`Arc::new_cyclic` wires it at construction).
+    me: Weak<BlockPool>,
+    inner: Mutex<PoolInner>,
+}
+
+impl BlockPool {
+    pub fn new() -> Arc<BlockPool> {
+        Arc::new_cyclic(|me| BlockPool {
+            me: me.clone(),
+            inner: Mutex::new(PoolInner {
+                slots: Vec::new(),
+                free: Vec::new(),
+                prefix: HashMap::new(),
+            }),
+        })
+    }
+
+    /// Refcount bookkeeping must survive a panicking appender: recover
+    /// the guard from poisoning instead of cascading during unwind.
+    fn lock(&self) -> MutexGuard<'_, PoolInner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Take ownership of a freshly finalized block and return the first
+    /// handle to it (refcount 1).
+    pub fn insert(&self, view: Tensor, packed: Option<QTensor>) -> BlockHandle {
+        let data = Arc::new(BlockData { view, packed });
+        let mut inner = self.lock();
+        let idx = match inner.free.pop() {
+            Some(i) => {
+                debug_assert!(inner.slots[i].is_none(), "free list pointed at a live slot");
+                inner.slots[i] = Some(PoolEntry { refs: 1, data: data.clone() });
+                i
+            }
+            None => {
+                inner.slots.push(Some(PoolEntry { refs: 1, data: data.clone() }));
+                inner.slots.len() - 1
+            }
+        };
+        drop(inner);
+        BlockHandle { pool: self.me.clone(), idx, data }
+    }
+
+    /// Live (refcounted) blocks right now.
+    pub fn live_blocks(&self) -> usize {
+        self.lock().slots.iter().flatten().count()
+    }
+
+    /// Sum of all slot refcounts — equals the number of live handles
+    /// plus one per block-reference held by registered prefix entries.
+    pub fn total_refs(&self) -> usize {
+        self.lock().slots.iter().flatten().map(|e| e.refs).sum()
+    }
+
+    /// *Physical* resident footprint: every live block counted exactly
+    /// once, regardless of how many streams hold it. Compare with the sum
+    /// of per-stream [`super::KvStream::storage_bits`] (which counts a
+    /// shared block once per stream) to see the prefix-reuse win.
+    pub fn resident_bits(&self) -> usize {
+        self.lock().slots.iter().flatten().map(|e| e.data.bits()).sum()
+    }
+
+    /// Registered prefix entries (diagnostics).
+    pub fn prefix_entries(&self) -> usize {
+        self.lock().prefix.values().map(Vec::len).sum()
+    }
+
+    /// Install (or refresh) a prefix entry. Re-registering the same token
+    /// run replaces the old entry — the stale entry's handles are
+    /// released *outside* the pool lock (handle drops re-enter the pool).
+    pub fn register_prefix(&self, entry: PrefixEntry) {
+        let h = hash_tokens(&entry.tokens);
+        let stale;
+        {
+            let mut inner = self.lock();
+            let bucket = inner.prefix.entry(h).or_default();
+            match bucket.iter().position(|e| e.tokens == entry.tokens) {
+                Some(p) => stale = Some(std::mem::replace(&mut bucket[p], entry)),
+                None => {
+                    bucket.push(entry);
+                    stale = None;
+                }
+            }
+        }
+        drop(stale);
+    }
+
+    /// Longest registered block-aligned strict prefix of `prompt`,
+    /// walking candidate spans from `((prompt.len() − 1) / block) · block`
+    /// down in `block` steps. The final prompt token is never part of a
+    /// hit — the engine must prefill it to obtain sampling logits.
+    /// Returned handles are freshly retained inside a single lock
+    /// acquisition (no per-handle locking).
+    pub fn lookup_prefix(&self, prompt: &[u32], block: usize) -> Option<PrefixHit> {
+        if block == 0 || prompt.len() <= 1 {
+            return None;
+        }
+        let mut inner = self.lock();
+        let PoolInner { slots, prefix, .. } = &mut *inner;
+        let mut span = ((prompt.len() - 1) / block) * block;
+        while span >= block {
+            let h = hash_tokens(&prompt[..span]);
+            let entry = prefix
+                .get(&h)
+                .and_then(|bucket| bucket.iter().find(|e| e.tokens[..] == prompt[..span]));
+            if let Some(entry) = entry {
+                let layers = entry
+                    .layers
+                    .iter()
+                    .map(|(k, v)| (retain_run(slots, &self.me, k), retain_run(slots, &self.me, v)))
+                    .collect();
+                return Some(PrefixHit { span, layers });
+            }
+            span -= block;
+        }
+        None
+    }
+}
+
+/// Mint retained copies of a handle run with the pool lock already held
+/// (calling [`BlockHandle::clone`] here would deadlock on re-entry).
+fn retain_run(
+    slots: &mut [Option<PoolEntry>],
+    me: &Weak<BlockPool>,
+    run: &[BlockHandle],
+) -> Vec<BlockHandle> {
+    run.iter()
+        .map(|h| {
+            let e = slots[h.idx].as_mut().expect("prefix entry references a live block");
+            e.refs += 1;
+            BlockHandle { pool: me.clone(), idx: h.idx, data: h.data.clone() }
+        })
+        .collect()
+}
+
+/// FNV-1a over the little-endian token bytes — stable across platforms;
+/// collisions are harmless (exact token comparison disambiguates).
+fn hash_tokens(tokens: &[u32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h = (h ^ u64::from(b)).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blk(rows: usize, cols: usize) -> Tensor {
+        Tensor::zeros(&[rows, cols])
+    }
+
+    #[test]
+    fn handle_lifecycle_retains_releases_and_recycles_slots() {
+        let pool = BlockPool::new();
+        let a = pool.insert(blk(2, 3), None);
+        assert_eq!((a.refs(), pool.live_blocks()), (1, 1));
+        assert_eq!(pool.resident_bits(), 2 * 3 * 32);
+        let b = a.clone();
+        assert_eq!((a.refs(), b.refs(), pool.live_blocks()), (2, 2, 1));
+        assert!(a.is_shared());
+        drop(a);
+        assert_eq!((b.refs(), pool.live_blocks()), (1, 1));
+        assert!(!b.is_shared());
+        let slot = b.slot();
+        drop(b);
+        assert_eq!((pool.live_blocks(), pool.resident_bits()), (0, 0));
+        // Freed slots are recycled, not leaked.
+        let c = pool.insert(blk(1, 1), None);
+        assert_eq!(c.slot(), slot);
+    }
+
+    #[test]
+    fn prefix_index_pins_blocks_walks_down_and_verifies_tokens() {
+        let pool = BlockPool::new();
+        let h = pool.insert(blk(4, 2), None);
+        pool.register_prefix(PrefixEntry::new(
+            vec![1, 2, 3, 4],
+            vec![(vec![h.clone()], vec![h.clone()])],
+        ));
+        // handle + K ref + V ref
+        assert_eq!(h.refs(), 3);
+        assert_eq!(pool.prefix_entries(), 1);
+        drop(h);
+        assert_eq!(pool.live_blocks(), 1, "the index pins the block resident");
+
+        // Exact aligned hit: span covers the first block, handles retained.
+        let hit = pool.lookup_prefix(&[1, 2, 3, 4, 9], 4).expect("aligned prefix must hit");
+        assert_eq!(hit.span, 4);
+        assert_eq!(hit.layers.len(), 1);
+        assert_eq!(hit.layers[0].0[0].refs(), 4, "lookup retains K and V");
+        // A whole-prompt match is never returned: the last token must be
+        // prefilled for sampling logits.
+        assert!(pool.lookup_prefix(&[1, 2, 3, 4], 4).is_none());
+        // The hash is verified against exact tokens.
+        assert!(pool.lookup_prefix(&[1, 2, 9, 4, 9], 4).is_none());
+        // Walk-down: an 9-token prompt misses at span 8, hits at span 4.
+        let hit2 = pool.lookup_prefix(&[1, 2, 3, 4, 5, 6, 7, 8, 9], 4).unwrap();
+        assert_eq!(hit2.span, 4);
+    }
+
+    #[test]
+    fn reregistering_a_prefix_replaces_the_entry_without_leaking_refs() {
+        let pool = BlockPool::new();
+        let h = pool.insert(blk(4, 2), None);
+        let mk = || PrefixEntry::new(vec![7, 7, 7, 7], vec![(vec![h.clone()], vec![h.clone()])]);
+        pool.register_prefix(mk());
+        pool.register_prefix(mk());
+        assert_eq!(pool.prefix_entries(), 1, "same tokens replace, not duplicate");
+        assert_eq!(h.refs(), 3, "stale entry's references were released");
+    }
+
+    #[test]
+    fn refcounts_never_underflow_under_random_interleavings() {
+        // Satellite property test: random admit (insert) / share (clone) /
+        // evict (drop one handle) / retire (drop a whole stream)
+        // interleavings across 4 simulated streams. The release path
+        // asserts on underflow, so surviving the schedule *is* the
+        // property; on top we pin conservation: total refs == held
+        // handles, live blocks == distinct held slots, and an emptied
+        // pool frees everything.
+        crate::testkit::check(
+            "pool refcount interleavings",
+            60,
+            0xB10C,
+            |g| {
+                let n = g.usize_in(1, 40);
+                (0..n)
+                    .map(|_| (g.usize_in(0, 3), g.usize_in(0, 7), g.usize_in(0, 7)))
+                    .collect::<Vec<_>>()
+            },
+            |ops| {
+                let pool = BlockPool::new();
+                let mut streams: Vec<Vec<BlockHandle>> = (0..4).map(|_| Vec::new()).collect();
+                for &(op, a, b) in ops {
+                    match op {
+                        0 => streams[a % 4].push(pool.insert(blk(2, 3), None)),
+                        1 => {
+                            let src = &streams[a % 4];
+                            let h = (!src.is_empty()).then(|| src[b % src.len()].clone());
+                            if let Some(h) = h {
+                                streams[b % 4].push(h);
+                            }
+                        }
+                        2 => {
+                            let s = &mut streams[a % 4];
+                            if !s.is_empty() {
+                                s.remove(0);
+                            }
+                        }
+                        _ => streams[a % 4].clear(),
+                    }
+                    let held: usize = streams.iter().map(Vec::len).sum();
+                    if pool.total_refs() != held {
+                        return Err(format!(
+                            "refs {} != held handles {held}",
+                            pool.total_refs()
+                        ));
+                    }
+                    let distinct: std::collections::HashSet<usize> =
+                        streams.iter().flatten().map(BlockHandle::slot).collect();
+                    if pool.live_blocks() != distinct.len() {
+                        return Err(format!(
+                            "live {} != distinct held slots {}",
+                            pool.live_blocks(),
+                            distinct.len()
+                        ));
+                    }
+                    for h in streams.iter().flatten() {
+                        if h.refs() == 0 {
+                            return Err("live handle with zero refcount".into());
+                        }
+                    }
+                }
+                streams.clear();
+                if pool.live_blocks() != 0 || pool.resident_bits() != 0 {
+                    return Err("pool leaked blocks after all handles dropped".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -74,7 +74,7 @@ pub mod transforms;
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::decode::{DecodeEngine, GenRequest, Sampling, StreamId, StreamResult};
-    pub use crate::kvcache::{EvictionPolicy, KvCache, KvCacheConfig};
+    pub use crate::kvcache::{BlockPool, EvictionPolicy, KvCache, KvCacheConfig};
     pub use crate::quant::{BitAllocation, Granularity, QTensor, QuantScheme, Quantizer};
     pub use crate::stamp::{SeqTransformKind, Stamp, StampConfig};
     pub use crate::stats::sqnr;

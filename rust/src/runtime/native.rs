@@ -474,6 +474,16 @@ impl StreamExecutor for NativeExecutor {
             .and_then(|v| v.engine.as_ref())
             .is_some_and(|e| e.lock().unwrap().has_work())
     }
+
+    fn prefix_hits(&self, variant: &str) -> u64 {
+        // Each generate variant's resident engine owns one
+        // [`crate::kvcache::BlockPool`] (PR 7), so the counter is
+        // per-variant by construction; non-generate variants report 0.
+        self.variants
+            .get(variant)
+            .and_then(|v| v.engine.as_ref())
+            .map_or(0, |e| e.lock().unwrap().prefix_hits())
+    }
 }
 
 impl NativeExecutor {

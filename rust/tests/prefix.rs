@@ -1,0 +1,242 @@
+//! Prompt-prefix sharing parity harness (PR 7).
+//!
+//! The pool invariant: seating a stream on pooled prefix blocks is
+//! invisible, bit for bit. A block's stored representation depends only
+//! on its absolute base position and the engine-uniform cache config —
+//! never on which stream produced it — so a stream decoded from a
+//! pool-shared prefix must emit exactly the tokens of the same stream
+//! decoded with a fully private cache, for fp32 and packed caches,
+//! greedy and sampled decoding, at any kernel thread count (CI re-runs
+//! this file under `STAMP_THREADS=1`). The storage half of the claim:
+//! N streams seated on one prefix hold it physically once —
+//! `BlockPool::resident_bits` counts it a single time while the
+//! per-stream `storage_bits` sum counts it N times.
+
+use stamp::decode::{DecodeEngine, GenRequest, Sampling, StreamResult};
+use stamp::kvcache::KvCacheConfig;
+use stamp::model::{Gpt, GptConfig};
+use stamp::testkit;
+use std::sync::Arc;
+
+#[derive(Debug)]
+struct Workload {
+    /// Shared prompt prefix length; always ≥ one cache block so every
+    /// admitted stream can hit the pool.
+    shared: usize,
+    /// Per-stream private prompt suffix lengths (non-empty, so the whole
+    /// aligned prefix — never less — is the expected shared span).
+    suffixes: Vec<usize>,
+    budgets: Vec<usize>,
+    packed: bool,
+    sampled: bool,
+    seed: u64,
+}
+
+/// Cache config under test: block 8 two-level packed, or block 4 fp32.
+/// (The prefix cache itself is opted into per engine, not here.)
+fn kv_for(w: &Workload) -> KvCacheConfig {
+    if w.packed {
+        KvCacheConfig::two_level(4, 8, 4, 8)
+    } else {
+        KvCacheConfig { block: 4, ..KvCacheConfig::fp32() }
+    }
+}
+
+fn sampling_for(w: &Workload) -> Sampling {
+    if w.sampled {
+        Sampling::TopK { k: 8, temperature: 0.9, seed: w.seed ^ 0x5EED }
+    } else {
+        Sampling::Greedy
+    }
+}
+
+fn gen_workload(g: &mut testkit::Gen) -> Workload {
+    let n = g.usize_in(2, 5);
+    let block = 8; // the larger of the two blocks under test
+    Workload {
+        shared: block * g.usize_in(1, 2) + g.usize_in(0, block - 1),
+        suffixes: (0..n).map(|_| g.usize_in(1, 8)).collect(),
+        budgets: (0..n).map(|_| g.usize_in(1, 8)).collect(),
+        packed: g.usize_in(0, 1) == 1,
+        sampled: g.usize_in(0, 1) == 1,
+        seed: g.rng.next_u64(),
+    }
+}
+
+fn prompts_for(w: &Workload) -> (Vec<u32>, Vec<GenRequest>) {
+    let shared: Vec<u32> =
+        (0..w.shared).map(|j| ((w.seed as usize + j * 7) % 70) as u32).collect();
+    let reqs = (0..w.suffixes.len())
+        .map(|i| {
+            let mut prompt = shared.clone();
+            prompt.extend(
+                (0..w.suffixes[i]).map(|j| ((i * 13 + j * 11 + 5) % 70) as u32),
+            );
+            GenRequest { prompt, n_new: w.budgets[i] }
+        })
+        .collect();
+    (shared, reqs)
+}
+
+/// Decode `reqs` on a pool-backed engine whose prefix cache was warmed by
+/// running the shared prompt to completion first; returns the results and
+/// the number of admissions seated on pooled blocks.
+fn pooled_run(
+    gpt: &Arc<Gpt>,
+    kv: &KvCacheConfig,
+    sampling: &Sampling,
+    shared: &[u32],
+    reqs: &[GenRequest],
+) -> Result<(Vec<StreamResult>, u64), String> {
+    let mut engine =
+        DecodeEngine::new(gpt.clone(), kv.clone().with_prefix_cache(), sampling.clone());
+    // The warmer registers every block-aligned prefix of the shared
+    // prompt; it cannot hit an empty pool itself.
+    engine
+        .run_fp(&[GenRequest { prompt: shared.to_vec(), n_new: 1 }])
+        .map_err(|e| e.to_string())?;
+    let hits0 = engine.prefix_hits();
+    if hits0 != 0 {
+        return Err(format!("warm stream hit an empty pool ({hits0} hits)"));
+    }
+    let out = engine.run_fp(reqs).map_err(|e| e.to_string())?;
+    Ok((out, engine.prefix_hits()))
+}
+
+/// Acceptance property: a stream decoded from a pool-shared prefix is
+/// bit-identical — tokens, and therefore the logits they argmax/sample
+/// from — to the same stream decoded with an unshared private cache,
+/// threaded and forced-serial, fp32 and packed, greedy and top-k.
+#[test]
+fn property_prefix_shared_decode_is_bit_identical_to_unshared() {
+    let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 53));
+    testkit::check("prefix-shared-vs-unshared", 10, 0x9F1C5, gen_workload, |w| {
+        let kv = kv_for(w);
+        let sampling = sampling_for(w);
+        let (shared, reqs) = prompts_for(w);
+        // Reference: the same requests on an engine with no prefix cache —
+        // every stream pays its own full prefill.
+        let mut private = DecodeEngine::new(gpt.clone(), kv.clone(), sampling.clone());
+        let want = private.run_fp(&reqs).map_err(|e| e.to_string())?;
+        let (got, hits) = pooled_run(&gpt, &kv, &sampling, &shared, &reqs)?;
+        if hits != reqs.len() as u64 {
+            return Err(format!(
+                "expected every admission to hit the warmed pool: {hits}/{}",
+                reqs.len()
+            ));
+        }
+        for i in 0..reqs.len() {
+            if got[i] != want[i] {
+                return Err(format!(
+                    "stream {i}: pooled {:?} != unshared {:?}",
+                    got[i].tokens, want[i].tokens
+                ));
+            }
+        }
+        // Forced-serial kernels must reproduce the threaded run exactly.
+        stamp::parallel::set_kernel_serial(true);
+        let serial = pooled_run(&gpt, &kv, &sampling, &shared, &reqs);
+        stamp::parallel::set_kernel_serial(false);
+        let (serial, serial_hits) = serial?;
+        if serial_hits != hits {
+            return Err(format!("thread-count hit variance: {serial_hits} != {hits}"));
+        }
+        for i in 0..reqs.len() {
+            if serial[i] != got[i] {
+                return Err(format!("stream {i}: thread-count variance"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Acceptance property: N admitted shared-prefix streams account the
+/// prefix N times logically but hold it once physically — right after
+/// admission each stream's cache is exactly the pooled span, so the
+/// per-stream `storage_bits` sum is N × the pool's resident footprint.
+#[test]
+fn property_shared_prefix_is_stored_once_across_streams() {
+    let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 59));
+    testkit::check("prefix-storage-counted-once", 10, 0x0B17, gen_workload, |w| {
+        let kv = kv_for(w);
+        let (shared, reqs) = prompts_for(w);
+        let mut engine =
+            DecodeEngine::new(gpt.clone(), kv.clone().with_prefix_cache(), Sampling::Greedy);
+        engine
+            .run_fp(&[GenRequest { prompt: shared.clone(), n_new: 1 }])
+            .map_err(|e| e.to_string())?;
+        // The retired warmer's aligned blocks stay resident, pinned by the
+        // prefix index alone.
+        let prefix_bits = engine.pool().resident_bits();
+        if prefix_bits == 0 {
+            return Err("warm run registered no resident prefix blocks".into());
+        }
+        let n = reqs.len();
+        for r in &reqs {
+            engine.admit(r.clone()).map_err(|e| e.to_string())?;
+        }
+        // Admission seats each stream on the full aligned prefix (every
+        // suffix is non-empty) without prefilling anything yet: no private
+        // blocks, no fp32 tail rows.
+        if engine.prefix_hits() != n as u64 {
+            return Err(format!("hits {} != streams {n}", engine.prefix_hits()));
+        }
+        if engine.inflight_tail_bits() != 0 {
+            return Err(format!("unexpected tail bits {}", engine.inflight_tail_bits()));
+        }
+        if engine.pool().resident_bits() != prefix_bits {
+            return Err(format!(
+                "admission must not grow the pool: {} != {prefix_bits}",
+                engine.pool().resident_bits()
+            ));
+        }
+        let logical = engine.inflight_storage_bits();
+        if logical != n * prefix_bits {
+            return Err(format!(
+                "per-stream sum must count the prefix N times: {logical} != {n} × {prefix_bits}"
+            ));
+        }
+        // Physically it exists once: one prefix copy plus (empty) tails.
+        let physical = engine.pool().resident_bits() + engine.inflight_tail_bits();
+        if physical != prefix_bits {
+            return Err(format!("prefix stored more than once: {physical} != {prefix_bits}"));
+        }
+        // Decode to completion: every stream retires cleanly, the gauge
+        // empties, and the pool keeps only index-pinned blocks (the
+        // streams' own registrations may extend past the warmer's).
+        let hook = stamp::model::FpHook;
+        while engine.has_work() {
+            engine.step(&hook);
+            engine.drain();
+        }
+        if engine.inflight_storage_bits() != 0 {
+            return Err("retired streams must release their handles".into());
+        }
+        if engine.pool().resident_bits() < prefix_bits {
+            return Err("index-pinned prefix blocks must survive stream retirement".into());
+        }
+        Ok(())
+    });
+}
+
+/// The fp32 no-window path without `prefix_cache` still never finalizes
+/// blocks (`storage_bits` accounting is unchanged from PR 3), while the
+/// same prompts with the knob set decode identically — the flag is purely
+/// a storage-layout opt-in.
+#[test]
+fn prefix_cache_flag_does_not_change_fp32_decode_output() {
+    let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 61));
+    let kv = KvCacheConfig { block: 4, ..KvCacheConfig::fp32() };
+    let reqs = vec![
+        GenRequest { prompt: (0..13).map(|j| (j * 5 % 70) as u32).collect(), n_new: 6 },
+        GenRequest { prompt: (0..9).map(|j| (j * 3 + 1) as u32).collect(), n_new: 4 },
+    ];
+    let mut plain = DecodeEngine::new(gpt.clone(), kv.clone(), Sampling::Greedy);
+    let want = plain.run_fp(&reqs).unwrap();
+    let mut pooled = DecodeEngine::new(gpt, kv.with_prefix_cache(), Sampling::Greedy);
+    let got = pooled.run_fp(&reqs).unwrap();
+    assert_eq!(got, want, "prefix_cache must not perturb fp32 decode");
+    // No shared warm-up happened, so nothing could have been seated on
+    // the pool mid-run (the second request's prompt is unrelated).
+    assert_eq!(pooled.prefix_hits(), 0);
+}
