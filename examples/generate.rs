@@ -8,6 +8,7 @@
 //! ```
 
 use stamp::model::FpHook;
+use stamp::obs::{EngineObs, TraceEvent, TraceKind};
 use stamp::prelude::*;
 use std::time::Instant;
 
@@ -93,4 +94,36 @@ fn main() {
         serial_dt.as_secs_f64() / batched_dt.as_secs_f64(),
     );
     assert!(agree, "fp32-cache batched decode must match serial decode");
+
+    // Structured tracing (PR 8): the same four streams through an engine
+    // with a trace ring attached (the `[observability]` TOML knobs route
+    // to exactly this). The drained JSONL reconstructs each stream's
+    // timeline — Admit → PrefillChunk… → one DecodeStep per generated
+    // token → Retire — and the always-on TTFT/TPOT histograms summarize
+    // the same timestamps. CI greps the "trace: drained" line.
+    let mut traced = DecodeEngine::new(gpt.clone(), KvCacheConfig::fp32(), Sampling::Greedy)
+        .with_obs(std::sync::Arc::new(EngineObs::with_trace(4096)));
+    traced.run_fp(&reqs).expect("traced engine run");
+    let obs = traced.obs().clone();
+    let jsonl = obs.drain_jsonl("gen");
+    let events: Vec<TraceEvent> = jsonl
+        .lines()
+        .map(|l| TraceEvent::from_json(l).expect("every drained JSONL line parses"))
+        .collect();
+    for i in 0..reqs.len() {
+        let evs: Vec<&TraceEvent> = events.iter().filter(|e| e.stream == i as u64).collect();
+        assert_eq!(evs.first().expect("stream admitted").kind, TraceKind::Admit);
+        assert_eq!(evs.last().expect("stream retired").kind, TraceKind::Retire);
+        let steps = evs.iter().filter(|e| e.kind == TraceKind::DecodeStep).count();
+        assert_eq!(steps, n_new, "stream {i}: one DecodeStep per generated token");
+    }
+    println!(
+        "\ntrace: drained {} events across {} streams (p50 TTFT {} µs, p50 TPOT {} µs, {} overwritten)",
+        events.len(),
+        reqs.len(),
+        obs.ttft_us.quantile(0.5),
+        obs.tpot_us.quantile(0.5),
+        obs.trace_dropped(),
+    );
+    println!("trace sample: {}", jsonl.lines().next().unwrap_or(""));
 }

@@ -291,6 +291,43 @@ fn main() {
         p95_us(&waits.borrow())
     );
 
+    // Obs overhead (PR 8): the tracing tax when a ring is attached.
+    // Both engines record TTFT/TPOT (the always-on cost: a few relaxed
+    // atomics per token); the traced engine additionally writes every
+    // Admit/PrefillChunk/DecodeStep/Retire event into a 4096-slot
+    // overwrite-oldest ring. Identical workload, so the row pair is a
+    // direct A/B of the record path; the assert pins the acceptance
+    // bound — tracing must stay within 3% of untraced on the fused
+    // decode hot path (plus an absolute grace for timer noise on
+    // quick-mode runs).
+    Harness::header("obs overhead (tiny GPT, 4 streams x 32 tokens)");
+    let oreqs: Vec<GenRequest> = prompts[..4]
+        .iter()
+        .map(|p| GenRequest { prompt: p.clone(), n_new: n_new_b })
+        .collect();
+    let mut plain = DecodeEngine::new(gpt.clone(), KvCacheConfig::fp32(), Sampling::Greedy)
+        .with_decode_batch(4);
+    let st_plain =
+        h.bench("obs overhead decode b=4 (untraced)", || plain.run_fp(&oreqs).unwrap());
+    println!("    -> {:.0} tok/s aggregate", st_plain.throughput((4 * n_new_b) as f64));
+    let mut traced = DecodeEngine::new(gpt.clone(), KvCacheConfig::fp32(), Sampling::Greedy)
+        .with_decode_batch(4)
+        .with_obs(std::sync::Arc::new(stamp::obs::EngineObs::with_trace(4096)));
+    let st_traced =
+        h.bench("obs overhead decode b=4 (traced ring 4096)", || traced.run_fp(&oreqs).unwrap());
+    println!(
+        "    -> {:.0} tok/s aggregate ({:+.2}% vs untraced)",
+        st_traced.throughput((4 * n_new_b) as f64),
+        (st_traced.min_ns / st_plain.min_ns - 1.0) * 100.0
+    );
+    assert!(
+        st_traced.min_ns <= st_plain.min_ns * 1.03 + 500_000.0,
+        "tracing overhead above 3%: traced {:.0} ns vs untraced {:.0} ns",
+        st_traced.min_ns,
+        st_plain.min_ns
+    );
+    println!("    traced ring: {} events dropped (overwrite-oldest)", traced.obs().trace_dropped());
+
     // Prefix reuse (PR 7): eight streams sharing a 128-token prompt
     // prefix, admitted with a 1-token budget so a run measures exactly
     // admit-to-first-token. The unpooled engine re-prefills the shared

@@ -10,7 +10,7 @@ mod parser;
 mod run;
 
 pub use parser::{ParseError, TomlValue, Toml};
-pub use run::{GenerateSpec, ModelSpec, QuantSpec, RunConfig, ServeSpec};
+pub use run::{GenerateSpec, ModelSpec, ObsSpec, QuantSpec, RunConfig, ServeSpec};
 
 #[cfg(test)]
 mod tests {

@@ -196,12 +196,50 @@ impl GenerateSpec {
     }
 }
 
+/// Observability settings (`[observability]` section). TOML keys mirror
+/// the field paths: `trace.enabled`, `trace.capacity`, `trace.sink`,
+/// `kernel_profile`. Everything here is off by default — the histogram
+/// metrics in [`crate::coordinator::Metrics`] and
+/// [`crate::obs::EngineObs`] are always on (a few relaxed atomics per
+/// event); these knobs gate the paths that cost memory or timer reads.
+#[derive(Clone, Debug)]
+pub struct ObsSpec {
+    /// Record per-stream decode timelines into each engine's bounded
+    /// [`crate::obs::TraceRing`] (drain via
+    /// `NativeExecutor::drain_trace` / `Server::drain_trace`).
+    pub trace_enabled: bool,
+    /// Events retained per engine ring; oldest are overwritten when full.
+    pub trace_capacity: usize,
+    /// Where drained traces go. Only `"memory"` (drain through the API)
+    /// is implemented; the knob exists so a file sink can be added
+    /// without a config break, and anything else is a parse error.
+    pub trace_sink: String,
+    /// Time every `tensor::matmul` / `tensor::qgemm` call and aggregate
+    /// by (kernel, site) — see [`crate::obs::kernel_profile_snapshot`].
+    /// Process-wide (the kernels are free functions).
+    pub kernel_profile: bool,
+}
+
+impl ObsSpec {
+    /// Validate the sink name, recoverably, at config-parse time.
+    pub fn check(&self) -> crate::error::Result<()> {
+        if self.trace_sink != "memory" {
+            crate::bail!(
+                "observability.trace.sink must be \"memory\" (the only implemented sink), got `{}`",
+                self.trace_sink
+            );
+        }
+        Ok(())
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub model: ModelSpec,
     pub quant: QuantSpec,
     pub serve: ServeSpec,
     pub generate: GenerateSpec,
+    pub obs: ObsSpec,
     /// Where AOT artifacts live.
     pub artifacts_dir: String,
 }
@@ -250,6 +288,12 @@ impl RunConfig {
                 kv_window: 0,
                 kv_sink_tokens: 64,
                 kv_prefix_cache: false,
+            },
+            obs: ObsSpec {
+                trace_enabled: false,
+                trace_capacity: 4096,
+                trace_sink: "memory".into(),
+                kernel_profile: false,
             },
             artifacts_dir: "artifacts".into(),
         }
@@ -321,11 +365,22 @@ impl RunConfig {
                 kv_prefix_cache: doc
                     .bool_or("generate", "kv.prefix_cache", d.generate.kv_prefix_cache),
             },
+            obs: ObsSpec {
+                trace_enabled: doc.bool_or("observability", "trace.enabled", d.obs.trace_enabled),
+                trace_capacity: doc
+                    .int_or("observability", "trace.capacity", d.obs.trace_capacity as i64)
+                    .max(1) as usize,
+                trace_sink: doc.str_or("observability", "trace.sink", &d.obs.trace_sink),
+                kernel_profile: doc
+                    .bool_or("observability", "kernel_profile", d.obs.kernel_profile),
+            },
             artifacts_dir: doc.str_or("", "artifacts_dir", &d.artifacts_dir),
         };
         // Sampling knobs fail here, recoverably, instead of being silently
-        // clamped at sample time (see [`GenerateSpec::check`]).
+        // clamped at sample time (see [`GenerateSpec::check`]); same for
+        // an unimplemented trace sink.
         cfg.generate.check()?;
+        cfg.obs.check()?;
         Ok(cfg)
     }
 
@@ -563,6 +618,31 @@ mod tests {
         RunConfig::defaults().generate.check().unwrap();
         // top_k without sampling stays valid: greedy ignores it.
         RunConfig::from_toml_str("[generate]\ntop_k = 4\n").unwrap();
+    }
+
+    #[test]
+    fn observability_section_parses_and_is_off_by_default() {
+        let d = RunConfig::defaults();
+        assert!(!d.obs.trace_enabled, "tracing is opt-in");
+        assert!(!d.obs.kernel_profile, "kernel profiling is opt-in");
+        assert_eq!(d.obs.trace_capacity, 4096);
+        assert_eq!(d.obs.trace_sink, "memory");
+        d.obs.check().unwrap();
+        let cfg = RunConfig::from_toml_str(
+            "[observability]\ntrace.enabled = true\ntrace.capacity = 128\nkernel_profile = true\n",
+        )
+        .unwrap();
+        assert!(cfg.obs.trace_enabled);
+        assert_eq!(cfg.obs.trace_capacity, 128);
+        assert!(cfg.obs.kernel_profile);
+        // capacity is clamped to ≥ 1 rather than building a zero ring.
+        let cfg = RunConfig::from_toml_str("[observability]\ntrace.capacity = 0\n").unwrap();
+        assert_eq!(cfg.obs.trace_capacity, 1);
+        // An unimplemented sink is a recoverable parse error, not a
+        // silently dropped trace.
+        let err =
+            RunConfig::from_toml_str("[observability]\ntrace.sink = \"file\"\n").unwrap_err();
+        assert!(err.to_string().contains("trace.sink"), "{err}");
     }
 
     #[test]

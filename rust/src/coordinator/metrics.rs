@@ -1,14 +1,36 @@
 //! Serving metrics: lock-free per-variant counters (requests, batches,
-//! latency sums, queue depth) suitable for reading from any thread.
+//! latency sums, queue depth) suitable for reading from any thread, plus
+//! log2 latency histograms ([`crate::obs::Histogram`]) for queue wait,
+//! admission wait, and service time, and machine-readable exposition —
+//! [`Metrics::prometheus`] (text exposition format) and
+//! [`Metrics::to_json`] — alongside the human-oriented sorted
+//! [`Metrics::snapshot`] line.
+//!
+//! TTFT and time-per-output-token live engine-side (the engine is the
+//! only place that knows when the first token of a stream was sampled);
+//! a worker links its executor's [`crate::obs::EngineObs`] into the
+//! variant's metrics via [`VariantMetrics::link_engine_obs`] so both
+//! expositions can surface per-variant TTFT/TPOT quantiles.
 
+use crate::obs::{EngineObs, Histogram};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::{Arc, RwLock};
+
+/// Quantiles surfaced per latency histogram in both expositions:
+/// (quantile, Prometheus label, JSON key suffix).
+const QUANTILES: [(f64, &str, &str); 4] =
+    [(0.5, "0.5", "50"), (0.9, "0.9", "90"), (0.95, "0.95", "95"), (0.99, "0.99", "99")];
 
 #[derive(Default)]
 pub struct VariantMetrics {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
+    /// Requests that received an error `Response` — *per-request*
+    /// semantics on every path: a failed batch of N adds N (each of its
+    /// requests got the error), a failed stream adds 1, a shed request
+    /// adds 1. Pinned by `errors_propagate_to_every_request` and the
+    /// shed tests in `coordinator::worker`.
     pub errors: AtomicU64,
     pub queued_us_total: AtomicU64,
     pub service_us_total: AtomicU64,
@@ -17,11 +39,20 @@ pub struct VariantMetrics {
     /// Streams seated into a decode-engine slot by the continuous-batching
     /// scheduler (PR 6). Monotone counter.
     pub admitted: AtomicU64,
-    /// Requests shed by backpressure (admission queue full) or an expired
-    /// admission deadline. Monotone counter — it only ever grows, so a
-    /// dashboard delta is always the shed *rate*.
+    /// Requests shed for any reason — always exactly
+    /// `shed_overflow + shed_deadline`, kept as its own counter so the
+    /// snapshot line and dashboards watching it predate the split keep
+    /// working. Monotone counter — a delta is always the shed *rate*.
     pub shed: AtomicU64,
-    /// Streams currently in flight inside the engine (gauge).
+    /// Requests shed by backpressure: the bounded admission queue was
+    /// full at arrival.
+    pub shed_overflow: AtomicU64,
+    /// Requests shed because their `admit_deadline_ms` expired before a
+    /// slot freed up.
+    pub shed_deadline: AtomicU64,
+    /// Streams currently in flight inside the engine (gauge). Decrement
+    /// through [`VariantMetrics::dec_inflight`] — a raw `fetch_sub`
+    /// would wrap to `u64::MAX` on a double retire.
     pub inflight: AtomicU64,
     /// Total µs admitted streams spent waiting in the admission queue.
     pub admit_wait_us_total: AtomicU64,
@@ -29,6 +60,16 @@ pub struct VariantMetrics {
     /// re-running prefill for the shared span (PR 7; mirrors
     /// [`crate::decode::DecodeEngine::prefix_hits`]). Monotone counter.
     pub prefix_hits: AtomicU64,
+    /// Per-request queue-wait distribution (same samples whose sum feeds
+    /// `queued_us_total`).
+    pub queue_wait_us: Histogram,
+    /// Admission-wait distribution (same samples as `admit_wait_us_total`).
+    pub admit_wait_us: Histogram,
+    /// Per-request service-time distribution.
+    pub service_us: Histogram,
+    /// Engine-side observability (TTFT/TPOT histograms + trace ring),
+    /// linked by the worker that owns this variant's executor.
+    engine: RwLock<Option<Arc<EngineObs>>>,
 }
 
 impl VariantMetrics {
@@ -38,6 +79,12 @@ impl VariantMetrics {
         self.batch_size_total.fetch_add(batch_size as u64, Ordering::Relaxed);
         self.queued_us_total.fetch_add(queued_us * batch_size as u64, Ordering::Relaxed);
         self.service_us_total.fetch_add(service_us * batch_size as u64, Ordering::Relaxed);
+        // One histogram sample per request, mirroring the totals above
+        // (every request in the batch waited and was served together).
+        for _ in 0..batch_size {
+            self.queue_wait_us.record(queued_us);
+            self.service_us.record(service_us);
+        }
     }
 
     /// One stream seated into an engine slot after `wait_us` in the
@@ -45,11 +92,49 @@ impl VariantMetrics {
     pub fn record_admit(&self, wait_us: u64) {
         self.admitted.fetch_add(1, Ordering::Relaxed);
         self.admit_wait_us_total.fetch_add(wait_us, Ordering::Relaxed);
+        self.admit_wait_us.record(wait_us);
     }
 
-    /// One request shed (backpressure bound or admission deadline).
-    pub fn record_shed(&self) {
+    /// One request shed by backpressure (admission queue full). Also
+    /// bumps the aggregate `shed` counter.
+    pub fn record_shed_overflow(&self) {
+        self.shed_overflow.fetch_add(1, Ordering::Relaxed);
         self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request shed by an expired admission deadline. Also bumps the
+    /// aggregate `shed` counter.
+    pub fn record_shed_deadline(&self) {
+        self.shed_deadline.fetch_add(1, Ordering::Relaxed);
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Saturating decrement of the `inflight` gauge: a double retire (or
+    /// any bookkeeping slip) leaves the gauge at 0 instead of wrapping
+    /// to `u64::MAX` and poisoning every dashboard reading after it.
+    pub fn dec_inflight(&self) {
+        let mut cur = self.inflight.load(Ordering::Relaxed);
+        while cur > 0 {
+            match self.inflight.compare_exchange_weak(
+                cur,
+                cur - 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Link the engine-side observability for this variant so the
+    /// expositions can surface TTFT/TPOT. Idempotent; last link wins.
+    pub fn link_engine_obs(&self, obs: Arc<EngineObs>) {
+        *self.engine.write().unwrap() = Some(obs);
+    }
+
+    pub fn engine_obs(&self) -> Option<Arc<EngineObs>> {
+        self.engine.read().unwrap().clone()
     }
 
     pub fn mean_admit_wait_us(&self) -> f64 {
@@ -88,7 +173,59 @@ impl VariantMetrics {
 /// Registry of per-variant metrics.
 #[derive(Default)]
 pub struct Metrics {
-    inner: RwLock<HashMap<String, std::sync::Arc<VariantMetrics>>>,
+    inner: RwLock<HashMap<String, Arc<VariantMetrics>>>,
+}
+
+/// Escape a Prometheus label value (`\` → `\\`, `"` → `\"`, newline →
+/// `\n` — the exposition-format rules).
+fn prom_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_escape(s: &str) -> String {
+    // Same escape set; JSON and the Prometheus label rules agree on it.
+    prom_escape(s)
+}
+
+/// Append one histogram family's samples for one variant: cumulative
+/// `_bucket{le=...}` lines up to the highest non-empty bucket, then
+/// `+Inf`, `_sum`, `_count`.
+fn prom_histogram(out: &mut String, family: &str, variant: &str, h: &Histogram) {
+    let counts = h.bucket_counts();
+    let hi = counts.iter().rposition(|&c| c != 0);
+    let v = prom_escape(variant);
+    let mut cum = 0u64;
+    if let Some(hi) = hi {
+        for (i, c) in counts.iter().enumerate().take(hi + 1) {
+            cum += c;
+            out.push_str(&format!(
+                "{family}_bucket{{variant=\"{v}\",le=\"{}\"}} {cum}\n",
+                Histogram::bucket_bound(i)
+            ));
+        }
+    }
+    out.push_str(&format!("{family}_bucket{{variant=\"{v}\",le=\"+Inf\"}} {}\n", h.count()));
+    out.push_str(&format!("{family}_sum{{variant=\"{v}\"}} {}\n", h.sum()));
+    out.push_str(&format!("{family}_count{{variant=\"{v}\"}} {}\n", h.count()));
+}
+
+/// One histogram as a JSON object (count/sum/mean + quantiles).
+fn json_histogram(h: &Histogram) -> String {
+    let mut out = format!("{{\"count\":{},\"sum\":{},\"mean\":{:.3}", h.count(), h.sum(), h.mean());
+    for (q, _, key) in QUANTILES {
+        out.push_str(&format!(",\"p{key}\":{}", h.quantile(q)));
+    }
+    out.push('}');
+    out
 }
 
 impl Metrics {
@@ -96,12 +233,23 @@ impl Metrics {
         Self::default()
     }
 
-    pub fn variant(&self, name: &str) -> std::sync::Arc<VariantMetrics> {
+    pub fn variant(&self, name: &str) -> Arc<VariantMetrics> {
         if let Some(m) = self.inner.read().unwrap().get(name) {
             return m.clone();
         }
         let mut w = self.inner.write().unwrap();
         w.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Sorted `(name, metrics)` view — the shared iteration base of all
+    /// three expositions (the registry is a `HashMap`, so every output
+    /// must impose its own deterministic order).
+    fn sorted(&self) -> Vec<(String, Arc<VariantMetrics>)> {
+        let r = self.inner.read().unwrap();
+        let mut v: Vec<(String, Arc<VariantMetrics>)> =
+            r.iter().map(|(k, m)| (k.clone(), m.clone())).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
     }
 
     /// Text snapshot for the CLI / logs. Lines are sorted by variant name:
@@ -110,12 +258,8 @@ impl Metrics {
     /// tooling treats a reordered line as churn — the sort pins the order
     /// (regression: `snapshot_orders_variants_by_name_deterministically`).
     pub fn snapshot(&self) -> String {
-        let r = self.inner.read().unwrap();
-        let mut names: Vec<&String> = r.keys().collect();
-        names.sort();
         let mut out = String::new();
-        for n in names {
-            let m = &r[n];
+        for (n, m) in self.sorted() {
             out.push_str(&format!(
                 "{n}: reqs={} batches={} errs={} mean_batch={:.2} queue={:.0}µs service={:.0}µs depth={} admitted={} shed={} inflight={} admit_wait={:.0}µs prefix_hits={}\n",
                 m.requests.load(Ordering::Relaxed),
@@ -132,6 +276,161 @@ impl Metrics {
                 m.prefix_hits.load(Ordering::Relaxed),
             ));
         }
+        out
+    }
+
+    /// Prometheus text exposition: every counter/gauge/histogram family
+    /// with `# HELP`/`# TYPE` headers, families and variant labels
+    /// sorted, label values escaped per the format rules. TTFT/TPOT
+    /// families (and their quantile gauges) appear when at least one
+    /// variant has linked engine observability.
+    pub fn prometheus(&self) -> String {
+        let vars = self.sorted();
+        let mut out = String::new();
+
+        let counter = |out: &mut String, name: &str, help: &str, get: &dyn Fn(&VariantMetrics) -> u64| {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n"));
+            for (n, m) in &vars {
+                out.push_str(&format!("{name}{{variant=\"{}\"}} {}\n", prom_escape(n), get(m)));
+            }
+        };
+        let gauge = |out: &mut String, name: &str, help: &str, get: &dyn Fn(&VariantMetrics) -> u64| {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n"));
+            for (n, m) in &vars {
+                out.push_str(&format!("{name}{{variant=\"{}\"}} {}\n", prom_escape(n), get(m)));
+            }
+        };
+        let histogram = |out: &mut String, name: &str, help: &str, get: &dyn Fn(&VariantMetrics) -> Option<&Histogram>| {
+            // Skip the family entirely when no variant carries it (the
+            // engine-linked TTFT/TPOT case before any link happens).
+            if vars.iter().all(|(_, m)| get(m).is_none()) {
+                return;
+            }
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
+            for (n, m) in &vars {
+                if let Some(h) = get(m) {
+                    prom_histogram(out, name, n, h);
+                }
+            }
+        };
+
+        // Families in sorted order (the format test greps for this).
+        histogram(&mut out, "stamp_admit_wait_us", "Admission-queue wait per admitted stream (microseconds).", &|m| {
+            Some(&m.admit_wait_us)
+        });
+        counter(&mut out, "stamp_admitted_total", "Streams seated into a decode-engine slot.", &|m| {
+            m.admitted.load(Ordering::Relaxed)
+        });
+        counter(&mut out, "stamp_batches_total", "Batches executed.", &|m| {
+            m.batches.load(Ordering::Relaxed)
+        });
+        counter(&mut out, "stamp_errors_total", "Requests that received an error response.", &|m| {
+            m.errors.load(Ordering::Relaxed)
+        });
+        gauge(&mut out, "stamp_inflight", "Streams currently in flight inside the engine.", &|m| {
+            m.inflight.load(Ordering::Relaxed)
+        });
+        counter(&mut out, "stamp_prefix_hits_total", "Admissions seated on a pooled prompt prefix.", &|m| {
+            m.prefix_hits.load(Ordering::Relaxed)
+        });
+        gauge(&mut out, "stamp_queue_depth", "Requests waiting in the admission/batch queue.", &|m| {
+            m.queue_depth.load(Ordering::Relaxed)
+        });
+        histogram(&mut out, "stamp_queue_wait_us", "Queue wait per request (microseconds).", &|m| {
+            Some(&m.queue_wait_us)
+        });
+        counter(&mut out, "stamp_requests_total", "Requests processed.", &|m| {
+            m.requests.load(Ordering::Relaxed)
+        });
+        histogram(&mut out, "stamp_service_us", "Service time per request (microseconds).", &|m| {
+            Some(&m.service_us)
+        });
+        counter(&mut out, "stamp_shed_deadline_total", "Requests shed by an expired admission deadline.", &|m| {
+            m.shed_deadline.load(Ordering::Relaxed)
+        });
+        counter(&mut out, "stamp_shed_overflow_total", "Requests shed by admission-queue backpressure.", &|m| {
+            m.shed_overflow.load(Ordering::Relaxed)
+        });
+        counter(&mut out, "stamp_shed_total", "Requests shed (overflow + deadline).", &|m| {
+            m.shed.load(Ordering::Relaxed)
+        });
+
+        // Engine-linked TTFT/TPOT: histogram families plus quantile
+        // gauges, only for variants with a linked engine.
+        let engines: Vec<(String, Arc<EngineObs>)> = vars
+            .iter()
+            .filter_map(|(n, m)| m.engine_obs().map(|o| (n.clone(), o)))
+            .collect();
+        let eng_hist = |out: &mut String, name: &str, help: &str, get: &dyn Fn(&EngineObs) -> &Histogram| {
+            if engines.is_empty() {
+                return;
+            }
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
+            for (n, o) in &engines {
+                prom_histogram(out, name, n, get(o));
+            }
+        };
+        let eng_quantiles = |out: &mut String, name: &str, help: &str, get: &dyn Fn(&EngineObs) -> &Histogram| {
+            if engines.is_empty() {
+                return;
+            }
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n"));
+            for (n, o) in &engines {
+                for (q, label, _) in QUANTILES {
+                    out.push_str(&format!(
+                        "{name}{{variant=\"{}\",quantile=\"{label}\"}} {}\n",
+                        prom_escape(n),
+                        get(o).quantile(q)
+                    ));
+                }
+            }
+        };
+        eng_hist(&mut out, "stamp_tpot_us", "Time per output token (microseconds).", &|o| &o.tpot_us);
+        eng_quantiles(&mut out, "stamp_tpot_us_quantile", "Time-per-output-token quantiles (microseconds).", &|o| {
+            &o.tpot_us
+        });
+        eng_hist(&mut out, "stamp_ttft_us", "Time to first token (microseconds).", &|o| &o.ttft_us);
+        eng_quantiles(&mut out, "stamp_ttft_us_quantile", "Time-to-first-token quantiles (microseconds).", &|o| {
+            &o.ttft_us
+        });
+        out
+    }
+
+    /// JSON exposition: one object per variant (sorted) with the raw
+    /// counters and each latency histogram as count/sum/mean +
+    /// p50/p90/p95/p99. `ttft_us`/`tpot_us` are `null` until an engine
+    /// is linked.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\"variants\":{");
+        for (i, (n, m)) in self.sorted().iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{}\":{{", json_escape(n)));
+            out.push_str(&format!("\"requests\":{}", m.requests.load(Ordering::Relaxed)));
+            out.push_str(&format!(",\"batches\":{}", m.batches.load(Ordering::Relaxed)));
+            out.push_str(&format!(",\"errors\":{}", m.errors.load(Ordering::Relaxed)));
+            out.push_str(&format!(",\"queue_depth\":{}", m.queue_depth.load(Ordering::Relaxed)));
+            out.push_str(&format!(",\"admitted\":{}", m.admitted.load(Ordering::Relaxed)));
+            out.push_str(&format!(",\"shed\":{}", m.shed.load(Ordering::Relaxed)));
+            out.push_str(&format!(",\"shed_overflow\":{}", m.shed_overflow.load(Ordering::Relaxed)));
+            out.push_str(&format!(",\"shed_deadline\":{}", m.shed_deadline.load(Ordering::Relaxed)));
+            out.push_str(&format!(",\"inflight\":{}", m.inflight.load(Ordering::Relaxed)));
+            out.push_str(&format!(",\"prefix_hits\":{}", m.prefix_hits.load(Ordering::Relaxed)));
+            out.push_str(&format!(",\"mean_batch_size\":{:.3}", m.mean_batch_size()));
+            out.push_str(&format!(",\"queue_wait_us\":{}", json_histogram(&m.queue_wait_us)));
+            out.push_str(&format!(",\"admit_wait_us\":{}", json_histogram(&m.admit_wait_us)));
+            out.push_str(&format!(",\"service_us\":{}", json_histogram(&m.service_us)));
+            match m.engine_obs() {
+                Some(o) => {
+                    out.push_str(&format!(",\"ttft_us\":{}", json_histogram(&o.ttft_us)));
+                    out.push_str(&format!(",\"tpot_us\":{}", json_histogram(&o.tpot_us)));
+                }
+                None => out.push_str(",\"ttft_us\":null,\"tpot_us\":null"),
+            }
+            out.push('}');
+        }
+        out.push_str("}}");
         out
     }
 }
@@ -152,6 +451,10 @@ mod tests {
         // queued: (100·4 + 50·2)/6 = 83.3
         assert!((v.mean_queued_us() - 500.0 / 6.0).abs() < 1e-6);
         assert!(m.snapshot().contains("rtn"));
+        // Histograms saw one sample per request.
+        assert_eq!(v.queue_wait_us.count(), 6);
+        assert_eq!(v.service_us.count(), 6);
+        assert_eq!(v.queue_wait_us.sum(), 100 * 4 + 50 * 2);
     }
 
     #[test]
@@ -169,12 +472,41 @@ mod tests {
         let v = m.variant("gen");
         v.record_admit(100);
         v.record_admit(50);
-        v.record_shed();
+        v.record_shed_overflow();
         assert_eq!(v.admitted.load(Ordering::Relaxed), 2);
         assert_eq!(v.shed.load(Ordering::Relaxed), 1);
         assert!((v.mean_admit_wait_us() - 75.0).abs() < 1e-9);
+        assert_eq!(v.admit_wait_us.count(), 2);
         let snap = m.snapshot();
         assert!(snap.contains("admitted=2") && snap.contains("shed=1"), "{snap}");
+    }
+
+    #[test]
+    fn shed_split_increments_the_right_counter_and_the_sum() {
+        // Regression (PR 8): `shed` used to conflate backpressure and
+        // deadline sheds; each path must bump its own counter and the
+        // aggregate must stay their exact sum for snapshot compatibility.
+        let m = Metrics::new();
+        let v = m.variant("gen");
+        v.record_shed_overflow();
+        v.record_shed_overflow();
+        v.record_shed_deadline();
+        assert_eq!(v.shed_overflow.load(Ordering::Relaxed), 2);
+        assert_eq!(v.shed_deadline.load(Ordering::Relaxed), 1);
+        assert_eq!(v.shed.load(Ordering::Relaxed), 3);
+        assert!(m.snapshot().contains("shed=3"));
+    }
+
+    #[test]
+    fn dec_inflight_saturates_at_zero() {
+        // Regression (PR 8): a double retire used to `fetch_sub` the
+        // gauge straight past zero to u64::MAX.
+        let v = VariantMetrics::default();
+        v.inflight.fetch_add(1, Ordering::Relaxed);
+        v.dec_inflight();
+        assert_eq!(v.inflight.load(Ordering::Relaxed), 0);
+        v.dec_inflight(); // double retire: must stay 0, not wrap
+        assert_eq!(v.inflight.load(Ordering::Relaxed), 0);
     }
 
     #[test]
@@ -186,7 +518,7 @@ mod tests {
         // repeated snapshots.
         let m = Metrics::new();
         m.variant("zeta").record_batch(1, 10, 20);
-        m.variant("alpha").record_shed();
+        m.variant("alpha").record_shed_overflow();
         let snap = m.snapshot();
         let lines: Vec<&str> = snap.lines().collect();
         assert_eq!(lines.len(), 2);
@@ -201,14 +533,19 @@ mod tests {
     fn shed_counter_is_monotone_under_concurrency() {
         // The backpressure counter is cumulative: observed values from any
         // thread form a non-decreasing sequence, and the final total is
-        // exact (no lost increments).
-        let m = std::sync::Arc::new(Metrics::new());
+        // exact (no lost increments) — with the PR 8 split, the aggregate
+        // stays the exact sum of the two per-reason counters.
+        let m = Arc::new(Metrics::new());
         let writers: Vec<_> = (0..4)
-            .map(|_| {
+            .map(|t| {
                 let mc = m.clone();
                 std::thread::spawn(move || {
                     for _ in 0..500 {
-                        mc.variant("gen").record_shed();
+                        if t % 2 == 0 {
+                            mc.variant("gen").record_shed_overflow();
+                        } else {
+                            mc.variant("gen").record_shed_deadline();
+                        }
                     }
                 })
             })
@@ -229,12 +566,15 @@ mod tests {
             h.join().unwrap();
         }
         reader.join().unwrap();
-        assert_eq!(m.variant("gen").shed.load(Ordering::Relaxed), 2000);
+        let v = m.variant("gen");
+        assert_eq!(v.shed.load(Ordering::Relaxed), 2000);
+        assert_eq!(v.shed_overflow.load(Ordering::Relaxed), 1000);
+        assert_eq!(v.shed_deadline.load(Ordering::Relaxed), 1000);
     }
 
     #[test]
     fn concurrent_updates() {
-        let m = std::sync::Arc::new(Metrics::new());
+        let m = Arc::new(Metrics::new());
         let mut handles = Vec::new();
         for _ in 0..4 {
             let mc = m.clone();
@@ -248,5 +588,40 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(m.variant("shared").requests.load(Ordering::Relaxed), 4000);
+    }
+
+    #[test]
+    fn prometheus_surfaces_linked_engine_quantiles() {
+        let m = Metrics::new();
+        let v = m.variant("gen");
+        v.record_batch(1, 10, 20);
+        // No engine linked: TTFT/TPOT families are absent.
+        let text = m.prometheus();
+        assert!(!text.contains("stamp_ttft_us"), "{text}");
+        let obs = Arc::new(EngineObs::new());
+        obs.ttft_us.record(1000);
+        obs.tpot_us.record(100);
+        obs.tpot_us.record(200);
+        v.link_engine_obs(obs);
+        let text = m.prometheus();
+        assert!(text.contains("# TYPE stamp_ttft_us histogram"), "{text}");
+        assert!(text.contains("stamp_ttft_us_quantile{variant=\"gen\",quantile=\"0.5\"}"), "{text}");
+        assert!(text.contains("stamp_tpot_us_count{variant=\"gen\"} 2"), "{text}");
+    }
+
+    #[test]
+    fn json_exposition_has_quantiles_and_null_engine_fields() {
+        let m = Metrics::new();
+        let v = m.variant("gen");
+        v.record_batch(2, 100, 300);
+        let j = m.to_json();
+        assert!(j.contains("\"queue_wait_us\":{\"count\":2"), "{j}");
+        assert!(j.contains("\"p99\":"), "{j}");
+        assert!(j.contains("\"ttft_us\":null"), "{j}");
+        let obs = Arc::new(EngineObs::new());
+        obs.ttft_us.record(500);
+        v.link_engine_obs(obs);
+        let j = m.to_json();
+        assert!(j.contains("\"ttft_us\":{\"count\":1"), "{j}");
     }
 }

@@ -54,6 +54,9 @@ pub struct Server {
     router_thread: std::thread::JoinHandle<()>,
     pool: Option<WorkerPool>,
     stream_workers: Vec<StreamWorker>,
+    /// Retained so [`Server::drain_trace`] can reach the decode engines'
+    /// trace rings while the server runs (`None` for batch-only servers).
+    stream_executor: Option<Arc<dyn StreamExecutor>>,
     shutdown_tx: Sender<Ingest>,
 }
 
@@ -112,11 +115,27 @@ impl Server {
             })
             .expect("spawn router");
 
-        Server { handle, router_thread, pool: Some(pool), stream_workers, shutdown_tx: tx }
+        Server {
+            handle,
+            router_thread,
+            pool: Some(pool),
+            stream_workers,
+            stream_executor,
+            shutdown_tx: tx,
+        }
     }
 
     pub fn handle(&self) -> Arc<ServerHandle> {
         self.handle.clone()
+    }
+
+    /// Drain a streaming variant's trace ring to JSONL (empty when the
+    /// server has no stream executor, the variant doesn't stream, or
+    /// tracing is disabled). Safe while serving: the ring's producer side
+    /// is lock-free for the engine and each drain returns a disjoint
+    /// window of the timeline.
+    pub fn drain_trace(&self, variant: &str) -> String {
+        self.stream_executor.as_ref().map_or(String::new(), |sx| sx.drain_trace(variant))
     }
 
     /// Graceful shutdown: flush batchers, drain stream workers (every
@@ -323,6 +342,26 @@ mod tests {
             let resp = rx.recv_timeout(Duration::from_secs(1)).unwrap();
             assert_eq!(resp.output.unwrap().at(0, 0), 3.0 * i as f32);
         }
+    }
+
+    #[test]
+    fn drain_trace_is_empty_without_a_traced_stream_executor() {
+        // Batch-only servers have no stream executor at all…
+        let server = Server::start(&spec(), &["fp"], doubling_executor());
+        assert_eq!(server.drain_trace("fp"), "");
+        server.shutdown();
+        // …and a stream executor that doesn't override `drain_trace`
+        // (tracing off) reports an empty window, not an error.
+        let server = Server::start_streaming(
+            &spec(),
+            &["fp"],
+            &["gen"],
+            doubling_executor(),
+            Some(Arc::new(TripleStream::default())),
+            None,
+        );
+        assert_eq!(server.drain_trace("gen"), "");
+        server.shutdown();
     }
 
     #[test]

@@ -11,6 +11,7 @@
 
 use super::batcher::AdmissionQueue;
 use super::{Batch, Metrics, Request, Response};
+use crate::obs::{EngineObs, TraceKind, SHED_STREAM};
 use crate::tensor::Tensor;
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;
@@ -30,6 +31,14 @@ pub trait Executor: Send + Sync + 'static {
     /// batch of generate requests into one step-synchronized
     /// [`crate::decode::DecodeEngine`] run) rather than loop per request.
     fn execute(&self, variant: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>, String>;
+
+    /// Engine-side observability for `variant`, if this executor runs a
+    /// decode engine for it. Workers link it into the variant's
+    /// [`super::VariantMetrics`] so TTFT/TPOT reach the expositions. The
+    /// default keeps closure executors and mocks trivially conforming.
+    fn obs(&self, _variant: &str) -> Option<Arc<EngineObs>> {
+        None
+    }
 }
 
 /// Blanket impl so closures can be executors in tests/examples.
@@ -122,6 +131,11 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Batch>>>, executor: Arc<dyn Executor>, met
             Err(_) => return, // all senders dropped
         };
         let vm = metrics.variant(&batch.variant);
+        if vm.engine_obs().is_none() {
+            if let Some(obs) = executor.obs(&batch.variant) {
+                vm.link_engine_obs(obs);
+            }
+        }
         vm.queue_depth.fetch_add(1, Ordering::Relaxed);
         let t0 = Instant::now();
         let inputs: Vec<&Tensor> = batch.requests.iter().map(|r| &r.input).collect();
@@ -151,6 +165,11 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Batch>>>, executor: Arc<dyn Executor>, met
                 }
             }
             Err(msg) => {
+                // `errors` counts *requests* that received an error
+                // response (see [`super::VariantMetrics::errors`]): a
+                // failed batch errors every one of its `batch_size`
+                // requests, matching the streaming path's one-increment-
+                // per-request accounting.
                 vm.errors.fetch_add(batch_size as u64, Ordering::Relaxed);
                 for req in batch.requests {
                     let _ = req.respond.send(Response {
@@ -196,6 +215,16 @@ pub trait StreamExecutor: Send + Sync + 'static {
     /// conforming at 0.
     fn prefix_hits(&self, _variant: &str) -> u64 {
         0
+    }
+    /// Engine-side observability for `variant` (same contract as
+    /// [`Executor::obs`]). Default `None` keeps mocks conforming.
+    fn obs(&self, _variant: &str) -> Option<Arc<EngineObs>> {
+        None
+    }
+    /// Drain `variant`'s trace ring to JSONL (empty when tracing is off
+    /// or the executor has no engine for the variant).
+    fn drain_trace(&self, _variant: &str) -> String {
+        String::new()
     }
 }
 
@@ -291,9 +320,33 @@ fn stream_worker_loop(
     let mut inflight: HashMap<u64, (Request, Instant)> = HashMap::new();
     let mut open = true;
 
-    let shed = |req: Request, msg: String| {
-        vm.record_shed();
+    // Engine-side observability, linked once so `Metrics::prometheus()`/
+    // `to_json()` can surface this variant's TTFT/TPOT, and so scheduler
+    // sheds land in the same trace timeline as the engine's own events.
+    let eng_obs = executor.obs(&variant);
+    if let Some(obs) = &eng_obs {
+        vm.link_engine_obs(obs.clone());
+    }
+
+    /// Why a request was shed — each reason has its own monotone counter
+    /// (`shed` stays their sum for snapshot compatibility).
+    enum ShedReason {
+        Overflow,
+        Deadline,
+    }
+    let shed = |req: Request, reason: ShedReason, msg: String| {
+        match reason {
+            ShedReason::Overflow => vm.record_shed_overflow(),
+            ShedReason::Deadline => vm.record_shed_deadline(),
+        }
+        // A shed request received an error response: per-request `errors`
+        // semantics, same as the batch path.
         vm.errors.fetch_add(1, Ordering::Relaxed);
+        if let Some(obs) = &eng_obs {
+            // Shed happens before the request has a stream id — the
+            // sentinel serializes as `"stream":null` in the timeline.
+            obs.record_event(TraceKind::Shed, SHED_STREAM, obs.now_us(), 0);
+        }
         let _ = req.respond.send(Response {
             id: req.id,
             variant: variant.clone(),
@@ -312,7 +365,11 @@ fn stream_worker_loop(
             match rx.recv_timeout(Duration::from_millis(50)) {
                 Ok(StreamIngest::Req(r)) => {
                     if let Err(r) = queue.push(r, Instant::now()) {
-                        shed(r, format!("admission queue full ({max_pending} pending): request shed"));
+                        shed(
+                            r,
+                            ShedReason::Overflow,
+                            format!("admission queue full ({max_pending} pending): request shed"),
+                        );
                     }
                 }
                 Ok(StreamIngest::Shutdown) | Err(RecvTimeoutError::Disconnected) => open = false,
@@ -323,7 +380,11 @@ fn stream_worker_loop(
             match rx.try_recv() {
                 Ok(StreamIngest::Req(r)) => {
                     if let Err(r) = queue.push(r, Instant::now()) {
-                        shed(r, format!("admission queue full ({max_pending} pending): request shed"));
+                        shed(
+                            r,
+                            ShedReason::Overflow,
+                            format!("admission queue full ({max_pending} pending): request shed"),
+                        );
                     }
                 }
                 Ok(StreamIngest::Shutdown) | Err(TryRecvError::Disconnected) => {
@@ -338,7 +399,11 @@ fn stream_worker_loop(
         let now = Instant::now();
         for (req, submitted) in queue.expire(now) {
             let waited_us = now.duration_since(submitted).as_micros();
-            shed(req, format!("admission deadline exceeded after {waited_us}µs in queue"));
+            shed(
+                req,
+                ShedReason::Deadline,
+                format!("admission deadline exceeded after {waited_us}µs in queue"),
+            );
         }
 
         // (3) Admit in arrival order while the engine has free slots.
@@ -349,7 +414,11 @@ fn stream_worker_loop(
         let popped = queue.pop_ready(executor.free_slots(&variant), now);
         for (req, submitted) in popped.expired {
             let waited_us = now.duration_since(submitted).as_micros();
-            shed(req, format!("admission deadline exceeded after {waited_us}µs in queue"));
+            shed(
+                req,
+                ShedReason::Deadline,
+                format!("admission deadline exceeded after {waited_us}µs in queue"),
+            );
         }
         let mut admitted_any = false;
         for (req, _submitted) in popped.ready {
@@ -388,7 +457,7 @@ fn stream_worker_loop(
         if !inflight.is_empty() || (!queue.is_empty() && executor.has_work(&variant)) {
             for (sid, out) in executor.step(&variant) {
                 if let Some((req, admitted_at)) = inflight.remove(&sid) {
-                    vm.inflight.fetch_sub(1, Ordering::Relaxed);
+                    vm.dec_inflight();
                     let done = Instant::now();
                     let queued_us = admitted_at.duration_since(req.submitted).as_micros() as u64;
                     let service_us = done.duration_since(admitted_at).as_micros() as u64;
@@ -644,7 +713,14 @@ mod tests {
         assert!(shed > 0, "bounded admission queue must shed under burst");
         let vm = metrics.variant("gen");
         assert_eq!(vm.shed.load(Ordering::Relaxed), shed as u64);
+        // Regression (PR 8): the queue-bound path must land in
+        // `shed_overflow`, never `shed_deadline`.
+        assert_eq!(vm.shed_overflow.load(Ordering::Relaxed), shed as u64);
+        assert_eq!(vm.shed_deadline.load(Ordering::Relaxed), 0);
         assert_eq!(vm.admitted.load(Ordering::Relaxed), served as u64);
+        // Every shed request received an error response (per-request
+        // `errors` semantics on the streaming path).
+        assert_eq!(vm.errors.load(Ordering::Relaxed), shed as u64);
     }
 
     #[test]
@@ -667,7 +743,50 @@ mod tests {
         assert!(outcomes[0].1.is_ok(), "first request holds the slot and completes");
         let err = outcomes[1].1.as_ref().unwrap_err();
         assert!(err.contains("admission deadline exceeded"), "{err}");
-        assert_eq!(metrics.variant("gen").shed.load(Ordering::Relaxed), 1);
+        let vm = metrics.variant("gen");
+        assert_eq!(vm.shed.load(Ordering::Relaxed), 1);
+        // Regression (PR 8): the deadline path must land in
+        // `shed_deadline`, never `shed_overflow`.
+        assert_eq!(vm.shed_deadline.load(Ordering::Relaxed), 1);
+        assert_eq!(vm.shed_overflow.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn stream_worker_counts_errors_per_request() {
+        // Pin the per-request `errors` meaning on the streaming path: an
+        // executor that rejects every admission errors each request once
+        // (the batch path's counterpart is `errors_propagate_to_every_
+        // request`, where a failed batch of 3 counts 3).
+        struct RejectAll;
+        impl StreamExecutor for RejectAll {
+            fn free_slots(&self, _v: &str) -> usize {
+                1
+            }
+            fn admit(&self, _v: &str, _input: &Tensor) -> Result<u64, String> {
+                Err("malformed input".into())
+            }
+            fn step(&self, _v: &str) -> Vec<(u64, Result<Tensor, String>)> {
+                Vec::new()
+            }
+            fn has_work(&self, _v: &str) -> bool {
+                false
+            }
+        }
+        let metrics = Arc::new(Metrics::new());
+        let w = StreamWorker::new("gen", Arc::new(RejectAll), metrics.clone(), 8, None);
+        let (reqs, rx) = stream_reqs(3);
+        for r in reqs {
+            w.submit(r);
+        }
+        for _ in 0..3 {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.output.unwrap_err(), "malformed input");
+        }
+        w.shutdown();
+        let vm = metrics.variant("gen");
+        assert_eq!(vm.errors.load(Ordering::Relaxed), 3, "one error per rejected request");
+        assert_eq!(vm.admitted.load(Ordering::Relaxed), 0);
+        assert_eq!(vm.inflight.load(Ordering::Relaxed), 0);
     }
 
     #[test]

@@ -99,6 +99,7 @@
 use crate::kvcache::{BlockPool, EvictionPolicy, KvCache, KvCacheConfig};
 use crate::model::gpt::argmax_row;
 use crate::model::{FpHook, Gpt, LinearHook};
+use crate::obs::{site_guard, EngineObs, KernelSite, TraceKind};
 use crate::tensor::XorShiftRng;
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -222,6 +223,19 @@ struct Slot {
     out: Vec<u32>,
     n_new: usize,
     phase: Phase,
+    /// Obs-epoch µs of admission — TTFT is measured from here. The same
+    /// reading stamps the `Admit` trace event, so trace-derived TTFT
+    /// equals the histogram sample exactly.
+    admit_us: u64,
+    /// Obs-epoch µs of the latest sampled token (TPOT = delta between
+    /// consecutive readings).
+    last_token_us: u64,
+    /// Finalized-block count at the last trace check (delta → one
+    /// `BlockFinalize` event).
+    prev_blocks: usize,
+    /// Evicted-row count at the last trace check (delta → one `Evict`
+    /// event).
+    prev_evicted: usize,
 }
 
 /// Long-lived decode engine with in-flight admission (module docs).
@@ -253,6 +267,10 @@ pub struct DecodeEngine {
     prefix_hits: u64,
     /// Prompt tokens whose prefill was skipped via prefix hits.
     prefix_tokens_reused: u64,
+    /// Engine observability: TTFT/TPOT histograms (always recorded — a
+    /// few relaxed atomics per token) plus the opt-in trace ring
+    /// (attached via [`DecodeEngine::with_obs`]).
+    obs: Arc<EngineObs>,
 }
 
 /// Default cap on streams fused into one GEMM (the `[generate]`
@@ -309,6 +327,7 @@ impl DecodeEngine {
             pool: BlockPool::new(),
             prefix_hits: 0,
             prefix_tokens_reused: 0,
+            obs: Arc::new(EngineObs::new()),
         }
     }
 
@@ -330,6 +349,31 @@ impl DecodeEngine {
         self.slots = (0..max_inflight).map(|_| None).collect();
         self.free = (0..max_inflight).rev().collect();
         self
+    }
+
+    /// Swap in pre-built engine observability — e.g.
+    /// [`EngineObs::with_trace`] to attach a trace ring (the TTFT/TPOT
+    /// histograms are recorded either way). Must be set on an idle
+    /// engine: slot timestamps are relative to the obs epoch.
+    pub fn set_obs(&mut self, obs: Arc<EngineObs>) {
+        assert!(
+            self.slots.iter().all(|s| s.is_none()) && self.retired.is_empty(),
+            "obs must be set on an idle engine"
+        );
+        self.obs = obs;
+    }
+
+    /// Builder form of [`DecodeEngine::set_obs`].
+    pub fn with_obs(mut self, obs: Arc<EngineObs>) -> Self {
+        self.set_obs(obs);
+        self
+    }
+
+    /// This engine's observability handle (share it with
+    /// [`crate::coordinator::VariantMetrics::link_engine_obs`] or drain
+    /// its trace ring).
+    pub fn obs(&self) -> &Arc<EngineObs> {
+        &self.obs
     }
 
     /// Hard cap on concurrently in-flight streams (the slot-array size).
@@ -458,6 +502,7 @@ impl DecodeEngine {
         };
         let id = self.next_stream;
         self.next_stream += 1;
+        let plen = req.prompt.len();
         let mut cache = KvCache::with_pool(self.gpt.cfg.n_layers, self.kv.clone(), self.pool.clone());
         let mut off = 0usize;
         if self.kv.prefix_cache {
@@ -473,8 +518,20 @@ impl DecodeEngine {
                 cache.seed_prefix(hit);
             }
         }
+        // One `now` reading stamps both the Admit trace event and the
+        // slot's TTFT base, so trace-derived TTFT (first DecodeStep −
+        // Admit) equals the histogram-recorded value exactly.
+        let now = self.obs.now_us();
+        self.obs.record_event(TraceKind::Admit, id, now, plen as u64);
+        if off > 0 {
+            self.obs.record_event(TraceKind::PrefixHit, id, now, off as u64);
+        }
         self.slots[i] = Some(Slot {
             id,
+            admit_us: now,
+            last_token_us: now,
+            prev_blocks: cache.n_blocks(),
+            prev_evicted: cache.evicted(),
             cache,
             sampler: Sampler::new(&self.sampling),
             out: Vec::with_capacity(req.n_new),
@@ -488,6 +545,7 @@ impl DecodeEngine {
     fn retire_slot(&mut self, i: usize, truncated: bool) {
         let s = self.slots[i].take().expect("retiring an occupied slot");
         self.free.push(i);
+        self.obs.record_event(TraceKind::Retire, s.id, self.obs.now_us(), s.out.len() as u64);
         self.retired.push_back((s.id, StreamResult { tokens: s.out, truncated }));
     }
 
@@ -521,6 +579,7 @@ impl DecodeEngine {
         // (2) Fused decode over the active decoding slots, in slot order.
         {
             let gpt = &self.gpt;
+            let obs = &self.obs;
             let mut active: Vec<&mut Slot> = self
                 .slots
                 .iter_mut()
@@ -532,11 +591,43 @@ impl DecodeEngine {
                     chunk.iter().map(|s| *s.out.last().expect("decoding slot has a token")).collect();
                 let mut caches: Vec<&mut KvCache> =
                     chunk.iter_mut().map(|s| &mut s.cache).collect();
-                let logits = gpt.decode_step_batch(hook, &tokens, &mut caches);
+                let logits = {
+                    let _site = site_guard(KernelSite::Decode);
+                    gpt.decode_step_batch(hook, &tokens, &mut caches)
+                };
                 drop(caches);
+                // One `now` per fused GEMM: every stream in the chunk got
+                // its token from the same step, and the shared reading is
+                // what keeps trace-derived TPOT equal to the histogram's.
+                let now = obs.now_us();
                 for (row, s) in chunk.iter_mut().enumerate() {
                     let t = s.sampler.next(logits.row(row));
                     s.out.push(t);
+                    obs.tpot_us.record(now.saturating_sub(s.last_token_us));
+                    s.last_token_us = now;
+                    obs.record_event(TraceKind::DecodeStep, s.id, now, s.out.len() as u64);
+                    if obs.trace_enabled() {
+                        let nb = s.cache.n_blocks();
+                        if nb > s.prev_blocks {
+                            obs.record_event(
+                                TraceKind::BlockFinalize,
+                                s.id,
+                                now,
+                                (nb - s.prev_blocks) as u64,
+                            );
+                        }
+                        s.prev_blocks = nb;
+                        let ev = s.cache.evicted();
+                        if ev > s.prev_evicted {
+                            obs.record_event(
+                                TraceKind::Evict,
+                                s.id,
+                                now,
+                                (ev - s.prev_evicted) as u64,
+                            );
+                        }
+                        s.prev_evicted = ev;
+                    }
                 }
             }
         }
@@ -561,6 +652,7 @@ impl DecodeEngine {
             let mut retire_now = false;
             {
                 let gpt = &self.gpt;
+                let obs = &self.obs;
                 let Some(s) = self.slots[i].as_mut() else { continue };
                 let mut finished = false;
                 let mut register: Option<Vec<u32>> = None;
@@ -568,12 +660,46 @@ impl DecodeEngine {
                     let take = (gpt.cfg.max_seq - s.cache.pos_next())
                         .min(chunk_cap)
                         .min(prompt.len() - *off);
-                    let logits = gpt.prefill(hook, &prompt[*off..*off + take], &mut s.cache);
+                    let logits = {
+                        let _site = site_guard(KernelSite::Prefill);
+                        gpt.prefill(hook, &prompt[*off..*off + take], &mut s.cache)
+                    };
                     *off += take;
+                    let now = obs.now_us();
+                    obs.record_event(TraceKind::PrefillChunk, s.id, now, *off as u64);
+                    if obs.trace_enabled() {
+                        let nb = s.cache.n_blocks();
+                        if nb > s.prev_blocks {
+                            obs.record_event(
+                                TraceKind::BlockFinalize,
+                                s.id,
+                                now,
+                                (nb - s.prev_blocks) as u64,
+                            );
+                        }
+                        s.prev_blocks = nb;
+                        let ev = s.cache.evicted();
+                        if ev > s.prev_evicted {
+                            obs.record_event(
+                                TraceKind::Evict,
+                                s.id,
+                                now,
+                                (ev - s.prev_evicted) as u64,
+                            );
+                        }
+                        s.prev_evicted = ev;
+                    }
                     if *off == prompt.len() {
                         finished = true;
                         if s.n_new > 0 {
                             s.out.push(s.sampler.next(logits.row(logits.rows() - 1)));
+                            // First generated token: TTFT against the
+                            // Admit timestamp, and a DecodeStep event
+                            // sharing this chunk's `now` so the trace
+                            // yields the identical TTFT.
+                            obs.ttft_us.record(now.saturating_sub(s.admit_us));
+                            s.last_token_us = now;
+                            obs.record_event(TraceKind::DecodeStep, s.id, now, s.out.len() as u64);
                         }
                         if self.kv.prefix_cache {
                             let aligned = (prompt.len() / self.kv.block) * self.kv.block;

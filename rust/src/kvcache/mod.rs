@@ -83,7 +83,7 @@ use std::sync::Arc;
 
 pub mod pool;
 
-pub use pool::{BlockData, BlockHandle, BlockPool, LayerHandles, PrefixEntry, PrefixHit};
+pub use pool::{BlockData, BlockHandle, BlockPool, LayerHandles, PoolStats, PrefixEntry, PrefixHit};
 
 /// When (and what) a stream evicts (module docs, DESIGN.md §13).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -749,6 +749,13 @@ impl KvCache {
     /// Tokens currently resident in each stream.
     pub fn resident_len(&self) -> usize {
         self.layers[0].k.resident_len()
+    }
+
+    /// Finalized (quantized) blocks per stream (lock-step; layer 0
+    /// authoritative). The decode engine's trace instrumentation diffs
+    /// this across steps to emit `BlockFinalize` events.
+    pub fn n_blocks(&self) -> usize {
+        self.layers[0].k.n_blocks()
     }
 
     /// Positional-embedding index for the next appended token: its rank

@@ -216,6 +216,20 @@ pub struct PrefixHit {
     pub layers: LayerHandles,
 }
 
+/// Consistent snapshot of a pool's diagnostics counters, taken under a
+/// single lock acquisition by [`BlockPool::stats`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Live (refcounted) blocks right now.
+    pub live_blocks: usize,
+    /// Sum of all slot refcounts (handles + prefix-entry references).
+    pub total_refs: usize,
+    /// Physical resident footprint in bits (each block counted once).
+    pub resident_bits: usize,
+    /// Registered prefix entries.
+    pub prefix_entries: usize,
+}
+
 struct PoolEntry {
     refs: usize,
     data: Arc<BlockData>,
@@ -300,6 +314,28 @@ impl BlockPool {
     /// Registered prefix entries (diagnostics).
     pub fn prefix_entries(&self) -> usize {
         self.lock().prefix.values().map(Vec::len).sum()
+    }
+
+    /// One-lock-acquisition snapshot of the diagnostics counters above,
+    /// for observability surfaces (the traced `generate` example prints
+    /// one; polling the individual accessors would take the pool lock
+    /// once per field and could interleave with mutations).
+    pub fn stats(&self) -> PoolStats {
+        let inner = self.lock();
+        let mut live_blocks = 0usize;
+        let mut total_refs = 0usize;
+        let mut resident_bits = 0usize;
+        for e in inner.slots.iter().flatten() {
+            live_blocks += 1;
+            total_refs += e.refs;
+            resident_bits += e.data.bits();
+        }
+        PoolStats {
+            live_blocks,
+            total_refs,
+            resident_bits,
+            prefix_entries: inner.prefix.values().map(Vec::len).sum(),
+        }
     }
 
     /// Install (or refresh) a prefix entry. Re-registering the same token
@@ -448,6 +484,24 @@ mod tests {
         pool.register_prefix(mk());
         assert_eq!(pool.prefix_entries(), 1, "same tokens replace, not duplicate");
         assert_eq!(h.refs(), 3, "stale entry's references were released");
+    }
+
+    #[test]
+    fn stats_snapshot_matches_individual_accessors() {
+        let pool = BlockPool::new();
+        let a = pool.insert(blk(4, 2), None);
+        let _b = a.clone();
+        pool.register_prefix(PrefixEntry::new(
+            vec![1, 2, 3, 4],
+            vec![(vec![a.clone()], vec![a.clone()])],
+        ));
+        let st = pool.stats();
+        assert_eq!(st.live_blocks, pool.live_blocks());
+        assert_eq!(st.total_refs, pool.total_refs());
+        assert_eq!(st.resident_bits, pool.resident_bits());
+        assert_eq!(st.prefix_entries, pool.prefix_entries());
+        assert_eq!(st.live_blocks, 1);
+        assert_eq!(st.total_refs, 4, "two handles + K ref + V ref");
     }
 
     #[test]

@@ -29,9 +29,11 @@
 //!   cache behind `Gpt::prefill`/`Gpt::decode_step` autoregressive
 //!   generation), [`decode`] (the step-synchronized batched decode engine
 //!   that fuses concurrent generation streams into one GEMM per linear
-//!   per step, with greedy or temperature/top-k sampling), and
+//!   per step, with greedy or temperature/top-k sampling),
 //!   [`coordinator`] (request router, dynamic batcher, worker pools,
-//!   metrics) so quantized variants can be *served*, not just evaluated.
+//!   metrics) so quantized variants can be *served*, not just evaluated,
+//!   and [`obs`] (log2 latency histograms with Prometheus/JSON
+//!   exposition, per-stream trace timelines, opt-in kernel profiling).
 //!
 //! Python/JAX/Pallas exists only on the compile path (`python/compile/`);
 //! the request path is pure Rust (+ PJRT when the `pjrt` feature is on).
@@ -60,6 +62,7 @@ pub mod eval;
 pub mod kvcache;
 pub mod linalg;
 pub mod model;
+pub mod obs;
 pub mod parallel;
 pub mod quant;
 pub mod report;

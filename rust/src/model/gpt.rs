@@ -304,7 +304,10 @@ impl Gpt {
         }
         let (hn, _) = self.final_norm.forward(&h);
         // Tied embedding head — the `head` site (kept FP, like the paper
-        // which only quantizes linears inside transformer blocks).
+        // which only quantizes linears inside transformer blocks). The
+        // kernel profiler attributes it to `logits` rather than the
+        // surrounding phase.
+        let _site = crate::obs::site_guard(crate::obs::KernelSite::Logits);
         crate::tensor::matmul_transb(&hn, &self.embed)
     }
 
@@ -344,6 +347,7 @@ impl Gpt {
             h = b.forward_decode(hook, l, &h, cache.layer_mut(l));
         }
         let (hn, _) = self.final_norm.forward(&h);
+        let _site = crate::obs::site_guard(crate::obs::KernelSite::Logits);
         crate::tensor::matmul_transb(&hn, &self.embed)
     }
 
@@ -402,6 +406,7 @@ impl Gpt {
             h = b.forward_decode_batch(hook, l, &h, &mut layers);
         }
         let (hn, _) = self.final_norm.forward(&h);
+        let _site = crate::obs::site_guard(crate::obs::KernelSite::Logits);
         crate::tensor::matmul_transb(&hn, &self.embed)
     }
 

@@ -1,0 +1,220 @@
+//! Fixed-bucket log2 histogram with a lock-free atomic record path.
+//!
+//! Latency distributions in the serving stack are heavy-tailed; the
+//! mean-only accounting the coordinator started with hides exactly the
+//! p95/p99 behavior production serving is judged on. `Histogram` trades
+//! value resolution for a record path that is three relaxed atomic adds
+//! (bucket, count, sum) — safe to call from every worker thread and from
+//! the decode hot loop with no locks and no allocation.
+//!
+//! Bucketing: value `v` lands in bucket `64 - v.leading_zeros()`, i.e.
+//! bucket 0 holds exactly `v == 0` and bucket `i ≥ 1` holds
+//! `v ∈ [2^(i-1), 2^i - 1]`. The upper bound reported for a bucket
+//! (`bucket_bound`) is therefore exact to within a factor of 2 — plenty
+//! for microsecond latency quantiles — and the layout is fixed (65
+//! buckets), which makes histograms mergeable by plain element-wise
+//! addition and the Prometheus exposition cumulative buckets trivial.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of log2 buckets: one for zero plus one per bit position of u64.
+pub const N_BUCKETS: usize = 65;
+
+/// Lock-free fixed-bucket log2 histogram (count, sum, 65 buckets).
+///
+/// All mutation goes through `&self` with relaxed atomics; readers see a
+/// possibly slightly-stale but never torn view, which is the right
+/// trade for metrics.
+pub struct Histogram {
+    buckets: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Bucket index for a value: 0 for 0, else `64 - leading_zeros`.
+    #[inline]
+    pub fn bucket_index(v: u64) -> usize {
+        (64 - v.leading_zeros()) as usize
+    }
+
+    /// Inclusive upper bound of bucket `i` (0, 1, 3, 7, …, `u64::MAX`).
+    pub fn bucket_bound(i: usize) -> u64 {
+        match i {
+            0 => 0,
+            64.. => u64::MAX,
+            _ => (1u64 << i) - 1,
+        }
+    }
+
+    /// Record one sample. Three relaxed atomic adds; no locks.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Mean of the recorded samples (exact — from the true sum, not the
+    /// bucket bounds). 0 when empty.
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 { 0.0 } else { self.sum() as f64 / n as f64 }
+    }
+
+    /// Snapshot of the per-bucket counts.
+    pub fn bucket_counts(&self) -> [u64; N_BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// Merge another histogram into this one by element-wise addition
+    /// (the fixed bucket layout makes this exact).
+    pub fn merge_from(&self, other: &Histogram) {
+        for i in 0..N_BUCKETS {
+            let c = other.buckets[i].load(Ordering::Relaxed);
+            if c != 0 {
+                self.buckets[i].fetch_add(c, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum(), Ordering::Relaxed);
+    }
+
+    /// Quantile estimate: the upper bound of the bucket containing the
+    /// `ceil(q·count)`-th sample (rank at least 1). Exact to within the
+    /// factor-of-2 bucket width; 0 when the histogram is empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * n as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for i in 0..N_BUCKETS {
+            cum += self.buckets[i].load(Ordering::Relaxed);
+            if cum >= target {
+                return Self::bucket_bound(i);
+            }
+        }
+        Self::bucket_bound(N_BUCKETS - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_edges() {
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 1);
+        assert_eq!(Histogram::bucket_index(2), 2);
+        assert_eq!(Histogram::bucket_index(3), 2);
+        assert_eq!(Histogram::bucket_index(4), 3);
+        assert_eq!(Histogram::bucket_index(7), 3);
+        assert_eq!(Histogram::bucket_index(8), 4);
+        assert_eq!(Histogram::bucket_index(u64::MAX), 64);
+    }
+
+    #[test]
+    fn bucket_bound_covers_its_range() {
+        // Every value maps into a bucket whose bound is >= the value and
+        // whose predecessor's bound is < the value.
+        for v in [0u64, 1, 2, 3, 4, 5, 63, 64, 65, 1000, 1 << 40, u64::MAX] {
+            let i = Histogram::bucket_index(v);
+            assert!(Histogram::bucket_bound(i) >= v, "bound({i}) < {v}");
+            if i > 0 {
+                assert!(Histogram::bucket_bound(i - 1) < v, "bound({}) >= {v}", i - 1);
+            }
+        }
+    }
+
+    #[test]
+    fn count_sum_mean_quantiles() {
+        let h = Histogram::new();
+        for v in [1u64, 2, 3, 100, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 1106);
+        assert!((h.mean() - 221.2).abs() < 1e-9);
+        // p50 is the 3rd sample (value 3, bucket [2,3] bound 3).
+        assert_eq!(h.quantile(0.5), 3);
+        // p99 rounds up to the 5th sample (1000, bucket [512,1023]).
+        assert_eq!(h.quantile(0.99), 1023);
+        // q = 0 clamps to rank 1.
+        assert_eq!(h.quantile(0.0), 1);
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(0.5), 0);
+    }
+
+    #[test]
+    fn merge_is_elementwise_addition() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for v in [1u64, 5, 9] {
+            a.record(v);
+        }
+        for v in [2u64, 5, 1 << 20] {
+            b.record(v);
+        }
+        a.merge_from(&b);
+        assert_eq!(a.count(), 6);
+        assert_eq!(a.sum(), 1 + 5 + 9 + 2 + 5 + (1 << 20));
+        let direct = Histogram::new();
+        for v in [1u64, 5, 9, 2, 5, 1 << 20] {
+            direct.record(v);
+        }
+        assert_eq!(a.bucket_counts(), direct.bucket_counts());
+    }
+
+    #[test]
+    fn concurrent_records_are_not_lost() {
+        let h = std::sync::Arc::new(Histogram::new());
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..500u64 {
+                        h.record(t * 1000 + i);
+                    }
+                })
+            })
+            .collect();
+        for j in handles {
+            j.join().unwrap();
+        }
+        assert_eq!(h.count(), 2000);
+        assert_eq!(h.bucket_counts().iter().sum::<u64>(), 2000);
+    }
+}

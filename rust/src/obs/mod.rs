@@ -1,0 +1,163 @@
+//! Structured observability for the serving stack.
+//!
+//! Three pieces, each usable alone:
+//!
+//! - [`Histogram`] — fixed-bucket log2 latency histogram with a
+//!   lock-free record path; `coordinator::metrics` uses it for queue
+//!   wait, admission wait, and service time, and [`EngineObs`] for TTFT
+//!   and time-per-output-token. Mergeable; p50/p90/p95/p99 via
+//!   [`Histogram::quantile`].
+//! - [`TraceRing`] — bounded overwrite-oldest ring of typed
+//!   [`TraceEvent`]s (`Admit`, `PrefillChunk`, `DecodeStep`,
+//!   `BlockFinalize`, `Evict`, `PrefixHit`, `Retire`, `Shed`) recorded
+//!   by the decode engine and streaming scheduler, drainable to JSONL
+//!   for per-stream timeline reconstruction. Enabled at runtime via the
+//!   `[observability]` TOML section.
+//! - kernel profiling ([`kernel_timer`]/[`kernel_done`] +
+//!   [`site_guard`]) — opt-in per-call-site GEMM timing aggregated by
+//!   (kernel, site) into elements-processed and effective GOP/s.
+//!
+//! [`EngineObs`] ties the engine-side pieces together: one per
+//! `DecodeEngine`, holding the TTFT/TPOT histograms (always on — a few
+//! relaxed atomics per token) and the optional trace ring. Both the
+//! trace timestamp and the histogram sample for a given step are taken
+//! from the *same* `now_us()` read, so a timeline reconstructed from
+//! the drained trace agrees exactly with the histogram-recorded
+//! latencies — `tests/obs.rs` pins that parity.
+
+mod hist;
+mod profile;
+mod trace;
+
+pub use hist::{Histogram, N_BUCKETS};
+pub use profile::{
+    current_site, kernel_done, kernel_profile_enabled, kernel_profile_snapshot, kernel_timer,
+    reset_kernel_profile, set_kernel_profile, site_guard, KernelKind, KernelSite, KernelStat,
+    SiteGuard,
+};
+pub use trace::{TraceEvent, TraceKind, TraceRing, SHED_STREAM};
+
+use std::time::Instant;
+
+/// Per-engine observability state: a monotonic epoch, the TTFT and
+/// time-per-output-token histograms (always recorded), and the optional
+/// trace ring (the opt-in cost).
+///
+/// Shared as `Arc<EngineObs>` between the owning `DecodeEngine`, the
+/// coordinator's `VariantMetrics` (which links it so `Metrics::
+/// prometheus()`/`to_json()` can surface TTFT/TPOT per variant), and
+/// drain callers.
+pub struct EngineObs {
+    epoch: Instant,
+    pub ttft_us: Histogram,
+    pub tpot_us: Histogram,
+    trace: Option<TraceRing>,
+}
+
+impl EngineObs {
+    /// Histograms only — no ring. The default for every engine.
+    pub fn new() -> Self {
+        Self::build(None)
+    }
+
+    /// Histograms plus a trace ring retaining `capacity` events.
+    pub fn with_trace(capacity: usize) -> Self {
+        Self::build(Some(TraceRing::new(capacity)))
+    }
+
+    fn build(trace: Option<TraceRing>) -> Self {
+        Self { epoch: Instant::now(), ttft_us: Histogram::new(), tpot_us: Histogram::new(), trace }
+    }
+
+    /// Microseconds since this engine's epoch (monotonic). Read this
+    /// once per instrumented step and feed the same value to both the
+    /// trace event and the histogram sample — that shared read is what
+    /// makes trace-derived latencies equal histogram-recorded ones.
+    #[inline]
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    #[inline]
+    pub fn trace_enabled(&self) -> bool {
+        self.trace.is_some()
+    }
+
+    pub fn trace_capacity(&self) -> usize {
+        self.trace.as_ref().map(TraceRing::capacity).unwrap_or(0)
+    }
+
+    /// Cumulative events overwritten before being drained (0 when no ring).
+    pub fn trace_dropped(&self) -> u64 {
+        self.trace.as_ref().map(TraceRing::dropped).unwrap_or(0)
+    }
+
+    /// Record a trace event; no-op (one `Option` check) when tracing is
+    /// off.
+    #[inline]
+    pub fn record_event(&self, kind: TraceKind, stream: u64, t_us: u64, pos: u64) {
+        if let Some(ring) = &self.trace {
+            ring.record(TraceEvent { kind, stream, t_us, pos });
+        }
+    }
+
+    /// Drain the retained events oldest-first (empty when no ring).
+    pub fn drain_events(&self) -> Vec<TraceEvent> {
+        self.trace.as_ref().map(TraceRing::drain).unwrap_or_default()
+    }
+
+    /// Drain to JSONL, one `\n`-terminated object per event, stamped
+    /// with the variant label. Empty string when no ring or no events.
+    pub fn drain_jsonl(&self, variant: &str) -> String {
+        let events = self.drain_events();
+        let mut out = String::with_capacity(events.len() * 96);
+        for ev in &events {
+            out.push_str(&ev.json(variant));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_obs_without_ring_is_inert() {
+        let o = EngineObs::new();
+        assert!(!o.trace_enabled());
+        o.record_event(TraceKind::Admit, 0, o.now_us(), 4);
+        assert!(o.drain_events().is_empty());
+        assert_eq!(o.drain_jsonl("g"), "");
+        assert_eq!(o.trace_capacity(), 0);
+        assert_eq!(o.trace_dropped(), 0);
+    }
+
+    #[test]
+    fn engine_obs_ring_round_trips_jsonl() {
+        let o = EngineObs::with_trace(16);
+        assert!(o.trace_enabled());
+        let t0 = o.now_us();
+        o.record_event(TraceKind::Admit, 1, t0, 8);
+        o.record_event(TraceKind::DecodeStep, 1, t0 + 5, 1);
+        o.record_event(TraceKind::Retire, 1, t0 + 9, 1);
+        let jsonl = o.drain_jsonl("tiny");
+        let parsed: Vec<TraceEvent> =
+            jsonl.lines().map(|l| TraceEvent::from_json(l).expect("parse")).collect();
+        assert_eq!(parsed.len(), 3);
+        assert_eq!(parsed[0].kind, TraceKind::Admit);
+        assert_eq!(parsed[2].kind, TraceKind::Retire);
+        assert!(jsonl.lines().all(|l| l.contains("\"variant\":\"tiny\"")));
+        // Drained: the ring is empty for the next window.
+        assert!(o.drain_events().is_empty());
+    }
+
+    #[test]
+    fn now_us_is_monotone() {
+        let o = EngineObs::new();
+        let a = o.now_us();
+        let b = o.now_us();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,305 @@
+//! Structured trace events and the bounded per-engine ring buffer.
+//!
+//! A `TraceRing` records typed, fixed-size `TraceEvent`s (stream id,
+//! monotonic microsecond timestamp, token position) from the decode
+//! engine and the streaming scheduler. The ring is bounded and
+//! overwrite-oldest: recording never blocks on a consumer and never
+//! allocates after construction (the buffer is reserved up front and a
+//! record is a plain slot write), so a stalled or absent drainer costs a
+//! `dropped` counter, not memory. `drain` hands back the retained events
+//! oldest-first and resets the ring; serialization to JSONL is done at
+//! drain time, off the record path.
+
+use std::sync::Mutex;
+
+/// Sentinel stream id for events not tied to a seated stream (a `Shed`
+/// happens before the request ever gets a `StreamId`). Serialized as
+/// JSON `null`.
+pub const SHED_STREAM: u64 = u64::MAX;
+
+/// Typed trace event kinds covering the life of a stream: admission,
+/// chunked prefill, fused decode steps, KV block finalization/eviction,
+/// pooled-prefix hits, retirement, and scheduler sheds.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum TraceKind {
+    Admit,
+    PrefillChunk,
+    DecodeStep,
+    BlockFinalize,
+    Evict,
+    PrefixHit,
+    Retire,
+    Shed,
+}
+
+impl TraceKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TraceKind::Admit => "Admit",
+            TraceKind::PrefillChunk => "PrefillChunk",
+            TraceKind::DecodeStep => "DecodeStep",
+            TraceKind::BlockFinalize => "BlockFinalize",
+            TraceKind::Evict => "Evict",
+            TraceKind::PrefixHit => "PrefixHit",
+            TraceKind::Retire => "Retire",
+            TraceKind::Shed => "Shed",
+        }
+    }
+
+    /// Inverse of [`TraceKind::as_str`].
+    pub fn parse(s: &str) -> Option<TraceKind> {
+        Some(match s {
+            "Admit" => TraceKind::Admit,
+            "PrefillChunk" => TraceKind::PrefillChunk,
+            "DecodeStep" => TraceKind::DecodeStep,
+            "BlockFinalize" => TraceKind::BlockFinalize,
+            "Evict" => TraceKind::Evict,
+            "PrefixHit" => TraceKind::PrefixHit,
+            "Retire" => TraceKind::Retire,
+            "Shed" => TraceKind::Shed,
+            _ => return None,
+        })
+    }
+}
+
+/// One fixed-size trace record. `t_us` is microseconds since the owning
+/// engine's epoch (monotonic `Instant`); `pos` is kind-dependent — the
+/// prompt length for `Admit`, tokens prefilled so far for
+/// `PrefillChunk`, generated-token count for `DecodeStep`/`Retire`, the
+/// reused span for `PrefixHit`, and cumulative block/row totals for
+/// `BlockFinalize`/`Evict`.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub kind: TraceKind,
+    pub stream: u64,
+    pub t_us: u64,
+    pub pos: u64,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Scan a flat JSON object for `"key":` and return the raw value text.
+fn raw_field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    let end = rest.find([',', '}'])?;
+    Some(rest[..end].trim())
+}
+
+impl TraceEvent {
+    /// One JSONL line for this event. The variant is stamped in at drain
+    /// time (the ring is per-engine, so it is constant per drain).
+    pub fn json(&self, variant: &str) -> String {
+        let mut line = String::with_capacity(96);
+        line.push_str("{\"event\":\"");
+        line.push_str(self.kind.as_str());
+        line.push_str("\",\"stream\":");
+        if self.stream == SHED_STREAM {
+            line.push_str("null");
+        } else {
+            line.push_str(&self.stream.to_string());
+        }
+        line.push_str(",\"t_us\":");
+        line.push_str(&self.t_us.to_string());
+        line.push_str(",\"pos\":");
+        line.push_str(&self.pos.to_string());
+        line.push_str(",\"variant\":\"");
+        line.push_str(&json_escape(variant));
+        line.push_str("\"}");
+        line
+    }
+
+    /// Parse one line produced by [`TraceEvent::json`] (the variant
+    /// label is not part of the event). Returns `None` on anything
+    /// malformed — the round-trip test pins `json` → `from_json`
+    /// identity.
+    pub fn from_json(line: &str) -> Option<TraceEvent> {
+        let ev = raw_field(line, "event")?;
+        let kind = TraceKind::parse(ev.strip_prefix('"')?.strip_suffix('"')?)?;
+        let stream = match raw_field(line, "stream")? {
+            "null" => SHED_STREAM,
+            s => s.parse().ok()?,
+        };
+        let t_us: u64 = raw_field(line, "t_us")?.parse().ok()?;
+        let pos: u64 = raw_field(line, "pos")?.parse().ok()?;
+        Some(TraceEvent { kind, stream, t_us, pos })
+    }
+}
+
+struct RingInner {
+    buf: Vec<TraceEvent>,
+    /// Overwrite cursor == index of the oldest event once the ring is full.
+    head: usize,
+    /// Cumulative count of events overwritten before being drained.
+    dropped: u64,
+}
+
+/// Bounded overwrite-oldest trace ring. One per engine; shared behind
+/// `Arc<EngineObs>` so the scheduler thread and drain calls can reach it
+/// while the engine records. A record is one short mutex-protected slot
+/// write — no allocation (capacity is reserved up front), no consumer
+/// coordination.
+pub struct TraceRing {
+    inner: Mutex<RingInner>,
+    cap: usize,
+}
+
+impl TraceRing {
+    /// Create a ring retaining at most `capacity` events (clamped to ≥ 1).
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(1);
+        Self {
+            inner: Mutex::new(RingInner { buf: Vec::with_capacity(cap), head: 0, dropped: 0 }),
+            cap,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Record one event, overwriting the oldest retained event when full.
+    pub fn record(&self, ev: TraceEvent) {
+        let mut g = self.inner.lock().unwrap();
+        if g.buf.len() < self.cap {
+            g.buf.push(ev);
+        } else {
+            let h = g.head;
+            g.buf[h] = ev;
+            g.head = (h + 1) % self.cap;
+            g.dropped += 1;
+        }
+    }
+
+    /// Number of events currently retained.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Cumulative events overwritten before being drained (never reset).
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    /// Take all retained events oldest-first and reset the ring (the
+    /// `dropped` total is preserved across drains).
+    pub fn drain(&self) -> Vec<TraceEvent> {
+        let mut g = self.inner.lock().unwrap();
+        let head = g.head;
+        let mut out = Vec::with_capacity(g.buf.len());
+        out.extend_from_slice(&g.buf[head..]);
+        out.extend_from_slice(&g.buf[..head]);
+        g.buf.clear();
+        g.head = 0;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: TraceKind, stream: u64, t_us: u64, pos: u64) -> TraceEvent {
+        TraceEvent { kind, stream, t_us, pos }
+    }
+
+    #[test]
+    fn ring_keeps_order_below_capacity() {
+        let r = TraceRing::new(8);
+        for i in 0..5 {
+            r.record(ev(TraceKind::DecodeStep, 1, i, i));
+        }
+        let got = r.drain();
+        assert_eq!(got.len(), 5);
+        assert!(got.windows(2).all(|w| w[0].t_us < w[1].t_us));
+        assert_eq!(r.dropped(), 0);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let r = TraceRing::new(4);
+        for i in 0..6 {
+            r.record(ev(TraceKind::DecodeStep, 1, i, i));
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 2);
+        let got = r.drain();
+        // The two oldest (t_us 0, 1) were overwritten.
+        assert_eq!(got.iter().map(|e| e.t_us).collect::<Vec<_>>(), vec![2, 3, 4, 5]);
+        // dropped is cumulative across drains.
+        assert_eq!(r.dropped(), 2);
+    }
+
+    #[test]
+    fn drain_resets_for_reuse() {
+        let r = TraceRing::new(2);
+        for i in 0..3 {
+            r.record(ev(TraceKind::Admit, 0, i, 0));
+        }
+        r.drain();
+        r.record(ev(TraceKind::Retire, 0, 9, 0));
+        let got = r.drain();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].t_us, 9);
+    }
+
+    #[test]
+    fn json_round_trips_every_kind() {
+        let kinds = [
+            TraceKind::Admit,
+            TraceKind::PrefillChunk,
+            TraceKind::DecodeStep,
+            TraceKind::BlockFinalize,
+            TraceKind::Evict,
+            TraceKind::PrefixHit,
+            TraceKind::Retire,
+            TraceKind::Shed,
+        ];
+        for (i, k) in kinds.into_iter().enumerate() {
+            let e = ev(k, i as u64, 1000 + i as u64, 7 * i as u64);
+            let line = e.json("gen");
+            assert_eq!(TraceEvent::from_json(&line), Some(e), "line: {line}");
+        }
+    }
+
+    #[test]
+    fn shed_sentinel_serializes_as_null() {
+        let e = ev(TraceKind::Shed, SHED_STREAM, 42, 0);
+        let line = e.json("g");
+        assert!(line.contains("\"stream\":null"), "line: {line}");
+        assert_eq!(TraceEvent::from_json(&line), Some(e));
+    }
+
+    #[test]
+    fn variant_label_is_escaped() {
+        let e = ev(TraceKind::Admit, 0, 1, 2);
+        let line = e.json("we\"ird\\name");
+        assert!(line.contains("we\\\"ird\\\\name"), "line: {line}");
+        // Escaping must not break the event fields.
+        assert_eq!(TraceEvent::from_json(&line), Some(e));
+    }
+
+    #[test]
+    fn from_json_rejects_garbage() {
+        assert_eq!(TraceEvent::from_json(""), None);
+        assert_eq!(TraceEvent::from_json("{\"event\":\"Nope\",\"stream\":0,\"t_us\":0,\"pos\":0}"), None);
+        assert_eq!(TraceEvent::from_json("{\"event\":\"Admit\",\"stream\":x,\"t_us\":0,\"pos\":0}"), None);
+    }
+}

@@ -30,10 +30,12 @@
 //! so served responses never depend on `STAMP_THREADS`.
 
 use crate::baselines::{PreparedWeights, QuantHook, QuantStack};
+use crate::config::ObsSpec;
 use crate::coordinator::{Executor, StreamExecutor};
 use crate::decode::{DecodeEngine, GenRequest, Sampling};
 use crate::kvcache::KvCacheConfig;
 use crate::model::{Dit, FpHook, Gpt, LinearHook};
+use crate::obs::EngineObs;
 use crate::tensor::Tensor;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -194,11 +196,14 @@ fn parse_tokens(vals: &[f32], vocab: usize) -> Result<Vec<u32>, String> {
 #[derive(Default)]
 pub struct NativeExecutor {
     variants: HashMap<String, Variant>,
+    /// `[observability]` settings applied to every generate variant's
+    /// engine (present and future); `None` = histograms only.
+    obs: Option<ObsSpec>,
 }
 
 impl NativeExecutor {
     pub fn new() -> Self {
-        NativeExecutor { variants: HashMap::new() }
+        NativeExecutor { variants: HashMap::new(), obs: None }
     }
 
     fn insert(&mut self, name: &str, model: NativeModel, stack: Option<QuantStack>) {
@@ -208,15 +213,59 @@ impl NativeExecutor {
         // the variant, so streams can join it while others are mid-decode.
         let engine = match &model {
             NativeModel::GptGenerate { model: g, kv, sampling, decode_batch, max_inflight, .. } => {
-                Some(Mutex::new(
-                    DecodeEngine::new(g.clone(), kv.clone(), sampling.clone())
-                        .with_decode_batch(*decode_batch)
-                        .with_max_inflight(*max_inflight),
-                ))
+                let mut e = DecodeEngine::new(g.clone(), kv.clone(), sampling.clone())
+                    .with_decode_batch(*decode_batch)
+                    .with_max_inflight(*max_inflight);
+                if let Some(o) = &self.obs {
+                    if o.trace_enabled {
+                        e = e.with_obs(Arc::new(EngineObs::with_trace(o.trace_capacity)));
+                    }
+                }
+                Some(Mutex::new(e))
             }
             _ => None,
         };
         self.variants.insert(name.to_string(), Variant { model, stack, prepared, engine });
+    }
+
+    /// Apply the `[observability]` config section (builder-style):
+    /// enables process-wide kernel profiling when `kernel_profile` is
+    /// set, and — when `trace.enabled` — gives every generate variant's
+    /// engine a [`crate::obs::TraceRing`] of `trace.capacity` events
+    /// (variants registered before *and* after this call). Engines must
+    /// be idle, which they are during builder-style construction.
+    pub fn with_observability(mut self, obs: &ObsSpec) -> Self {
+        crate::obs::set_kernel_profile(obs.kernel_profile);
+        if obs.trace_enabled {
+            for v in self.variants.values() {
+                if let Some(engine) = &v.engine {
+                    let mut e = engine.lock().unwrap();
+                    if !e.obs().trace_enabled() {
+                        e.set_obs(Arc::new(EngineObs::with_trace(obs.trace_capacity)));
+                    }
+                }
+            }
+        }
+        self.obs = Some(obs.clone());
+        self
+    }
+
+    /// The [`EngineObs`] of a generate variant's resident engine (`None`
+    /// for unknown or forward-only variants). This is the shared handle
+    /// the coordinator links into its per-variant metrics and that
+    /// [`NativeExecutor::drain_trace`] drains.
+    pub fn engine_obs(&self, variant: &str) -> Option<Arc<EngineObs>> {
+        let engine = self.variants.get(variant)?.engine.as_ref()?;
+        let obs = engine.lock().unwrap().obs().clone();
+        Some(obs)
+    }
+
+    /// Drain a generate variant's trace ring to JSONL (empty when the
+    /// variant is unknown, does not generate, or tracing is disabled).
+    /// Events drain oldest-first and each drain clears the ring, so
+    /// successive calls return disjoint windows of the timeline.
+    pub fn drain_trace(&self, variant: &str) -> String {
+        self.engine_obs(variant).map(|o| o.drain_jsonl(variant)).unwrap_or_default()
     }
 
     /// Register a GPT variant (builder-style).
@@ -424,6 +473,10 @@ impl Executor for NativeExecutor {
         // never re-quantize a weight.
         with_hook(v, |hook| self.run_batch(v, hook, inputs))
     }
+
+    fn obs(&self, variant: &str) -> Option<Arc<EngineObs>> {
+        self.engine_obs(variant)
+    }
 }
 
 /// The continuous-batching face of the executor (PR 6): a
@@ -483,6 +536,14 @@ impl StreamExecutor for NativeExecutor {
             .get(variant)
             .and_then(|v| v.engine.as_ref())
             .map_or(0, |e| e.lock().unwrap().prefix_hits())
+    }
+
+    fn obs(&self, variant: &str) -> Option<Arc<EngineObs>> {
+        self.engine_obs(variant)
+    }
+
+    fn drain_trace(&self, variant: &str) -> String {
+        NativeExecutor::drain_trace(self, variant)
     }
 }
 
@@ -982,6 +1043,53 @@ mod tests {
         for (j, &w) in want.iter().enumerate() {
             assert_eq!(got.at(0, j), w as f32, "token {j}");
         }
+    }
+
+    #[test]
+    fn with_observability_traces_generate_variants_and_drains_jsonl() {
+        use crate::obs::TraceKind;
+        let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 51));
+        let obs_cfg = ObsSpec {
+            trace_enabled: true,
+            trace_capacity: 512,
+            trace_sink: "memory".into(),
+            kernel_profile: false,
+        };
+        // `with_observability` after registration: applies retroactively.
+        let exec = NativeExecutor::new()
+            .with_gpt_generate("gen", gpt, None, crate::kvcache::KvCacheConfig::fp32(), 32)
+            .with_observability(&obs_cfg);
+        let input = Tensor::from_vec(&[1, 3], vec![5.0, 1.0, 2.0]);
+        let _ = exec.execute("gen", &[&input]).unwrap();
+        let jsonl = NativeExecutor::drain_trace(&exec, "gen");
+        let events: Vec<crate::obs::TraceEvent> = jsonl
+            .lines()
+            .map(|l| crate::obs::TraceEvent::from_json(l).expect("parse"))
+            .collect();
+        assert!(!events.is_empty());
+        assert_eq!(events[0].kind, TraceKind::Admit);
+        assert_eq!(events.last().unwrap().kind, TraceKind::Retire);
+        // One DecodeStep per generated token (first is sampled at prefill
+        // completion), TTFT once, TPOT for every token after the first.
+        let steps = events.iter().filter(|e| e.kind == TraceKind::DecodeStep).count();
+        assert_eq!(steps, 5);
+        let o = exec.engine_obs("gen").unwrap();
+        assert_eq!(o.ttft_us.count(), 1);
+        assert_eq!(o.tpot_us.count(), 4);
+        // Drains are destructive windows.
+        assert_eq!(NativeExecutor::drain_trace(&exec, "gen"), "");
+        // Unknown / forward-only variants expose nothing.
+        assert!(exec.engine_obs("nope").is_none());
+        assert_eq!(NativeExecutor::drain_trace(&exec, "nope"), "");
+        // Registration *after* with_observability also gets a ring.
+        let exec2 = NativeExecutor::new().with_observability(&obs_cfg).with_gpt_generate(
+            "late",
+            Arc::new(Gpt::new(GptConfig::tiny(), 51)),
+            None,
+            crate::kvcache::KvCacheConfig::fp32(),
+            32,
+        );
+        assert!(exec2.engine_obs("late").unwrap().trace_enabled());
     }
 
     #[test]

@@ -53,6 +53,7 @@ pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
     let (k2, n) = (b.rows(), b.cols());
     assert_eq!(k, k2, "matmul inner-dim mismatch: {}x{} @ {}x{}", m, k, k2, n);
     assert_eq!(out.shape(), &[m, n]);
+    let t0 = crate::obs::kernel_timer();
 
     let ad = a.data();
     let bd = b.data();
@@ -63,6 +64,7 @@ pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
     // machinery entirely.
     if gemm_small_m_serial(m, k, n) {
         matmul_rows(ad, bd, od, 0, m, k, n);
+        crate::obs::kernel_done(t0, crate::obs::KernelKind::Matmul, gemm_ops(m, n, k));
         return;
     }
     // Gate on total multiply-adds (m·n·k), not output size: a product with
@@ -72,6 +74,13 @@ pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
     parallel::for_row_chunks(od, m, n, m.saturating_mul(n).saturating_mul(k), |chunk, r0, r1| {
         matmul_rows(ad, bd, chunk, r0, r1, k, n)
     });
+    crate::obs::kernel_done(t0, crate::obs::KernelKind::Matmul, gemm_ops(m, n, k));
+}
+
+/// Multiply-accumulate count of an `m×k @ k×n` product, for the kernel
+/// profiler (2 ops per FMA by GEMM convention).
+pub(super) fn gemm_ops(m: usize, n: usize, k: usize) -> u64 {
+    2 * (m as u64) * (n as u64) * (k as u64)
 }
 
 /// The serial k-blocked kernel over output rows `[r0, r1)`; `ochunk` is the
@@ -105,17 +114,20 @@ pub fn matmul_transb(a: &Tensor, b: &Tensor) -> Tensor {
     let (m, k) = (a.rows(), a.cols());
     let (n, k2) = (b.rows(), b.cols());
     assert_eq!(k, k2, "matmul_transb inner-dim mismatch");
+    let t0 = crate::obs::kernel_timer();
     let mut out = Tensor::zeros(&[m, n]);
     let ad = a.data();
     let bd = b.data();
     let od = out.data_mut();
     if gemm_small_m_serial(m, k, n) {
         transb_rows(ad, bd, od, 0, m, k, n);
+        crate::obs::kernel_done(t0, crate::obs::KernelKind::MatmulTransb, gemm_ops(m, n, k));
         return out;
     }
     parallel::for_row_chunks(od, m, n, m.saturating_mul(n).saturating_mul(k), |chunk, r0, r1| {
         transb_rows(ad, bd, chunk, r0, r1, k, n)
     });
+    crate::obs::kernel_done(t0, crate::obs::KernelKind::MatmulTransb, gemm_ops(m, n, k));
     out
 }
 

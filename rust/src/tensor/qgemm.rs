@@ -87,6 +87,7 @@ pub fn qgemm(a: &QTensor, w: &QTensor) -> Tensor {
     if m == 0 || n == 0 || k == 0 {
         return out;
     }
+    let t0 = crate::obs::kernel_timer();
 
     let segs = segments(k, a.group_len(), w.group_len());
     let nseg = segs.len();
@@ -148,6 +149,7 @@ pub fn qgemm(a: &QTensor, w: &QTensor) -> Tensor {
     } else {
         parallel::for_row_chunks(od, m, n, m.saturating_mul(n).saturating_mul(k), row_kernel);
     }
+    crate::obs::kernel_done(t0, crate::obs::KernelKind::Qgemm, super::matmul::gemm_ops(m, n, k));
     out
 }
 

@@ -1,0 +1,266 @@
+//! Observability integration suite (PR 8).
+//!
+//! Pins the tentpole contracts end to end:
+//!
+//! - **Trace ↔ histogram parity**: TTFT and per-token latencies
+//!   reconstructed from a drained trace equal the engine's histogram
+//!   contents *exactly* (same bucket counts, same sums) — both sides of
+//!   each sample come from one shared `now_us()` read.
+//! - **JSONL round-trip + timeline shape**: every drained line parses
+//!   back via `TraceEvent::from_json`, and each stream's events run
+//!   `Admit` → … → `Retire` with one `DecodeStep` per generated token
+//!   and a monotone per-stream clock.
+//! - **Bounded ring**: a tiny ring overwrites oldest, counts drops, and
+//!   retains the newest window.
+//! - **Expositions**: the streaming server path surfaces per-variant
+//!   TTFT/TPOT quantiles in both `Metrics::prometheus()` and
+//!   `Metrics::to_json()`, and `Server::drain_trace` hands back
+//!   parseable JSONL whose derived TTFT matches the exposed histogram.
+//! - **Kernel profiling**: enabled profiling attributes GEMMs to the
+//!   prefill/decode/logits sites.
+
+use stamp::decode::{DecodeEngine, GenRequest, Sampling};
+use stamp::kvcache::KvCacheConfig;
+use stamp::model::{Gpt, GptConfig};
+use stamp::obs::{EngineObs, Histogram, TraceEvent, TraceKind};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn traced_engine(seed: u64, capacity: usize) -> DecodeEngine {
+    let gpt = Arc::new(Gpt::new(GptConfig::tiny(), seed));
+    DecodeEngine::new(gpt, KvCacheConfig::fp32(), Sampling::Greedy)
+        .with_obs(Arc::new(EngineObs::with_trace(capacity)))
+}
+
+/// Five ragged greedy streams; every budget ≥ 2 so each stream records
+/// at least one TPOT sample.
+fn workload() -> Vec<GenRequest> {
+    (0..5)
+        .map(|i| GenRequest {
+            prompt: (0..3 + 2 * i).map(|j| ((i * 13 + j * 7 + 3) % 70) as u32).collect(),
+            n_new: 4 + 3 * i,
+        })
+        .collect()
+}
+
+/// Rebuild TTFT/TPOT histograms from a drained trace: TTFT is the first
+/// `DecodeStep` minus the stream's `Admit`, TPOT the deltas between
+/// consecutive `DecodeStep`s of one stream. This is the consumer-side
+/// timeline reconstruction the trace format promises.
+fn derive_latencies(events: &[TraceEvent]) -> (Histogram, Histogram) {
+    let mut admit: HashMap<u64, u64> = HashMap::new();
+    let mut steps: HashMap<u64, Vec<u64>> = HashMap::new();
+    for ev in events {
+        match ev.kind {
+            TraceKind::Admit => {
+                admit.insert(ev.stream, ev.t_us);
+            }
+            TraceKind::DecodeStep => steps.entry(ev.stream).or_default().push(ev.t_us),
+            _ => {}
+        }
+    }
+    let ttft = Histogram::new();
+    let tpot = Histogram::new();
+    for (stream, ts) in &steps {
+        ttft.record(ts[0] - admit[stream]);
+        for w in ts.windows(2) {
+            tpot.record(w[1] - w[0]);
+        }
+    }
+    (ttft, tpot)
+}
+
+/// Tentpole acceptance: trace-derived TTFT/TPOT equal the
+/// histogram-recorded distributions exactly — not approximately — down
+/// to identical bucket counts and sums.
+#[test]
+fn trace_derived_ttft_and_tpot_match_the_histograms_exactly() {
+    let mut engine = traced_engine(71, 4096);
+    let reqs = workload();
+    let results = engine.run_fp(&reqs).expect("run");
+    assert_eq!(results.len(), reqs.len());
+    let obs = engine.obs().clone();
+    assert_eq!(obs.trace_dropped(), 0, "the ring must cover the whole workload");
+    let events = obs.drain_events();
+
+    let (ttft, tpot) = derive_latencies(&events);
+    let n_new_total: usize = reqs.iter().map(|r| r.n_new).sum();
+    assert_eq!(ttft.count(), reqs.len() as u64, "one TTFT sample per stream");
+    assert_eq!(tpot.count(), (n_new_total - reqs.len()) as u64, "n_new-1 TPOT samples per stream");
+
+    assert_eq!(ttft.count(), obs.ttft_us.count());
+    assert_eq!(ttft.sum(), obs.ttft_us.sum());
+    assert_eq!(ttft.bucket_counts(), obs.ttft_us.bucket_counts());
+    assert_eq!(tpot.count(), obs.tpot_us.count());
+    assert_eq!(tpot.sum(), obs.tpot_us.sum());
+    assert_eq!(tpot.bucket_counts(), obs.tpot_us.bucket_counts());
+}
+
+#[test]
+fn jsonl_round_trips_and_each_stream_runs_admit_to_retire() {
+    let mut engine = traced_engine(73, 4096);
+    let reqs = workload();
+    engine.run_fp(&reqs).expect("run");
+    let jsonl = engine.obs().drain_jsonl("tiny-fp");
+    assert!(jsonl.lines().all(|l| l.contains("\"variant\":\"tiny-fp\"")), "{jsonl}");
+    let events: Vec<TraceEvent> = jsonl
+        .lines()
+        .map(|l| TraceEvent::from_json(l).expect("every drained line parses"))
+        .collect();
+
+    // Group per stream, preserving drain (chronological) order. run_fp
+    // admits in request order on an empty engine, so stream i == req i.
+    let mut per: HashMap<u64, Vec<TraceEvent>> = HashMap::new();
+    for ev in &events {
+        per.entry(ev.stream).or_default().push(*ev);
+    }
+    assert_eq!(per.len(), reqs.len());
+    for (stream, evs) in &per {
+        let req = &reqs[*stream as usize];
+        let first = evs.first().expect("non-empty");
+        let last = evs.last().expect("non-empty");
+        assert_eq!(first.kind, TraceKind::Admit, "stream {stream}");
+        assert_eq!(first.pos, req.prompt.len() as u64, "Admit pos is the prompt length");
+        assert_eq!(last.kind, TraceKind::Retire, "stream {stream}");
+        assert_eq!(last.pos, req.n_new as u64, "Retire pos is the generated-token count");
+        assert!(
+            evs.windows(2).all(|w| w[0].t_us <= w[1].t_us),
+            "stream {stream}: per-stream timeline must be monotone"
+        );
+        let decode_steps = evs.iter().filter(|e| e.kind == TraceKind::DecodeStep).count();
+        assert_eq!(decode_steps, req.n_new, "one DecodeStep per generated token");
+        let prefills = evs.iter().filter(|e| e.kind == TraceKind::PrefillChunk).count();
+        assert!(prefills >= 1, "stream {stream}: at least one prefill chunk");
+    }
+    // Drains are destructive windows: a second drain is empty.
+    assert!(engine.obs().drain_events().is_empty());
+}
+
+#[test]
+fn bounded_ring_overwrites_oldest_and_retains_the_newest_window() {
+    let mut engine = traced_engine(75, 8);
+    engine.run_fp(&workload()).expect("run");
+    let obs = engine.obs().clone();
+    assert!(obs.trace_dropped() > 0, "a tiny ring must have overwritten events");
+    let events = obs.drain_events();
+    assert!(events.len() <= 8, "drain returns at most capacity events");
+    // Overwrite-oldest keeps the newest suffix, which ends with the
+    // final stream's Retire.
+    assert_eq!(events.last().expect("non-empty").kind, TraceKind::Retire);
+}
+
+/// End to end through `Server::start_streaming`: both machine-readable
+/// expositions carry per-variant TTFT/TPOT quantiles, the server drains
+/// parseable JSONL, and the drained trace agrees with the exposed
+/// histograms.
+#[test]
+fn streaming_server_exposes_quantiles_and_drains_trace() {
+    use stamp::config::{ObsSpec, ServeSpec};
+    use stamp::coordinator::Server;
+    use stamp::runtime::NativeExecutor;
+    use stamp::tensor::Tensor;
+    use std::sync::atomic::Ordering;
+    use std::time::Duration;
+
+    let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 77));
+    let obs_cfg = ObsSpec {
+        trace_enabled: true,
+        trace_capacity: 4096,
+        trace_sink: "memory".into(),
+        kernel_profile: false,
+    };
+    let exec = Arc::new(
+        NativeExecutor::new()
+            .with_gpt_generate_cfg(
+                "gen",
+                gpt,
+                None,
+                KvCacheConfig::fp32(),
+                64,
+                Sampling::Greedy,
+                4,
+                4,
+            )
+            .with_observability(&obs_cfg),
+    );
+    let spec = ServeSpec { workers: 1, max_batch: 4, max_wait_us: 500, queue_depth: 16 };
+    let server =
+        Server::start_streaming(&spec, &[], &["gen"], exec.clone(), Some(exec.clone()), None);
+    let handle = server.handle();
+    let mut pending = Vec::new();
+    for i in 0..4usize {
+        let mut row = vec![(4 + i) as f32]; // budgets 4..7
+        row.extend((0..3 + i).map(|j| ((i * 13 + j * 7 + 3) % 70) as f32));
+        pending.push(handle.submit("gen", Tensor::from_vec(&[1, row.len()], row)).1);
+    }
+    for rx in pending {
+        let resp = rx.recv_timeout(Duration::from_secs(60)).expect("stream response");
+        resp.output.expect("success");
+    }
+    let vm = handle.metrics.variant("gen");
+    assert_eq!(vm.admitted.load(Ordering::Relaxed), 4);
+
+    // Prometheus: engine-linked TTFT/TPOT histograms + quantile gauges
+    // per variant, alongside the admission histogram.
+    let prom = handle.metrics.prometheus();
+    for needle in [
+        "# TYPE stamp_ttft_us histogram",
+        "stamp_ttft_us_bucket{variant=\"gen\",le=\"+Inf\"} 4",
+        "stamp_ttft_us_count{variant=\"gen\"} 4",
+        "stamp_ttft_us_quantile{variant=\"gen\",quantile=\"0.5\"}",
+        "stamp_ttft_us_quantile{variant=\"gen\",quantile=\"0.99\"}",
+        "# TYPE stamp_tpot_us_quantile gauge",
+        "stamp_tpot_us_quantile{variant=\"gen\",quantile=\"0.95\"}",
+        "stamp_admit_wait_us_count{variant=\"gen\"} 4",
+        "stamp_admitted_total{variant=\"gen\"} 4",
+    ] {
+        assert!(prom.contains(needle), "missing `{needle}` in:\n{prom}");
+    }
+
+    // JSON: ttft/tpot objects with p50..p99 keys once an engine is linked.
+    let json = handle.metrics.to_json();
+    for needle in ["\"ttft_us\":{\"count\":4", "\"tpot_us\":{\"count\":", "\"p50\":", "\"p99\":"] {
+        assert!(json.contains(needle), "missing `{needle}` in:\n{json}");
+    }
+
+    // The server reaches the ring through its retained stream executor.
+    let jsonl = server.drain_trace("gen");
+    assert!(!jsonl.is_empty(), "traced run must drain events");
+    let events: Vec<TraceEvent> = jsonl
+        .lines()
+        .map(|l| TraceEvent::from_json(l).expect("server-drained line parses"))
+        .collect();
+    // End-to-end parity: trace-derived TTFT equals the histogram the
+    // expositions above were rendered from.
+    let (ttft, _) = derive_latencies(&events);
+    let obs = exec.engine_obs("gen").expect("gen is a generate variant");
+    assert_eq!(ttft.count(), obs.ttft_us.count());
+    assert_eq!(ttft.bucket_counts(), obs.ttft_us.bucket_counts());
+    server.shutdown();
+}
+
+/// Opt-in kernel profiling attributes GEMM time to the serving phase
+/// that issued it: chunked prefill, fused decode steps, and the logits
+/// head each get their own site rows with nonzero op counts.
+#[test]
+fn kernel_profile_attributes_gemms_to_sites() {
+    use stamp::obs::{kernel_profile_snapshot, reset_kernel_profile, set_kernel_profile};
+
+    reset_kernel_profile();
+    set_kernel_profile(true);
+    let mut engine = traced_engine(79, 1024);
+    engine
+        .run_fp(&[GenRequest { prompt: vec![5, 1, 2, 9], n_new: 6 }])
+        .expect("run");
+    set_kernel_profile(false);
+
+    let snap = kernel_profile_snapshot();
+    for site in ["prefill", "decode", "logits"] {
+        let rows: Vec<_> = snap.iter().filter(|s| s.site == site).collect();
+        assert!(!rows.is_empty(), "no kernel rows attributed to site {site}: {snap:?}");
+        assert!(rows.iter().any(|s| s.calls > 0 && s.ops > 0), "empty rows for site {site}");
+        for row in rows {
+            assert!(row.gops() >= 0.0);
+        }
+    }
+}
