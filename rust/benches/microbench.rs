@@ -12,9 +12,9 @@ use stamp::coordinator::{DynamicBatcher, Request};
 use stamp::decode::{DecodeEngine, GenRequest, Sampling};
 use stamp::kvcache::{KvCache, KvCacheConfig};
 use stamp::model::{FpHook, Gpt, GptConfig};
-use stamp::quant::{BitAllocation, Granularity, QuantScheme, Quantizer};
+use stamp::quant::{BitAllocation, Granularity, QTensor, QuantScheme, Quantizer};
 use stamp::stamp::SeqTransformKind;
-use stamp::tensor::{matmul, matmul_transb, qgemm, Tensor};
+use stamp::tensor::{matmul, matmul_transb, qgemm, qgemm_scalar, Tensor};
 use stamp::transforms::{
     DctTransform, HaarDwt, HadamardFeature, SequenceTransform, WhtTransform,
 };
@@ -74,6 +74,36 @@ fn main() {
     println!("    -> {:.2} GFLOP/s-equiv", st.throughput(gemm_flops) / 1e9);
     let st = h.bench("quantize only (pack 2048x512)", || quantizer.quantize(&x));
     println!("    -> {:.2} GB/s", st.throughput(bytes) / 1e9);
+
+    // PR 9 acceptance rows: the word-parallel SWAR kernel vs the scalar
+    // oracle it is bit-identical to, at the prefill shape above and the
+    // decode shape (a handful of activation rows per step). The micro16
+    // rows quantize the activation at MicroBlock{16} and take the
+    // dedicated in-register folding path. GOP/s counts integer
+    // multiply-adds (2·m·n·k), same as the f32 rows count FLOPs.
+    Harness::header("swar qgemm (w4a4, scalar oracle vs swar vs swar+micro16)");
+    let qa4 = QTensor::quantize(&x, &BitAllocation::uniform(4), Granularity::PerToken);
+    let qa4_micro =
+        QTensor::quantize(&x, &BitAllocation::uniform(4), Granularity::MicroBlock { block: 16 });
+    let st = h.bench("swar qgemm prefill 2048x512x512 (scalar oracle)", || qgemm_scalar(&qa4, &qw));
+    println!("    -> {:.2} GOP/s", st.throughput(gemm_flops) / 1e9);
+    let st = h.bench("swar qgemm prefill 2048x512x512 (swar)", || qgemm(&qa4, &qw));
+    println!("    -> {:.2} GOP/s", st.throughput(gemm_flops) / 1e9);
+    let st = h.bench("swar qgemm prefill 2048x512x512 (swar + micro16)", || {
+        qgemm(&qa4_micro, &qw)
+    });
+    println!("    -> {:.2} GOP/s", st.throughput(gemm_flops) / 1e9);
+    let xd = x.slice_rows(0, 8);
+    let decode_flops = 2.0 * 8.0 * (d as f64) * (d as f64);
+    let qd4 = QTensor::quantize(&xd, &BitAllocation::uniform(4), Granularity::PerToken);
+    let qd4_micro =
+        QTensor::quantize(&xd, &BitAllocation::uniform(4), Granularity::MicroBlock { block: 16 });
+    let st = h.bench("swar qgemm decode 8x512x512 (scalar oracle)", || qgemm_scalar(&qd4, &qw));
+    println!("    -> {:.2} GOP/s", st.throughput(decode_flops) / 1e9);
+    let st = h.bench("swar qgemm decode 8x512x512 (swar)", || qgemm(&qd4, &qw));
+    println!("    -> {:.2} GOP/s", st.throughput(decode_flops) / 1e9);
+    let st = h.bench("swar qgemm decode 8x512x512 (swar + micro16)", || qgemm(&qd4_micro, &qw));
+    println!("    -> {:.2} GOP/s", st.throughput(decode_flops) / 1e9);
 
     Harness::header("sequence transforms (2048x512)");
     let dwt = HaarDwt::new(s, 3);

@@ -135,11 +135,16 @@ impl<'a> QuantHook<'a> {
     /// site is populated — weight caches depend only on the weights, not
     /// the sequence length).
     pub fn into_prepared(self) -> PreparedWeights {
-        PreparedWeights {
-            w: self.w_cache.into_inner(),
-            wq: self.wq_cache.into_inner(),
-            misses: AtomicUsize::new(0),
+        let wq = self.wq_cache.into_inner();
+        // Warm the GEMM-side weight caches (per-row 16-chunk code sums)
+        // at preparation time so the first decode step doesn't pay the
+        // build; the unpacked code image stays lazy — it only exists for
+        // the mixed 8-bit-activation pairing, and materializing it here
+        // would cost n×k bytes per site even for pure-4-bit serving.
+        for q in wq.values() {
+            q.gemm_chunk_sums();
         }
+        PreparedWeights { w: self.w_cache.into_inner(), wq, misses: AtomicUsize::new(0) }
     }
 
     fn site_enabled(&self, site: &str) -> bool {

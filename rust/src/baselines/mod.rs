@@ -103,6 +103,19 @@ impl ActQuantCfg {
             range_shrink: 1.0,
         }
     }
+
+    /// Microscaling activations: hardware-friendly 16- or 32-wide shared
+    /// scales ([`Granularity::MicroBlock`]), served by the dedicated
+    /// in-register folding path in [`crate::tensor::qgemm`].
+    pub fn micro(bits: u32, block: usize) -> Self {
+        ActQuantCfg {
+            bits,
+            hp_tokens: 64,
+            hp_bits: 8,
+            granularity: Granularity::MicroBlock { block },
+            range_shrink: 1.0,
+        }
+    }
 }
 
 /// KV-cache quantization settings (paper: KV4 with 64 8-bit tokens).

@@ -62,6 +62,11 @@ pub fn quantize_weight(w: &Tensor, cfg: &WeightQuantCfg) -> Tensor {
 /// codes/parameters are exactly those of [`quantize_weight`] under the
 /// same `cfg`: `quantize_weight_packed(w, cfg).dequantize()` equals
 /// `quantize_weight(w, cfg).transpose()` bit-for-bit.
+///
+/// The returned tensor lazily caches its GEMM-side derivations (per-row
+/// chunk code sums, and an unpacked image for the mixed 8-bit-activation
+/// pairing) on first multiply; `baselines::PreparedWeights` warms the
+/// chunk sums at registration so serving never pays the build per call.
 pub fn quantize_weight_packed(w: &Tensor, cfg: &WeightQuantCfg) -> QTensor {
     assert!(
         cfg.bits == 4 || cfg.bits == 8,

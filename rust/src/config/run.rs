@@ -31,6 +31,12 @@ pub struct QuantSpec {
     pub hp_bits: u32,
     /// 0 = per-token; >0 = per-block with this block size.
     pub act_block: usize,
+    /// Activation scale granularity: `"auto"` (the default — per-token,
+    /// or per-block when `act_block > 0`), `"per_tensor"`, `"per_token"`,
+    /// `"block"` (requires `act_block`), or the microscaling formats
+    /// `"micro16"` / `"micro32"` served by the in-register folding path
+    /// in [`crate::tensor::qgemm`].
+    pub granularity: String,
     /// Serve linears through the packed integer path (QTensor + qgemm)
     /// instead of the f32 QDQ simulation; see
     /// [`crate::baselines::QuantStack::with_packed`].
@@ -263,6 +269,7 @@ impl RunConfig {
                 hp_tokens: 64,
                 hp_bits: 8,
                 act_block: 0,
+                granularity: "auto".into(),
                 packed: false,
             },
             serve: ServeSpec {
@@ -320,6 +327,7 @@ impl RunConfig {
                 hp_tokens: doc.int_or("quant", "hp_tokens", d.quant.hp_tokens as i64) as usize,
                 hp_bits: doc.int_or("quant", "hp_bits", d.quant.hp_bits as i64) as u32,
                 act_block: doc.int_or("quant", "act_block", d.quant.act_block as i64) as usize,
+                granularity: doc.str_or("quant", "granularity", &d.quant.granularity),
                 packed: doc.bool_or("quant", "packed", d.quant.packed),
             },
             serve: ServeSpec {
@@ -381,6 +389,9 @@ impl RunConfig {
         // an unimplemented trace sink.
         cfg.generate.check()?;
         cfg.obs.check()?;
+        // An unknown or inconsistent granularity name fails here,
+        // recoverably, instead of panicking at variant registration.
+        cfg.quant.act_granularity()?;
         Ok(cfg)
     }
 
@@ -415,16 +426,42 @@ impl QuantSpec {
         })
     }
 
+    /// Resolve the `quant.granularity` knob (validated at config parse,
+    /// so serving paths can unwrap via [`QuantSpec::act_cfg`]).
+    pub fn act_granularity(&self) -> crate::error::Result<Granularity> {
+        Ok(match self.granularity.as_str() {
+            // Legacy mapping: per-token unless an act_block is set.
+            "auto" => {
+                if self.act_block == 0 {
+                    Granularity::PerToken
+                } else {
+                    Granularity::PerBlock { block: self.act_block }
+                }
+            }
+            "per_tensor" => Granularity::PerTensor,
+            "per_token" => Granularity::PerToken,
+            "block" => {
+                if self.act_block == 0 {
+                    crate::bail!(
+                        "quant.granularity = \"block\" requires quant.act_block > 0"
+                    );
+                }
+                Granularity::PerBlock { block: self.act_block }
+            }
+            "micro16" => Granularity::MicroBlock { block: 16 },
+            "micro32" => Granularity::MicroBlock { block: 32 },
+            other => crate::bail!(
+                "unknown quant.granularity `{other}` (expected auto|per_tensor|per_token|block|micro16|micro32)"
+            ),
+        })
+    }
+
     pub fn act_cfg(&self) -> ActQuantCfg {
         ActQuantCfg {
             bits: self.act_bits,
             hp_tokens: self.hp_tokens,
             hp_bits: self.hp_bits,
-            granularity: if self.act_block == 0 {
-                Granularity::PerToken
-            } else {
-                Granularity::PerBlock { block: self.act_block }
-            },
+            granularity: self.act_granularity().expect("validated at config parse"),
             range_shrink: if self.baseline == "quarot" { 0.9 } else { 1.0 },
         }
     }
@@ -643,6 +680,48 @@ mod tests {
         let err =
             RunConfig::from_toml_str("[observability]\ntrace.sink = \"file\"\n").unwrap_err();
         assert!(err.to_string().contains("trace.sink"), "{err}");
+    }
+
+    #[test]
+    fn granularity_knob_parses_and_validates() {
+        // Default "auto" keeps the legacy mapping: per-token, or per-block
+        // when act_block is set.
+        let d = RunConfig::defaults();
+        assert_eq!(d.quant.granularity, "auto");
+        assert_eq!(d.quant.act_granularity().unwrap(), Granularity::PerToken);
+        let cfg =
+            RunConfig::from_toml_str("[quant]\nact_block = 16\n").unwrap();
+        assert_eq!(
+            cfg.quant.act_granularity().unwrap(),
+            Granularity::PerBlock { block: 16 }
+        );
+        // Explicit names resolve directly.
+        let cfg = RunConfig::from_toml_str("[quant]\ngranularity = \"micro16\"\n").unwrap();
+        assert_eq!(
+            cfg.quant.act_granularity().unwrap(),
+            Granularity::MicroBlock { block: 16 }
+        );
+        assert_eq!(cfg.quant.act_cfg().granularity, Granularity::MicroBlock { block: 16 });
+        let cfg = RunConfig::from_toml_str("[quant]\ngranularity = \"micro32\"\n").unwrap();
+        assert_eq!(
+            cfg.quant.act_granularity().unwrap(),
+            Granularity::MicroBlock { block: 32 }
+        );
+        let cfg = RunConfig::from_toml_str(
+            "[quant]\ngranularity = \"block\"\nact_block = 32\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.quant.act_granularity().unwrap(),
+            Granularity::PerBlock { block: 32 }
+        );
+        let cfg = RunConfig::from_toml_str("[quant]\ngranularity = \"per_tensor\"\n").unwrap();
+        assert_eq!(cfg.quant.act_granularity().unwrap(), Granularity::PerTensor);
+        // Misconfigurations fail recoverably at parse time.
+        let err = RunConfig::from_toml_str("[quant]\ngranularity = \"bogus\"\n").unwrap_err();
+        assert!(err.to_string().contains("granularity"), "{err}");
+        let err = RunConfig::from_toml_str("[quant]\ngranularity = \"block\"\n").unwrap_err();
+        assert!(err.to_string().contains("act_block"), "{err}");
     }
 
     #[test]

@@ -519,7 +519,10 @@ impl KvStream {
             };
             let q = QTensor::quantize(&coeffs, &bits, Granularity::PerToken);
             // Decompress the (now immutable) block exactly once — what
-            // every later gather will read for these tokens.
+            // every later gather will read for these tokens. High-precision
+            // rows (8-bit lanes under the two-level allocation) take the
+            // no-unpack fast path inside `dequantize`: the packed payload
+            // *is* the code stream, so no per-row unpack copy is made.
             let deq = q.dequantize();
             let view = match &self.transform {
                 Some(t) => t.inverse(&deq),

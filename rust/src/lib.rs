@@ -81,6 +81,6 @@ pub mod prelude {
     pub use crate::quant::{BitAllocation, Granularity, QTensor, QuantScheme, Quantizer};
     pub use crate::stamp::{SeqTransformKind, Stamp, StampConfig};
     pub use crate::stats::sqnr;
-    pub use crate::tensor::{qgemm, Tensor};
+    pub use crate::tensor::{qgemm, qgemm_scalar, Tensor};
     pub use crate::transforms::{FeatureTransform, SequenceTransform};
 }

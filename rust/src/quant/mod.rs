@@ -32,6 +32,14 @@ pub enum Granularity {
     /// One scale per contiguous block of `block` features within a row —
     /// SVDQuant-style block quantization (Fig. 9 / Table 1 setting).
     PerBlock { block: usize },
+    /// Microscaling (LATMiX-style): a fixed *hardware-friendly* block of
+    /// 16 or 32 features per scale. Numerically identical to
+    /// `PerBlock { block }` — same min-max parameters, same rounding —
+    /// but the restricted geometry is a contract the integer GEMM
+    /// exploits: whole 16-element packed chunks per block, so the
+    /// per-block scale folding runs in-register off cached chunk sums
+    /// instead of the generic segment walk (rust/DESIGN.md §17).
+    MicroBlock { block: usize },
 }
 
 impl Granularity {
@@ -43,7 +51,9 @@ impl Granularity {
         match self {
             Granularity::PerTensor => 0.0, // amortized to nothing
             Granularity::PerToken => per_group / d as f64,
-            Granularity::PerBlock { block } => per_group / *block as f64,
+            Granularity::PerBlock { block } | Granularity::MicroBlock { block } => {
+                per_group / *block as f64
+            }
         }
     }
 }
@@ -145,6 +155,11 @@ mod tests {
         assert!((g.param_overhead_bits(4096) - 0.5).abs() < 1e-9);
         let pt = Granularity::PerToken;
         assert!((pt.param_overhead_bits(64) - 0.5).abs() < 1e-9);
+        // Microscaling pays the same per-block overhead as PerBlock.
+        let m16 = Granularity::MicroBlock { block: 16 };
+        assert!((m16.param_overhead_bits(4096) - 2.0).abs() < 1e-9);
+        let m32 = Granularity::MicroBlock { block: 32 };
+        assert!((m32.param_overhead_bits(4096) - 1.0).abs() < 1e-9);
     }
 
     #[test]

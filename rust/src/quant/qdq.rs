@@ -111,8 +111,14 @@ pub fn quantize_dequantize_rows(x: &Tensor, bits: &BitAllocation, gran: Granular
                 }
             });
         }
-        Granularity::PerBlock { block } => {
+        Granularity::PerBlock { block } | Granularity::MicroBlock { block } => {
             assert!(block > 0);
+            if matches!(gran, Granularity::MicroBlock { .. }) {
+                assert!(
+                    block == 16 || block == 32,
+                    "micro-block width must be 16 or 32, got {block}"
+                );
+            }
             crate::parallel::for_each_chunk_mut(out.data_mut(), s, d, |_, (r0, _), chunk| {
                 for (local, row) in chunk.chunks_mut(d).enumerate() {
                     let b = bits.bits_for(r0 + local, s);
@@ -196,6 +202,30 @@ mod tests {
         let pt = quantize_dequantize_rows(&x, &bits, Granularity::PerToken);
         let pb = quantize_dequantize_rows(&x, &bits, Granularity::PerBlock { block: 16 });
         assert!(pb.sub(&x).sq_norm() < pt.sub(&x).sq_norm());
+    }
+
+    #[test]
+    fn micro_block_equals_per_block_of_same_width() {
+        // MicroBlock is numerically PerBlock with a restricted geometry;
+        // the simulated QDQ must be bit-identical at the same width.
+        let x = Tensor::randn(&[8, 48], 19);
+        let bits = BitAllocation::two_level(2, 8, 4);
+        for block in [16usize, 32] {
+            let micro = quantize_dequantize_rows(&x, &bits, Granularity::MicroBlock { block });
+            let plain = quantize_dequantize_rows(&x, &bits, Granularity::PerBlock { block });
+            assert_eq!(micro, plain, "block={block}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "micro-block width")]
+    fn micro_block_rejects_odd_widths() {
+        let x = Tensor::randn(&[2, 48], 20);
+        let _ = quantize_dequantize_rows(
+            &x,
+            &BitAllocation::uniform(4),
+            Granularity::MicroBlock { block: 24 },
+        );
     }
 
     #[test]

@@ -25,6 +25,7 @@ use super::{BitAllocation, Granularity};
 use crate::parallel;
 use crate::tensor::Tensor;
 use std::fmt;
+use std::sync::{Arc, OnceLock};
 
 /// A 2-D matrix of bit-packed integer quantization codes with per-group
 /// scale/zero parameters. Produced by [`QTensor::quantize`] (or
@@ -42,9 +43,32 @@ pub struct QTensor {
     data: Vec<u8>,
     row_offsets: Vec<usize>,
     /// Per-group parameters, `groups_per_row` entries per row, row-major.
+    /// For micro-block granularity this row-major table *is* the compact
+    /// per-block scale layout: `cols/block` entries per row, contiguous,
+    /// indexed by block in step with the packed codes.
     params: Vec<QuantParams>,
     /// Effective group length along a row (= cols for per-tensor/per-token).
     group: usize,
+    /// Lazily-built GEMM-side caches (chunk sums, unpacked image). Behind
+    /// an `Arc` so clones share one build; derived purely from the
+    /// immutable payload, so sharing is always sound.
+    prep: Arc<GemmPrep>,
+}
+
+/// Caches `qgemm` derives from a tensor's packed payload, built on first
+/// use and kept for the tensor's lifetime. For served weights (held in
+/// `baselines::PreparedWeights`) that means once per variant rather than
+/// once per call — decode-shaped products previously re-derived both per
+/// *token*.
+#[derive(Default)]
+struct GemmPrep {
+    /// Per-row sums of each aligned 16-element code chunk (`cols/16` per
+    /// row, row-major, i32: 16·255 fits trivially). Segment code sums are
+    /// assembled from these plus scalar edges.
+    chunk_sums: OnceLock<Vec<i32>>,
+    /// Fully unpacked `rows×cols` code image — only materialized for the
+    /// mixed 8-bit×4-bit GEMM pairing, which dots bytes against it.
+    codes: OnceLock<Vec<u8>>,
 }
 
 /// Packed bytes for one row of `cols` codes at `bits`.
@@ -92,6 +116,13 @@ impl QTensor {
         let group = match gran {
             Granularity::PerBlock { block } => {
                 assert!(block > 0);
+                block.min(d).max(1)
+            }
+            Granularity::MicroBlock { block } => {
+                assert!(
+                    block == 16 || block == 32,
+                    "micro-block width must be 16 or 32, got {block}"
+                );
                 block.min(d).max(1)
             }
             _ => d.max(1),
@@ -163,7 +194,17 @@ impl QTensor {
             });
         }
 
-        QTensor { rows: s, cols: d, granularity: gran, row_bits, data, row_offsets, params, group }
+        QTensor {
+            rows: s,
+            cols: d,
+            granularity: gran,
+            row_bits,
+            data,
+            row_offsets,
+            params,
+            group,
+            prep: Arc::new(GemmPrep::default()),
+        }
     }
 
     /// Pack a weight matrix stored `[in, out]` into the transposed
@@ -191,10 +232,19 @@ impl QTensor {
             return out;
         }
         parallel::for_each_chunk_mut(out.data_mut(), self.rows, d, |_, (r0, _), chunk| {
-            let mut codes = vec![0u8; d];
+            let mut scratch = vec![0u8; d];
             for (local, orow) in chunk.chunks_mut(d).enumerate() {
                 let r = r0 + local;
-                self.unpack_row_into(r, &mut codes);
+                // 8-bit rows already hold one code per byte — read the
+                // packed payload in place instead of copying it through
+                // the scratch row (every dequantize-on-read gather in the
+                // kvcache pays this per hp row otherwise).
+                let codes: &[u8] = if self.row_bits[r] == 8 {
+                    self.packed_row(r)
+                } else {
+                    self.unpack_row_into(r, &mut scratch);
+                    &scratch
+                };
                 let prow = self.row_params(r);
                 for (bi, oblk) in orow.chunks_mut(group).enumerate() {
                     let p = prow[bi];
@@ -266,6 +316,86 @@ impl QTensor {
         }
     }
 
+    /// Aligned 16-element chunks per row covered by [`Self::gemm_chunk_sums`]
+    /// (full chunks only — a sub-16 tail is summed scalar by callers).
+    pub(crate) fn sum_chunks_per_row(&self) -> usize {
+        self.cols / 16
+    }
+
+    /// Per-row, per-16-element-chunk code sums, built in parallel on first
+    /// use and cached for the tensor's lifetime (clones share the cache).
+    /// Row-major, [`Self::sum_chunks_per_row`] entries per row.
+    pub(crate) fn gemm_chunk_sums(&self) -> &[i32] {
+        self.prep.chunk_sums.get_or_init(|| {
+            let cpr = self.sum_chunks_per_row();
+            let mut sums = vec![0i32; self.rows * cpr];
+            if self.rows * cpr > 0 {
+                parallel::for_each_chunk_mut(&mut sums, self.rows, cpr, |_, (r0, _), chunk| {
+                    for (local, srow) in chunk.chunks_mut(cpr).enumerate() {
+                        let r = r0 + local;
+                        for (c, s) in srow.iter_mut().enumerate() {
+                            *s = self.code_sum_span(r, c * 16, (c + 1) * 16) as i32;
+                        }
+                    }
+                });
+            }
+            sums
+        })
+    }
+
+    /// The fully unpacked `rows×cols` code image, built in parallel on
+    /// first use and cached (clones share it). Only the mixed
+    /// 8-bit-activation × 4-bit-weight GEMM pairing reads this; leaving it
+    /// lazy keeps pure-4-bit serving free of the `rows×cols` footprint.
+    pub(crate) fn gemm_codes(&self) -> &[u8] {
+        self.prep.codes.get_or_init(|| {
+            let (rows, cols) = (self.rows, self.cols);
+            let mut codes = vec![0u8; rows * cols];
+            if rows * cols > 0 {
+                parallel::for_each_chunk_mut(&mut codes, rows, cols, |_, (r0, _), chunk| {
+                    for (local, row) in chunk.chunks_mut(cols).enumerate() {
+                        self.unpack_row_into(r0 + local, row);
+                    }
+                });
+            }
+            codes
+        })
+    }
+
+    /// Exact sum of row `r`'s codes over elements `[start, end)`, straight
+    /// off the packed payload: 8-bit rows sum bytes; 4-bit rows sum whole
+    /// words via the SWAR byte-fold (16 nibbles ≤ 240 total, so the
+    /// `·0x0101…` horizontal sum cannot overflow its top byte) with scalar
+    /// nibble edges.
+    pub(crate) fn code_sum_span(&self, r: usize, start: usize, end: usize) -> i64 {
+        let packed = self.packed_row(r);
+        if self.row_bits[r] == 8 {
+            return packed[start..end].iter().map(|&c| c as i64).sum();
+        }
+        const LO_NIB: u64 = 0x0F0F_0F0F_0F0F_0F0F;
+        const ONES: u64 = 0x0101_0101_0101_0101;
+        let nib = |p: usize| ((packed[p / 2] >> (4 * (p % 2))) & 0x0F) as i64;
+        let mut total = 0i64;
+        let mut p = start;
+        if p < end && p % 2 == 1 {
+            total += nib(p);
+            p += 1;
+        }
+        let b0 = p / 2;
+        let words = (end - p) / 16;
+        for w in packed[b0..b0 + words * 8].chunks_exact(8) {
+            let w = u64::from_le_bytes(w.try_into().unwrap());
+            let bytes = (w & LO_NIB) + ((w >> 4) & LO_NIB);
+            total += (bytes.wrapping_mul(ONES) >> 56) as i64;
+        }
+        p += words * 16;
+        while p < end {
+            total += nib(p);
+            p += 1;
+        }
+        total
+    }
+
     /// Packed payload size in bytes (what a deployment actually ships for
     /// the codes; 4-bit rows of odd width carry one padding nibble).
     pub fn payload_bytes(&self) -> usize {
@@ -324,6 +454,8 @@ mod tests {
             Granularity::PerToken,
             Granularity::PerBlock { block: 8 },
             Granularity::PerBlock { block: 64 }, // block > d clamps to d
+            Granularity::MicroBlock { block: 16 },
+            Granularity::MicroBlock { block: 32 }, // > d=23, clamps to d
         ] {
             let q = QTensor::quantize(&x, &bits, gran);
             let want = quantize_dequantize_rows(&x, &bits, gran);
@@ -394,6 +526,57 @@ mod tests {
         let avg = q.average_storage_bits();
         // 0.25·8 + 0.75·4 = 5 payload bits + 0.5 param bits.
         assert!((avg - 5.5).abs() < 1e-9, "avg {avg}");
+    }
+
+    #[test]
+    fn micro_block_stores_compact_scale_table() {
+        // d=48 at micro16: three params per row, contiguous row-major —
+        // the scale table rides directly beside the codes.
+        let x = Tensor::randn(&[4, 48], 15);
+        let q = QTensor::quantize(&x, &BitAllocation::uniform(4), Granularity::MicroBlock { block: 16 });
+        assert_eq!(q.group_len(), 16);
+        assert_eq!(q.groups_per_row(), 3);
+        assert_eq!(q.row_params(2).len(), 3);
+        // Numerically identical to PerBlock of the same width.
+        let pb = QTensor::quantize(&x, &BitAllocation::uniform(4), Granularity::PerBlock { block: 16 });
+        assert_eq!(q.dequantize(), pb.dequantize());
+    }
+
+    #[test]
+    #[should_panic(expected = "micro-block width")]
+    fn rejects_non_hardware_micro_widths() {
+        let x = Tensor::randn(&[2, 48], 16);
+        let _ = QTensor::quantize(&x, &BitAllocation::uniform(4), Granularity::MicroBlock { block: 24 });
+    }
+
+    #[test]
+    fn chunk_and_span_sums_match_naive() {
+        // Mixed 4/8-bit rows, odd width (d=45: two full chunks + a 13-wide
+        // tail): the SWAR word-fold sums and the cached chunk sums must
+        // equal the definitional unpacked sums over every alignment class.
+        let x = Tensor::randn(&[6, 45], 17);
+        let q = QTensor::quantize(&x, &BitAllocation::two_level(3, 8, 4), Granularity::PerToken);
+        let mut codes = vec![0u8; 45];
+        let cpr = q.sum_chunks_per_row();
+        assert_eq!(cpr, 2);
+        let sums = q.gemm_chunk_sums();
+        for r in 0..6 {
+            q.unpack_row_into(r, &mut codes);
+            let naive =
+                |s: usize, e: usize| codes[s..e].iter().map(|&c| c as i64).sum::<i64>();
+            for c in 0..cpr {
+                assert_eq!(sums[r * cpr + c] as i64, naive(c * 16, (c + 1) * 16), "row {r} chunk {c}");
+            }
+            for &(s, e) in &[(0usize, 45usize), (1, 44), (3, 3), (17, 32), (32, 45), (0, 16)] {
+                assert_eq!(q.code_sum_span(r, s, e), naive(s, e), "row {r} span [{s},{e})");
+            }
+        }
+        // The unpacked image cache matches unpack_row_into row-for-row.
+        let img = q.gemm_codes();
+        for r in 0..6 {
+            q.unpack_row_into(r, &mut codes);
+            assert_eq!(&img[r * 45..(r + 1) * 45], &codes[..], "row {r}");
+        }
     }
 
     #[test]

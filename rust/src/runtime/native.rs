@@ -679,6 +679,47 @@ mod tests {
     }
 
     #[test]
+    fn micro_block_variant_serves_end_to_end() {
+        // The `quant.granularity = "micro16"` knob flows config →
+        // ActQuantCfg → QuantScheme → QTensor → the qgemm micro-block
+        // fast path, served by the executor like any packed variant.
+        let cfg = crate::config::RunConfig::from_toml_str(
+            "[quant]\nbaseline = \"rtn\"\nstamp = false\npacked = true\nact_bits = 4\nhp_tokens = 8\ngranularity = \"micro16\"\n",
+        )
+        .unwrap();
+        let act = cfg.quant.act_cfg();
+        assert_eq!(act.granularity, crate::quant::Granularity::MicroBlock { block: 16 });
+        let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 19));
+        let mk = |granularity| {
+            QuantStack::build(
+                BaselineKind::Rtn,
+                &HashMap::new(),
+                Some(ActQuantCfg { granularity, ..act.clone() }),
+                Some(cfg.quant.weight_cfg()),
+                None,
+                1,
+            )
+            .with_packed()
+        };
+        let exec = NativeExecutor::new()
+            .with_gpt("micro", gpt.clone(), Some(mk(act.granularity)))
+            .with_gpt("block", gpt, Some(mk(crate::quant::Granularity::PerBlock { block: 16 })));
+        let input = token_row(16);
+        let threaded = exec.execute("micro", &[&input]).unwrap().remove(0);
+        crate::parallel::set_kernel_serial(true);
+        let serial = exec.execute("micro", &[&input]).unwrap().remove(0);
+        crate::parallel::set_kernel_serial(false);
+        assert!(threaded.all_finite());
+        assert_eq!(threaded, serial, "micro-block serving must not depend on thread count");
+        // MicroBlock is numerically PerBlock of the same width, and both
+        // qgemm paths are bit-identical to the scalar oracle — so the two
+        // variants must serve byte-identical logits (only the kernel's
+        // folding path differs).
+        let block = exec.execute("block", &[&input]).unwrap().remove(0);
+        assert_eq!(threaded, block, "micro fast path diverged from the generic segmented path");
+    }
+
+    #[test]
     fn packed_weights_prepared_once_across_executes() {
         let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 13));
         let act = ActQuantCfg { hp_tokens: 8, ..ActQuantCfg::w4a4_per_token() };

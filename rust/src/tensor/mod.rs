@@ -5,16 +5,18 @@
 //! deliberately small surface: shape bookkeeping, elementwise ops, matmul,
 //! row/column views, and a couple of constructors (zeros / randn / from
 //! slices). Everything is `f32`, matching both the PJRT artifacts and the
-//! quantization math in the paper — except [`qgemm`], the integer GEMM
-//! over bit-packed [`crate::quant::QTensor`] operands that accumulates in
-//! i32 and folds scales/zero-points on output.
+//! quantization math in the paper — except [`qgemm`], the word-parallel
+//! (SWAR) integer GEMM over bit-packed [`crate::quant::QTensor`] operands
+//! that multiplies packed words directly, accumulates exactly in i64, and
+//! folds scales/zero-points on output ([`qgemm_scalar`] is its scalar
+//! reference oracle).
 
 mod matmul;
 mod qgemm;
 mod rng;
 
 pub use matmul::{matmul, matmul_into, matmul_transb, GEMM_SERIAL_MAX_ROWS};
-pub use qgemm::qgemm;
+pub use qgemm::{qgemm, qgemm_scalar};
 pub use rng::XorShiftRng;
 
 use std::fmt;

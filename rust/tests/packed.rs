@@ -20,7 +20,7 @@ use stamp::config::{RunConfig, ServeSpec};
 use stamp::coordinator::Server;
 use stamp::model::{Gpt, GptConfig};
 use stamp::quant::{quantize_dequantize_rows, BitAllocation, Granularity, QTensor};
-use stamp::tensor::{matmul_transb, qgemm, Tensor};
+use stamp::tensor::{matmul_transb, qgemm, qgemm_scalar, Tensor};
 use stamp::testkit;
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -30,6 +30,7 @@ fn granularity_from(code: usize, block: usize) -> Granularity {
     match code {
         0 => Granularity::PerTensor,
         1 => Granularity::PerToken,
+        2 => Granularity::MicroBlock { block: if block % 32 == 0 { 32 } else { 16 } },
         _ => Granularity::PerBlock { block },
     }
 }
@@ -61,7 +62,7 @@ fn property_qgemm_matches_qdq_oracle() {
             let n = g.usize_in(1, 40);
             let lp = if g.usize_in(0, 1) == 0 { 4 } else { 8 };
             let hp_tokens = g.usize_in(0, m);
-            let gran = granularity_from(g.usize_in(0, 2), g.pow2_in(4, 32));
+            let gran = granularity_from(g.usize_in(0, 3), g.pow2_in(4, 32));
             let w_bits = if g.usize_in(0, 1) == 0 { 4 } else { 8 };
             let w_block = if g.usize_in(0, 1) == 0 { None } else { Some(g.pow2_in(8, 32)) };
             let seed = g.rng.next_u64();
@@ -100,6 +101,57 @@ fn property_qgemm_matches_qdq_oracle() {
     );
 }
 
+/// PR 9 tentpole invariant: the word-parallel SWAR kernel is
+/// **bit-identical** to the scalar oracle — not merely close — across
+/// randomized shapes, 4/8-bit mixes on both operands, and every
+/// granularity pairing (including micro-block activations, aligned and
+/// misaligned against the weight's groups). Runs threaded under the
+/// default `cargo test` and serial under the CI `STAMP_THREADS=1` re-run
+/// of this suite, so thread count is covered too.
+#[test]
+fn property_swar_qgemm_is_bit_identical_to_scalar() {
+    testkit::check(
+        "swar-qgemm-vs-scalar-oracle",
+        24,
+        0x5A4B,
+        |g| {
+            let m = g.usize_in(1, 40);
+            let k = g.usize_in(1, 200);
+            let n = g.usize_in(1, 32);
+            let lp = if g.usize_in(0, 1) == 0 { 4 } else { 8 };
+            let hp_tokens = g.usize_in(0, m);
+            let gran = granularity_from(g.usize_in(0, 3), g.pow2_in(4, 32));
+            let w_bits = if g.usize_in(0, 1) == 0 { 4 } else { 8 };
+            let w_block = if g.usize_in(0, 1) == 0 { None } else { Some(g.pow2_in(8, 32)) };
+            let seed = g.rng.next_u64();
+            GemmCase {
+                m,
+                k,
+                n,
+                lp,
+                hp_tokens,
+                gran,
+                wcfg: WeightQuantCfg { bits: w_bits, block: w_block },
+                seed,
+            }
+        },
+        |c| {
+            let x = Tensor::randn(&[c.m, c.k], c.seed);
+            let w = Tensor::randn(&[c.k, c.n], c.seed ^ 0x5DEE_CE66);
+            let bits = BitAllocation::two_level(c.hp_tokens, 8, c.lp);
+            let qa = QTensor::quantize(&x, &bits, c.gran);
+            let qw = quantize_weight_packed(&w, &c.wcfg);
+            let got = qgemm(&qa, &qw);
+            let want = qgemm_scalar(&qa, &qw);
+            if got != want {
+                let diff = got.max_abs_diff(&want);
+                return Err(format!("SWAR kernel diverged from scalar oracle (max |Δ| = {diff:.3e})"));
+            }
+            Ok(())
+        },
+    );
+}
+
 #[derive(Debug)]
 struct PackCase {
     s: usize,
@@ -127,7 +179,7 @@ fn property_packed_roundtrip_is_exact() {
             let lp = if g.usize_in(0, 1) == 0 { 4 } else { 8 };
             let hp = if g.usize_in(0, 1) == 0 { 4 } else { 8 };
             let hp_tokens = g.usize_in(0, s);
-            let gran = granularity_from(g.usize_in(0, 2), g.pow2_in(4, 64));
+            let gran = granularity_from(g.usize_in(0, 3), g.pow2_in(4, 64));
             let seed = g.rng.next_u64();
             PackCase { s, d, lp, hp, hp_tokens, gran, seed }
         },
