@@ -408,6 +408,47 @@ fn main() {
         pooled.drain();
     }
 
+    // Speculative decode (PR 10): draft → one ragged verify GEMM →
+    // accept/rollback. Greedy output is bit-identical to the plain
+    // engine (tests/speculative.rs pins it), so the rows are a pure
+    // throughput A/B at identical content: the plain baseline pays one
+    // GEMV-shaped step per token; the speculative rows amortize the
+    // weight traffic over `accepted+1` rows per verify step. The
+    // accepted-length line is the distribution that decides the win —
+    // mean near 0 degenerates to baseline (plus draft cost), mean near
+    // k approaches (k+1)-token steps.
+    Harness::header("speculative decode (tiny GPT, 4 streams x 32 tokens, k=4)");
+    use stamp::decode::{DraftKind, SpecConfig};
+    let sreqs: Vec<GenRequest> = prompts[..4]
+        .iter()
+        .map(|p| GenRequest { prompt: p.clone(), n_new: n_new_b })
+        .collect();
+    let mut plain_s = DecodeEngine::new(gpt.clone(), KvCacheConfig::fp32(), Sampling::Greedy)
+        .with_decode_batch(4);
+    let st_base =
+        h.bench("speculative decode b=4 (plain greedy baseline)", || plain_s.run_fp(&sreqs).unwrap());
+    println!("    -> {:.0} tok/s aggregate", st_base.throughput((4 * n_new_b) as f64));
+    for (label, draft) in
+        [("ngram", DraftKind::Ngram), ("packed fork", DraftKind::Packed)]
+    {
+        let mut eng = DecodeEngine::new(gpt.clone(), KvCacheConfig::fp32(), Sampling::Greedy)
+            .with_decode_batch(4)
+            .with_speculative(SpecConfig { draft, k: 4 });
+        let st = h.bench(&format!("speculative decode b=4 ({label} k=4)"), || {
+            eng.run_fp(&sreqs).unwrap()
+        });
+        let acc = &eng.obs().accepted_len;
+        println!(
+            "    -> {:.0} tok/s aggregate ({:+.2}% vs plain), accepted len mean {:.2} p50 {} p90 {} over {} verify steps",
+            st.throughput((4 * n_new_b) as f64),
+            (st_base.min_ns / st.min_ns - 1.0) * 100.0,
+            acc.mean(),
+            acc.quantile(0.5),
+            acc.quantile(0.9),
+            acc.count()
+        );
+    }
+
     Harness::header("coordinator hot path");
     let st = h.bench("batcher push+flush (batch 8)", || {
         let now = Instant::now();

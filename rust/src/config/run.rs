@@ -56,9 +56,10 @@ pub struct ServeSpec {
 /// budget, the batched-engine and sampling knobs, and the KV-cache policy
 /// handed to [`crate::kvcache::KvCacheConfig`]. TOML keys mirror the
 /// field paths: `max_new_tokens`, `decode_batch`, `temperature`, `top_k`,
-/// `seed`, `max_inflight`, `admit_deadline_ms`, `kv.hp_tokens`,
-/// `kv.hp_bits`, `kv.lp_bits`, `kv.block`, `kv.packed`, `kv.transform`,
-/// `kv.window`, `kv.sink_tokens`, `kv.prefix_cache`.
+/// `seed`, `max_inflight`, `admit_deadline_ms`, `speculative.draft`,
+/// `speculative.k`, `kv.hp_tokens`, `kv.hp_bits`, `kv.lp_bits`,
+/// `kv.block`, `kv.packed`, `kv.transform`, `kv.window`,
+/// `kv.sink_tokens`, `kv.prefix_cache`.
 #[derive(Clone, Debug)]
 pub struct GenerateSpec {
     /// Per-request cap on generated tokens.
@@ -87,6 +88,18 @@ pub struct GenerateSpec {
     /// instead of queueing indefinitely. `0` (the default) disables the
     /// deadline.
     pub admit_deadline_ms: u64,
+    /// Self-speculative decoding drafter: `"off"` (the default),
+    /// `"packed"` (greedy low-bit forward on a throwaway fork of the
+    /// stream's own KV cache), or `"ngram"` (prompt n-gram lookahead).
+    /// Greedy-only — rejected when `temperature > 0`
+    /// ([`GenerateSpec::check`]); greedy output is bit-identical either
+    /// way, only throughput changes
+    /// ([`crate::decode::DecodeEngine::with_speculative`]).
+    pub speculative_draft: String,
+    /// Max draft tokens verified per speculative step (≥ 1; ignored when
+    /// `speculative.draft = "off"`). Each step is further capped by the
+    /// stream's budget and its cache's speculative headroom.
+    pub speculative_k: usize,
     /// Leading (attention-sink) positions stored at `kv_hp_bits`.
     pub kv_hp_tokens: usize,
     pub kv_hp_bits: u32,
@@ -153,6 +166,28 @@ impl GenerateSpec {
         Ok(cfg)
     }
 
+    /// Resolve the `speculative.*` knobs into the decode engine's
+    /// config: `None` when `speculative.draft = "off"` (the default).
+    /// Validated at config parse via [`GenerateSpec::check`], so serving
+    /// paths can rely on a clean value.
+    pub fn speculative(&self) -> crate::error::Result<Option<crate::decode::SpecConfig>> {
+        let draft = match self.speculative_draft.as_str() {
+            "off" => return Ok(None),
+            "packed" => crate::decode::DraftKind::Packed,
+            "ngram" => crate::decode::DraftKind::Ngram,
+            other => crate::bail!(
+                "unknown generate.speculative.draft `{other}` (expected off|packed|ngram)"
+            ),
+        };
+        if self.speculative_k < 1 {
+            crate::bail!(
+                "generate.speculative.k must be ≥ 1, got {}",
+                self.speculative_k
+            );
+        }
+        Ok(Some(crate::decode::SpecConfig { draft, k: self.speculative_k }))
+    }
+
     /// Validate the sampling knobs, recoverably, at config-parse time.
     /// The sampler's own API doc says "temperature must be positive" but
     /// its runtime guard is a silent `.max(1e-6)` clamp — without this
@@ -161,6 +196,11 @@ impl GenerateSpec {
     /// valid (greedy decoding, the default); a positive temperature
     /// requires a usable shortlist (`top_k ≥ 1`). The clamp itself is
     /// kept as defense-in-depth for engines built directly.
+    ///
+    /// Speculative decoding is greedy-only (the accept rule is an
+    /// argmax-agreement argument, DESIGN.md §18), so a positive
+    /// temperature combined with a drafter is rejected here rather than
+    /// panicking at engine construction.
     pub fn check(&self) -> crate::error::Result<()> {
         if !self.temperature.is_finite() || self.temperature < 0.0 {
             crate::bail!(
@@ -172,6 +212,14 @@ impl GenerateSpec {
             crate::bail!(
                 "generate.top_k must be ≥ 1 when generate.temperature > 0, got {}",
                 self.top_k
+            );
+        }
+        let spec = self.speculative()?;
+        if spec.is_some() && self.temperature > 0.0 {
+            crate::bail!(
+                "generate.speculative.draft = \"{}\" requires greedy decoding \
+                 (generate.temperature = 0): speculative verification is an argmax argument",
+                self.speculative_draft
             );
         }
         Ok(())
@@ -286,6 +334,8 @@ impl RunConfig {
                 seed: 0x5EED,
                 max_inflight: 8,
                 admit_deadline_ms: 0,
+                speculative_draft: "off".into(),
+                speculative_k: 4,
                 kv_hp_tokens: 64,
                 kv_hp_bits: 8,
                 kv_lp_bits: 4,
@@ -355,6 +405,14 @@ impl RunConfig {
                 admit_deadline_ms: doc
                     .int_or("generate", "admit_deadline_ms", d.generate.admit_deadline_ms as i64)
                     .max(0) as u64,
+                speculative_draft: doc.str_or(
+                    "generate",
+                    "speculative.draft",
+                    &d.generate.speculative_draft,
+                ),
+                speculative_k: doc
+                    .int_or("generate", "speculative.k", d.generate.speculative_k as i64)
+                    as usize,
                 kv_hp_tokens: doc
                     .int_or("generate", "kv.hp_tokens", d.generate.kv_hp_tokens as i64)
                     as usize,
@@ -655,6 +713,45 @@ mod tests {
         RunConfig::defaults().generate.check().unwrap();
         // top_k without sampling stays valid: greedy ignores it.
         RunConfig::from_toml_str("[generate]\ntop_k = 4\n").unwrap();
+    }
+
+    #[test]
+    fn generate_speculative_knobs_parse_and_validate() {
+        // Off by default: no drafter, plain one-token stepping.
+        let d = RunConfig::defaults();
+        assert_eq!(d.generate.speculative_draft, "off");
+        assert_eq!(d.generate.speculative().unwrap(), None);
+        // Both drafters resolve, with the depth knob applied.
+        let cfg = RunConfig::from_toml_str(
+            "[generate]\nspeculative.draft = \"ngram\"\nspeculative.k = 6\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.generate.speculative().unwrap(),
+            Some(crate::decode::SpecConfig { draft: crate::decode::DraftKind::Ngram, k: 6 })
+        );
+        let cfg = RunConfig::from_toml_str("[generate]\nspeculative.draft = \"packed\"\n").unwrap();
+        assert_eq!(
+            cfg.generate.speculative().unwrap(),
+            Some(crate::decode::SpecConfig { draft: crate::decode::DraftKind::Packed, k: 4 })
+        );
+        // Misconfigurations fail recoverably at parse time: an unknown
+        // drafter, a zero depth, and the sampled + speculative clash.
+        let err =
+            RunConfig::from_toml_str("[generate]\nspeculative.draft = \"bogus\"\n").unwrap_err();
+        assert!(err.to_string().contains("speculative.draft"), "{err}");
+        let err = RunConfig::from_toml_str(
+            "[generate]\nspeculative.draft = \"ngram\"\nspeculative.k = 0\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("speculative.k"), "{err}");
+        let err = RunConfig::from_toml_str(
+            "[generate]\nspeculative.draft = \"ngram\"\ntemperature = 0.7\ntop_k = 8\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("greedy"), "{err}");
+        // k is ignored while the drafter is off — no spurious failure.
+        RunConfig::from_toml_str("[generate]\nspeculative.k = 0\n").unwrap();
     }
 
     #[test]

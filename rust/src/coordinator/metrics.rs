@@ -385,6 +385,12 @@ impl Metrics {
                 }
             }
         };
+        eng_hist(&mut out, "stamp_spec_accepted_len", "Accepted draft length per speculative verify step (tokens).", &|o| {
+            &o.accepted_len
+        });
+        eng_quantiles(&mut out, "stamp_spec_accepted_len_quantile", "Accepted-draft-length quantiles (tokens).", &|o| {
+            &o.accepted_len
+        });
         eng_hist(&mut out, "stamp_tpot_us", "Time per output token (microseconds).", &|o| &o.tpot_us);
         eng_quantiles(&mut out, "stamp_tpot_us_quantile", "Time-per-output-token quantiles (microseconds).", &|o| {
             &o.tpot_us
@@ -398,8 +404,10 @@ impl Metrics {
 
     /// JSON exposition: one object per variant (sorted) with the raw
     /// counters and each latency histogram as count/sum/mean +
-    /// p50/p90/p95/p99. `ttft_us`/`tpot_us` are `null` until an engine
-    /// is linked.
+    /// p50/p90/p95/p99. `ttft_us`/`tpot_us`/`spec_accepted_len` are
+    /// `null` until an engine is linked (`spec_accepted_len` counts
+    /// tokens, not microseconds, and stays empty on non-speculative
+    /// engines).
     pub fn to_json(&self) -> String {
         let mut out = String::from("{\"variants\":{");
         for (i, (n, m)) in self.sorted().iter().enumerate() {
@@ -425,8 +433,13 @@ impl Metrics {
                 Some(o) => {
                     out.push_str(&format!(",\"ttft_us\":{}", json_histogram(&o.ttft_us)));
                     out.push_str(&format!(",\"tpot_us\":{}", json_histogram(&o.tpot_us)));
+                    out.push_str(&format!(
+                        ",\"spec_accepted_len\":{}",
+                        json_histogram(&o.accepted_len)
+                    ));
                 }
-                None => out.push_str(",\"ttft_us\":null,\"tpot_us\":null"),
+                None => out
+                    .push_str(",\"ttft_us\":null,\"tpot_us\":null,\"spec_accepted_len\":null"),
             }
             out.push('}');
         }
@@ -602,11 +615,21 @@ mod tests {
         obs.ttft_us.record(1000);
         obs.tpot_us.record(100);
         obs.tpot_us.record(200);
+        obs.accepted_len.record(3);
         v.link_engine_obs(obs);
         let text = m.prometheus();
         assert!(text.contains("# TYPE stamp_ttft_us histogram"), "{text}");
         assert!(text.contains("stamp_ttft_us_quantile{variant=\"gen\",quantile=\"0.5\"}"), "{text}");
         assert!(text.contains("stamp_tpot_us_count{variant=\"gen\"} 2"), "{text}");
+        // Speculative accepted-length family rides along with the other
+        // engine-linked families, keeping the global alphabetical order
+        // (…shed… < spec < tpot < ttft).
+        assert!(text.contains("stamp_spec_accepted_len_count{variant=\"gen\"} 1"), "{text}");
+        assert!(text.contains("stamp_spec_accepted_len_quantile{variant=\"gen\",quantile=\"0.9\"}"), "{text}");
+        let spec_at = text.find("# TYPE stamp_spec_accepted_len histogram").unwrap();
+        let tpot_at = text.find("# TYPE stamp_tpot_us histogram").unwrap();
+        let shed_at = text.find("# TYPE stamp_shed_total counter").unwrap();
+        assert!(shed_at < spec_at && spec_at < tpot_at, "families must stay sorted:\n{text}");
     }
 
     #[test]
@@ -617,11 +640,13 @@ mod tests {
         let j = m.to_json();
         assert!(j.contains("\"queue_wait_us\":{\"count\":2"), "{j}");
         assert!(j.contains("\"p99\":"), "{j}");
-        assert!(j.contains("\"ttft_us\":null"), "{j}");
+        assert!(j.contains("\"ttft_us\":null,\"tpot_us\":null,\"spec_accepted_len\":null"), "{j}");
         let obs = Arc::new(EngineObs::new());
         obs.ttft_us.record(500);
+        obs.accepted_len.record(2);
         v.link_engine_obs(obs);
         let j = m.to_json();
         assert!(j.contains("\"ttft_us\":{\"count\":1"), "{j}");
+        assert!(j.contains("\"spec_accepted_len\":{\"count\":1,\"sum\":2"), "{j}");
     }
 }

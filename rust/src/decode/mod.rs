@@ -96,11 +96,16 @@
 //! its logits and tokens — is bit-identical to an unshared run
 //! (`tests/prefix.rs` pins it, fp32 and packed, at any thread count).
 
+mod speculate;
+
+pub use speculate::{DraftKind, SpecConfig};
+
 use crate::kvcache::{BlockPool, EvictionPolicy, KvCache, KvCacheConfig};
 use crate::model::gpt::argmax_row;
 use crate::model::{FpHook, Gpt, LinearHook};
 use crate::obs::{site_guard, EngineObs, KernelSite, TraceKind};
 use crate::tensor::XorShiftRng;
+use speculate::{draft_ngram, draft_packed};
 use std::collections::VecDeque;
 use std::sync::Arc;
 
@@ -147,12 +152,25 @@ impl Sampler {
                 // deterministic order even under ties, so the top-k *set*
                 // is unique and select-then-sort equals sort-then-truncate
                 // while skipping the O(V log V) full-vocab sort on this
-                // per-token hot path.
+                // per-token hot path. NaN logits (a poisoned upstream
+                // kernel or hook) order deterministically *last*, below
+                // every finite value: `select_nth_unstable_by` and
+                // `sort_by` require a strict weak ordering, and the old
+                // `partial_cmp(..).unwrap_or(Equal)` collapse made the
+                // comparator non-transitive in their presence (NaN ≈ 2.0
+                // and NaN ≈ 5.0 while 2.0 < 5.0), so a NaN could seat
+                // anywhere in the shortlist — partition-dependent output
+                // at best, a sort-invariant panic at worst.
                 let cmp = |a: &usize, b: &usize| {
-                    row[*b]
-                        .partial_cmp(&row[*a])
-                        .unwrap_or(std::cmp::Ordering::Equal)
-                        .then(a.cmp(b))
+                    let (x, y) = (row[*a], row[*b]);
+                    match (x.is_nan(), y.is_nan()) {
+                        (true, true) => a.cmp(b),
+                        (true, false) => std::cmp::Ordering::Greater,
+                        (false, true) => std::cmp::Ordering::Less,
+                        (false, false) => {
+                            y.partial_cmp(&x).expect("non-NaN floats compare").then(a.cmp(b))
+                        }
+                    }
                 };
                 let mut idx: Vec<usize> = (0..row.len()).collect();
                 if k < idx.len() {
@@ -221,6 +239,11 @@ struct Slot {
     sampler: Sampler,
     /// Generated so far; the last entry is the token fed at the next step.
     out: Vec<u32>,
+    /// Full token context (prompt ‖ generated), maintained alongside
+    /// `out` — the n-gram drafter's lookup corpus
+    /// ([`speculate::draft_ngram`]). A few bytes per token, negligible
+    /// next to the KV cache.
+    ctx: Vec<u32>,
     n_new: usize,
     phase: Phase,
     /// Obs-epoch µs of admission — TTFT is measured from here. The same
@@ -271,6 +294,10 @@ pub struct DecodeEngine {
     /// few relaxed atomics per token) plus the opt-in trace ring
     /// (attached via [`DecodeEngine::with_obs`]).
     obs: Arc<EngineObs>,
+    /// Speculative-decode configuration (`None` = plain one-token
+    /// stepping). Greedy-only; set via [`DecodeEngine::with_speculative`]
+    /// (the `[generate] speculative.*` TOML knobs).
+    spec: Option<SpecConfig>,
 }
 
 /// Default cap on streams fused into one GEMM (the `[generate]`
@@ -328,6 +355,7 @@ impl DecodeEngine {
             prefix_hits: 0,
             prefix_tokens_reused: 0,
             obs: Arc::new(EngineObs::new()),
+            spec: None,
         }
     }
 
@@ -336,6 +364,38 @@ impl DecodeEngine {
         assert!(decode_batch >= 1, "decode_batch must be ≥ 1");
         self.decode_batch = decode_batch;
         self
+    }
+
+    /// Enable self-speculative decoding: each step drafts up to
+    /// `spec.k` tokens per stream, verifies them in one ragged GEMM
+    /// ([`crate::model::Gpt::decode_step_batch_ragged`]), keeps the
+    /// longest target-agreed prefix, and rolls the rest back off the
+    /// cache's fp32 tail ([`KvCache::truncate_to`]) — DESIGN.md §18.
+    /// Greedy output is **bit-identical** to the non-speculative engine
+    /// at any draft quality, thread count, and admission schedule
+    /// (`tests/speculative.rs`); only throughput changes. Greedy-only:
+    /// the accept rule is an argmax-agreement argument, so sampled
+    /// (`TopK`) engines reject speculation here and at config parse
+    /// ([`crate::config::GenerateSpec::check`]). Must be set on an idle
+    /// engine.
+    pub fn with_speculative(mut self, spec: SpecConfig) -> Self {
+        assert!(spec.k >= 1, "speculative draft depth k must be ≥ 1");
+        assert!(
+            matches!(self.sampling, Sampling::Greedy),
+            "speculative decoding requires greedy sampling (verification is an argmax argument)"
+        );
+        assert!(
+            self.slots.iter().all(|s| s.is_none()) && self.retired.is_empty(),
+            "speculative mode must be set on an idle engine"
+        );
+        self.spec = Some(spec);
+        self
+    }
+
+    /// The engine's speculative-decode configuration (`None` = plain
+    /// one-token stepping).
+    pub fn speculative(&self) -> Option<SpecConfig> {
+        self.spec
     }
 
     /// Slot-array size: the hard cap on concurrently in-flight streams
@@ -535,6 +595,7 @@ impl DecodeEngine {
             cache,
             sampler: Sampler::new(&self.sampling),
             out: Vec::with_capacity(req.n_new),
+            ctx: req.prompt.clone(),
             n_new: req.n_new,
             phase: Phase::Prefill { prompt: req.prompt, off },
         });
@@ -577,7 +638,13 @@ impl DecodeEngine {
         }
 
         // (2) Fused decode over the active decoding slots, in slot order.
-        {
+        // With speculation enabled, each chunk runs draft → ragged
+        // verify → accept/rollback instead of the single-token GEMM; the
+        // plain path below is exactly that loop at draft depth 0, kept
+        // separate so the default hot path is untouched.
+        if let Some(sc) = self.spec {
+            self.step_decode_speculative(hook, sc);
+        } else {
             let gpt = &self.gpt;
             let obs = &self.obs;
             let mut active: Vec<&mut Slot> = self
@@ -603,6 +670,7 @@ impl DecodeEngine {
                 for (row, s) in chunk.iter_mut().enumerate() {
                     let t = s.sampler.next(logits.row(row));
                     s.out.push(t);
+                    s.ctx.push(t);
                     obs.tpot_us.record(now.saturating_sub(s.last_token_us));
                     s.last_token_us = now;
                     obs.record_event(TraceKind::DecodeStep, s.id, now, s.out.len() as u64);
@@ -692,7 +760,9 @@ impl DecodeEngine {
                     if *off == prompt.len() {
                         finished = true;
                         if s.n_new > 0 {
-                            s.out.push(s.sampler.next(logits.row(logits.rows() - 1)));
+                            let t = s.sampler.next(logits.row(logits.rows() - 1));
+                            s.out.push(t);
+                            s.ctx.push(t);
                             // First generated token: TTFT against the
                             // Admit timestamp, and a DecodeStep event
                             // sharing this chunk's `now` so the trace
@@ -733,6 +803,128 @@ impl DecodeEngine {
             }
             if retire_now {
                 self.retire_slot(i, false);
+            }
+        }
+    }
+
+    /// Phase 2 of [`DecodeEngine::step`] with speculation enabled:
+    /// draft → ragged verify → accept/rollback, per `decode_batch`
+    /// chunk (DESIGN.md §18).
+    ///
+    /// Per stream: the drafter proposes `d ≤ k` tokens, further capped
+    /// by the stream's remaining budget and by
+    /// [`KvCache::spec_headroom`] so the `d+1` verify appends cannot
+    /// finalize a packed block, trip an eviction, or overrun a
+    /// capacity/positional bound — which is what makes the rollback
+    /// provably tail-only. The ragged GEMM scores `[pending ‖ draft]`
+    /// in one pass; row `j`'s argmax `y_j` is exactly what `j+1` serial
+    /// greedy steps would have produced, so the engine keeps
+    /// `y_0 … y_a` (the accepted draft prefix plus the target's own
+    /// next token), trims to the budget, and pops the rejected rows off
+    /// the fp32 tail. Greedy output is therefore bit-identical to the
+    /// non-speculative engine at any draft quality.
+    fn step_decode_speculative(&mut self, hook: &dyn LinearHook, sc: SpecConfig) {
+        let gpt = &self.gpt;
+        let obs = &self.obs;
+        let mut active: Vec<&mut Slot> = self
+            .slots
+            .iter_mut()
+            .filter_map(|o| o.as_mut())
+            .filter(|s| matches!(s.phase, Phase::Decode))
+            .collect();
+        for chunk in active.chunks_mut(self.decode_batch) {
+            // Draft. An empty draft (no n-gram match, or zero headroom)
+            // degenerates this stream's verify to the plain one-token
+            // step.
+            let mut pre_len: Vec<usize> = Vec::with_capacity(chunk.len());
+            let mut token_lists: Vec<Vec<u32>> = Vec::with_capacity(chunk.len());
+            for s in chunk.iter_mut() {
+                let pending = *s.out.last().expect("decoding slot has a token");
+                let budget = (s.n_new - s.out.len()).saturating_sub(1);
+                let pos_room = (gpt.cfg.max_seq - s.cache.pos_next()).saturating_sub(1);
+                let depth = sc.k.min(s.cache.spec_headroom()).min(budget).min(pos_room);
+                let draft = match sc.draft {
+                    DraftKind::Ngram => draft_ngram(&s.ctx, depth),
+                    DraftKind::Packed => draft_packed(gpt, hook, pending, &s.cache, depth),
+                };
+                pre_len.push(s.cache.len());
+                let mut toks = Vec::with_capacity(1 + draft.len());
+                toks.push(pending);
+                toks.extend_from_slice(&draft);
+                token_lists.push(toks);
+            }
+            let now_d = obs.now_us();
+            for (s, toks) in chunk.iter().zip(&token_lists) {
+                obs.record_event(TraceKind::Draft, s.id, now_d, (toks.len() - 1) as u64);
+            }
+            // Verify: one ragged GEMM scores every stream's pending
+            // token and drafts together.
+            let slices: Vec<&[u32]> = token_lists.iter().map(|t| t.as_slice()).collect();
+            let mut caches: Vec<&mut KvCache> = chunk.iter_mut().map(|s| &mut s.cache).collect();
+            let logits = {
+                let _site = site_guard(KernelSite::Decode);
+                gpt.decode_step_batch_ragged(hook, &slices, &mut caches)
+            };
+            drop(caches);
+            // Accept / rollback. One `now` per fused GEMM, as in the
+            // plain path: every token emitted here came from this step.
+            let now = obs.now_us();
+            let mut row0 = 0usize;
+            for (i, s) in chunk.iter_mut().enumerate() {
+                let rows = token_lists[i].len();
+                let draft = &token_lists[i][1..];
+                // Target argmax per appended row; `ys[0]` is exactly the
+                // plain step's output.
+                let ys: Vec<u32> = (0..rows).map(|j| argmax_row(logits.row(row0 + j))).collect();
+                row0 += rows;
+                // `draft[j]` survives iff the target, fed the accepted
+                // prefix before it, agrees.
+                let mut a = 0usize;
+                while a < draft.len() && ys[a] == draft[a] {
+                    a += 1;
+                }
+                // Emit the accepted prefix plus the target's own next
+                // token (the "free" correction row), trimmed so the
+                // stream never overshoots its `n_new` budget.
+                let emit = (a + 1).min(s.n_new - s.out.len());
+                // Rollback: pop the rejected rows off the fp32 tail; the
+                // cache ends at [history ‖ pending ‖ accepted], exactly
+                // the plain path's state after `emit` steps.
+                s.cache.truncate_to(pre_len[i] + emit);
+                obs.accepted_len.record(a as u64);
+                obs.record_event(TraceKind::Verify, s.id, now, a as u64);
+                if rows > emit {
+                    obs.record_event(TraceKind::Rollback, s.id, now, (rows - emit) as u64);
+                }
+                // One DecodeStep event per emitted token, all sharing
+                // this GEMM's `now`, and matching TPOT samples (the real
+                // delta, then zeros) — trace-derived latencies still
+                // equal histogram-recorded ones (tests/obs.rs).
+                for (e, &t) in ys[..emit].iter().enumerate() {
+                    s.out.push(t);
+                    s.ctx.push(t);
+                    obs.record_event(TraceKind::DecodeStep, s.id, now, s.out.len() as u64);
+                    let dt = if e == 0 { now.saturating_sub(s.last_token_us) } else { 0 };
+                    obs.tpot_us.record(dt);
+                }
+                s.last_token_us = now;
+                if obs.trace_enabled() {
+                    let nb = s.cache.n_blocks();
+                    if nb > s.prev_blocks {
+                        obs.record_event(
+                            TraceKind::BlockFinalize,
+                            s.id,
+                            now,
+                            (nb - s.prev_blocks) as u64,
+                        );
+                    }
+                    s.prev_blocks = nb;
+                    let ev = s.cache.evicted();
+                    if ev > s.prev_evicted {
+                        obs.record_event(TraceKind::Evict, s.id, now, (ev - s.prev_evicted) as u64);
+                    }
+                    s.prev_evicted = ev;
+                }
             }
         }
     }
@@ -995,6 +1187,96 @@ mod tests {
         let mut k1 = Sampler::new(&Sampling::TopK { k: 1, temperature: 1.0, seed: 7 });
         assert_eq!(g.next(&row), 1, "first maximum wins ties");
         assert_eq!(k1.next(&row), 1, "top-1 sampling is argmax with the same tie-break");
+    }
+
+    #[test]
+    fn topk_orders_nan_logits_deterministically_last() {
+        // Regression: the shortlist comparator used
+        // `partial_cmp(..).unwrap_or(Equal)`, which is non-transitive
+        // when NaN is present (NaN ≈ 2.0 and NaN ≈ 3.0 while 2.0 < 3.0)
+        // — `select_nth_unstable_by` could then seat a NaN anywhere in
+        // the top-k shortlist. NaN now orders strictly last: the draw
+        // always comes from the finite candidates.
+        let row = [f32::NAN, 2.0, f32::NAN, 3.0, 1.0, f32::NAN];
+        for seed in 0..32u64 {
+            let mut s = Sampler::new(&Sampling::TopK { k: 3, temperature: 0.7, seed });
+            let t = s.next(&row);
+            assert!(
+                t == 1 || t == 3 || t == 4,
+                "seed {seed} sampled index {t}, which is a NaN logit"
+            );
+        }
+        // k = 1 collapses onto the finite maximum even with NaN around.
+        let mut k1 = Sampler::new(&Sampling::TopK { k: 1, temperature: 1.0, seed: 9 });
+        assert_eq!(k1.next(&row), 3);
+        // Degenerate all-NaN row: still deterministic (index-ascending
+        // shortlist, float-tail fallback) instead of panicking.
+        let nan_row = [f32::NAN; 4];
+        let mut s = Sampler::new(&Sampling::TopK { k: 2, temperature: 1.0, seed: 3 });
+        assert_eq!(s.next(&nan_row), 1, "all-NaN rows fall back to the last candidate");
+    }
+
+    // ---- speculative decode ------------------------------------------
+
+    #[test]
+    fn speculative_greedy_is_bit_identical_to_plain_greedy() {
+        // The tentpole invariant in miniature: both drafters, fp32 and
+        // packed caches, same tokens as the non-speculative engine.
+        let gpt = tiny(52);
+        let reqs = vec![
+            GenRequest { prompt: prompt(5, 0), n_new: 12 },
+            GenRequest { prompt: prompt(11, 1), n_new: 3 },
+            GenRequest { prompt: prompt(2, 2), n_new: 8 },
+        ];
+        for kv in [KvCacheConfig::fp32(), KvCacheConfig::two_level(4, 8, 4, 8)] {
+            let mut plain = DecodeEngine::new(gpt.clone(), kv.clone(), Sampling::Greedy);
+            let want = plain.run_fp(&reqs).unwrap();
+            for draft in [DraftKind::Ngram, DraftKind::Packed] {
+                let mut eng = DecodeEngine::new(gpt.clone(), kv.clone(), Sampling::Greedy)
+                    .with_speculative(SpecConfig { draft, k: 4 });
+                let got = eng.run_fp(&reqs).unwrap();
+                assert_eq!(got, want, "{draft:?} over {:?} cache", kv.packed);
+                let verifies = eng.obs().accepted_len.count();
+                assert!(verifies > 0, "speculative engines record accepted_len per verify");
+            }
+        }
+    }
+
+    #[test]
+    fn speculative_packed_drafter_accepts_when_the_fork_is_exact() {
+        // An 8-token prompt fills block 8 exactly, so at the first
+        // decode step the fp32 tail is empty and the drafter's fork is
+        // *bit-identical* to the verifier's cache (the QDQ degradation
+        // only touches tail rows). The first draft token is then the
+        // verifier's own argmax, so at least one acceptance is
+        // guaranteed — the accepted-length histogram cannot stay at
+        // sum 0.
+        let gpt = tiny(54);
+        let reqs = vec![GenRequest { prompt: prompt(8, 0), n_new: 24 }];
+        let mut eng = DecodeEngine::new(gpt, KvCacheConfig::two_level(4, 8, 4, 8), Sampling::Greedy)
+            .with_speculative(SpecConfig { draft: DraftKind::Packed, k: 4 });
+        let _ = eng.run_fp(&reqs).unwrap();
+        let h = &eng.obs().accepted_len;
+        assert!(h.count() > 0);
+        assert!(h.sum() > 0, "an exact fork's first draft token must be accepted");
+    }
+
+    #[test]
+    #[should_panic(expected = "greedy sampling")]
+    fn speculative_rejects_sampled_engines() {
+        let gpt = tiny(53);
+        let sampling = Sampling::TopK { k: 4, temperature: 1.0, seed: 1 };
+        let _ = DecodeEngine::new(gpt, KvCacheConfig::fp32(), sampling)
+            .with_speculative(SpecConfig { draft: DraftKind::Ngram, k: 2 });
+    }
+
+    #[test]
+    #[should_panic(expected = "idle engine")]
+    fn speculative_must_be_set_before_admission() {
+        let gpt = tiny(53);
+        let mut eng = DecodeEngine::new(gpt, KvCacheConfig::fp32(), Sampling::Greedy);
+        eng.admit(GenRequest { prompt: prompt(3, 0), n_new: 2 }).unwrap();
+        let _ = eng.with_speculative(SpecConfig { draft: DraftKind::Ngram, k: 2 });
     }
 
     // ---- continuous surface: admit / step / drain --------------------

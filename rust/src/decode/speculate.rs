@@ -1,0 +1,180 @@
+//! Self-speculative drafters for the batched decode engine.
+//!
+//! Speculative decoding splits a greedy decode step into **draft** —
+//! guess the next `d` tokens cheaply — and **verify** — run the target
+//! model once over `[pending ‖ draft]` as a ragged multi-row step
+//! ([`crate::model::Gpt::decode_step_batch_ragged`]) and keep the
+//! longest prefix the target agrees with. A good draft turns `d+1`
+//! weight-bound GEMV-shaped steps into one GEMM over `d+1` rows; a bad
+//! draft costs only the rejected rows, which
+//! [`crate::kvcache::KvCache::truncate_to`] pops back off the fp32
+//! tail. Greedy output is bit-identical either way (DESIGN.md §18) —
+//! the drafter only steers *throughput*, never *content*.
+//!
+//! Both drafters here are **self**-speculative: no second model, no new
+//! weights.
+//!
+//! * [`DraftKind::Ngram`] — prompt lookahead: find the longest recent
+//!   n-gram match of the stream's current suffix in its own context and
+//!   propose the tokens that followed it. Free (no model work) and
+//!   surprisingly effective on repetitive or structured continuations;
+//!   proposes nothing when the context has no match, which degenerates
+//!   to the ordinary one-token step.
+//! * [`DraftKind::Packed`] — low-precision forward: fork the stream's
+//!   cache ([`crate::kvcache::KvCache::fork_draft`] — pooled blocks
+//!   shared by refcount, private tail re-quantized to the packed
+//!   low-bit representation) and greedily decode `d` tokens on the
+//!   throwaway fork. The draft reads the *degraded* cache the finalized
+//!   blocks already live in, so it is exactly the "cheap approximate
+//!   model" the paper's low-bit setting provides for free; the fork is
+//!   dropped after drafting, so the real stream's state is untouched.
+
+use crate::kvcache::KvCache;
+use crate::model::gpt::argmax_row;
+use crate::model::{Gpt, LinearHook};
+
+/// Which self-drafter proposes tokens for the verify step.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum DraftKind {
+    /// Greedy low-bit forward on a throwaway fork of the stream's own
+    /// KV cache (`draft = "packed"` in TOML).
+    Packed,
+    /// Longest-suffix n-gram lookahead over the stream's prompt +
+    /// generated context (`draft = "ngram"` in TOML).
+    Ngram,
+}
+
+/// Engine-level speculative-decode configuration (the `[generate]`
+/// `speculative.draft` / `speculative.k` TOML knobs).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct SpecConfig {
+    pub draft: DraftKind,
+    /// Maximum draft depth per verify step (≥ 1). The engine further
+    /// caps each step by the stream's budget and by
+    /// [`KvCache::spec_headroom`], so rollback always stays inside the
+    /// private fp32 tail.
+    pub k: usize,
+}
+
+/// Prompt-lookahead drafter: match the longest suffix of `ctx` (n-grams
+/// of length 3 down to 1) against earlier context, most recent match
+/// first, and propose up to `max_k` tokens that followed the match.
+/// Returns an empty draft when nothing matches — the caller then runs a
+/// plain one-token step.
+pub(crate) fn draft_ngram(ctx: &[u32], max_k: usize) -> Vec<u32> {
+    if max_k == 0 || ctx.len() < 2 {
+        return Vec::new();
+    }
+    let max_n = 3usize.min(ctx.len() - 1);
+    for n in (1..=max_n).rev() {
+        let suffix = &ctx[ctx.len() - n..];
+        // Most recent earlier occurrence wins: recency is the best
+        // predictor of continuation in autoregressive text.
+        for start in (0..ctx.len() - n).rev() {
+            if &ctx[start..start + n] == suffix {
+                let from = start + n;
+                let to = (from + max_k).min(ctx.len());
+                if to > from {
+                    return ctx[from..to].to_vec();
+                }
+            }
+        }
+    }
+    Vec::new()
+}
+
+/// Low-bit forward drafter: fork the cache (shared finalized blocks,
+/// re-quantized tail) and greedily decode up to `max_k` tokens on the
+/// fork. The fork is dropped on return, so the parent stream's cache —
+/// and the engine's accounting — never see the draft.
+pub(crate) fn draft_packed(
+    gpt: &Gpt,
+    hook: &dyn LinearHook,
+    pending: u32,
+    cache: &KvCache,
+    max_k: usize,
+) -> Vec<u32> {
+    let mut fork = cache.fork_draft();
+    let mut out = Vec::with_capacity(max_k);
+    let mut tok = pending;
+    for _ in 0..max_k {
+        if matches!(fork.remaining(), Some(0)) || fork.pos_next() >= gpt.cfg.max_seq {
+            break;
+        }
+        let logits = gpt.decode_step(hook, tok, &mut fork);
+        tok = argmax_row(logits.row(0));
+        out.push(tok);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::KvCacheConfig;
+    use crate::model::{FpHook, GptConfig};
+
+    #[test]
+    fn ngram_proposes_the_continuation_of_the_latest_match() {
+        // Suffix [7] last occurred at index 1; the tokens after it are
+        // proposed, capped at max_k.
+        let ctx = [3, 7, 9, 4, 7];
+        assert_eq!(draft_ngram(&ctx, 4), vec![9, 4, 7]);
+        assert_eq!(draft_ngram(&ctx, 2), vec![9, 4]);
+        // A longer suffix match is preferred: suffix [9, 4, 7] of the
+        // extended context matches at index 2, proposing what followed.
+        let ctx = [3, 7, 9, 4, 7, 1, 9, 4, 7];
+        assert_eq!(draft_ngram(&ctx, 3), vec![1, 9, 4]);
+    }
+
+    #[test]
+    fn ngram_recency_breaks_ties() {
+        // Suffix [5] occurs at 0 and 2; the later match (followed by 8)
+        // wins over the earlier one (followed by 6).
+        let ctx = [5, 6, 5, 8, 5];
+        assert_eq!(draft_ngram(&ctx, 1), vec![8]);
+    }
+
+    #[test]
+    fn ngram_empty_cases() {
+        assert!(draft_ngram(&[], 4).is_empty());
+        assert!(draft_ngram(&[9], 4).is_empty());
+        assert!(draft_ngram(&[1, 2, 3], 0).is_empty());
+        // No repeated token anywhere → no match → empty draft.
+        assert!(draft_ngram(&[1, 2, 3, 4], 4).is_empty());
+    }
+
+    #[test]
+    fn packed_draft_leaves_the_parent_cache_untouched_and_respects_caps() {
+        let gpt = Gpt::new(GptConfig::tiny(), 11);
+        let mut cache =
+            KvCache::new(gpt.cfg.n_layers, KvCacheConfig::two_level(0, 8, 4, 8));
+        let prompt: Vec<u32> = (0..10).map(|i| (i * 5 + 2) % 70).collect();
+        let logits = gpt.prefill(&FpHook, &prompt, &mut cache);
+        let pending = argmax_row(logits.row(logits.rows() - 1));
+        let before = (cache.len(), cache.n_blocks(), cache.storage_bits());
+        let draft = draft_packed(&gpt, &FpHook, pending, &cache, 4);
+        assert_eq!(draft.len(), 4, "an unconstrained fork drafts the full depth");
+        for &t in &draft {
+            assert!((t as usize) < gpt.cfg.vocab_size);
+        }
+        assert_eq!(
+            (cache.len(), cache.n_blocks(), cache.storage_bits()),
+            before,
+            "drafting must not mutate the parent cache"
+        );
+        // Deterministic: the same fork state drafts the same tokens.
+        assert_eq!(draft_packed(&gpt, &FpHook, pending, &cache, 4), draft);
+        // A capacity-bounded cache stops the fork at the wall instead of
+        // panicking: cap 12, 10 cached + pending leaves 2 appends, so at
+        // most 2 draft tokens come back.
+        let mut bounded = KvCache::new(
+            gpt.cfg.n_layers,
+            KvCacheConfig::two_level(0, 8, 4, 8).with_max_seq(12),
+        );
+        let logits = gpt.prefill(&FpHook, &prompt, &mut bounded);
+        let pending = argmax_row(logits.row(logits.rows() - 1));
+        let draft = draft_packed(&gpt, &FpHook, pending, &bounded, 4);
+        assert_eq!(draft.len(), 2, "the fork stops at the capacity wall");
+    }
+}

@@ -634,8 +634,13 @@ impl KvStream {
         }
     }
 
-    /// Retained handles to the first `n_blocks` resident finalized blocks
-    /// (panics past the resident run) — what prefix registration records.
+    /// Retained handles to the first `n_blocks` *resident* finalized
+    /// blocks (panics past the resident run) — what prefix registration
+    /// records. Resident-indexed, not absolute: after front-eviction the
+    /// first resident block past the sink span is a *post-gap* block, so
+    /// callers that need the absolute prompt prefix (prefix-cache
+    /// registration) must refuse once `evicted() > 0` —
+    /// [`KvCache::prefix_entry`] enforces exactly that, per stream.
     pub fn block_handles(&self, n_blocks: usize) -> Vec<BlockHandle> {
         self.blocks[..n_blocks].to_vec()
     }
@@ -664,6 +669,108 @@ impl KvStream {
         self.blocks = handles;
         self.len = span;
         self.evict();
+    }
+
+    /// Roll the stream back to `len` tokens by popping rows off the fp32
+    /// tail — the rejection half of speculative decode (DESIGN.md §18).
+    /// Only the tail is ever touched: finalized blocks are immutable and
+    /// possibly shared (pooled handles, prefix index), so a rollback that
+    /// would reach into them is a programming error — the speculation
+    /// depth must be capped by [`KvStream::spec_headroom`] so every
+    /// overshoot token is still in the private tail. After the rollback
+    /// the stream is bit-identical to one that only ever appended the
+    /// first `len` tokens: the tail holds exact fp32 rows, so slicing
+    /// them off leaves no trace, and `len`/`evicted`/`blocks` are
+    /// unchanged by construction.
+    pub fn truncate_to(&mut self, len: usize) {
+        assert!(
+            len <= self.len,
+            "kv truncate_to({len}) cannot grow a stream of {} tokens",
+            self.len
+        );
+        let cut = self.len - len;
+        if cut == 0 {
+            return;
+        }
+        let tl = self.tail_len();
+        assert!(
+            cut <= tl,
+            "kv rollback must stay inside the fp32 tail: popping {cut} tokens but the tail \
+             holds {tl} (cap draft depth with spec_headroom)"
+        );
+        let tail = self.tail.take().expect("non-empty tail");
+        self.tail = if cut < tl { Some(tail.slice_rows(0, tl - cut)) } else { None };
+        self.len = len;
+    }
+
+    /// Maximum number of *speculative* tokens that may be appended after
+    /// the pending (non-speculative) token such that rolling back to any
+    /// accepted length is exact (see [`KvStream::truncate_to`]). Three
+    /// caps compose, each derived from a state change that a rollback
+    /// could not undo:
+    ///
+    /// * **capacity** — `len + 1 + d ≤ max_seq`, so the speculative
+    ///   append never trips the recoverable capacity error mid-verify;
+    /// * **flush** — for block-finalizing streams (packed, windowed, or
+    ///   prefix-cached), the overshoot must not complete a block beyond
+    ///   those the pending token itself completes: finalization
+    ///   quantizes/pools rows irreversibly, so
+    ///   `⌊(len+1+d)/block⌋ == ⌊(len+1)/block⌋`;
+    /// * **eviction** — under a sliding window, growth of `len` alone
+    ///   can trigger an eviction. An eviction at exactly `len + 1` fires
+    ///   identically in the non-speculative path, but it shifts the
+    ///   *resident* positions every later token embeds at — so when one
+    ///   is due at the pending append, the headroom is 0; otherwise the
+    ///   overshoot must stop short of the next trigger length.
+    ///
+    /// Plain unbounded fp32 streams (the parity reference) are limited
+    /// only by capacity: everything lives in the tail.
+    pub fn spec_headroom(&self) -> usize {
+        let l1 = self.len + 1; // length after the pending token lands
+        let mut d = usize::MAX;
+        if let Some(cap) = self.cfg.max_seq {
+            d = d.min(cap.saturating_sub(l1));
+        }
+        if self.cfg.packed || self.windowed() || self.cfg.prefix_cache {
+            let b = self.cfg.block;
+            d = d.min(b - 1 - (l1 % b));
+            if let EvictionPolicy::SlidingWindow { window, .. } = self.cfg.eviction {
+                let start = self.sink_span() + self.evicted;
+                let finalized_at_l1 = (l1 / b) * b;
+                if start + b <= finalized_at_l1 {
+                    // An evictable finalized block exists; it drops once
+                    // the logical length reaches `t0`.
+                    let t0 = start + b + window;
+                    d = if t0 <= l1 { 0 } else { d.min(t0 - l1 - 1) };
+                }
+            }
+        }
+        d
+    }
+
+    /// Throwaway copy for a speculative drafter: shares the finalized
+    /// blocks (handle refcounts retained — dropped with the fork) and
+    /// *degrades* the private fp32 tail through a per-token QDQ round
+    /// trip at `lp_bits`, so a packed-path drafter reads the same
+    /// low-precision representation the steady-state cache stores rather
+    /// than a bit-exact clone of the verifier's state. The fork is fully
+    /// independent: its appends flush into the shared pool as private
+    /// handles and never touch this stream.
+    pub fn fork_draft(&self) -> KvStream {
+        let tail = self.tail.as_ref().map(|t| {
+            let bits = BitAllocation::two_level(0, self.cfg.hp_bits, self.cfg.lp_bits);
+            QTensor::quantize(t, &bits, Granularity::PerToken).dequantize()
+        });
+        KvStream {
+            cfg: self.cfg.clone(),
+            transform: self.cfg.block_transform(),
+            pool: self.pool.clone(),
+            blocks: self.blocks.clone(),
+            tail,
+            dim: self.dim,
+            len: self.len,
+            evicted: self.evicted,
+        }
     }
 }
 
@@ -828,19 +935,66 @@ impl KvCache {
     /// when the cache cannot vouch for them (unaligned length, eviction
     /// already dropped part of the run, or the blocks are not finalized
     /// yet). `tokens` must be the prompt token IDs those positions hold.
+    ///
+    /// The eviction guard is checked on *every* stream, not just the
+    /// authoritative layer-0 K: [`KvStream::block_handles`] is
+    /// resident-indexed, so once any stream has front-evicted, its
+    /// leading handles are post-gap blocks — registering them under the
+    /// absolute prompt token IDs would seed later streams with the wrong
+    /// positions (`tests/prefix.rs` pins the window × prefix_cache
+    /// interaction).
     pub fn prefix_entry(&self, tokens: &[u32]) -> Option<PrefixEntry> {
         let block = self.layers[0].k.config().block;
-        if block == 0 || tokens.is_empty() || tokens.len() % block != 0 || self.evicted() > 0 {
+        if block == 0 || tokens.is_empty() || tokens.len() % block != 0 {
             return None;
         }
         let n = tokens.len() / block;
         for l in &self.layers {
-            if l.k.n_blocks() < n || l.v.n_blocks() < n {
+            if l.k.evicted() > 0
+                || l.v.evicted() > 0
+                || l.k.n_blocks() < n
+                || l.v.n_blocks() < n
+            {
                 return None;
             }
         }
         let layers = self.layers.iter().map(|l| (l.k.block_handles(n), l.v.block_handles(n)));
         Some(PrefixEntry::new(tokens.to_vec(), layers.collect()))
+    }
+
+    /// [`KvStream::truncate_to`] across every layer's K and V stream —
+    /// the whole-model rollback of speculative decode. Layers advance in
+    /// lock-step, so one target length applies to all streams.
+    pub fn truncate_to(&mut self, len: usize) {
+        for l in &mut self.layers {
+            l.k.truncate_to(len);
+            l.v.truncate_to(len);
+        }
+    }
+
+    /// Minimum [`KvStream::spec_headroom`] across every stream. Lock-step
+    /// appends make all streams agree; taking the minimum keeps the bound
+    /// safe even if a future cache variant lets layers diverge.
+    pub fn spec_headroom(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.k.spec_headroom().min(l.v.spec_headroom()))
+            .min()
+            .expect("cache has at least one layer")
+    }
+
+    /// [`KvStream::fork_draft`] across every layer — the throwaway cache
+    /// a packed-path drafter decodes on. Shares finalized blocks with
+    /// this cache (refcounts retained, released when the fork drops) and
+    /// reads a QDQ-degraded copy of each fp32 tail.
+    pub fn fork_draft(&self) -> KvCache {
+        KvCache {
+            layers: self
+                .layers
+                .iter()
+                .map(|l| KvLayer { k: l.k.fork_draft(), v: l.v.fork_draft() })
+                .collect(),
+        }
     }
 
     /// Mean bits per *resident* K/V element across the whole cache.
@@ -1259,5 +1413,152 @@ mod tests {
         let mut b = KvStream::with_pool(cfg(0, 8, 4, 4), pool.clone());
         b.append(&Tensor::randn(&[1, 4], 52));
         b.seed(a.block_handles(1), 4);
+    }
+
+    #[test]
+    fn truncate_to_pops_tail_rows_exactly() {
+        let x = Tensor::randn(&[10, 6], 61);
+        let mut st = KvStream::new(KvCacheConfig::fp32());
+        st.append(&x);
+        st.truncate_to(10); // same-length rollback is a no-op
+        assert_eq!(st.len(), 10);
+        st.truncate_to(6);
+        assert_eq!((st.len(), st.tail_len()), (6, 6));
+        assert_eq!(st.gather(), x.slice_rows(0, 6), "rollback must be exact");
+        assert_eq!(st.storage_bits(), 6 * 6 * 32);
+        st.truncate_to(0);
+        assert!(st.is_empty());
+        assert_eq!(st.gather().rows(), 0);
+    }
+
+    #[test]
+    fn truncate_to_matches_a_stream_that_never_overshot() {
+        let x = Tensor::randn(&[13, 6], 63);
+        let mk = || KvStream::new(cfg(0, 8, 4, 8));
+        let mut over = mk();
+        over.append(&x); // 1 finalized block + 5 tail rows
+        over.truncate_to(10);
+        let mut direct = mk();
+        direct.append(&x.slice_rows(0, 10));
+        assert_eq!(over.gather(), direct.gather(), "overshoot must leave no trace");
+        assert_eq!(over.n_blocks(), direct.n_blocks());
+        assert_eq!(over.tail_len(), direct.tail_len());
+        assert_eq!(over.storage_bits(), direct.storage_bits());
+    }
+
+    #[test]
+    #[should_panic(expected = "inside the fp32 tail")]
+    fn truncate_into_finalized_blocks_panics() {
+        let mut st = KvStream::new(cfg(0, 8, 4, 4));
+        st.append(&Tensor::randn(&[8, 4], 65));
+        st.truncate_to(7);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot grow")]
+    fn truncate_to_rejects_growth() {
+        let mut st = KvStream::new(KvCacheConfig::fp32());
+        st.append(&Tensor::randn(&[3, 4], 66));
+        st.truncate_to(4);
+    }
+
+    #[test]
+    fn spec_headroom_overshoot_rolls_back_exactly() {
+        // For every prefix length: append 1 + headroom tokens (the
+        // pending token plus a maximal speculative overshoot), roll back
+        // to the pending length, and require the stream to be
+        // indistinguishable from one that never overshot — across
+        // packed, windowed-packed, windowed-fp32, and capacity-bounded
+        // configs.
+        let x = Tensor::randn(&[48, 5], 67);
+        let configs: Vec<KvCacheConfig> = vec![
+            cfg(0, 8, 4, 8),
+            cfg(4, 8, 4, 4).with_window(4, 8),
+            KvCacheConfig { block: 4, ..KvCacheConfig::fp32() }.with_window(0, 4),
+            KvCacheConfig::fp32().with_max_seq(12),
+            cfg(0, 8, 4, 8).with_max_seq(20),
+        ];
+        for c in configs {
+            let top = c.max_seq.map_or(40, |cap| 40.min(cap - 1));
+            for len in 0..top {
+                let mut over = KvStream::new(c.clone());
+                over.append(&x.slice_rows(0, len));
+                let d = over.spec_headroom().min(x.rows() - len - 1);
+                if let Some(cap) = c.max_seq {
+                    assert!(len + 1 + d <= cap, "{c:?}: headroom exceeds capacity");
+                }
+                over.append(&x.slice_rows(len, len + 1 + d));
+                over.truncate_to(len + 1);
+                let mut direct = KvStream::new(c.clone());
+                direct.append(&x.slice_rows(0, len + 1));
+                assert_eq!(over.gather(), direct.gather(), "{c:?} len {len} d {d}");
+                assert_eq!(over.evicted(), direct.evicted(), "{c:?} len {len} d {d}");
+                assert_eq!(over.n_blocks(), direct.n_blocks(), "{c:?} len {len} d {d}");
+                assert_eq!(
+                    over.storage_bits(),
+                    direct.storage_bits(),
+                    "{c:?} len {len} d {d}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fork_draft_shares_blocks_and_qdqs_the_tail() {
+        let x = Tensor::randn(&[13, 6], 69);
+        let mut st = KvStream::new(cfg(0, 8, 4, 8));
+        st.append(&x); // 1 finalized block + 5 tail rows
+        let probe = st.block_handles(1).remove(0);
+        assert_eq!(probe.refs(), 2); // stream + probe
+        let fork = st.fork_draft();
+        assert_eq!(probe.refs(), 3, "fork retains the finalized block");
+        assert_eq!((fork.len(), fork.evicted(), fork.n_blocks()), (13, 0, 1));
+        let (g, gf) = (st.gather(), fork.gather());
+        for i in 0..8 {
+            assert_eq!(gf.row(i), g.row(i), "finalized row {i} is shared");
+        }
+        // The fork's tail is the lp-bits QDQ of the exact tail rows —
+        // the drafter reads the steady-state low-precision
+        // representation, not the verifier's bit-exact state.
+        let want = quantize_dequantize_rows(
+            &x.slice_rows(8, 13),
+            &BitAllocation::two_level(0, 8, 4),
+            Granularity::PerToken,
+        );
+        for i in 0..5 {
+            assert_eq!(gf.row(8 + i), want.row(i), "tail row {i} is QDQ-degraded");
+        }
+        drop(fork);
+        assert_eq!(probe.refs(), 2, "dropping the fork releases its references");
+    }
+
+    #[test]
+    fn prefix_entry_refuses_once_any_stream_has_evicted() {
+        // Windowed cache: registration must refuse post-eviction handles
+        // — they are post-gap blocks, not the absolute prompt prefix.
+        let c = cfg(4, 8, 4, 4).with_window(4, 4);
+        let mut cache = KvCache::new(2, c);
+        let tokens: Vec<u32> = (0..8).collect();
+        let push = |cache: &mut KvCache, i: u64| {
+            let k = Tensor::randn(&[1, 6], 200 + i);
+            let v = Tensor::randn(&[1, 6], 300 + i);
+            for l in 0..2 {
+                cache.layer_mut(l).k.append(&k);
+                cache.layer_mut(l).v.append(&v);
+            }
+        };
+        for i in 0..8 {
+            push(&mut cache, i);
+        }
+        assert_eq!(cache.evicted(), 0);
+        assert!(cache.prefix_entry(&tokens).is_some(), "pre-eviction prefix registers");
+        for i in 8..20 {
+            push(&mut cache, i);
+        }
+        assert!(cache.evicted() > 0, "window must have evicted by now");
+        assert!(
+            cache.prefix_entry(&tokens[..4]).is_none(),
+            "post-eviction registration must refuse"
+        );
     }
 }

@@ -231,20 +231,53 @@ impl MultiHeadAttention {
         x: &Tensor,
         caches: &mut [&mut crate::kvcache::KvLayer],
     ) -> Tensor {
+        assert_eq!(x.rows(), caches.len(), "one kv layer per stream row");
+        let lens = vec![1usize; caches.len()];
+        self.forward_decode_ragged(hook, site, x, &lens, caches)
+    }
+
+    /// Ragged decode step: stream `i` contributes `lens[i] ≥ 1`
+    /// consecutive rows of `x` (its pending token plus speculative draft
+    /// tokens, oldest first) — the verification forward of speculative
+    /// decode (DESIGN.md §18). The projections stay fused over the full
+    /// `[Σ lens × d]` stack; attention scatters per stream exactly like
+    /// [`Self::forward_decode_batch`] (its `lens = [1, 1, …]` case) but
+    /// passes each stream's own row count to [`KeyMap::for_stream`], so
+    /// row `j` of stream `i` attends precisely the keys at absolute
+    /// positions ≤ its own — same-chunk futures masked by the
+    /// absolute-position rule, exactly the chunked-prefill masking. Every
+    /// kernel is row-wise, so each stream's rows are bit-identical to
+    /// serial single-token [`Self::forward_decode`] calls feeding the same
+    /// tokens (`decode_multi_token_chunk_matches` pins the chunk rule;
+    /// `tests/speculative.rs` pins it end-to-end).
+    pub fn forward_decode_ragged(
+        &self,
+        hook: &dyn LinearHook,
+        site: &str,
+        x: &Tensor,
+        lens: &[usize],
+        caches: &mut [&mut crate::kvcache::KvLayer],
+    ) -> Tensor {
         let m = x.rows();
-        assert_eq!(m, caches.len(), "one kv layer per stream row");
+        assert_eq!(lens.len(), caches.len(), "one row count per stream");
+        assert_eq!(m, lens.iter().sum::<usize>(), "rows must cover every stream's tokens");
         let q = hook.linear(&format!("{site}.to_q"), x, &self.wq.w, self.wq.b.as_deref());
         let k_new = hook.linear(&format!("{site}.to_k"), x, &self.wk.w, self.wk.b.as_deref());
         let v_new = hook.linear(&format!("{site}.to_v"), x, &self.wv.w, self.wv.b.as_deref());
         let mut concat = Tensor::zeros(&[m, self.d_model]);
-        for (i, layer) in caches.iter_mut().enumerate() {
-            layer.k.append(&k_new.slice_rows(i, i + 1));
-            layer.v.append(&v_new.slice_rows(i, i + 1));
+        let mut r = 0usize;
+        for (layer, &s) in caches.iter_mut().zip(lens) {
+            assert!(s >= 1, "each stream contributes at least its pending token");
+            layer.k.append(&k_new.slice_rows(r, r + s));
+            layer.v.append(&v_new.slice_rows(r, r + s));
             let k = layer.k.gather();
             let v = layer.v.gather();
-            let map = KeyMap::for_stream(&layer.k, 1);
-            let (ci, _) = self.sdpa_mapped(&q.slice_rows(i, i + 1), &k, &v, &map);
-            concat.row_mut(i).copy_from_slice(ci.row(0));
+            let map = KeyMap::for_stream(&layer.k, s);
+            let (ci, _) = self.sdpa_mapped(&q.slice_rows(r, r + s), &k, &v, &map);
+            for j in 0..s {
+                concat.row_mut(r + j).copy_from_slice(ci.row(j));
+            }
+            r += s;
         }
         hook.linear(&format!("{site}.to_out"), &concat, &self.wo.w, self.wo.b.as_deref())
     }
@@ -473,6 +506,53 @@ mod tests {
         for (s, b) in serial.iter().zip(&batched) {
             assert_eq!(s.k.gather(), b.k.gather());
             assert_eq!(s.v.gather(), b.v.gather());
+        }
+    }
+
+    #[test]
+    fn ragged_decode_rows_bit_identical_to_serial_chunks() {
+        // Three streams contributing 2 / 1 / 3 rows in one ragged step:
+        // every row must equal the serial token-by-token forward_decode
+        // on that stream alone, and the caches must advance identically.
+        let mut rng = XorShiftRng::new(23);
+        let attn = MultiHeadAttention::new(16, 4, true, &mut rng);
+        let hists = [4usize, 1, 6];
+        let lens = [2usize, 1, 3];
+        let m: usize = lens.iter().sum();
+        let mut serial: Vec<crate::kvcache::KvLayer> = Vec::new();
+        let mut ragged: Vec<crate::kvcache::KvLayer> = Vec::new();
+        let mut want_rows: Vec<Vec<f32>> = Vec::new();
+        let mut step = Tensor::zeros(&[m, 16]);
+        let mut r = 0usize;
+        for (i, (&h, &s)) in hists.iter().zip(&lens).enumerate() {
+            let past = Tensor::randn(&[h, 16], 400 + i as u64);
+            let mut sl = crate::kvcache::KvLayer::fp32();
+            let mut rl = crate::kvcache::KvLayer::fp32();
+            let _ = attn.forward_decode(&FpHook, "layer0.attn1", &past, &mut sl);
+            let _ = attn.forward_decode(&FpHook, "layer0.attn1", &past, &mut rl);
+            let new = Tensor::randn(&[s, 16], 500 + i as u64);
+            for j in 0..s {
+                step.row_mut(r + j).copy_from_slice(new.row(j));
+                let y = attn.forward_decode(
+                    &FpHook,
+                    "layer0.attn1",
+                    &new.slice_rows(j, j + 1),
+                    &mut sl,
+                );
+                want_rows.push(y.row(0).to_vec());
+            }
+            r += s;
+            serial.push(sl);
+            ragged.push(rl);
+        }
+        let mut refs: Vec<&mut crate::kvcache::KvLayer> = ragged.iter_mut().collect();
+        let got = attn.forward_decode_ragged(&FpHook, "layer0.attn1", &step, &lens, &mut refs);
+        for (i, want) in want_rows.iter().enumerate() {
+            assert_eq!(got.row(i), &want[..], "ragged row {i}");
+        }
+        for (s, rg) in serial.iter().zip(&ragged) {
+            assert_eq!(s.k.gather(), rg.k.gather());
+            assert_eq!(s.v.gather(), rg.v.gather());
         }
     }
 

@@ -177,6 +177,32 @@ impl Block {
         self.ffn_hooked(hook, layer, &x_mid)
     }
 
+    /// Ragged decode step: stream `i` contributes `lens[i]` consecutive
+    /// rows of `x` — the verification forward of speculative decode.
+    /// Attention fuses projections and masks per-row absolute positions
+    /// ([`MultiHeadAttention::forward_decode_ragged`]); norms and the FFN
+    /// tail are row-wise, so the bit-parity argument of
+    /// [`Block::forward_decode_batch`] extends row-by-row.
+    fn forward_decode_ragged(
+        &self,
+        hook: &dyn LinearHook,
+        layer: usize,
+        x: &Tensor,
+        lens: &[usize],
+        caches: &mut [&mut crate::kvcache::KvLayer],
+    ) -> Tensor {
+        let (n1, _) = self.norm1.forward(x);
+        let a = self.attn.forward_decode_ragged(
+            hook,
+            &format!("layer{layer}.attn1"),
+            &n1,
+            lens,
+            caches,
+        );
+        let x_mid = x.add(&a);
+        self.ffn_hooked(hook, layer, &x_mid)
+    }
+
     fn backward(&mut self, cache: &BlockCache, dy: &Tensor) -> Tensor {
         // out = x_mid + down(act)
         let dact = self.down.backward(&cache.act, dy);
@@ -383,27 +409,65 @@ impl Gpt {
         tokens: &[u32],
         caches: &mut [&mut crate::kvcache::KvCache],
     ) -> Tensor {
+        let slices: Vec<&[u32]> = tokens.iter().map(std::slice::from_ref).collect();
+        self.decode_step_batch_ragged(hook, &slices, caches)
+    }
+
+    /// Ragged decode step across independent streams: `tokens[i]` (≥ 1
+    /// tokens, oldest first — the pending token plus speculative drafts)
+    /// is appended to `caches[i]`, and the returned `[Σ lens × vocab]`
+    /// logits hold stream `i`'s rows consecutively, one per appended
+    /// token. The verification GEMM of speculative decode
+    /// ([`crate::decode::DecodeEngine`], DESIGN.md §18):
+    /// [`Gpt::decode_step_batch`] is the `lens = [1, 1, …]` degenerate
+    /// case.
+    ///
+    /// Row `j` of stream `i` embeds at `pos_next() + j` — valid because
+    /// the engine caps draft depth so no flush or eviction beyond the
+    /// pending token's own fires mid-step
+    /// ([`crate::kvcache::KvCache::spec_headroom`]). With an fp32 cache
+    /// and [`super::FpHook`], each stream's rows are bit-identical to
+    /// serial [`Gpt::decode_step`] calls feeding the same tokens, at any
+    /// thread count and batch composition (`tests/speculative.rs`).
+    pub fn decode_step_batch_ragged(
+        &self,
+        hook: &dyn LinearHook,
+        tokens: &[&[u32]],
+        caches: &mut [&mut crate::kvcache::KvCache],
+    ) -> Tensor {
         let n = tokens.len();
         assert!(n >= 1, "batched decode step needs at least one stream");
         assert_eq!(n, caches.len(), "one cache per stream");
         let d = self.cfg.d_model;
-        let mut h = Tensor::zeros(&[n, d]);
-        for (i, &tok) in tokens.iter().enumerate() {
+        let m: usize = tokens.iter().map(|t| t.len()).sum();
+        let mut h = Tensor::zeros(&[m, d]);
+        let mut lens = Vec::with_capacity(n);
+        let mut r = 0usize;
+        for (i, toks) in tokens.iter().enumerate() {
+            assert!(!toks.is_empty(), "stream {i} needs at least its pending token");
             assert_eq!(caches[i].n_layers(), self.cfg.n_layers, "cache layer count mismatch");
             // Resident rank, like `prefill`: bounded under a window
             // policy, the absolute position otherwise.
-            let pos = caches[i].pos_next();
-            assert!(pos < self.cfg.max_seq, "stream {i} position {pos} exceeds max_seq");
-            let t = tok as usize;
-            assert!(t < self.cfg.vocab_size, "token {t} out of vocab");
-            for j in 0..d {
-                h.set(i, j, self.embed.at(t, j) + self.pos.at(pos, j));
+            let pos0 = caches[i].pos_next();
+            assert!(
+                pos0 + toks.len() <= self.cfg.max_seq,
+                "stream {i} position {pos0}+{} exceeds max_seq",
+                toks.len()
+            );
+            for (j, &tok) in toks.iter().enumerate() {
+                let t = tok as usize;
+                assert!(t < self.cfg.vocab_size, "token {t} out of vocab");
+                for c in 0..d {
+                    h.set(r + j, c, self.embed.at(t, c) + self.pos.at(pos0 + j, c));
+                }
             }
+            lens.push(toks.len());
+            r += toks.len();
         }
         for (l, b) in self.blocks.iter().enumerate() {
             let mut layers: Vec<&mut crate::kvcache::KvLayer> =
                 caches.iter_mut().map(|c| c.layer_mut(l)).collect();
-            h = b.forward_decode_batch(hook, l, &h, &mut layers);
+            h = b.forward_decode_ragged(hook, l, &h, &lens, &mut layers);
         }
         let (hn, _) = self.final_norm.forward(&h);
         let _site = crate::obs::site_guard(crate::obs::KernelSite::Logits);
@@ -755,6 +819,42 @@ mod tests {
                 b.layer(0).k.gather(),
                 "stream {i} cache content"
             );
+        }
+    }
+
+    #[test]
+    fn ragged_decode_step_bit_identical_to_serial_steps() {
+        // Streams contributing 3 / 1 / 2 tokens in one ragged step (the
+        // speculative verification shape): every logits row must equal
+        // the stream's own serial decode_step on that token, bit for
+        // bit, and the caches must advance identically.
+        let gpt = Gpt::new(GptConfig::tiny(), 14);
+        let prompts: [&[u32]; 3] = [&[3, 17, 41], &[9], &[5, 5, 60, 2, 31]];
+        let feeds: [&[u32]; 3] = [&[7, 11, 13], &[2], &[44, 8]];
+        let mut serial: Vec<crate::kvcache::KvCache> = Vec::new();
+        let mut ragged: Vec<crate::kvcache::KvCache> = Vec::new();
+        for p in prompts {
+            let mut sc = crate::kvcache::KvCache::fp32(gpt.cfg.n_layers);
+            let _ = gpt.prefill(&FpHook, p, &mut sc);
+            let mut rc = crate::kvcache::KvCache::fp32(gpt.cfg.n_layers);
+            let _ = gpt.prefill(&FpHook, p, &mut rc);
+            serial.push(sc);
+            ragged.push(rc);
+        }
+        let mut refs: Vec<&mut crate::kvcache::KvCache> = ragged.iter_mut().collect();
+        let fused = gpt.decode_step_batch_ragged(&FpHook, &feeds, &mut refs);
+        assert_eq!(fused.shape(), &[6, gpt.cfg.vocab_size]);
+        let mut r = 0usize;
+        for (i, toks) in feeds.iter().enumerate() {
+            for &t in toks.iter() {
+                let want = gpt.decode_step(&FpHook, t, &mut serial[i]);
+                assert_eq!(fused.row(r), want.row(0), "stream {i} row {r}");
+                r += 1;
+            }
+        }
+        for (i, (s, b)) in serial.iter().zip(&ragged).enumerate() {
+            assert_eq!(s.len(), b.len(), "stream {i} cache length");
+            assert_eq!(s.layer(0).k.gather(), b.layer(0).k.gather(), "stream {i} cache content");
         }
     }
 

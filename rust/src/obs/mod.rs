@@ -51,6 +51,12 @@ pub struct EngineObs {
     epoch: Instant,
     pub ttft_us: Histogram,
     pub tpot_us: Histogram,
+    /// Accepted draft length per speculative verify step (tokens of the
+    /// draft confirmed by the verifier — 0 when the first draft token
+    /// already mismatched). Only recorded by speculative engines; empty
+    /// otherwise. Unlike the latency histograms the unit is tokens, not
+    /// microseconds.
+    pub accepted_len: Histogram,
     trace: Option<TraceRing>,
 }
 
@@ -66,7 +72,13 @@ impl EngineObs {
     }
 
     fn build(trace: Option<TraceRing>) -> Self {
-        Self { epoch: Instant::now(), ttft_us: Histogram::new(), tpot_us: Histogram::new(), trace }
+        Self {
+            epoch: Instant::now(),
+            ttft_us: Histogram::new(),
+            tpot_us: Histogram::new(),
+            accepted_len: Histogram::new(),
+            trace,
+        }
     }
 
     /// Microseconds since this engine's epoch (monotonic). Read this

@@ -18,13 +18,17 @@ use std::sync::Mutex;
 pub const SHED_STREAM: u64 = u64::MAX;
 
 /// Typed trace event kinds covering the life of a stream: admission,
-/// chunked prefill, fused decode steps, KV block finalization/eviction,
-/// pooled-prefix hits, retirement, and scheduler sheds.
+/// chunked prefill, fused decode steps, speculative draft/verify/
+/// rollback, KV block finalization/eviction, pooled-prefix hits,
+/// retirement, and scheduler sheds.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 pub enum TraceKind {
     Admit,
     PrefillChunk,
     DecodeStep,
+    Draft,
+    Verify,
+    Rollback,
     BlockFinalize,
     Evict,
     PrefixHit,
@@ -38,6 +42,9 @@ impl TraceKind {
             TraceKind::Admit => "Admit",
             TraceKind::PrefillChunk => "PrefillChunk",
             TraceKind::DecodeStep => "DecodeStep",
+            TraceKind::Draft => "Draft",
+            TraceKind::Verify => "Verify",
+            TraceKind::Rollback => "Rollback",
             TraceKind::BlockFinalize => "BlockFinalize",
             TraceKind::Evict => "Evict",
             TraceKind::PrefixHit => "PrefixHit",
@@ -52,6 +59,9 @@ impl TraceKind {
             "Admit" => TraceKind::Admit,
             "PrefillChunk" => TraceKind::PrefillChunk,
             "DecodeStep" => TraceKind::DecodeStep,
+            "Draft" => TraceKind::Draft,
+            "Verify" => TraceKind::Verify,
+            "Rollback" => TraceKind::Rollback,
             "BlockFinalize" => TraceKind::BlockFinalize,
             "Evict" => TraceKind::Evict,
             "PrefixHit" => TraceKind::PrefixHit,
@@ -66,8 +76,10 @@ impl TraceKind {
 /// engine's epoch (monotonic `Instant`); `pos` is kind-dependent — the
 /// prompt length for `Admit`, tokens prefilled so far for
 /// `PrefillChunk`, generated-token count for `DecodeStep`/`Retire`, the
-/// reused span for `PrefixHit`, and cumulative block/row totals for
-/// `BlockFinalize`/`Evict`.
+/// reused span for `PrefixHit`, cumulative block/row totals for
+/// `BlockFinalize`/`Evict`, and for the speculative kinds the drafted
+/// token count (`Draft`), accepted draft count (`Verify`), and rows
+/// popped off the KV tail (`Rollback`).
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 pub struct TraceEvent {
     pub kind: TraceKind,
@@ -266,6 +278,9 @@ mod tests {
             TraceKind::Admit,
             TraceKind::PrefillChunk,
             TraceKind::DecodeStep,
+            TraceKind::Draft,
+            TraceKind::Verify,
+            TraceKind::Rollback,
             TraceKind::BlockFinalize,
             TraceKind::Evict,
             TraceKind::PrefixHit,

@@ -61,6 +61,10 @@ pub enum NativeModel {
         sampling: Sampling,
         decode_batch: usize,
         max_inflight: usize,
+        /// Speculative decode config (`[generate] speculative.*` knobs);
+        /// `None` = plain one-token-per-step decode. Greedy-only — the
+        /// engine builder enforces it.
+        speculative: Option<crate::decode::SpecConfig>,
     },
     /// One denoising step at `t = 0` on a `seq×latent` latent under a fixed
     /// conditioning prompt; the response is the predicted residual.
@@ -212,10 +216,15 @@ impl NativeExecutor {
         // per batch: the engine (slot table, free list) lives as long as
         // the variant, so streams can join it while others are mid-decode.
         let engine = match &model {
-            NativeModel::GptGenerate { model: g, kv, sampling, decode_batch, max_inflight, .. } => {
+            NativeModel::GptGenerate {
+                model: g, kv, sampling, decode_batch, max_inflight, speculative, ..
+            } => {
                 let mut e = DecodeEngine::new(g.clone(), kv.clone(), sampling.clone())
                     .with_decode_batch(*decode_batch)
                     .with_max_inflight(*max_inflight);
+                if let Some(sc) = speculative {
+                    e = e.with_speculative(*sc);
+                }
                 if let Some(o) = &self.obs {
                     if o.trace_enabled {
                         e = e.with_obs(Arc::new(EngineObs::with_trace(o.trace_capacity)));
@@ -316,6 +325,7 @@ impl NativeExecutor {
             Sampling::Greedy,
             crate::decode::DEFAULT_DECODE_BATCH,
             crate::decode::DEFAULT_MAX_INFLIGHT,
+            None,
         )
     }
 
@@ -325,7 +335,11 @@ impl NativeExecutor {
     /// `max_inflight` knobs, [`crate::config::GenerateSpec::sampling`]).
     /// `max_inflight` bounds how many streams the variant's resident
     /// engine seats at once — both the batch path and the continuous
-    /// admission path share those slots.
+    /// admission path share those slots. `speculative` enables
+    /// self-speculative decode on the resident engine (the `[generate]`
+    /// `speculative.*` knobs, [`crate::config::GenerateSpec::speculative`]);
+    /// greedy-only — the engine builder panics on a sampled + speculative
+    /// combination, mirroring the config-level check.
     #[allow(clippy::too_many_arguments)]
     pub fn with_gpt_generate_cfg(
         mut self,
@@ -337,6 +351,7 @@ impl NativeExecutor {
         sampling: Sampling,
         decode_batch: usize,
         max_inflight: usize,
+        speculative: Option<crate::decode::SpecConfig>,
     ) -> Self {
         kv.validate();
         // A windowed variant's residency must fit the positional table —
@@ -352,7 +367,15 @@ impl NativeExecutor {
         assert!(max_inflight >= 1, "max_inflight must be ≥ 1");
         self.insert(
             name,
-            NativeModel::GptGenerate { model, kv, max_new, sampling, decode_batch, max_inflight },
+            NativeModel::GptGenerate {
+                model,
+                kv,
+                max_new,
+                sampling,
+                decode_batch,
+                max_inflight,
+                speculative,
+            },
             stack,
         );
         self
@@ -936,6 +959,7 @@ mod tests {
             crate::decode::Sampling::TopK { k: 12, temperature: 0.8, seed: 0xA11CE },
             4,
             8,
+            None,
         );
         let input = Tensor::from_vec(&[1, 4], vec![16.0, 2.0, 9.0, 33.0]);
         let a = exec.execute("gen-sampled", &[&input]).unwrap().remove(0);
@@ -957,6 +981,53 @@ mod tests {
         );
         let g = exec_g.execute("gen-greedy", &[&input]).unwrap().remove(0);
         assert_ne!(a, g, "temperature+top-k must diverge from greedy");
+    }
+
+    #[test]
+    fn speculative_generate_variant_serves_identical_tokens() {
+        use crate::decode::{DraftKind, SpecConfig};
+        // The `[generate] speculative.*` knobs change throughput, never
+        // content: a speculative variant must serve byte-identical rows
+        // to the plain greedy variant, for both drafters, on both fp32
+        // and packed-KV policies.
+        let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 59));
+        let inputs = [
+            Tensor::from_vec(&[1, 4], vec![12.0, 1.0, 2.0, 3.0]),
+            Tensor::from_vec(&[1, 2], vec![9.0, 44.0]),
+            Tensor::from_vec(&[1, 6], vec![7.0, 5.0, 9.0, 5.0, 9.0, 5.0]),
+        ];
+        let input_refs: Vec<&Tensor> = inputs.iter().collect();
+        for kv in [
+            crate::kvcache::KvCacheConfig::fp32(),
+            crate::kvcache::KvCacheConfig::two_level(4, 8, 4, 8),
+        ] {
+            let plain = NativeExecutor::new().with_gpt_generate(
+                "gen",
+                gpt.clone(),
+                None,
+                kv.clone(),
+                32,
+            );
+            let want = plain.execute("gen", &input_refs).unwrap();
+            for draft in [DraftKind::Ngram, DraftKind::Packed] {
+                let exec = NativeExecutor::new().with_gpt_generate_cfg(
+                    "gen-spec",
+                    gpt.clone(),
+                    None,
+                    kv.clone(),
+                    32,
+                    Sampling::Greedy,
+                    crate::decode::DEFAULT_DECODE_BATCH,
+                    crate::decode::DEFAULT_MAX_INFLIGHT,
+                    Some(SpecConfig { draft, k: 4 }),
+                );
+                let got = exec.execute("gen-spec", &input_refs).unwrap();
+                assert_eq!(got, want, "speculative {draft:?} serving diverged from greedy");
+                // The engine really ran verify steps (not the plain path).
+                let obs = exec.engine_obs("gen-spec").unwrap();
+                assert!(obs.accepted_len.count() > 0, "no verify steps recorded ({draft:?})");
+            }
+        }
     }
 
     #[test]
@@ -1023,6 +1094,7 @@ mod tests {
                 Sampling::Greedy,
                 crate::decode::DEFAULT_DECODE_BATCH,
                 2,
+                None,
             );
         let input = Tensor::from_vec(&[1, 2], vec![4.0, 3.0]);
         assert_eq!(exec.free_slots("gen"), 2);

@@ -214,6 +214,7 @@ fn streaming_server_admits_in_flight_and_matches_serial_decode() {
         Sampling::Greedy,
         4,
         2, // two slots: five requests force in-flight admission
+        None,
     ));
     let spec = ServeSpec { workers: 1, max_batch: 4, max_wait_us: 500, queue_depth: 16 };
     let server =

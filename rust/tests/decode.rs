@@ -561,6 +561,82 @@ fn engine_truncation_rides_the_kv_capacity_error() {
 }
 
 #[test]
+fn speculative_truncation_matches_plain_at_the_capacity_wall() {
+    use stamp::decode::{DraftKind, SpecConfig};
+    // Satellite: the capacity frontier under speculation. A rollback (or
+    // depth cap) landing exactly on `max_seq` must leave the engine's
+    // truncation accounting identical to the plain path — same truncated
+    // flags, same token counts, no `n_new` overshoot and no spurious
+    // `truncated` on a stream that merely *filled* its cache while
+    // retiring on budget.
+    let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 29));
+    let kv = KvCacheConfig::fp32().with_max_seq(10);
+    let reqs = vec![
+        // Outgrows the cache: retires truncated with exactly 4 tokens
+        // (the `engine_truncation_rides_the_kv_capacity_error` workload).
+        GenRequest { prompt: prefix_tokens(7), n_new: 24 },
+        // Budget and capacity land on the same step: prefill 6 + four
+        // appends fill the cache exactly as the fifth token retires the
+        // stream on budget — must NOT be flagged truncated.
+        GenRequest { prompt: prefix_tokens(6), n_new: 5 },
+        // Comfortably inside both bounds.
+        GenRequest { prompt: prefix_tokens(3), n_new: 5 },
+    ];
+    let mut plain = DecodeEngine::new(gpt.clone(), kv.clone(), Sampling::Greedy);
+    let want = plain.run_fp(&reqs).unwrap();
+    assert!(want[0].truncated && want[0].tokens.len() == 4);
+    assert!(!want[1].truncated && want[1].tokens.len() == 5);
+    assert!(!want[2].truncated && want[2].tokens.len() == 5);
+    for draft in [DraftKind::Ngram, DraftKind::Packed] {
+        for k in [1usize, 2, 4, 8] {
+            let mut eng = DecodeEngine::new(gpt.clone(), kv.clone(), Sampling::Greedy)
+                .with_speculative(SpecConfig { draft, k });
+            let got = eng.run_fp(&reqs).unwrap();
+            assert_eq!(got, want, "draft {draft:?} k={k}");
+        }
+    }
+}
+
+#[test]
+fn speculative_capacity_frontier_sweep_matches_plain() {
+    use stamp::decode::{DraftKind, SpecConfig};
+    // The same frontier swept across cache sizes and policies: wherever
+    // the wall sits relative to block boundaries and the fp32 tail, the
+    // speculative engine's `StreamResult`s (tokens *and* flags) equal the
+    // plain engine's exactly.
+    let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 31));
+    let caps: Vec<KvCacheConfig> = vec![
+        KvCacheConfig::fp32().with_max_seq(8),
+        KvCacheConfig::fp32().with_max_seq(12),
+        KvCacheConfig::two_level(4, 8, 4, 8).with_max_seq(16),
+        KvCacheConfig::two_level(4, 8, 4, 8).with_max_seq(24),
+    ];
+    for kv in caps {
+        let reqs = vec![
+            GenRequest { prompt: prefix_tokens(7), n_new: 24 },
+            GenRequest { prompt: prefix_tokens(3), n_new: 4 },
+        ];
+        let mut plain =
+            DecodeEngine::new(gpt.clone(), kv.clone(), Sampling::Greedy).with_decode_batch(2);
+        let want = plain.run_fp(&reqs).unwrap();
+        // Prefill 7 then one token per position up to the wall:
+        // 1 + (max_seq − 7) tokens, truncated.
+        assert!(want[0].truncated, "{kv:?}");
+        assert_eq!(want[0].tokens.len(), 1 + (kv.max_seq.unwrap() - 7), "{kv:?}");
+        assert!(!want[1].truncated, "{kv:?}");
+        for draft in [DraftKind::Ngram, DraftKind::Packed] {
+            for k in [1usize, 3, 6] {
+                let mut eng = DecodeEngine::new(gpt.clone(), kv.clone(), Sampling::Greedy)
+                    .with_decode_batch(2)
+                    .with_speculative(SpecConfig { draft, k });
+                let got = eng.run_fp(&reqs).unwrap();
+                assert_eq!(got, want, "{kv:?} draft {draft:?} k={k}");
+            }
+        }
+    }
+}
+
+#[test]
 fn generate_serves_through_coordinator_with_packed_kv() {
     use stamp::config::ServeSpec;
     use stamp::coordinator::Server;

@@ -180,6 +180,7 @@ fn streaming_server_exposes_quantiles_and_drains_trace() {
                 Sampling::Greedy,
                 4,
                 4,
+                None,
             )
             .with_observability(&obs_cfg),
     );

@@ -219,6 +219,79 @@ fn property_shared_prefix_is_stored_once_across_streams() {
     });
 }
 
+/// Satellite regression: `kv.window` × `kv.prefix_cache`. A windowed
+/// stream that has already evicted cannot vouch for its absolute prompt
+/// prefix — its leading handles are post-gap blocks, not positions
+/// `0..span` — so prefill-completion registration must decline entirely
+/// (the `KvCache::prefix_entry` guard). Before the guard, a long warm
+/// prompt would seed the index with a poisoned entry and every later
+/// shared-prefix admission decoded from the wrong rows.
+#[test]
+fn windowed_engine_never_registers_an_evicted_prefix_and_stays_exact() {
+    let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 67));
+    // Block 8, sink span 8, window 16: prefill of a 40-token prompt
+    // (chunked at the window budget) evicts block 1 before it finishes.
+    let kv = KvCacheConfig::two_level(4, 8, 4, 8).with_window(4, 16);
+    let shared: Vec<u32> = (0..40).map(|j| ((j * 7 + 3) % 70) as u32).collect();
+    let reqs: Vec<GenRequest> = (0..3)
+        .map(|i| {
+            let mut prompt = shared.clone();
+            prompt.extend((0..=i as u32).map(|j| (i as u32 * 13 + j * 11 + 5) % 70));
+            GenRequest { prompt, n_new: 8 }
+        })
+        .collect();
+    let mut pooled =
+        DecodeEngine::new(gpt.clone(), kv.clone().with_prefix_cache(), Sampling::Greedy);
+    pooled.run_fp(&[GenRequest { prompt: shared.clone(), n_new: 2 }]).unwrap();
+    assert_eq!(
+        pooled.pool().prefix_entries(),
+        0,
+        "an evicted warm stream must register nothing"
+    );
+    let got = pooled.run_fp(&reqs).unwrap();
+    assert_eq!(pooled.prefix_hits(), 0, "nothing registered ⇒ nothing to hit");
+    // Oracle: the same windowed config with no prefix cache at all.
+    let mut private = DecodeEngine::new(gpt.clone(), kv.clone(), Sampling::Greedy);
+    let want = private.run_fp(&reqs).unwrap();
+    assert_eq!(got, want, "windowed decode must be unperturbed by the prefix-cache knob");
+}
+
+/// The complementary positive case: a windowed engine whose warm prompt
+/// finishes prefill *before* any eviction registers normally, later
+/// shared-prefix admissions seat on the pool, and streams that then
+/// decode far enough to evict still match the private windowed oracle
+/// bit for bit — pooled prefix blocks are immutable and
+/// position-determined, so the index entry outlives the streams' own
+/// evictions.
+#[test]
+fn windowed_engine_shares_a_pre_eviction_prefix_and_stays_exact() {
+    let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 71));
+    let kv = KvCacheConfig::two_level(4, 8, 4, 8).with_window(4, 16);
+    // 24 tokens: three aligned blocks, all inside `sinks ∪ last-16` at
+    // the end of the warm prefill — no eviction yet, so registration
+    // covers aligned prefixes 8, 16 and 24.
+    let shared: Vec<u32> = (0..24).map(|j| ((j * 7 + 3) % 70) as u32).collect();
+    let mut pooled =
+        DecodeEngine::new(gpt.clone(), kv.clone().with_prefix_cache(), Sampling::Greedy);
+    pooled.run_fp(&[GenRequest { prompt: shared.clone(), n_new: 1 }]).unwrap();
+    assert_eq!(pooled.pool().prefix_entries(), 3, "pre-eviction prefixes register");
+    // Budgets push each stream's logical length past the resident bound
+    // (24 + suffix + 16 > 32): every stream evicts *after* seating on the
+    // pooled prefix.
+    let reqs: Vec<GenRequest> = (0..3)
+        .map(|i| {
+            let mut prompt = shared.clone();
+            prompt.extend((0..=i as u32).map(|j| (i as u32 * 13 + j * 11 + 5) % 70));
+            GenRequest { prompt, n_new: 16 }
+        })
+        .collect();
+    let got = pooled.run_fp(&reqs).unwrap();
+    assert_eq!(pooled.prefix_hits(), 3, "every admission seats on the warmed pool");
+    let mut private = DecodeEngine::new(gpt.clone(), kv.clone(), Sampling::Greedy);
+    let want = private.run_fp(&reqs).unwrap();
+    assert_eq!(got, want, "pool-seated windowed decode must equal the private run");
+}
+
 /// The fp32 no-window path without `prefix_cache` still never finalizes
 /// blocks (`storage_bits` accounting is unchanged from PR 3), while the
 /// same prompts with the knob set decode identically — the flag is purely

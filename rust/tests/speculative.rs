@@ -1,0 +1,310 @@
+//! Speculative-decode parity: the tentpole invariant of PR 10.
+//!
+//! Greedy speculative output is **bit-identical** to the plain greedy
+//! engine — for either drafter, at any draft depth, any thread count,
+//! any batch composition, any admission schedule, and under every KV
+//! policy (fp32, packed two-level, sliding-window eviction, pooled
+//! prefix cache). The drafter only moves *throughput*; the verify step
+//! recomputes every emitted token with the target model, and the
+//! rollback restores the cache to exactly the plain path's state
+//! (DESIGN.md §18). CI re-runs this file under `STAMP_THREADS=1` as
+//! well; the property harness additionally forces serial kernels per
+//! case.
+
+use stamp::decode::{DecodeEngine, DraftKind, GenRequest, Sampling, SpecConfig, StreamResult};
+use stamp::kvcache::{KvCache, KvCacheConfig};
+use stamp::model::{FpHook, Gpt, GptConfig};
+use stamp::stamp::SeqTransformKind;
+use stamp::testkit;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn prompt_tokens(n: usize, salt: usize) -> Vec<u32> {
+    (0..n).map(|i| ((i * 7 + salt * 11 + 3) % 70) as u32).collect()
+}
+
+/// PR 3's serial greedy loop: the ultimate content oracle.
+fn serial_greedy(gpt: &Gpt, kv: &KvCacheConfig, prompt: &[u32], n_new: usize) -> Vec<u32> {
+    let mut cache = KvCache::new(gpt.cfg.n_layers, kv.clone());
+    gpt.generate_greedy(&FpHook, prompt, n_new, &mut cache)
+}
+
+fn spec_engine(
+    gpt: &Arc<Gpt>,
+    kv: &KvCacheConfig,
+    draft: DraftKind,
+    k: usize,
+    decode_batch: usize,
+) -> DecodeEngine {
+    DecodeEngine::new(gpt.clone(), kv.clone(), Sampling::Greedy)
+        .with_decode_batch(decode_batch)
+        .with_speculative(SpecConfig { draft, k })
+}
+
+/// Admit `reqs` into the engine following `gaps` (steps to run before
+/// each admission), then step to completion. Returns every retired
+/// stream keyed by its engine-assigned id (admission order).
+fn drive(
+    eng: &mut DecodeEngine,
+    reqs: &[GenRequest],
+    gaps: &[usize],
+) -> HashMap<u64, StreamResult> {
+    let mut out: Vec<(u64, StreamResult)> = Vec::new();
+    for (r, &gap) in reqs.iter().zip(gaps) {
+        for _ in 0..gap {
+            eng.step(&FpHook);
+            out.extend(eng.drain());
+        }
+        while eng.free_slots() == 0 {
+            eng.step(&FpHook);
+            out.extend(eng.drain());
+        }
+        eng.admit(r.clone()).expect("admission");
+    }
+    while eng.has_work() {
+        eng.step(&FpHook);
+        out.extend(eng.drain());
+    }
+    out.into_iter().collect()
+}
+
+#[test]
+fn speculative_matches_plain_across_cache_policies() {
+    // Deterministic sweep: both drafters × several depths × the four KV
+    // policy families, one-shot `run_fp`, plain engine on the *same*
+    // policy as the oracle.
+    let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 71));
+    let reqs = vec![
+        GenRequest { prompt: prompt_tokens(5, 0), n_new: 18 },
+        GenRequest { prompt: prompt_tokens(13, 1), n_new: 7 },
+        GenRequest { prompt: prompt_tokens(2, 2), n_new: 12 },
+    ];
+    let policies = [
+        KvCacheConfig::fp32(),
+        KvCacheConfig::two_level(4, 8, 4, 8),
+        KvCacheConfig::two_level(4, 8, 4, 8).with_transform(SeqTransformKind::HaarDwt),
+        // Small window: eviction actually fires mid-decode (13 + 7 and
+        // 5 + 18 both exceed sink 4 + window 12).
+        KvCacheConfig::two_level(4, 8, 4, 8).with_window(4, 12),
+    ];
+    for kv in &policies {
+        let mut plain = DecodeEngine::new(gpt.clone(), kv.clone(), Sampling::Greedy);
+        let want = plain.run_fp(&reqs).unwrap();
+        for draft in [DraftKind::Ngram, DraftKind::Packed] {
+            for k in [1usize, 3, 6] {
+                let mut eng = spec_engine(&gpt, kv, draft, k, 8);
+                let got = eng.run_fp(&reqs).unwrap();
+                assert_eq!(got, want, "{draft:?} k={k} kv={kv:?}");
+                assert!(
+                    eng.obs().accepted_len.count() > 0,
+                    "{draft:?} k={k}: no verify steps recorded"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn speculative_matches_plain_under_forced_serial_kernels() {
+    // Thread-count invariance of the speculative path itself: the same
+    // engine re-run with forced-serial kernels reproduces the threaded
+    // run bit-for-bit (CI additionally re-runs the whole file under
+    // STAMP_THREADS=1).
+    let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 73));
+    let reqs = vec![
+        GenRequest { prompt: prompt_tokens(9, 3), n_new: 14 },
+        GenRequest { prompt: prompt_tokens(4, 4), n_new: 10 },
+    ];
+    for draft in [DraftKind::Ngram, DraftKind::Packed] {
+        let kv = KvCacheConfig::two_level(4, 8, 4, 8);
+        let mut eng = spec_engine(&gpt, &kv, draft, 4, 2);
+        let threaded = eng.run_fp(&reqs).unwrap();
+        stamp::parallel::set_kernel_serial(true);
+        let serial = eng.run_fp(&reqs).unwrap();
+        stamp::parallel::set_kernel_serial(false);
+        assert_eq!(threaded, serial, "{draft:?}: serial-kernel run diverged");
+    }
+}
+
+#[test]
+fn speculative_matches_plain_with_warm_prefix_cache() {
+    // Pooled prefix seating composes with speculation: the stream's
+    // private fp32 tail (where every rollback lands) begins after the
+    // pooled span, and `spec_headroom`'s flush cap keeps the verify
+    // appends from ever finalizing a block into the shared pool.
+    let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 79));
+    let kv = KvCacheConfig::two_level(4, 8, 4, 8).with_prefix_cache();
+    let shared = prompt_tokens(16, 7);
+    let reqs: Vec<GenRequest> = (0..3)
+        .map(|i| {
+            let mut p = shared.clone();
+            p.extend(prompt_tokens(3, i).iter().map(|&t| t + 1));
+            GenRequest { prompt: p, n_new: 9 }
+        })
+        .collect();
+    let warm = GenRequest { prompt: shared.clone(), n_new: 1 };
+    let mut plain = DecodeEngine::new(gpt.clone(), kv.clone(), Sampling::Greedy);
+    plain.run_fp(std::slice::from_ref(&warm)).unwrap();
+    let want = plain.run_fp(&reqs).unwrap();
+    assert!(plain.prefix_hits() > 0, "workload must actually exercise pooled seating");
+    for draft in [DraftKind::Ngram, DraftKind::Packed] {
+        let mut eng = spec_engine(&gpt, &kv, draft, 4, 8);
+        eng.run_fp(std::slice::from_ref(&warm)).unwrap();
+        let got = eng.run_fp(&reqs).unwrap();
+        assert_eq!(got, want, "{draft:?} with warm prefix cache");
+        assert!(eng.prefix_hits() > 0, "{draft:?}: speculative engine must still pool-seat");
+    }
+}
+
+#[derive(Debug)]
+struct SpecCase {
+    n_streams: usize,
+    prompts: Vec<usize>,
+    budgets: Vec<usize>,
+    decode_batch: usize,
+    k: usize,
+    draft: DraftKind,
+    /// 0 fp32 · 1 packed · 2 packed+window · 3 packed+prefix-cache.
+    kv_kind: usize,
+    /// Engine steps to run before admitting each stream — random
+    /// admission interleaving, the composition axis the module docs
+    /// promise can never change a stream's output.
+    gaps: Vec<usize>,
+    seed: u64,
+}
+
+/// The randomized pin: speculative == plain over random KV policies,
+/// drafters, depths, ragged batch compositions, and admission
+/// schedules — threaded and forced-serial.
+#[test]
+fn property_speculative_greedy_is_bit_identical_to_plain() {
+    let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 83));
+    testkit::check(
+        "speculative-vs-plain-greedy",
+        10,
+        0x59EC,
+        |g| {
+            let n_streams = g.usize_in(1, 4);
+            SpecCase {
+                n_streams,
+                prompts: (0..n_streams).map(|_| g.usize_in(1, 20)).collect(),
+                budgets: (0..n_streams).map(|_| g.usize_in(0, 12)).collect(),
+                decode_batch: g.usize_in(1, 4),
+                k: g.usize_in(1, 6),
+                draft: if g.usize_in(0, 1) == 0 { DraftKind::Ngram } else { DraftKind::Packed },
+                kv_kind: g.usize_in(0, 3),
+                gaps: (0..n_streams).map(|_| g.usize_in(0, 3)).collect(),
+                seed: g.rng.next_u64(),
+            }
+        },
+        |c| {
+            let kv = match c.kv_kind {
+                0 => KvCacheConfig::fp32(),
+                1 => KvCacheConfig::two_level(4, 8, 4, 8),
+                // prompts ≤ 20 admit fine; 20 + 12 can exceed the 4 + 20
+                // residency, so eviction fires on the long compositions.
+                2 => KvCacheConfig::two_level(4, 8, 4, 8).with_window(4, 20),
+                _ => KvCacheConfig::two_level(4, 8, 4, 8).with_prefix_cache(),
+            };
+            let reqs: Vec<GenRequest> = (0..c.n_streams)
+                .map(|i| GenRequest {
+                    prompt: (0..c.prompts[i])
+                        .map(|j| ((c.seed as usize + i * 13 + j * 7) % 70) as u32)
+                        .collect(),
+                    n_new: c.budgets[i],
+                })
+                .collect();
+            let mut plain = DecodeEngine::new(gpt.clone(), kv.clone(), Sampling::Greedy)
+                .with_decode_batch(c.decode_batch);
+            let want = drive(&mut plain, &reqs, &c.gaps);
+            let mut eng = spec_engine(&gpt, &kv, c.draft, c.k, c.decode_batch);
+            let got = drive(&mut eng, &reqs, &c.gaps);
+            if got != want {
+                return Err(format!("threaded speculative diverged: {got:?} vs {want:?}"));
+            }
+            // Same case again under forced-serial kernels.
+            let mut eng = spec_engine(&gpt, &kv, c.draft, c.k, c.decode_batch);
+            stamp::parallel::set_kernel_serial(true);
+            let serial = drive(&mut eng, &reqs, &c.gaps);
+            stamp::parallel::set_kernel_serial(false);
+            if serial != want {
+                return Err(format!("serial-kernel speculative diverged: {serial:?} vs {want:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn one_shot_run_on_a_busy_speculative_engine_requeues_foreign_retirees() {
+    // Satellite: `run`/`run_fp` on an engine already holding speculative
+    // streams claims only its own retirees; the foreign stream keeps
+    // advancing, retires intact, and stays queued for the continuous
+    // caller's `drain`.
+    let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 89));
+    let kv = KvCacheConfig::fp32();
+    let mut eng = DecodeEngine::new(gpt.clone(), kv.clone(), Sampling::Greedy)
+        .with_speculative(SpecConfig { draft: DraftKind::Ngram, k: 4 });
+    let foreign = GenRequest { prompt: prompt_tokens(6, 9), n_new: 30 };
+    let fid = eng.admit(foreign.clone()).unwrap();
+    let reqs = vec![
+        GenRequest { prompt: prompt_tokens(4, 0), n_new: 6 },
+        GenRequest { prompt: prompt_tokens(9, 1), n_new: 4 },
+    ];
+    let got = eng.run_fp(&reqs).unwrap();
+    for (i, r) in reqs.iter().enumerate() {
+        assert_eq!(
+            got[i].tokens,
+            serial_greedy(&gpt, &kv, &r.prompt, r.n_new),
+            "one-shot stream {i}"
+        );
+        assert!(!got[i].truncated);
+    }
+    // Finish the foreign stream (it may already have retired mid-run —
+    // then stepping is a no-op and the result is already queued).
+    while eng.has_work() {
+        eng.step(&FpHook);
+    }
+    let drained = eng.drain();
+    assert_eq!(drained.len(), 1, "exactly the foreign stream: {drained:?}");
+    assert_eq!(drained[0].0, fid);
+    assert!(!drained[0].1.truncated);
+    assert_eq!(
+        drained[0].1.tokens,
+        serial_greedy(&gpt, &kv, &foreign.prompt, foreign.n_new),
+        "foreign stream must come back intact"
+    );
+}
+
+#[test]
+fn retirement_order_is_deterministic_across_identical_runs() {
+    // Satellite: `drain` hands back (id, result) pairs in retirement
+    // order, and that order is a pure function of the workload — two
+    // identical speculative runs (and a forced-serial one) produce the
+    // identical drain sequence, not just the same result set.
+    let gpt = Arc::new(Gpt::new(GptConfig::tiny(), 97));
+    let kv = KvCacheConfig::two_level(4, 8, 4, 8);
+    let reqs: Vec<GenRequest> = (0..5)
+        .map(|i| GenRequest { prompt: prompt_tokens(3 + 2 * i, i), n_new: 4 + 3 * i })
+        .collect();
+    let run = || {
+        let mut eng = spec_engine(&gpt, &kv, DraftKind::Packed, 3, 2);
+        for r in &reqs {
+            eng.admit(r.clone()).unwrap();
+        }
+        let mut order = Vec::new();
+        while eng.has_work() {
+            eng.step(&FpHook);
+            order.extend(eng.drain());
+        }
+        order
+    };
+    let a = run();
+    assert_eq!(a.len(), reqs.len());
+    let b = run();
+    assert_eq!(a, b, "retirement order must be deterministic");
+    stamp::parallel::set_kernel_serial(true);
+    let c = run();
+    stamp::parallel::set_kernel_serial(false);
+    assert_eq!(a, c, "retirement order must not depend on thread count");
+}
